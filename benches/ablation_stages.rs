@@ -1,0 +1,60 @@
+//! Ablation bench — per-stage coding contribution (DESIGN.md's called-out
+//! design choice: where does the coded multicast actually earn its load
+//! reduction?).
+//!
+//! Runs all four coding variants (stage 1/2 coded or unicast) across
+//! several designs, asserting each variant's measured load equals its
+//! closed form, and times the full runs so the XOR cost of coding is
+//! visible next to the bytes it saves.
+
+use camr::baseline::{run_ablation, CodingChoice};
+use camr::config::SystemConfig;
+use camr::util::bench::Bench;
+use camr::workload::synth::SyntheticWorkload;
+
+fn main() {
+    println!("== Stage-coding ablation (all variants oracle-verified) ==\n");
+    for (k, q) in [(3usize, 2usize), (3, 4), (4, 2), (4, 3)] {
+        let cfg = SystemConfig::with_options(k, q, 2, 1, 120).unwrap();
+        println!("k={k} q={q} (K={}, J={}):", cfg.servers(), cfg.jobs());
+        println!(
+            "  {:<22} {:>8} {:>8} {:>8} {:>8} {:>9}",
+            "variant", "L1", "L2", "L3", "total", "expected"
+        );
+        for choice in CodingChoice::all() {
+            let wl = SyntheticWorkload::new(&cfg, 1);
+            let out = run_ablation(cfg.clone(), Box::new(wl), choice).unwrap();
+            assert!(out.verified);
+            let n = out.normalizer;
+            let expect = choice.expected_load(k, q);
+            assert!(
+                (out.total_load() - expect).abs() < 1e-12,
+                "k={k} q={q} {}: {} vs {expect}",
+                choice.label(),
+                out.total_load()
+            );
+            println!(
+                "  {:<22} {:>8.4} {:>8.4} {:>8.4} {:>8.4} {:>9.4}",
+                choice.label(),
+                out.stage_bytes[0] as f64 / n,
+                out.stage_bytes[1] as f64 / n,
+                out.stage_bytes[2] as f64 / n,
+                out.total_load(),
+                expect
+            );
+        }
+        println!();
+    }
+
+    println!("== Wall time: coding cost vs bytes saved (k=4, q=3, B=4096) ==\n");
+    let b = Bench::new();
+    let cfg = SystemConfig::with_options(4, 3, 2, 1, 4096).unwrap();
+    for choice in CodingChoice::all() {
+        let cfg2 = cfg.clone();
+        b.run(&format!("ablation[{}]", choice.label()), move || {
+            let wl = SyntheticWorkload::new(&cfg2, 2);
+            run_ablation(cfg2.clone(), Box::new(wl), choice).unwrap().stage_bytes
+        });
+    }
+    println!("\nThe XOR encode/decode adds CPU work but removes a factor k-1 from stages 1–2 on the wire.");
+}

@@ -1,0 +1,86 @@
+//! E6/E7 — §IV/§V load analysis: measured CAMR load vs the closed form
+//! and vs CCDC (Eq. (6)) at matched storage fraction, across (k, q).
+//!
+//! Every row runs the real byte-exact engines (both schemes fully
+//! decode + verify) and asserts:
+//!   - measured L_CAMR == (k(q-1)+1)/(q(k-1)) exactly (B chosen so
+//!     (k-1) | B — no padding slack);
+//!   - L_CAMR == L_CCDC under Eq.-(6) accounting;
+//!   - J_CCDC == C(K,k) >> J_CAMR = q^{k-1}.
+//! Timed sections report end-to-end wall per scheme.
+
+use camr::analysis::load;
+use camr::baseline::CcdcEngine;
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::util::bench::Bench;
+use camr::workload::synth::SyntheticWorkload;
+
+fn main() {
+    let b = Bench::with_iters(5, 1);
+    println!("== §IV/§V: measured loads, CAMR vs CCDC at equal μ ==\n");
+    println!(
+        "{:>3} {:>3} {:>4} {:>7} {:>9} {:>9} {:>9} {:>8} {:>8}",
+        "k", "q", "K", "J_camr", "L_meas", "L_form", "L_ccdc", "J_ccdc", "ok"
+    );
+    for (k, q) in [(2usize, 2usize), (2, 3), (3, 2), (3, 3), (4, 2), (5, 2)] {
+        // B = 120 is divisible by k-1 for k ∈ {2,3,4,5} (1,2,3,4 | 120).
+        let cfg = SystemConfig::with_options(k, q, 2, 1, 120).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 11);
+        let mut engine = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = engine.run().unwrap();
+        let formula = load::camr_total(k, q);
+        assert!(out.verified);
+        assert!(
+            (out.total_load() - formula).abs() < 1e-12,
+            "k={k} q={q}: {} != {formula}",
+            out.total_load()
+        );
+
+        let mut ccdc = CcdcEngine::new(cfg.servers(), k, 2, 120, 11).unwrap();
+        let cout = ccdc.run().unwrap();
+        assert!(cout.verified);
+        assert!(
+            (cout.paper_load() - formula).abs() < 1e-12,
+            "CCDC Eq.(6) load must equal CAMR's at matched μ"
+        );
+        println!(
+            "{:>3} {:>3} {:>4} {:>7} {:>9.4} {:>9.4} {:>9.4} {:>8} {:>8}",
+            k,
+            q,
+            cfg.servers(),
+            cfg.jobs(),
+            out.total_load(),
+            formula,
+            cout.paper_load(),
+            cout.jobs,
+            "yes"
+        );
+    }
+
+    println!("\n== End-to-end wall time per scheme (K = 6, Example-1 scale) ==\n");
+    let cfg = SystemConfig::with_options(3, 2, 2, 1, 120).unwrap();
+    b.run("camr_e2e_k3_q2 (4 jobs)", || {
+        let wl = SyntheticWorkload::new(&cfg, 3);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.verify = false;
+        e.run().unwrap().stage_bytes
+    });
+    b.run("ccdc_e2e_K6_k3 (20 jobs)", || {
+        let mut e = CcdcEngine::new(6, 3, 2, 120, 3).unwrap();
+        e.run().unwrap().measured_bytes
+    });
+
+    println!("\n== Larger design: K = 12 (k=3, q=4) ==\n");
+    let cfg = SystemConfig::with_options(3, 4, 2, 1, 120).unwrap();
+    b.run("camr_e2e_k3_q4 (16 jobs)", || {
+        let wl = SyntheticWorkload::new(&cfg, 5);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.verify = false;
+        e.run().unwrap().stage_bytes
+    });
+    b.run("ccdc_e2e_K12_k3 (220 jobs)", || {
+        let mut e = CcdcEngine::new(12, 3, 2, 120, 5).unwrap();
+        e.run().unwrap().measured_bytes
+    });
+}

@@ -1,0 +1,66 @@
+//! E10 support — end-to-end shuffle throughput: wall time and effective
+//! link throughput of the full map/shuffle/reduce pipeline as value size
+//! and cluster size grow, plus the message-passing cluster deployment.
+//!
+//! This is the macro-bench the §Perf iteration log in EXPERIMENTS.md
+//! tracks (before/after numbers come from these BENCH lines).
+
+use camr::config::SystemConfig;
+use camr::coordinator::cluster::run_cluster;
+use camr::coordinator::engine::Engine;
+use camr::util::bench::{fmt_ns, Bench};
+use camr::workload::synth::SyntheticWorkload;
+use std::sync::Arc;
+
+fn main() {
+    let b = Bench::new();
+    println!("== End-to-end pipeline wall time (sync engine, verify off) ==\n");
+    for (k, q, gamma, bytes) in [
+        (3usize, 2usize, 2usize, 64usize), // Example-1 scale
+        (3, 2, 2, 4096),                   // fat values
+        (3, 4, 2, 1024),                   // K = 12
+        (4, 3, 2, 1024),                   // K = 12, deeper design
+        (3, 6, 2, 1024),                   // K = 18, 36 jobs
+        (2, 12, 2, 1024),                  // K = 24, k = 2 corner
+    ] {
+        let cfg = SystemConfig::with_options(k, q, gamma, 1, bytes).unwrap();
+        let name = format!(
+            "e2e_k{k}_q{q}_B{bytes} (K={}, J={})",
+            cfg.servers(),
+            cfg.jobs()
+        );
+        let cfg2 = cfg.clone();
+        b.run(&name, move || {
+            let wl = SyntheticWorkload::new(&cfg2, 7);
+            let mut e = Engine::new(cfg2.clone(), Box::new(wl)).unwrap();
+            e.verify = false;
+            e.run().unwrap().stage_bytes
+        });
+    }
+
+    println!("\n== Shuffle-only throughput (bytes on link / shuffle wall) ==\n");
+    for (k, q, bytes) in [(3usize, 4usize, 4096usize), (4, 3, 4096), (3, 6, 2048)] {
+        let cfg = SystemConfig::with_options(k, q, 2, 1, bytes).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 7);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.verify = false;
+        let out = e.run().unwrap();
+        let total: usize = out.stage_bytes.iter().sum();
+        let gbps = total as f64 / out.shuffle_time.as_secs_f64() / 1e9;
+        println!(
+            "  k={k} q={q} B={bytes}: {total} link bytes in {} → {gbps:.2} GB/s effective",
+            fmt_ns(out.shuffle_time.as_nanos() as f64)
+        );
+    }
+
+    println!("\n== Message-passing cluster deployment (one thread per server) ==\n");
+    for (k, q) in [(3usize, 2usize), (3, 4)] {
+        let cfg = SystemConfig::with_options(k, q, 2, 1, 1024).unwrap();
+        let name = format!("cluster_k{k}_q{q} (K={})", cfg.servers());
+        let cfg2 = cfg.clone();
+        b.run(&name, move || {
+            let wl = Arc::new(SyntheticWorkload::new(&cfg2, 7));
+            run_cluster(cfg2.clone(), wl).unwrap().stage_bytes
+        });
+    }
+}

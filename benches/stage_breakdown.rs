@@ -1,0 +1,86 @@
+//! E5 — §III-C per-stage loads: measured stage 1/2/3 bytes vs the closed
+//! forms k/(K(k-1)), (q-1)k/(K(k-1)), (q-1)/q, and per-stage wall time.
+//!
+//! The Example-1 row must measure exactly 1/4, 1/4, 1/2.
+
+use camr::analysis::load;
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::master::Master;
+use camr::util::bench::Bench;
+use camr::workload::synth::SyntheticWorkload;
+
+fn main() {
+    println!("== §III-C / §IV: per-stage loads (measured vs closed form) ==\n");
+    println!(
+        "{:>3} {:>3} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "k", "q", "L1_meas", "L1_form", "L2_meas", "L2_form", "L3_meas", "L3_form"
+    );
+    for (k, q) in [(3usize, 2usize), (3, 3), (3, 4), (4, 2), (4, 3), (5, 2), (2, 5)] {
+        let cfg = SystemConfig::with_options(k, q, 2, 1, 120).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 1);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.verify = false;
+        let out = e.run().unwrap();
+        let form = load::camr_stages(k, q);
+        for (i, expect) in [form.stage1, form.stage2, form.stage3].iter().enumerate() {
+            assert!(
+                (out.stage_load(i + 1) - expect).abs() < 1e-12,
+                "k={k} q={q} stage{}: {} != {expect}",
+                i + 1,
+                out.stage_load(i + 1)
+            );
+        }
+        println!(
+            "{:>3} {:>3} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4}",
+            k,
+            q,
+            out.stage_load(1),
+            form.stage1,
+            out.stage_load(2),
+            form.stage2,
+            out.stage_load(3),
+            form.stage3
+        );
+    }
+    // Example 1 exact check.
+    {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 2);
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!((out.stage_load(1) - 0.25).abs() < 1e-12);
+        assert!((out.stage_load(2) - 0.25).abs() < 1e-12);
+        assert!((out.stage_load(3) - 0.50).abs() < 1e-12);
+        println!("\nExample 1 exact: 1/4 + 1/4 + 1/2 = 1  ✓");
+    }
+
+    println!("\n== Per-stage wall time (k=3, q=4, γ=4, B=4096) ==\n");
+    let b = Bench::new();
+    let cfg = SystemConfig::with_options(3, 4, 4, 1, 4096).unwrap();
+    let master = Master::new(cfg.clone()).unwrap();
+    let schedule = master.schedule().unwrap();
+    println!(
+        "schedule: {} stage-1 groups, {} stage-2 groups, {} stage-3 unicasts",
+        schedule.stage1.len(),
+        schedule.stage2.len(),
+        schedule.stage3.len()
+    );
+    b.run("schedule_build_k3_q4", || master.schedule().unwrap().stage2.len());
+    b.run("full_run_k3_q4_B4096", || {
+        let wl = SyntheticWorkload::new(&cfg, 9);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.verify = false;
+        let out = e.run().unwrap();
+        (out.map_time, out.shuffle_time)
+    });
+    // Report the phase split of one instrumented run.
+    let wl = SyntheticWorkload::new(&cfg, 9);
+    let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+    e.verify = false;
+    let out = e.run().unwrap();
+    println!(
+        "\nphase split: map {:?}  shuffle {:?}  reduce {:?}  (stage bytes {:?})",
+        out.map_time, out.shuffle_time, out.reduce_time, out.stage_bytes
+    );
+}

@@ -1,0 +1,70 @@
+//! Internal perf harness (§Perf): shuffle wall time + encode/decode
+//! micro-comparison between the cloning and zero-copy APIs.
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::master::Master;
+use camr::coordinator::worker::Worker;
+use camr::shuffle::multicast::GroupPlan;
+use camr::workload::synth::SyntheticWorkload;
+use std::time::Instant;
+
+fn main() {
+    for (k, q, g, b) in [(3usize, 4usize, 4usize, 4096usize), (4, 3, 2, 4096), (3, 2, 2, 65536)] {
+        let cfg = SystemConfig::with_options(k, q, g, 1, b).unwrap();
+        let mut best = u128::MAX; let mut sum = 0u128; let n = 15;
+        for _ in 0..n {
+            let wl = SyntheticWorkload::new(&cfg, 9);
+            let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+            e.verify = false;
+            let out = e.run().unwrap();
+            let ns = out.shuffle_time.as_nanos();
+            best = best.min(ns); sum += ns;
+        }
+        println!("SHUF k={k} q={q} B={b}: mean {}µs min {}µs", sum / n as u128 / 1000, best / 1000);
+    }
+
+    // Micro: encode+decode one stage-2 schedule, cloning vs zero-copy.
+    let cfg = SystemConfig::with_options(4, 3, 2, 1, 4096).unwrap();
+    let master = Master::new(cfg.clone()).unwrap();
+    let schedule = master.schedule().unwrap();
+    let wl = SyntheticWorkload::new(&cfg, 9);
+    let mut workers: Vec<Worker> = (0..cfg.servers()).map(|s| Worker::new(s, &cfg)).collect();
+    for w in workers.iter_mut() { w.run_map_phase(&cfg, &master.placement, &wl).unwrap(); }
+    let groups: Vec<&GroupPlan> = schedule.stage1.iter().chain(schedule.stage2.iter()).collect();
+
+    let chunk = |w: &Worker, plan: &GroupPlan, p: usize| -> camr::error::Result<Vec<u8>> {
+        let c = plan.chunks[p];
+        Ok(w.store.get(camr::coordinator::values::ValueKey { job: c.job, func: c.func, batch: c.batch })?.clone())
+    };
+
+    for mode in ["cloning", "zerocopy"] {
+        let mut best = u128::MAX;
+        for _ in 0..20 {
+            let t = Instant::now();
+            let mut total = 0usize;
+            for plan in &groups {
+                let deltas: Vec<Vec<u8>> = plan.members.iter().enumerate().map(|(t_pos, &m)| {
+                    if mode == "cloning" {
+                        plan.encode(t_pos, cfg.value_bytes, |p| chunk(&workers[m], plan, p)).unwrap()
+                    } else {
+                        workers[m].encode_for_group(plan).unwrap()
+                    }
+                }).collect();
+                for (r, &m) in plan.members.iter().enumerate() {
+                    let out = if mode == "cloning" {
+                        plan.decode(r, cfg.value_bytes, &deltas, |p| chunk(&workers[m], plan, p)).unwrap()
+                    } else {
+                        plan.decode_ref(r, cfg.value_bytes, &deltas, |p| {
+                            let c = plan.chunks[p];
+                            Ok(workers[m].store.get(camr::coordinator::values::ValueKey { job: c.job, func: c.func, batch: c.batch })?.as_slice())
+                        }).unwrap()
+                    };
+                    total += out.len();
+                }
+            }
+            std::hint::black_box(total);
+            best = best.min(t.elapsed().as_nanos());
+        }
+        println!("MICRO encode+decode[{mode}]: min {}µs", best / 1000);
+    }
+}

@@ -1,0 +1,111 @@
+"""AOT export: lower the Layer-2 JAX model to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust
+side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/load_hlo and its README for the full gotcha list).
+
+Each artifact is a pair:
+  ``<name>.hlo.txt``   — the HLO module (compiled by rust via PJRT)
+  ``<name>.meta.json`` — shapes + provenance read by ``rust/src/runtime``
+
+Run once via ``make artifacts``; rust is self-contained afterwards.
+
+Usage:
+  python -m compile.aot --out ../artifacts [--m 96] [--cols 8] [--gamma 2]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, example_args, out_dir: str, name: str, meta: dict) -> str:
+    """Lower ``fn`` at the example shapes and write the artifact pair."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return hlo_path
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--m", type=int, default=96, help="rows per shard (M = Q * rows_per_func)")
+    p.add_argument("--cols", type=int, default=8, help="columns per subfile shard")
+    p.add_argument("--gamma", type=int, default=2, help="subfiles per batch (batch artifact)")
+    args = p.parse_args()
+
+    f32 = jnp.float32
+    shard_args = (
+        jax.ShapeDtypeStruct((args.m, args.cols), f32),
+        jax.ShapeDtypeStruct((args.cols,), f32),
+    )
+    path = export(
+        model.map_shard,
+        shard_args,
+        args.out,
+        "map_kernel",
+        {"m": args.m, "cols": args.cols, "dtype": "f32", "kernel": "pallas_matvec"},
+    )
+    print(f"wrote {path}", file=sys.stderr)
+
+    batch_args = (
+        jax.ShapeDtypeStruct((args.gamma, args.m, args.cols), f32),
+        jax.ShapeDtypeStruct((args.gamma, args.cols), f32),
+    )
+    path = export(
+        model.map_batch,
+        batch_args,
+        args.out,
+        "batch_agg",
+        {
+            "m": args.m,
+            "cols": args.cols,
+            "gamma": args.gamma,
+            "dtype": "f32",
+            "kernel": "pallas_matvec+sum",
+        },
+    )
+    print(f"wrote {path}", file=sys.stderr)
+
+    path = export(
+        model.map_batch_fused,
+        batch_args,
+        args.out,
+        "batch_fused",
+        {
+            "m": args.m,
+            "cols": args.cols,
+            "gamma": args.gamma,
+            "dtype": "f32",
+            "kernel": "pallas_batch_fused",
+        },
+    )
+    print(f"wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Layer-1 Pallas kernel: tiled matrix-vector product.
+
+The map-phase hot-spot of the CAMR matvec workload (paper §I: "the
+matrix-vector multiplications performed during the forward and backward
+propagation in neural networks... computing each of these products
+constitutes a job"). Each subfile of a job is a column shard ``A_n``
+(``m x cols``) with its input slice ``x_n``; the kernel computes the
+partial product ``A_n @ x_n`` that the rust coordinator aggregates.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the grid walks row tiles of
+``A`` so each step streams one ``(tile_m, cols)`` block from HBM into
+VMEM (BlockSpec), multiplies against the resident ``x`` and writes a
+``(tile_m,)`` slice of the output. ``tile_m`` targets MXU-friendly
+128-row tiles and divides ``m`` exactly. fp32 accumulation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest and the
+rust runtime run. Real-TPU efficiency is estimated from the VMEM/MXU
+footprint in DESIGN.md, not measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_tile_m(m: int, target: int = 128) -> int:
+    """Largest divisor of ``m`` that is <= target (MXU sublane budget)."""
+    if m <= 0:
+        raise ValueError(f"m must be positive, got {m}")
+    best = 1
+    for cand in range(1, min(m, target) + 1):
+        if m % cand == 0:
+            best = cand
+    return best
+
+
+def _matvec_tile_kernel(a_ref, x_ref, o_ref):
+    """One grid step: (tile_m, cols) x (cols,) -> (tile_m,).
+
+    ``jnp.dot`` on an fp32 tile maps onto the MXU on real hardware;
+    ``preferred_element_type`` pins fp32 accumulation.
+    """
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def matvec(a: jax.Array, x: jax.Array, tile_m: int | None = None) -> jax.Array:
+    """Tiled Pallas matvec: ``a (m, cols) @ x (cols,) -> (m,)``.
+
+    ``tile_m`` must divide ``m``; defaults to the largest divisor <= 128.
+    """
+    m, cols = a.shape
+    if x.shape != (cols,):
+        raise ValueError(f"x shape {x.shape} does not match a {a.shape}")
+    if tile_m is None:
+        tile_m = pick_tile_m(m)
+    if m % tile_m != 0:
+        raise ValueError(f"tile_m={tile_m} does not divide m={m}")
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        _matvec_tile_kernel,
+        grid=grid,
+        in_specs=[
+            # Row tile i of A: HBM -> VMEM, one (tile_m, cols) block/step.
+            pl.BlockSpec((tile_m, cols), lambda i: (i, 0)),
+            # x stays resident across the whole grid.
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, x)
+
+
+def _batch_matvec_kernel(a_ref, x_ref, o_ref):
+    """Fused batch kernel: one grid step handles (shard g, row-tile i).
+
+    The output tile accumulates across the γ grid steps of its row tile —
+    the paper's end-of-map aggregation (§III-B) done *inside* the kernel,
+    so partial products never round-trip through HBM.
+    """
+    g = pl.program_id(0)
+    partial = jnp.dot(a_ref[0], x_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(g > 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def batch_matvec_fused(a_batch: jax.Array, x_batch: jax.Array, tile_m: int | None = None) -> jax.Array:
+    """Fused map+combine over a batch: ``(γ, m, cols), (γ, cols) -> (m,)``.
+
+    Equivalent to ``sum_g a_batch[g] @ x_batch[g]`` with the sum
+    accumulated in VMEM across grid steps (revisiting output blocks),
+    instead of materializing γ partial vectors and reducing afterwards.
+    """
+    gamma, m, cols = a_batch.shape
+    if x_batch.shape != (gamma, cols):
+        raise ValueError(f"x_batch shape {x_batch.shape} does not match a {a_batch.shape}")
+    if tile_m is None:
+        tile_m = pick_tile_m(m)
+    if m % tile_m != 0:
+        raise ValueError(f"tile_m={tile_m} does not divide m={m}")
+    grid = (gamma, m // tile_m)
+    return pl.pallas_call(
+        _batch_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_m, cols), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, cols), lambda g, i: (g, 0)),
+        ],
+        # Output tile depends only on i: revisited across g (accumulate).
+        out_specs=pl.BlockSpec((tile_m,), lambda g, i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(a_batch, x_batch)
+
+
+def vmem_footprint_bytes(m: int, cols: int, tile_m: int | None = None) -> int:
+    """Estimated VMEM residency per grid step (A tile + x + out tile).
+
+    Used by DESIGN.md's roofline estimate; must stay well under the
+    ~16 MiB VMEM of a TPU core.
+    """
+    if tile_m is None:
+        tile_m = pick_tile_m(m)
+    return 4 * (tile_m * cols + cols + tile_m)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The CORE correctness signal for Layer 1: pytest asserts the Pallas
+kernel's output matches these references across shape/dtype sweeps
+(hypothesis) before anything is AOT-exported for the rust runtime.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec_ref(a, x):
+    """Reference partial product: plain ``a @ x`` in fp32."""
+    return jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def batch_agg_ref(a_batch, x_batch):
+    """Reference batch aggregate: sum of the γ per-subfile partials.
+
+    ``a_batch`` is ``(gamma, m, cols)``, ``x_batch`` is ``(gamma, cols)``;
+    the result is the batch-level aggregate value the CAMR map phase
+    combines (paper §III-B).
+    """
+    partials = jnp.einsum(
+        "gmc,gc->gm", a_batch.astype(jnp.float32), x_batch.astype(jnp.float32)
+    )
+    return jnp.sum(partials, axis=0)

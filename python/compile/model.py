@@ -1,0 +1,45 @@
+"""Layer-2 JAX model: the CAMR map-phase compute graph.
+
+Two entry points, both lowered AOT by :mod:`compile.aot` and executed
+from rust via PJRT (python never runs on the request path):
+
+- :func:`map_shard` — one subfile's partial product ``A_n @ x_n``
+  (calls the Layer-1 Pallas kernel). This is what the rust engine's
+  ``PjrtShardCompute`` invokes per (job, subfile).
+- :func:`map_batch` — a whole batch of ``γ`` subfiles mapped and
+  combined in one fused graph (the paper's end-of-map aggregation,
+  §III-B): ``sum_n A_n @ x_n``. Demonstrates that the combine fuses into
+  the same XLA module, costing no extra materialization.
+
+Outputs are 1-tuples because ``aot.py`` lowers with ``return_tuple=True``
+(the rust side unwraps with ``to_tuple1``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matvec import batch_matvec_fused, matvec
+
+
+def map_shard(a, x):
+    """Partial product of one subfile: ``(m, cols) x (cols,) -> (m,)``."""
+    return (matvec(a, x),)
+
+
+def map_batch(a_batch, x_batch):
+    """Map + combine one batch of γ subfiles in a single fused graph.
+
+    vmap runs the Pallas kernel per subfile; the sum is the batch-level
+    aggregate ``α`` of §III-B. Shapes: ``(γ, m, cols), (γ, cols) -> (m,)``.
+    """
+    partials = jax.vmap(lambda a, x: matvec(a, x))(a_batch, x_batch)
+    return (jnp.sum(partials, axis=0),)
+
+
+def map_batch_fused(a_batch, x_batch):
+    """Same contract as :func:`map_batch`, but the γ-way combine happens
+    *inside* the Pallas kernel (accumulating output tiles across grid
+    steps) — zero materialized partials. Exported as the `batch_fused`
+    artifact for the ablation comparison.
+    """
+    return (batch_matvec_fused(a_batch, x_batch),)

@@ -1,0 +1,127 @@
+"""Layer-1 correctness: the Pallas matvec kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and data; every case asserts allclose against
+``ref.matvec_ref``. This is the CORE correctness signal gating the AOT
+export (``make artifacts`` is only trusted because these pass).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.matvec import matvec, pick_tile_m, vmem_footprint_bytes
+from compile.kernels.ref import matvec_ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "m,cols",
+    [(1, 1), (4, 8), (8, 3), (96, 8), (128, 16), (130, 7), (24, 24)],
+)
+def test_matvec_matches_ref_fixed_shapes(m, cols):
+    a = rand((m, cols), seed=m * 1000 + cols)
+    x = rand((cols,), seed=m + cols)
+    got = np.asarray(matvec(jnp.asarray(a), jnp.asarray(x)))
+    want = np.asarray(matvec_ref(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=160),
+    cols=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_matvec_matches_ref_hypothesis(m, cols, seed):
+    a = rand((m, cols), seed=seed)
+    x = rand((cols,), seed=seed ^ 0xFFFF)
+    got = np.asarray(matvec(jnp.asarray(a), jnp.asarray(x)))
+    want = np.asarray(matvec_ref(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=128),
+    tile_target=st.integers(min_value=1, max_value=128),
+)
+def test_pick_tile_m_divides(m, tile_target):
+    t = pick_tile_m(m, tile_target)
+    assert m % t == 0
+    assert 1 <= t <= min(m, tile_target)
+
+
+def test_explicit_tile_must_divide():
+    a = jnp.zeros((6, 4), jnp.float32)
+    x = jnp.zeros((4,), jnp.float32)
+    with pytest.raises(ValueError):
+        matvec(a, x, tile_m=4)  # 4 does not divide 6
+
+
+def test_shape_mismatch_rejected():
+    a = jnp.zeros((6, 4), jnp.float32)
+    x = jnp.zeros((5,), jnp.float32)
+    with pytest.raises(ValueError):
+        matvec(a, x)
+
+
+def test_vmem_footprint_under_budget():
+    # The default artifact shape must sit far below a TPU core's ~16 MiB
+    # VMEM (DESIGN.md §Perf / §Hardware-Adaptation).
+    assert vmem_footprint_bytes(96, 8) < 1 << 20
+    # A production-ish layer shard too: 4096 x 512 tiles at 128 rows.
+    assert vmem_footprint_bytes(4096, 512) < 4 << 20
+
+
+def test_deterministic():
+    a = rand((32, 8), seed=1)
+    x = rand((8,), seed=2)
+    r1 = np.asarray(matvec(jnp.asarray(a), jnp.asarray(x)))
+    r2 = np.asarray(matvec(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_array_equal(r1, r2)
+
+
+# ---- fused batch kernel -------------------------------------------------
+
+from compile.kernels.matvec import batch_matvec_fused, matvec as _matvec
+from compile.kernels.ref import batch_agg_ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    gamma=st.integers(min_value=1, max_value=4),
+    m=st.integers(min_value=1, max_value=96),
+    cols=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_batch_fused_matches_ref(gamma, m, cols, seed):
+    a = rand((gamma, m, cols), seed)
+    x = rand((gamma, cols), seed ^ 0x5A5A)
+    got = np.asarray(batch_matvec_fused(jnp.asarray(a), jnp.asarray(x)))
+    want = np.asarray(batch_agg_ref(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_batch_fused_equals_loop_of_singles():
+    # In-kernel accumulation == γ separate kernel calls + sum.
+    gamma, m, cols = 3, 32, 8
+    a = rand((gamma, m, cols), 11)
+    x = rand((gamma, cols), 12)
+    fused = np.asarray(batch_matvec_fused(jnp.asarray(a), jnp.asarray(x)))
+    singles = sum(
+        np.asarray(_matvec(jnp.asarray(a[g]), jnp.asarray(x[g]))) for g in range(gamma)
+    )
+    np.testing.assert_allclose(fused, singles, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_fused_rejects_bad_shapes():
+    a = jnp.zeros((2, 8, 4), jnp.float32)
+    x = jnp.zeros((3, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        batch_matvec_fused(a, x)

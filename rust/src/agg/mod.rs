@@ -1,0 +1,333 @@
+//! Aggregation (combiner) functions — paper Definition 1.
+//!
+//! An *aggregate function* is associative and commutative, so any number
+//! of intermediate values of the same `(job, function)` can be combined
+//! into a single value of the same size `B`. This compression is what
+//! CAMR's batch-level shuffle exploits.
+//!
+//! Values are opaque byte strings of a fixed length; each [`Aggregator`]
+//! interprets the bytes (u64 lanes, f32 lanes, …) and must satisfy the
+//! algebraic laws — enforced by tests and the proptest suite.
+
+use crate::error::{CamrError, Result};
+
+/// An intermediate value `ν` (or any aggregate of them): exactly
+/// `value_bytes` bytes.
+pub type Value = Vec<u8>;
+
+/// An associative + commutative combiner over fixed-size byte values.
+pub trait Aggregator: Send + Sync {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Combine two values of equal length into one of the same length.
+    fn combine(&self, a: &[u8], b: &[u8]) -> Result<Value>;
+
+    /// In-place combine: `acc ← acc ⊕ b`. The allocation-free hot path
+    /// used by the map-phase accumulation and stage-3 fusion (§Perf);
+    /// the default falls back to [`Aggregator::combine`].
+    fn combine_into(&self, acc: &mut [u8], b: &[u8]) -> Result<()> {
+        let out = self.combine(acc, b)?;
+        acc.copy_from_slice(&out);
+        Ok(())
+    }
+
+    /// The identity element of the monoid, for a given value size.
+    fn identity(&self, len: usize) -> Value;
+
+    /// Fold an iterator of values; returns the identity when empty.
+    fn fold<'a, I: Iterator<Item = &'a [u8]>>(&self, len: usize, values: I) -> Result<Value>
+    where
+        Self: Sized,
+    {
+        let mut acc = self.identity(len);
+        for v in values {
+            acc = self.combine(&acc, v)?;
+        }
+        Ok(acc)
+    }
+}
+
+fn check_lengths(name: &str, a: &[u8], b: &[u8]) -> Result<()> {
+    if a.len() != b.len() {
+        return Err(CamrError::Aggregation(format!(
+            "{name}: length mismatch {} vs {}",
+            a.len(),
+            b.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Lane-wise wrapping sum of little-endian u64 lanes. The workhorse for
+/// word counting and any integer linear aggregation. Value length must be
+/// a multiple of 8.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SumU64;
+
+impl Aggregator for SumU64 {
+    fn name(&self) -> &'static str {
+        "sum_u64"
+    }
+
+    fn combine(&self, a: &[u8], b: &[u8]) -> Result<Value> {
+        let mut out = a.to_vec();
+        self.combine_into(&mut out, b)?;
+        Ok(out)
+    }
+
+    fn combine_into(&self, acc: &mut [u8], b: &[u8]) -> Result<()> {
+        check_lengths("sum_u64", acc, b)?;
+        if acc.len() % 8 != 0 {
+            return Err(CamrError::Aggregation(format!(
+                "sum_u64 requires 8-byte lanes, got length {}",
+                acc.len()
+            )));
+        }
+        for i in (0..acc.len()).step_by(8) {
+            let x = u64::from_le_bytes(acc[i..i + 8].try_into().unwrap());
+            let y = u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+            acc[i..i + 8].copy_from_slice(&x.wrapping_add(y).to_le_bytes());
+        }
+        Ok(())
+    }
+
+    fn identity(&self, len: usize) -> Value {
+        vec![0u8; len]
+    }
+}
+
+/// Lane-wise IEEE-754 f32 sum (little-endian lanes). Used by the matvec
+/// and gradient workloads. Value length must be a multiple of 4.
+///
+/// Note: f32 addition is not exactly associative; the engine's oracle
+/// therefore verifies with a tolerance for this aggregator (integer
+/// aggregators verify bit-exactly).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SumF32;
+
+impl Aggregator for SumF32 {
+    fn name(&self) -> &'static str {
+        "sum_f32"
+    }
+
+    fn combine(&self, a: &[u8], b: &[u8]) -> Result<Value> {
+        let mut out = a.to_vec();
+        self.combine_into(&mut out, b)?;
+        Ok(out)
+    }
+
+    fn combine_into(&self, acc: &mut [u8], b: &[u8]) -> Result<()> {
+        check_lengths("sum_f32", acc, b)?;
+        if acc.len() % 4 != 0 {
+            return Err(CamrError::Aggregation(format!(
+                "sum_f32 requires 4-byte lanes, got length {}",
+                acc.len()
+            )));
+        }
+        for i in (0..acc.len()).step_by(4) {
+            let x = f32::from_le_bytes(acc[i..i + 4].try_into().unwrap());
+            let y = f32::from_le_bytes(b[i..i + 4].try_into().unwrap());
+            acc[i..i + 4].copy_from_slice(&(x + y).to_le_bytes());
+        }
+        Ok(())
+    }
+
+    fn identity(&self, len: usize) -> Value {
+        // 0.0f32 lanes are all-zero bytes.
+        vec![0u8; len]
+    }
+}
+
+/// Lane-wise max of little-endian u64 lanes (e.g. distributed top-k /
+/// max-pooling style reductions).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxU64;
+
+impl Aggregator for MaxU64 {
+    fn name(&self) -> &'static str {
+        "max_u64"
+    }
+
+    fn combine(&self, a: &[u8], b: &[u8]) -> Result<Value> {
+        let mut out = a.to_vec();
+        self.combine_into(&mut out, b)?;
+        Ok(out)
+    }
+
+    fn combine_into(&self, acc: &mut [u8], b: &[u8]) -> Result<()> {
+        check_lengths("max_u64", acc, b)?;
+        if acc.len() % 8 != 0 {
+            return Err(CamrError::Aggregation(format!(
+                "max_u64 requires 8-byte lanes, got length {}",
+                acc.len()
+            )));
+        }
+        for i in (0..acc.len()).step_by(8) {
+            let x = u64::from_le_bytes(acc[i..i + 8].try_into().unwrap());
+            let y = u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+            acc[i..i + 8].copy_from_slice(&x.max(y).to_le_bytes());
+        }
+        Ok(())
+    }
+
+    fn identity(&self, len: usize) -> Value {
+        vec![0u8; len] // u64::MIN lanes
+    }
+}
+
+/// Lane-wise XOR — useful for testing (it is its own inverse) and for
+/// parity-style reductions. Any value length.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct XorBytes;
+
+impl Aggregator for XorBytes {
+    fn name(&self) -> &'static str {
+        "xor_bytes"
+    }
+
+    fn combine(&self, a: &[u8], b: &[u8]) -> Result<Value> {
+        check_lengths("xor_bytes", a, b)?;
+        Ok(a.iter().zip(b).map(|(x, y)| x ^ y).collect())
+    }
+
+    fn combine_into(&self, acc: &mut [u8], b: &[u8]) -> Result<()> {
+        check_lengths("xor_bytes", acc, b)?;
+        for (x, y) in acc.iter_mut().zip(b) {
+            *x ^= y;
+        }
+        Ok(())
+    }
+
+    fn identity(&self, len: usize) -> Value {
+        vec![0u8; len]
+    }
+}
+
+/// Type-erased aggregation helper used by the engine (object-safe fold).
+pub fn fold_values(agg: &dyn Aggregator, len: usize, values: &[&[u8]]) -> Result<Value> {
+    let mut acc = agg.identity(len);
+    for v in values {
+        acc = agg.combine(&acc, v)?;
+    }
+    Ok(acc)
+}
+
+/// Helpers to view values as typed lanes (used by workload oracles).
+pub mod lanes {
+    /// Interpret a value as little-endian u64 lanes.
+    pub fn as_u64(v: &[u8]) -> Vec<u64> {
+        v.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    /// Build a value from u64 lanes.
+    pub fn from_u64(lanes: &[u64]) -> Vec<u8> {
+        lanes.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    /// Interpret a value as little-endian f32 lanes.
+    pub fn as_f32(v: &[u8]) -> Vec<f32> {
+        v.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    /// Build a value from f32 lanes.
+    pub fn from_f32(lanes: &[f32]) -> Vec<u8> {
+        lanes.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v64(xs: &[u64]) -> Value {
+        lanes::from_u64(xs)
+    }
+
+    #[test]
+    fn sum_u64_combines_lanes() {
+        let a = v64(&[1, 2, 3]);
+        let b = v64(&[10, 20, 30]);
+        let c = SumU64.combine(&a, &b).unwrap();
+        assert_eq!(lanes::as_u64(&c), vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn sum_u64_wraps() {
+        let a = v64(&[u64::MAX]);
+        let b = v64(&[2]);
+        assert_eq!(lanes::as_u64(&SumU64.combine(&a, &b).unwrap()), vec![1]);
+    }
+
+    #[test]
+    fn associativity_and_commutativity_u64() {
+        let a = v64(&[5, 7]);
+        let b = v64(&[11, 13]);
+        let c = v64(&[17, 19]);
+        let ab_c = SumU64.combine(&SumU64.combine(&a, &b).unwrap(), &c).unwrap();
+        let a_bc = SumU64.combine(&a, &SumU64.combine(&b, &c).unwrap()).unwrap();
+        assert_eq!(ab_c, a_bc);
+        assert_eq!(SumU64.combine(&a, &b).unwrap(), SumU64.combine(&b, &a).unwrap());
+    }
+
+    #[test]
+    fn identity_laws() {
+        let a = v64(&[42, 43]);
+        let id = SumU64.identity(16);
+        assert_eq!(SumU64.combine(&a, &id).unwrap(), a);
+        assert_eq!(SumU64.combine(&id, &a).unwrap(), a);
+        let idx = XorBytes.identity(5);
+        let x = vec![1u8, 2, 3, 4, 5];
+        assert_eq!(XorBytes.combine(&x, &idx).unwrap(), x);
+    }
+
+    #[test]
+    fn sum_f32_lanes() {
+        let a = lanes::from_f32(&[1.5, -2.0]);
+        let b = lanes::from_f32(&[0.25, 4.0]);
+        let c = SumF32.combine(&a, &b).unwrap();
+        assert_eq!(lanes::as_f32(&c), vec![1.75, 2.0]);
+    }
+
+    #[test]
+    fn max_u64_lanes() {
+        let a = v64(&[3, 100]);
+        let b = v64(&[7, 50]);
+        assert_eq!(lanes::as_u64(&MaxU64.combine(&a, &b).unwrap()), vec![7, 100]);
+    }
+
+    #[test]
+    fn xor_is_self_inverse() {
+        let a = vec![0xAAu8, 0x55, 0xFF];
+        let b = vec![0x0Fu8, 0xF0, 0x3C];
+        let x = XorBytes.combine(&a, &b).unwrap();
+        assert_eq!(XorBytes.combine(&x, &b).unwrap(), a);
+    }
+
+    #[test]
+    fn length_mismatch_is_error() {
+        assert!(SumU64.combine(&[0u8; 8], &[0u8; 16]).is_err());
+        assert!(XorBytes.combine(&[0u8; 3], &[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn lane_misalignment_is_error() {
+        assert!(SumU64.combine(&[0u8; 7], &[0u8; 7]).is_err());
+        assert!(SumF32.combine(&[0u8; 6], &[0u8; 6]).is_err());
+    }
+
+    #[test]
+    fn fold_empty_is_identity() {
+        let out = SumU64.fold(8, std::iter::empty()).unwrap();
+        assert_eq!(out, SumU64.identity(8));
+    }
+
+    #[test]
+    fn fold_values_object_safe() {
+        let a = v64(&[1]);
+        let b = v64(&[2]);
+        let agg: &dyn Aggregator = &SumU64;
+        let out = fold_values(agg, 8, &[&a, &b]).unwrap();
+        assert_eq!(lanes::as_u64(&out), vec![3]);
+    }
+}

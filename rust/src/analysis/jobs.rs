@@ -1,0 +1,127 @@
+//! Minimum job requirements — the paper's Table III and §V comparison.
+//!
+//! CAMR needs `J = q^{k-1}` jobs; CCDC needs `C(K, μK+1)`. At the same
+//! storage fraction `μ = (k-1)/K` (so `μK+1 = k`), CCDC's requirement is
+//! `C(kq, k) ≥ q^k > q^{k-1}` — exponentially larger as `q` grows.
+
+/// Exact binomial coefficient `C(n, r)` as u128 (Table III values fit
+/// comfortably: C(100,5) = 75,287,520).
+pub fn binomial(n: u64, r: u64) -> u128 {
+    if r > n {
+        return 0;
+    }
+    let r = r.min(n - r);
+    let mut acc: u128 = 1;
+    for i in 0..r {
+        acc = acc * (n - i) as u128 / (i + 1) as u128;
+    }
+    acc
+}
+
+/// Job requirements of both schemes at equal storage fraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobRequirement {
+    /// Design parameter `k` (μK = k-1).
+    pub k: usize,
+    /// Design parameter `q` (K = kq).
+    pub q: usize,
+    /// Cluster size.
+    pub servers: usize,
+    /// `J_CAMR = q^{k-1}`.
+    pub camr: u128,
+    /// `J_CCDC,min = C(K, μK+1) = C(kq, k)`.
+    pub ccdc: u128,
+}
+
+impl JobRequirement {
+    /// Compute both requirements for `(k, q)`.
+    pub fn for_params(k: usize, q: usize) -> Self {
+        let servers = k * q;
+        JobRequirement {
+            k,
+            q,
+            servers,
+            camr: (q as u128).pow(k as u32 - 1),
+            ccdc: binomial(servers as u64, k as u64),
+        }
+    }
+
+    /// The ratio CCDC / CAMR (how many times more jobs CCDC needs).
+    pub fn ratio(&self) -> f64 {
+        self.ccdc as f64 / self.camr as f64
+    }
+}
+
+/// The rows of Table III: `K = 100`, `k ∈ {2, 4, 5}`.
+pub fn table3() -> Vec<JobRequirement> {
+    [(2usize, 50usize), (4, 25), (5, 20)]
+        .into_iter()
+        .map(|(k, q)| JobRequirement::for_params(k, q))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_basics() {
+        assert_eq!(binomial(6, 3), 20);
+        assert_eq!(binomial(100, 2), 4950);
+        assert_eq!(binomial(100, 4), 3_921_225);
+        assert_eq!(binomial(100, 5), 75_287_520);
+        assert_eq!(binomial(5, 0), 1);
+        assert_eq!(binomial(5, 5), 1);
+        assert_eq!(binomial(3, 4), 0);
+    }
+
+    #[test]
+    fn table3_matches_paper() {
+        // Table III: K = 100;
+        //   k=2 → CAMR 50,     CCDC 4,950
+        //   k=4 → CAMR 15,625, CCDC 3,921,225
+        //   k=5 → CAMR 160,000 CCDC 75,287,520
+        let rows = table3();
+        assert_eq!(rows[0].camr, 50);
+        assert_eq!(rows[0].ccdc, 4950);
+        assert_eq!(rows[1].camr, 15_625);
+        assert_eq!(rows[1].ccdc, 3_921_225);
+        assert_eq!(rows[2].camr, 160_000);
+        assert_eq!(rows[2].ccdc, 75_287_520);
+        for r in &rows {
+            assert_eq!(r.servers, 100);
+        }
+    }
+
+    #[test]
+    fn paper_example_ccdc_needs_20_jobs() {
+        // §III-C: "their approach would require a minimum of J = C(6,3)
+        // = 20 distributed jobs" vs CAMR's 4.
+        let r = JobRequirement::for_params(3, 2);
+        assert_eq!(r.ccdc, 20);
+        assert_eq!(r.camr, 4);
+    }
+
+    #[test]
+    fn ccdc_requirement_dominates() {
+        // §V bound: C(kq, k) ≥ q^k > q^{k-1} for all valid (k, q).
+        for k in 2..8 {
+            for q in 2..12 {
+                let r = JobRequirement::for_params(k, q);
+                assert!(
+                    r.ccdc >= (q as u128).pow(k as u32),
+                    "k={k} q={q}: C = {} < q^k",
+                    r.ccdc
+                );
+                assert!(r.ccdc > r.camr);
+            }
+        }
+    }
+
+    #[test]
+    fn ratio_grows_with_q() {
+        let a = JobRequirement::for_params(4, 5).ratio();
+        let b = JobRequirement::for_params(4, 25).ratio();
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,182 @@
+//! Communication-load closed forms (paper §IV and §V).
+//!
+//! All loads are normalized by `J·Q·B` (Definition 3).
+
+/// Which scheme a load belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// The paper's scheme.
+    Camr,
+    /// Compressed Coded Distributed Computing (Li et al., Eq. (6)).
+    Ccdc,
+    /// Uncoded shuffle that still aggregates before sending.
+    UncodedAggregated,
+    /// Uncoded shuffle without aggregation (per-subfile values).
+    UncodedRaw,
+}
+
+/// CAMR per-stage and total loads for parameters `(k, q)` (§IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadBreakdown {
+    /// `k / (K(k-1))`.
+    pub stage1: f64,
+    /// `(q-1)·k / (K(k-1))`.
+    pub stage2: f64,
+    /// `(q-1)/q`.
+    pub stage3: f64,
+}
+
+impl LoadBreakdown {
+    /// Total `L_CAMR = (k(q-1)+1)/(q(k-1))`.
+    pub fn total(&self) -> f64 {
+        self.stage1 + self.stage2 + self.stage3
+    }
+}
+
+/// CAMR per-stage loads (§IV).
+pub fn camr_stages(k: usize, q: usize) -> LoadBreakdown {
+    let (kf, qf) = (k as f64, q as f64);
+    let cap_k = kf * qf;
+    LoadBreakdown {
+        stage1: kf / (cap_k * (kf - 1.0)),
+        stage2: (qf - 1.0) * kf / (cap_k * (kf - 1.0)),
+        stage3: (qf - 1.0) / qf,
+    }
+}
+
+/// `L_CAMR = (k(q-1)+1)/(q(k-1))` (§IV).
+pub fn camr_total(k: usize, q: usize) -> f64 {
+    let (kf, qf) = (k as f64, q as f64);
+    (kf * (qf - 1.0) + 1.0) / (qf * (kf - 1.0))
+}
+
+/// CCDC load at storage fraction `μ` with `μK ∈ {1, …, K-1}` (Eq. (6)):
+/// `L_CCDC = (1-μ)(μK+1)/(μK)`.
+pub fn ccdc_total(mu_k: usize, servers: usize) -> f64 {
+    let r = mu_k as f64;
+    let kf = servers as f64;
+    let mu = r / kf;
+    (1.0 - mu) * (r + 1.0) / r
+}
+
+/// Uncoded-but-aggregated shuffle under the Algorithm-1 placement: each
+/// owner receives its missing batch aggregate (1 value), each non-owner
+/// needs two complementary partial aggregates (no single server stores a
+/// whole job): `L = (k + 2(K-k))/K = 2 - k/K`.
+pub fn uncoded_aggregated_total(k: usize, q: usize) -> f64 {
+    let cap_k = (k * q) as f64;
+    2.0 - k as f64 / cap_k
+}
+
+/// Uncoded, *unaggregated* shuffle (per-subfile values cross the wire):
+/// owners need `γ` values, non-owners `N = kγ`:
+/// `L = γ·(k + (K-k)·k)/K` — larger by roughly a factor `γk`, which is
+/// the compression gain the paper's Definition 1 unlocks.
+pub fn uncoded_raw_total(k: usize, q: usize, gamma: usize) -> f64 {
+    let cap_k = (k * q) as f64;
+    let (kf, gf) = (k as f64, gamma as f64);
+    (kf * gf + (cap_k - kf) * kf * gf) / cap_k
+}
+
+/// Expected *measured* CAMR bytes including packet padding: stages 1 and
+/// 2 send packets of `⌈B/(k-1)⌉` bytes. Equals the closed form whenever
+/// `(k-1) | B`.
+pub fn camr_expected_bytes(k: usize, q: usize, value_bytes: usize, rounds: usize) -> usize {
+    let j = q.pow(k as u32 - 1);
+    let packet = value_bytes.div_ceil(k - 1);
+    let s1 = j * k * packet;
+    let s2 = j * (q - 1) * k * packet;
+    let s3 = (k * q) * (j - j / q) * value_bytes;
+    rounds * (s1 + s2 + s3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example1_stage_loads() {
+        // §III-C: 1/4, 1/4, 1/2 → total 1.
+        let b = camr_stages(3, 2);
+        assert!((b.stage1 - 0.25).abs() < 1e-12);
+        assert!((b.stage2 - 0.25).abs() < 1e-12);
+        assert!((b.stage3 - 0.5).abs() < 1e-12);
+        assert!((b.total() - 1.0).abs() < 1e-12);
+        assert!((camr_total(3, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stages_sum_to_total_formula() {
+        for k in 2..8 {
+            for q in 2..8 {
+                let b = camr_stages(k, q);
+                assert!(
+                    (b.total() - camr_total(k, q)).abs() < 1e-12,
+                    "k={k} q={q}: {} vs {}",
+                    b.total(),
+                    camr_total(k, q)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn camr_equals_ccdc_at_same_mu() {
+        // §V: with μK = k-1, Eq. (6) reduces to (k(q-1)+1)/(q(k-1)).
+        for k in 2..10 {
+            for q in 2..10 {
+                let camr = camr_total(k, q);
+                let ccdc = ccdc_total(k - 1, k * q);
+                assert!(
+                    (camr - ccdc).abs() < 1e-12,
+                    "k={k} q={q}: CAMR {camr} vs CCDC {ccdc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn example1_ccdc_is_one() {
+        // Paper: "the load achieved by the CCDC scheme … is L_CCDC = 1".
+        assert!((ccdc_total(2, 6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coded_beats_uncoded_aggregated_for_k_ge_3() {
+        for k in 3..8 {
+            for q in 2..8 {
+                assert!(
+                    camr_total(k, q) < uncoded_aggregated_total(k, q),
+                    "k={k} q={q}"
+                );
+            }
+        }
+        // k = 2 has no coding gain (chunks split into k-1 = 1 packet).
+        for q in 2..8 {
+            assert!((camr_total(2, q) - uncoded_aggregated_total(2, q)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn aggregation_gain_scales_with_gamma() {
+        // Raw shuffle is ~γk× worse than anything aggregated.
+        let raw = uncoded_raw_total(3, 2, 4);
+        let agg = uncoded_aggregated_total(3, 2);
+        assert!(raw / agg > 4.0);
+    }
+
+    #[test]
+    fn expected_bytes_match_formula_when_divisible() {
+        // (k-1) | B → measured bytes = closed-form load × JQB exactly.
+        for (k, q, b) in [(3usize, 2usize, 64usize), (5, 2, 64), (3, 3, 128), (4, 3, 66)] {
+            let j = q.pow(k as u32 - 1);
+            let jqb = (j * k * q * b) as f64;
+            let expect = camr_total(k, q) * jqb;
+            let measured = camr_expected_bytes(k, q, b, 1) as f64;
+            assert!(
+                (measured - expect).abs() < 1e-6,
+                "k={k} q={q} B={b}: {measured} vs {expect}"
+            );
+        }
+    }
+}

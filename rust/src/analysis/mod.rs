@@ -1,0 +1,10 @@
+//! Closed-form analysis: communication loads (§IV, §V) and minimum job
+//! requirements (Table III).
+
+pub mod jobs;
+pub mod load;
+pub mod time_model;
+
+pub use jobs::{binomial, JobRequirement};
+pub use load::{LoadBreakdown, Scheme};
+pub use time_model::TimeModel;

@@ -1,0 +1,249 @@
+//! Stage-coding ablation: run the CAMR placement and schedule but
+//! replace the coded multicast of stage 1 and/or stage 2 with plain
+//! unicasts of the same chunks.
+//!
+//! This isolates *where* the coding gain comes from: each coded stage
+//! multicasts `g` packets of `B/(g-1)` instead of unicasting `g` chunks
+//! of `B` — a per-stage factor of `g-1 = k-1`. Stage 3 is inherently
+//! unicast (Eq. (5)), so it has no coded/uncoded split.
+//!
+//! Used by `benches/encoding_overhead.rs` §ablation and the
+//! `camr ablation` CLI subcommand; all variants verify against the
+//! oracle, so the ablation never trades correctness for load.
+
+use crate::config::SystemConfig;
+use crate::coordinator::master::Master;
+use crate::coordinator::values::ValueKey;
+use crate::coordinator::worker::Worker;
+use crate::error::{CamrError, Result};
+use crate::net::{Bus, Stage};
+use crate::util::par;
+use crate::workload::{check_output, Workload};
+use crate::{FuncId, JobId};
+use std::collections::HashMap;
+
+/// Which stages keep their coded multicast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodingChoice {
+    /// Stage 1 coded (owners' exchange).
+    pub stage1_coded: bool,
+    /// Stage 2 coded (transversal groups).
+    pub stage2_coded: bool,
+}
+
+impl CodingChoice {
+    /// The full CAMR scheme.
+    pub fn full() -> Self {
+        CodingChoice { stage1_coded: true, stage2_coded: true }
+    }
+
+    /// All four variants for the ablation sweep.
+    pub fn all() -> [CodingChoice; 4] {
+        [
+            CodingChoice { stage1_coded: true, stage2_coded: true },
+            CodingChoice { stage1_coded: false, stage2_coded: true },
+            CodingChoice { stage1_coded: true, stage2_coded: false },
+            CodingChoice { stage1_coded: false, stage2_coded: false },
+        ]
+    }
+
+    /// Human-readable label.
+    pub fn label(&self) -> String {
+        format!(
+            "s1={} s2={}",
+            if self.stage1_coded { "coded" } else { "unicast" },
+            if self.stage2_coded { "coded" } else { "unicast" }
+        )
+    }
+
+    /// Closed-form load for this variant: an uncoded stage multiplies
+    /// its coded load by `k-1` (each chunk crosses whole instead of as
+    /// one coded packet per member).
+    pub fn expected_load(&self, k: usize, q: usize) -> f64 {
+        let forms = crate::analysis::load::camr_stages(k, q);
+        let s1 = if self.stage1_coded { forms.stage1 } else { forms.stage1 * (k as f64 - 1.0) };
+        let s2 = if self.stage2_coded { forms.stage2 } else { forms.stage2 * (k as f64 - 1.0) };
+        s1 + s2 + forms.stage3
+    }
+}
+
+/// Outcome of an ablation run.
+#[derive(Debug, Clone)]
+pub struct AblationOutcome {
+    /// The variant.
+    pub choice: CodingChoice,
+    /// Bytes per stage.
+    pub stage_bytes: [usize; 3],
+    /// `J·Q·B`.
+    pub normalizer: f64,
+    /// Verified against the oracle.
+    pub verified: bool,
+}
+
+impl AblationOutcome {
+    /// Total measured load.
+    pub fn total_load(&self) -> f64 {
+        self.stage_bytes.iter().sum::<usize>() as f64 / self.normalizer
+    }
+}
+
+/// Run one ablation variant end to end (always oracle-verified).
+pub fn run_ablation(
+    cfg: SystemConfig,
+    workload: Box<dyn Workload>,
+    choice: CodingChoice,
+) -> Result<AblationOutcome> {
+    let master = Master::new(cfg.clone())?;
+    let schedule = master.schedule()?;
+    let mut workers: Vec<Worker> =
+        (0..cfg.servers()).map(|s| Worker::new(s, &cfg)).collect();
+    let mut bus = Bus::new();
+
+    // Map phase (same as the engine).
+    {
+        let placement = &master.placement;
+        let wl = &*workload;
+        let cfg_ref = &cfg;
+        let mut slots: Vec<(&mut Worker, Result<usize>)> =
+            workers.iter_mut().map(|w| (w, Ok(0))).collect();
+        par::for_each_mut(&mut slots, |(w, slot)| {
+            *slot = w.run_map_phase(cfg_ref, placement, wl);
+        });
+        for (_, r) in slots {
+            r?;
+        }
+    }
+
+    // Stages 1 and 2: coded or unicast per the choice.
+    for (groups, stage, coded) in [
+        (&schedule.stage1, Stage::Stage1, choice.stage1_coded),
+        (&schedule.stage2, Stage::Stage2, choice.stage2_coded),
+    ] {
+        for plan in groups {
+            if coded {
+                let mut deltas = Vec::with_capacity(plan.members.len());
+                for &m in &plan.members {
+                    let delta = workers[m].encode_for_group(plan)?;
+                    bus.multicast(
+                        stage,
+                        m,
+                        plan.members.iter().copied().filter(|&x| x != m).collect(),
+                        delta.len(),
+                    );
+                    deltas.push(delta);
+                }
+                for &m in &plan.members {
+                    workers[m].decode_from_group(plan, &deltas)?;
+                }
+            } else {
+                // Uncoded: any holder unicasts each receiver's chunk
+                // whole (B bytes instead of one B/(k-1) packet each).
+                for (p, c) in plan.chunks.iter().enumerate() {
+                    let holder = plan
+                        .members
+                        .iter()
+                        .enumerate()
+                        .find(|&(t, _)| t != p)
+                        .map(|(_, &m)| m)
+                        .ok_or_else(|| CamrError::ShuffleDecode("no holder".into()))?;
+                    let v = workers[holder]
+                        .store
+                        .get(ValueKey { job: c.job, func: c.func, batch: c.batch })?
+                        .clone();
+                    bus.unicast(stage, holder, c.receiver, v.len());
+                    workers[c.receiver]
+                        .store
+                        .put(ValueKey { job: c.job, func: c.func, batch: c.batch }, v);
+                }
+            }
+        }
+    }
+
+    // Stage 3 (always unicast) + reduce + verify — same as the engine.
+    let agg = workload.aggregator();
+    for u in &schedule.stage3 {
+        let v = workers[u.sender].fuse_for_unicast(agg, u)?;
+        bus.unicast(Stage::Stage3, u.sender, u.receiver, v.len());
+        workers[u.receiver].receive_fused(u, v)?;
+    }
+
+    let mut outputs: HashMap<(JobId, FuncId), Vec<u8>> = HashMap::new();
+    for f in 0..cfg.functions() {
+        let reducer = cfg.reducer_of(f);
+        for j in 0..cfg.jobs() {
+            let out = workers[reducer].reduce(&cfg, &master.placement, agg, j, f)?;
+            outputs.insert((j, f), out);
+        }
+    }
+    for ((j, f), got) in &outputs {
+        let want = workload.oracle(&cfg, *j, *f)?;
+        check_output(&*workload, *j, *f, got, &want)?;
+    }
+
+    Ok(AblationOutcome {
+        choice,
+        stage_bytes: [
+            bus.stage_bytes(Stage::Stage1),
+            bus.stage_bytes(Stage::Stage2),
+            bus.stage_bytes(Stage::Stage3),
+        ],
+        normalizer: cfg.load_normalizer(),
+        verified: true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synth::SyntheticWorkload;
+
+    #[test]
+    fn full_coding_matches_engine() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 8);
+        let out = run_ablation(cfg, Box::new(wl), CodingChoice::full()).unwrap();
+        assert!(out.verified);
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_variants_verify_and_match_expected_loads() {
+        for (k, q) in [(3usize, 2usize), (3, 3), (4, 2)] {
+            let cfg = SystemConfig::with_options(k, q, 2, 1, 120).unwrap();
+            for choice in CodingChoice::all() {
+                let wl = SyntheticWorkload::new(&cfg, 4);
+                let out = run_ablation(cfg.clone(), Box::new(wl), choice).unwrap();
+                assert!(out.verified, "k={k} q={q} {}", choice.label());
+                let expect = choice.expected_load(k, q);
+                assert!(
+                    (out.total_load() - expect).abs() < 1e-12,
+                    "k={k} q={q} {}: {} vs {expect}",
+                    choice.label(),
+                    out.total_load()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uncoded_stages_cost_k_minus_1_times_more() {
+        let cfg = SystemConfig::with_options(4, 2, 1, 1, 120).unwrap();
+        let coded = run_ablation(
+            cfg.clone(),
+            Box::new(SyntheticWorkload::new(&cfg, 1)),
+            CodingChoice::full(),
+        )
+        .unwrap();
+        let uncoded = run_ablation(
+            cfg.clone(),
+            Box::new(SyntheticWorkload::new(&cfg, 1)),
+            CodingChoice { stage1_coded: false, stage2_coded: false },
+        )
+        .unwrap();
+        // Stages 1+2 exactly (k-1)× heavier without coding.
+        let c12 = (coded.stage_bytes[0] + coded.stage_bytes[1]) as f64;
+        let u12 = (uncoded.stage_bytes[0] + uncoded.stage_bytes[1]) as f64;
+        assert!((u12 / c12 - 3.0).abs() < 1e-12); // k-1 = 3
+        assert_eq!(coded.stage_bytes[2], uncoded.stage_bytes[2]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline schemes CAMR is compared against (paper §V).
+//!
+//! - [`uncoded`] — plain unicast shuffles over the *same* Algorithm-1
+//!   placement: with aggregation (`L = 2 - k/K`) and without
+//!   (`L ≈ γk(K-k+1)/K`, showing the compression gain of Definition 1).
+//! - [`ccdc`] — Compressed Coded Distributed Computing (Li et al.,
+//!   ISIT'18): jobs ↔ `C(K, μK+1)` subsets, coded owner exchange, and
+//!   non-owner delivery accounted at the paper's Eq.-(6) rate.
+
+pub mod ablation;
+pub mod ccdc;
+pub mod uncoded;
+
+pub use ablation::{run_ablation, CodingChoice};
+pub use ccdc::CcdcEngine;
+pub use uncoded::{UncodedEngine, UncodedMode};

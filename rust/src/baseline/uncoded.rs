@@ -1,0 +1,291 @@
+//! Uncoded shuffle baselines over the Algorithm-1 placement.
+//!
+//! Both baselines run the identical Map phase and placement as CAMR and
+//! differ only in the Shuffle: every needed value crosses the link as a
+//! plain unicast.
+//!
+//! **Aggregated** (`UncodedMode::Aggregated`): senders still combine
+//! before transmitting (Definition 1 is exploited, coding is not).
+//! - owner `U_{k'}` of job `j` receives its missing batch aggregate from
+//!   any holder: `B` bytes;
+//! - non-owner `m` receives two complementary partial aggregates (no
+//!   single server stores a whole job): the fused aggregate of one
+//!   owner's `k-1` stored batches plus that owner's missing batch
+//!   aggregate from a second owner: `2B` bytes.
+//!
+//! Total `L = (k + 2(K-k))/K = 2 - k/K`.
+//!
+//! **Raw** (`UncodedMode::Raw`): no aggregation at all — every
+//! per-subfile intermediate value crosses the wire individually, as in a
+//! vanilla MapReduce shuffle. `L = γ(k + (K-k)k)/K`, i.e. ~`γk×` more
+//! traffic — the compression gain the paper's Definition 1 unlocks.
+
+use crate::agg::Value;
+use crate::config::SystemConfig;
+use crate::coordinator::master::Master;
+use crate::coordinator::values::ValueKey;
+use crate::coordinator::worker::Worker;
+use crate::error::{CamrError, Result};
+use crate::net::{Bus, Stage};
+use crate::workload::{check_output, Workload};
+use crate::{FuncId, JobId};
+use std::collections::HashMap;
+
+/// Shuffle mode for the uncoded baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UncodedMode {
+    /// Combine before transmitting (aggregation without coding).
+    Aggregated,
+    /// Ship every per-subfile value (no aggregation, no coding).
+    Raw,
+}
+
+/// Outcome of an uncoded baseline run.
+#[derive(Debug, Clone)]
+pub struct UncodedOutcome {
+    /// Bytes on the link.
+    pub shuffle_bytes: usize,
+    /// Load normalizer `J·Q·B`.
+    pub normalizer: f64,
+    /// Oracle verification result.
+    pub verified: bool,
+}
+
+impl UncodedOutcome {
+    /// Measured communication load.
+    pub fn load(&self) -> f64 {
+        self.shuffle_bytes as f64 / self.normalizer
+    }
+}
+
+/// The uncoded baseline engine.
+pub struct UncodedEngine {
+    master: Master,
+    workers: Vec<Worker>,
+    workload: Box<dyn Workload>,
+    mode: UncodedMode,
+    /// The shared link ledger.
+    pub bus: Bus,
+}
+
+impl UncodedEngine {
+    /// Build for a config/workload/mode.
+    pub fn new(cfg: SystemConfig, workload: Box<dyn Workload>, mode: UncodedMode) -> Result<Self> {
+        let master = Master::new(cfg)?;
+        let workers = (0..master.cfg.servers()).map(|s| Worker::new(s, &master.cfg)).collect();
+        Ok(UncodedEngine { master, workers, workload, mode, bus: Bus::new() })
+    }
+
+    /// Run map → unicast shuffle → reduce, verifying against the oracle.
+    pub fn run(&mut self) -> Result<UncodedOutcome> {
+        self.bus.reset();
+        for w in &mut self.workers {
+            w.store.clear();
+        }
+        // Identical map phase to CAMR.
+        let cfg = self.master.cfg.clone();
+        {
+            let placement = &self.master.placement;
+            let workload = &*self.workload;
+            let cfg_ref = &cfg;
+            let mut results: Vec<Result<usize>> =
+                (0..self.workers.len()).map(|_| Ok(0)).collect();
+            let mut slots: Vec<(&mut Worker, &mut Result<usize>)> =
+                self.workers.iter_mut().zip(results.iter_mut()).collect();
+            crate::util::par::for_each_mut(&mut slots, |(w, slot)| {
+                **slot = w.run_map_phase(cfg_ref, placement, workload);
+            });
+            for r in results {
+                r?;
+            }
+        }
+
+        let mut outputs: HashMap<(JobId, FuncId), Value> = HashMap::new();
+        match self.mode {
+            UncodedMode::Aggregated => self.run_aggregated(&cfg, &mut outputs)?,
+            UncodedMode::Raw => self.run_raw(&cfg, &mut outputs)?,
+        }
+
+        // Verify against the oracle.
+        let workload = &*self.workload;
+        let pairs: Vec<(JobId, FuncId)> = outputs.keys().copied().collect();
+        let outputs_ref = &outputs;
+        let failures: Vec<String> = crate::util::par::map_indexed(pairs.len(), |i| {
+            let (j, f) = pairs[i];
+            let want = match workload.oracle(&cfg, j, f) {
+                Ok(w) => w,
+                Err(e) => return Some(e.to_string()),
+            };
+            check_output(workload, j, f, &outputs_ref[&(j, f)], &want)
+                .err()
+                .map(|e| e.to_string())
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        if let Some(first) = failures.first() {
+            return Err(CamrError::Verification(format!(
+                "uncoded baseline: {} mismatches; first: {first}",
+                failures.len()
+            )));
+        }
+        Ok(UncodedOutcome {
+            shuffle_bytes: self.bus.total_bytes(),
+            normalizer: cfg.load_normalizer(),
+            verified: true,
+        })
+    }
+
+    /// Aggregated unicast shuffle.
+    fn run_aggregated(
+        &mut self,
+        cfg: &SystemConfig,
+        outputs: &mut HashMap<(JobId, FuncId), Value>,
+    ) -> Result<()> {
+        let agg = self.workload.aggregator();
+        let placement = &self.master.placement;
+        for f in 0..cfg.functions() {
+            let m = cfg.reducer_of(f);
+            for j in 0..cfg.jobs() {
+                let owners = placement.owners(j).to_vec();
+                if placement.owns(m, j) {
+                    // Missing batch aggregate from any holder.
+                    let b = placement.missing_batch(j, m)?;
+                    let holder = *owners
+                        .iter()
+                        .find(|&&o| placement.stores_batch(o, j, b))
+                        .expect("k-1 holders exist");
+                    let v = self.workers[holder]
+                        .store
+                        .get(ValueKey { job: j, func: f, batch: b })?
+                        .clone();
+                    self.bus.unicast(Stage::Baseline, holder, m, v.len());
+                    // Reduce: local k-1 aggregates + received.
+                    let mut acc = v;
+                    for b2 in placement.stored_batches(m, j) {
+                        let local = self.workers[m]
+                            .store
+                            .get(ValueKey { job: j, func: f, batch: b2 })?;
+                        acc = agg.combine(&acc, local)?;
+                    }
+                    outputs.insert((j, f), acc);
+                } else {
+                    // Two complementary senders: u0's fused stored batches
+                    // plus u0's missing batch from u1.
+                    let u0 = owners[0];
+                    let b_miss = placement.missing_batch(j, u0)?;
+                    let u1 = *owners[1..]
+                        .iter()
+                        .find(|&&o| placement.stores_batch(o, j, b_miss))
+                        .expect("another owner stores u0's missing batch");
+                    let mut fused = agg.identity(cfg.value_bytes);
+                    for b in placement.stored_batches(u0, j) {
+                        let v =
+                            self.workers[u0].store.get(ValueKey { job: j, func: f, batch: b })?;
+                        fused = agg.combine(&fused, v)?;
+                    }
+                    self.bus.unicast(Stage::Baseline, u0, m, fused.len());
+                    let v_miss = self.workers[u1]
+                        .store
+                        .get(ValueKey { job: j, func: f, batch: b_miss })?
+                        .clone();
+                    self.bus.unicast(Stage::Baseline, u1, m, v_miss.len());
+                    outputs.insert((j, f), agg.combine(&fused, &v_miss)?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Raw unicast shuffle: per-subfile values, no aggregation.
+    fn run_raw(
+        &mut self,
+        cfg: &SystemConfig,
+        outputs: &mut HashMap<(JobId, FuncId), Value>,
+    ) -> Result<()> {
+        let agg = self.workload.aggregator();
+        let placement = &self.master.placement;
+        for f in 0..cfg.functions() {
+            let m = cfg.reducer_of(f);
+            for j in 0..cfg.jobs() {
+                let mut acc = agg.identity(cfg.value_bytes);
+                for b in 0..cfg.batches() {
+                    if placement.stores_batch(m, j, b) {
+                        // Local batch aggregate (computed in map phase).
+                        let v = self.workers[m].store.get(ValueKey { job: j, func: f, batch: b })?;
+                        acc = agg.combine(&acc, v)?;
+                    } else {
+                        // Fetch each subfile's value individually from a
+                        // holder — γ unicasts of B bytes each.
+                        let holder = *placement
+                            .owners(j)
+                            .iter()
+                            .find(|&&o| placement.stores_batch(o, j, b))
+                            .expect("every batch has k-1 holders");
+                        for n in placement.batch_subfiles(b) {
+                            let vals = self.workload.map_subfile(j, n)?;
+                            let v = &vals[f];
+                            self.bus.unicast(Stage::Baseline, holder, m, v.len());
+                            acc = agg.combine(&acc, v)?;
+                        }
+                    }
+                }
+                outputs.insert((j, f), acc);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::load;
+    use crate::workload::synth::SyntheticWorkload;
+
+    fn run(k: usize, q: usize, gamma: usize, mode: UncodedMode) -> UncodedOutcome {
+        let cfg = SystemConfig::new(k, q, gamma).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 123);
+        let mut e = UncodedEngine::new(cfg, Box::new(wl), mode).unwrap();
+        e.run().unwrap()
+    }
+
+    #[test]
+    fn aggregated_load_matches_closed_form() {
+        for (k, q) in [(2, 2), (3, 2), (3, 3), (4, 2)] {
+            let out = run(k, q, 2, UncodedMode::Aggregated);
+            let expect = load::uncoded_aggregated_total(k, q);
+            assert!(
+                (out.load() - expect).abs() < 1e-12,
+                "k={k} q={q}: {} vs {expect}",
+                out.load()
+            );
+            assert!(out.verified);
+        }
+    }
+
+    #[test]
+    fn raw_load_matches_closed_form() {
+        for (k, q, g) in [(3, 2, 1), (3, 2, 3), (3, 3, 2)] {
+            let out = run(k, q, g, UncodedMode::Raw);
+            let expect = load::uncoded_raw_total(k, q, g);
+            assert!(
+                (out.load() - expect).abs() < 1e-12,
+                "k={k} q={q} γ={g}: {} vs {expect}",
+                out.load()
+            );
+        }
+    }
+
+    #[test]
+    fn camr_beats_uncoded_aggregated_for_k3() {
+        let coded = {
+            let cfg = SystemConfig::new(3, 2, 2).unwrap();
+            let wl = SyntheticWorkload::new(&cfg, 5);
+            let mut e = crate::coordinator::engine::Engine::new(cfg, Box::new(wl)).unwrap();
+            e.run().unwrap().total_load()
+        };
+        let uncoded = run(3, 2, 2, UncodedMode::Aggregated).load();
+        assert!(coded < uncoded, "{coded} !< {uncoded}");
+    }
+}

@@ -1,0 +1,324 @@
+//! System configuration and validation.
+//!
+//! CAMR's parameters (paper §III-A):
+//! - `k`, `q` factor the cluster size `K = k·q`;
+//! - the job count is forced to `J = q^(k-1)` by the SPC-code design;
+//! - each job's data set is split into `N = k·γ` subfiles grouped into
+//!   `k` batches of `γ` subfiles;
+//! - each server stores `μ = (k-1)/K` of the union of all data sets;
+//! - `Q` output functions per job with `K | Q`; the paper presents
+//!   `Q = K` and repeats the shuffle `Q/K` times for larger `Q`
+//!   (we expose that as `rounds = Q/K`).
+
+use crate::error::{CamrError, Result};
+use crate::util::cfgtext::CfgText;
+
+/// Core system parameters for a CAMR deployment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SystemConfig {
+    /// Block-design parameter `k`: batches per job, owners per job,
+    /// and the SPC code length. Must be ≥ 2.
+    pub k: usize,
+    /// Design parameter `q`: the SPC alphabet size and the number of
+    /// blocks per parallel class. Must be ≥ 2.
+    pub q: usize,
+    /// Subfiles per batch (`γ` in the paper). Must be ≥ 1.
+    pub gamma: usize,
+    /// Number of shuffle rounds: `Q = rounds · K` output functions per
+    /// job. Defaults to 1 (the paper's `Q = K` presentation).
+    pub rounds: usize,
+    /// Size in bytes of every intermediate value `ν` (the paper's `B`,
+    /// expressed in bytes). Aggregates of any number of values are also
+    /// `value_bytes` long — that is the point of aggregation.
+    pub value_bytes: usize,
+}
+
+impl SystemConfig {
+    /// Create a config with `Q = K` and a default 64-byte value size.
+    ///
+    /// Errors if `k < 2`, `q < 2` or `gamma < 1`.
+    pub fn new(k: usize, q: usize, gamma: usize) -> Result<Self> {
+        Self::with_options(k, q, gamma, 1, 64)
+    }
+
+    /// Create a fully-specified config.
+    pub fn with_options(
+        k: usize,
+        q: usize,
+        gamma: usize,
+        rounds: usize,
+        value_bytes: usize,
+    ) -> Result<Self> {
+        let cfg = SystemConfig { k, q, gamma, rounds, value_bytes };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate all parameter constraints from §II–§III.
+    pub fn validate(&self) -> Result<()> {
+        if self.k < 2 {
+            return Err(CamrError::InvalidConfig(format!(
+                "k must be >= 2 (got {}): Algorithm 2 splits chunks into k-1 packets",
+                self.k
+            )));
+        }
+        if self.q < 2 {
+            return Err(CamrError::InvalidConfig(format!(
+                "q must be >= 2 (got {}): each parallel class needs >= 2 blocks",
+                self.q
+            )));
+        }
+        if self.gamma < 1 {
+            return Err(CamrError::InvalidConfig("gamma must be >= 1".into()));
+        }
+        if self.rounds < 1 {
+            return Err(CamrError::InvalidConfig("rounds must be >= 1".into()));
+        }
+        if self.value_bytes == 0 {
+            return Err(CamrError::InvalidConfig("value_bytes must be > 0".into()));
+        }
+        // Guard against absurd design sizes (q^(k-1) jobs).
+        let j = (self.q as f64).powi(self.k as i32 - 1);
+        if j > 1e9 {
+            return Err(CamrError::InvalidConfig(format!(
+                "q^(k-1) = {j:.3e} jobs is too large to simulate"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Cluster size `K = k·q`.
+    pub fn servers(&self) -> usize {
+        self.k * self.q
+    }
+
+    /// Number of jobs `J = q^(k-1)` dictated by the SPC design.
+    pub fn jobs(&self) -> usize {
+        self.q.pow(self.k as u32 - 1)
+    }
+
+    /// Output functions per job, `Q = rounds · K`.
+    pub fn functions(&self) -> usize {
+        self.rounds * self.servers()
+    }
+
+    /// Subfiles per job, `N = k·γ`.
+    pub fn subfiles(&self) -> usize {
+        self.k * self.gamma
+    }
+
+    /// Batches per job (= `k`).
+    pub fn batches(&self) -> usize {
+        self.k
+    }
+
+    /// The storage fraction `μ = (k-1)/K` (Definition 2 / §III-A).
+    pub fn storage_fraction(&self) -> f64 {
+        (self.k as f64 - 1.0) / self.servers() as f64
+    }
+
+    /// The normalizer `J·Q·B` (Definition 3), in bytes.
+    pub fn load_normalizer(&self) -> f64 {
+        self.jobs() as f64 * self.functions() as f64 * self.value_bytes as f64
+    }
+
+    /// The reducer server of function `f` (round-robin; with `Q = K`
+    /// this is the identity `φ_k → U_k`).
+    pub fn reducer_of(&self, f: crate::FuncId) -> crate::ServerId {
+        f % self.servers()
+    }
+
+    /// All functions reduced by server `s`: `{s, s+K, …}`.
+    pub fn functions_of(&self, s: crate::ServerId) -> Vec<crate::FuncId> {
+        (0..self.rounds).map(|r| r * self.servers() + s).collect()
+    }
+}
+
+/// Workload selector for the CLI / config file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Word counting over synthetic "books" (paper Example 1).
+    WordCount,
+    /// Distributed matrix–vector products (NN forward pass shards).
+    MatVec,
+    /// Distributed gradient aggregation (SGD motivation, §I).
+    Gradient,
+    /// Random opaque byte values (load/stress testing).
+    Synthetic,
+}
+
+impl WorkloadKind {
+    /// Parse a workload name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "word_count" | "wordcount" => WorkloadKind::WordCount,
+            "mat_vec" | "matvec" => WorkloadKind::MatVec,
+            "gradient" => WorkloadKind::Gradient,
+            "synthetic" => WorkloadKind::Synthetic,
+            other => {
+                return Err(CamrError::InvalidConfig(format!(
+                    "unknown workload {other} (word_count | mat_vec | gradient | synthetic)"
+                )))
+            }
+        })
+    }
+}
+
+/// Top-level run configuration, loadable from a TOML-subset file.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// System parameters.
+    pub system: SystemConfig,
+    /// Which workload to run.
+    pub workload: WorkloadKind,
+    /// RNG seed for synthetic data.
+    pub seed: u64,
+    /// Optional path to an AOT HLO artifact for the PJRT-backed mapper.
+    pub artifact: Option<String>,
+    /// Emit JSON metrics instead of a human table.
+    pub json: bool,
+}
+
+impl RunConfig {
+    /// Parse a TOML-subset run configuration:
+    ///
+    /// ```toml
+    /// workload = "word_count"
+    /// seed = 7
+    /// json = false
+    /// # artifact = "artifacts/map_kernel.hlo.txt"
+    ///
+    /// [system]
+    /// k = 3
+    /// q = 2
+    /// gamma = 2
+    /// rounds = 1
+    /// value_bytes = 64
+    /// ```
+    pub fn from_text(text: &str) -> Result<Self> {
+        let c = CfgText::parse(text).map_err(CamrError::InvalidConfig)?;
+        // Unknown-key validation.
+        for key in c.keys("") {
+            if !matches!(key.as_str(), "workload" | "seed" | "artifact" | "json") {
+                return Err(CamrError::InvalidConfig(format!("unknown top-level key {key}")));
+            }
+        }
+        for key in c.keys("system") {
+            if !matches!(key.as_str(), "k" | "q" | "gamma" | "rounds" | "value_bytes") {
+                return Err(CamrError::InvalidConfig(format!("unknown [system] key {key}")));
+            }
+        }
+        for s in c.section_names() {
+            if !matches!(s.as_str(), "" | "system") {
+                return Err(CamrError::InvalidConfig(format!("unknown section [{s}]")));
+            }
+        }
+        let g = |k: &str| c.get_usize("system", k).map_err(CamrError::InvalidConfig);
+        let system = SystemConfig::with_options(
+            g("k")?.ok_or_else(|| CamrError::InvalidConfig("[system] k required".into()))?,
+            g("q")?.ok_or_else(|| CamrError::InvalidConfig("[system] q required".into()))?,
+            g("gamma")?.unwrap_or(1),
+            g("rounds")?.unwrap_or(1),
+            g("value_bytes")?.unwrap_or(64),
+        )?;
+        let workload = WorkloadKind::parse(c.get("", "workload").unwrap_or("word_count"))?;
+        let seed = c.get_u64("", "seed").map_err(CamrError::InvalidConfig)?.unwrap_or(0xCA3A);
+        let artifact = c.get("", "artifact").map(|s| s.to_string());
+        let json = c.get_bool("", "json").map_err(CamrError::InvalidConfig)?.unwrap_or(false);
+        Ok(RunConfig { system, workload, seed, artifact, json })
+    }
+
+    /// Load from a file path.
+    pub fn from_path(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example1_parameters() {
+        // Paper Example 1/2: q = 2, k = 3 → K = 6, J = 4, μ = 1/3.
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        assert_eq!(cfg.servers(), 6);
+        assert_eq!(cfg.jobs(), 4);
+        assert_eq!(cfg.subfiles(), 6);
+        assert_eq!(cfg.functions(), 6);
+        assert!((cfg.storage_fraction() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_degenerate_parameters() {
+        assert!(SystemConfig::new(1, 2, 1).is_err());
+        assert!(SystemConfig::new(2, 1, 1).is_err());
+        assert!(SystemConfig::new(2, 2, 0).is_err());
+        assert!(SystemConfig::with_options(2, 2, 1, 0, 64).is_err());
+        assert!(SystemConfig::with_options(2, 2, 1, 1, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_designs() {
+        // q = 10, k = 11 → 10^10 jobs: refuse to simulate.
+        assert!(SystemConfig::new(11, 10, 1).is_err());
+    }
+
+    #[test]
+    fn multi_round_functions() {
+        let cfg = SystemConfig::with_options(3, 2, 1, 2, 64).unwrap();
+        assert_eq!(cfg.functions(), 12);
+        assert_eq!(cfg.functions_of(0), vec![0, 6]);
+        assert_eq!(cfg.reducer_of(7), 1);
+    }
+
+    #[test]
+    fn table3_row_parameters() {
+        // Table III uses K = 100 with k ∈ {2, 4, 5}.
+        for (k, q, j) in [(2, 50, 50), (4, 25, 15625), (5, 20, 160_000)] {
+            let cfg = SystemConfig::new(k, q, 1).unwrap();
+            assert_eq!(cfg.servers(), 100);
+            assert_eq!(cfg.jobs(), j);
+        }
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let text = r#"
+            workload = "word_count"
+            seed = 7
+            [system]
+            k = 3
+            q = 2
+            gamma = 2
+            rounds = 1
+            value_bytes = 64
+        "#;
+        let rc = RunConfig::from_text(text).unwrap();
+        assert_eq!(rc.system.jobs(), 4);
+        assert_eq!(rc.workload, WorkloadKind::WordCount);
+        assert_eq!(rc.seed, 7);
+        assert!(!rc.json);
+        assert!(rc.artifact.is_none());
+    }
+
+    #[test]
+    fn config_file_rejects_unknown_keys() {
+        assert!(RunConfig::from_text("typo = 1\n[system]\nk = 3\nq = 2").is_err());
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2\nbogus = 1").is_err());
+        assert!(RunConfig::from_text("[bogus]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn config_file_requires_k_and_q() {
+        assert!(RunConfig::from_text("[system]\nk = 3").is_err());
+        assert!(RunConfig::from_text("[system]\nq = 2").is_err());
+    }
+
+    #[test]
+    fn workload_kind_parse() {
+        assert_eq!(WorkloadKind::parse("matvec").unwrap(), WorkloadKind::MatVec);
+        assert!(WorkloadKind::parse("nope").is_err());
+    }
+}

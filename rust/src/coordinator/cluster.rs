@@ -1,0 +1,255 @@
+//! Message-passing cluster deployment: the same CAMR protocol with one
+//! OS thread per server and all coordination over channels.
+//!
+//! The synchronous [`super::engine::Engine`] is the reference
+//! implementation (and what the benches measure); this module deploys
+//! the protocol the way a real cluster runs it — a leader thread driving
+//! phase barriers, worker threads that own their state exclusively and
+//! exchange coded packets through channels, no shared memory between
+//! servers. The leader is where stragglers, retries, and backpressure
+//! would live; the command protocol below keeps those extension points
+//! explicit.
+
+use super::master::Master;
+use super::worker::Worker;
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::net::{Bus, Stage};
+use crate::shuffle::multicast::GroupPlan;
+use crate::shuffle::plan::UnicastSpec;
+use crate::workload::Workload;
+use crate::ServerId;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Commands the leader sends to worker threads.
+enum Command {
+    /// Run the map phase; reply with the invocation count.
+    Map { reply: mpsc::Sender<Result<usize>> },
+    /// Encode Δ for a group this worker belongs to.
+    Encode { plan: Arc<GroupPlan>, reply: mpsc::Sender<Result<Vec<u8>>> },
+    /// Decode the worker's chunk from the group's broadcasts.
+    Decode { plan: Arc<GroupPlan>, deltas: Arc<Vec<Vec<u8>>>, reply: mpsc::Sender<Result<()>> },
+    /// Fuse and return a stage-3 unicast payload.
+    Fuse { spec: Arc<UnicastSpec>, reply: mpsc::Sender<Result<Vec<u8>>> },
+    /// Accept a stage-3 unicast payload.
+    Deliver { spec: Arc<UnicastSpec>, value: Vec<u8>, reply: mpsc::Sender<Result<()>> },
+    /// Reduce one (job, func) output.
+    Reduce { job: usize, func: usize, reply: mpsc::Sender<Result<Vec<u8>>> },
+    /// Shut down.
+    Stop,
+}
+
+/// Cluster outcome (mirrors the sync engine's accounting).
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    /// Bytes per stage on the simulated shared link.
+    pub stage_bytes: [usize; 3],
+    /// `J·Q·B`.
+    pub normalizer: f64,
+    /// Total map invocations.
+    pub map_invocations: usize,
+    /// Outputs produced.
+    pub outputs: usize,
+}
+
+impl ClusterOutcome {
+    /// Total measured load.
+    pub fn total_load(&self) -> f64 {
+        self.stage_bytes.iter().sum::<usize>() as f64 / self.normalizer
+    }
+}
+
+/// Run the full protocol with one thread per server.
+pub fn run_cluster(cfg: SystemConfig, workload: Arc<dyn Workload>) -> Result<ClusterOutcome> {
+    let master = Master::new(cfg.clone())?;
+    let schedule = master.schedule()?;
+    let placement = Arc::new(master.placement.clone());
+    let mut bus = Bus::new();
+
+    // Spawn worker threads.
+    let mut txs: Vec<mpsc::Sender<Command>> = Vec::with_capacity(cfg.servers());
+    let mut joins = Vec::with_capacity(cfg.servers());
+    for s in 0..cfg.servers() {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let cfg_c = cfg.clone();
+        let placement_c = Arc::clone(&placement);
+        let workload_c = Arc::clone(&workload);
+        let join = std::thread::Builder::new()
+            .name(format!("camr-worker-{s}"))
+            .spawn(move || {
+                let mut worker = Worker::new(s, &cfg_c);
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Command::Map { reply } => {
+                            let r = worker.run_map_phase(&cfg_c, &placement_c, &*workload_c);
+                            let _ = reply.send(r);
+                        }
+                        Command::Encode { plan, reply } => {
+                            let _ = reply.send(worker.encode_for_group(&plan));
+                        }
+                        Command::Decode { plan, deltas, reply } => {
+                            let _ = reply.send(worker.decode_from_group(&plan, &deltas));
+                        }
+                        Command::Fuse { spec, reply } => {
+                            let _ = reply
+                                .send(worker.fuse_for_unicast(workload_c.aggregator(), &spec));
+                        }
+                        Command::Deliver { spec, value, reply } => {
+                            let _ = reply.send(worker.receive_fused(&spec, value));
+                        }
+                        Command::Reduce { job, func, reply } => {
+                            let _ = reply.send(worker.reduce(
+                                &cfg_c,
+                                &placement_c,
+                                workload_c.aggregator(),
+                                job,
+                                func,
+                            ));
+                        }
+                        Command::Stop => break,
+                    }
+                }
+            })
+            .map_err(|e| CamrError::Runtime(format!("spawn worker {s}: {e}")))?;
+        txs.push(tx);
+        joins.push(join);
+    }
+
+    let send = |s: ServerId, cmd: Command| -> Result<()> {
+        txs[s].send(cmd).map_err(|_| CamrError::Runtime(format!("worker {s} died")))
+    };
+
+    // ---- Map phase (parallel across workers, barrier at the end).
+    let (rtx, rrx) = mpsc::channel();
+    for s in 0..cfg.servers() {
+        send(s, Command::Map { reply: rtx.clone() })?;
+    }
+    let mut map_invocations = 0usize;
+    for _ in 0..cfg.servers() {
+        map_invocations +=
+            rrx.recv().map_err(|_| CamrError::Runtime("map reply lost".into()))??;
+    }
+
+    // ---- Coded stages 1 and 2.
+    for (groups, stage) in
+        [(&schedule.stage1, Stage::Stage1), (&schedule.stage2, Stage::Stage2)]
+    {
+        for plan in groups.iter() {
+            let plan = Arc::new(plan.clone());
+            // Gather broadcasts from all members (in member order).
+            let mut rxs = Vec::with_capacity(plan.members.len());
+            for &m in &plan.members {
+                let (rtx, rrx) = mpsc::channel();
+                send(m, Command::Encode { plan: Arc::clone(&plan), reply: rtx })?;
+                rxs.push((m, rrx));
+            }
+            let mut deltas = Vec::with_capacity(plan.members.len());
+            for (m, rrx) in rxs {
+                let delta =
+                    rrx.recv().map_err(|_| CamrError::Runtime("encode reply lost".into()))??;
+                bus.multicast(
+                    stage,
+                    m,
+                    plan.members.iter().copied().filter(|&x| x != m).collect(),
+                    delta.len(),
+                );
+                deltas.push(delta);
+            }
+            // Deliver the broadcast set; every member decodes.
+            let deltas = Arc::new(deltas);
+            let (atx, arx) = mpsc::channel();
+            for &m in &plan.members {
+                send(
+                    m,
+                    Command::Decode {
+                        plan: Arc::clone(&plan),
+                        deltas: Arc::clone(&deltas),
+                        reply: atx.clone(),
+                    },
+                )?;
+            }
+            for _ in 0..plan.members.len() {
+                arx.recv().map_err(|_| CamrError::Runtime("decode reply lost".into()))??;
+            }
+        }
+    }
+
+    // ---- Stage 3 unicasts.
+    for spec in &schedule.stage3 {
+        let spec = Arc::new(spec.clone());
+        let (rtx, rrx) = mpsc::channel();
+        send(spec.sender, Command::Fuse { spec: Arc::clone(&spec), reply: rtx })?;
+        let value = rrx.recv().map_err(|_| CamrError::Runtime("fuse reply lost".into()))??;
+        bus.unicast(Stage::Stage3, spec.sender, spec.receiver, value.len());
+        let (rtx, rrx) = mpsc::channel();
+        send(spec.receiver, Command::Deliver { spec: Arc::clone(&spec), value, reply: rtx })?;
+        rrx.recv().map_err(|_| CamrError::Runtime("deliver reply lost".into()))??;
+    }
+
+    // ---- Reduce.
+    let mut outputs = 0usize;
+    for f in 0..cfg.functions() {
+        let reducer = cfg.reducer_of(f);
+        for j in 0..cfg.jobs() {
+            let (rtx, rrx) = mpsc::channel();
+            send(reducer, Command::Reduce { job: j, func: f, reply: rtx })?;
+            let _v =
+                rrx.recv().map_err(|_| CamrError::Runtime("reduce reply lost".into()))??;
+            outputs += 1;
+        }
+    }
+
+    // Shut down workers.
+    for tx in &txs {
+        let _ = tx.send(Command::Stop);
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+
+    Ok(ClusterOutcome {
+        stage_bytes: [
+            bus.stage_bytes(Stage::Stage1),
+            bus.stage_bytes(Stage::Stage2),
+            bus.stage_bytes(Stage::Stage3),
+        ],
+        normalizer: cfg.load_normalizer(),
+        map_invocations,
+        outputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synth::SyntheticWorkload;
+
+    #[test]
+    fn cluster_matches_sync_engine() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = Arc::new(SyntheticWorkload::new(&cfg, 0xBEEF));
+        let out = run_cluster(cfg, wl).unwrap();
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+        assert_eq!(out.map_invocations, 2 * 4 * 6);
+        assert_eq!(out.outputs, 24);
+    }
+
+    #[test]
+    fn cluster_larger_parameters() {
+        let cfg = SystemConfig::new(3, 3, 1).unwrap();
+        let wl = Arc::new(SyntheticWorkload::new(&cfg, 1));
+        let out = run_cluster(cfg, wl).unwrap();
+        let expect = crate::analysis::load::camr_total(3, 3);
+        assert!((out.total_load() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_multi_round() {
+        let cfg = SystemConfig::with_options(3, 2, 1, 2, 64).unwrap();
+        let wl = Arc::new(SyntheticWorkload::new(&cfg, 2));
+        let out = run_cluster(cfg, wl).unwrap();
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+        assert_eq!(out.outputs, 4 * 12);
+    }
+}

@@ -1,0 +1,302 @@
+//! The end-to-end CAMR engine: map → 3-stage coded shuffle → reduce,
+//! with byte-exact load accounting and oracle verification.
+//!
+//! The engine is deliberately strict: every coded packet is really
+//! XOR-encoded from the sender's local store and really decoded at each
+//! receiver from its local store; a bug anywhere in the combinatorics
+//! surfaces as a reduce-phase mismatch against the single-node oracle.
+
+use super::master::{Master, Schedule};
+use super::worker::Worker;
+use crate::agg::Value;
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::net::{Bus, Stage};
+use crate::workload::{check_output, Workload};
+use crate::{FuncId, JobId};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Measured outcome of a full run.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    /// Bytes on the shared link per stage: [stage1, stage2, stage3].
+    pub stage_bytes: [usize; 3],
+    /// Load normalizer `J·Q·B` (Definition 3).
+    pub normalizer: f64,
+    /// Total map invocations across the cluster (computation load).
+    pub map_invocations: usize,
+    /// Whether every reduce output matched the oracle.
+    pub verified: bool,
+    /// Number of (job, function) outputs produced.
+    pub outputs: usize,
+    /// Wall time per phase.
+    pub map_time: Duration,
+    /// Shuffle wall time (all three stages).
+    pub shuffle_time: Duration,
+    /// Reduce + verify wall time.
+    pub reduce_time: Duration,
+}
+
+impl RunOutcome {
+    /// Measured communication load `L` (Definition 3).
+    pub fn total_load(&self) -> f64 {
+        self.stage_bytes.iter().sum::<usize>() as f64 / self.normalizer
+    }
+
+    /// Measured per-stage load (`stage` is 1-based like the paper).
+    pub fn stage_load(&self, stage: usize) -> f64 {
+        self.stage_bytes[stage - 1] as f64 / self.normalizer
+    }
+}
+
+/// The engine: master + workers + workload + shared link.
+pub struct Engine {
+    /// The master (design, placement, schedule factory).
+    pub master: Master,
+    workers: Vec<Worker>,
+    workload: Box<dyn Workload>,
+    /// The shared link; public so callers can inspect the ledger
+    /// (e.g. to print the paper's Tables I/II).
+    pub bus: Bus,
+    /// Skip oracle verification (for large load-sweep runs).
+    pub verify: bool,
+    outputs: HashMap<(JobId, FuncId), Value>,
+}
+
+impl Engine {
+    /// Build an engine for a config and workload.
+    pub fn new(cfg: SystemConfig, workload: Box<dyn Workload>) -> Result<Self> {
+        let master = Master::new(cfg)?;
+        let workers =
+            (0..master.cfg.servers()).map(|s| Worker::new(s, &master.cfg)).collect();
+        Ok(Engine {
+            master,
+            workers,
+            workload,
+            bus: Bus::new(),
+            verify: true,
+            outputs: HashMap::new(),
+        })
+    }
+
+    /// Access the system config.
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.master.cfg
+    }
+
+    /// A reduced output (after `run`).
+    pub fn output(&self, job: JobId, func: FuncId) -> Option<&Value> {
+        self.outputs.get(&(job, func))
+    }
+
+    /// Run the full protocol and return measured loads.
+    pub fn run(&mut self) -> Result<RunOutcome> {
+        self.bus.reset();
+        self.outputs.clear();
+        for w in &mut self.workers {
+            w.store.clear();
+        }
+        let schedule = self.master.schedule()?;
+
+        let t0 = Instant::now();
+        let map_invocations = self.map_phase()?;
+        let map_time = t0.elapsed();
+
+        let t1 = Instant::now();
+        self.shuffle_stage_coded(&schedule.stage1, Stage::Stage1)?;
+        self.shuffle_stage_coded(&schedule.stage2, Stage::Stage2)?;
+        self.shuffle_stage3(&schedule)?;
+        let shuffle_time = t1.elapsed();
+
+        let t2 = Instant::now();
+        let verified = self.reduce_phase()?;
+        let reduce_time = t2.elapsed();
+
+        Ok(RunOutcome {
+            stage_bytes: [
+                self.bus.stage_bytes(Stage::Stage1),
+                self.bus.stage_bytes(Stage::Stage2),
+                self.bus.stage_bytes(Stage::Stage3),
+            ],
+            normalizer: self.master.cfg.load_normalizer(),
+            map_invocations,
+            verified,
+            outputs: self.outputs.len(),
+            map_time,
+            shuffle_time,
+            reduce_time,
+        })
+    }
+
+    /// Map phase: every worker maps its stored subfiles for all functions
+    /// and aggregates per batch (§III-B). Workers run on scoped threads.
+    fn map_phase(&mut self) -> Result<usize> {
+        let cfg = &self.master.cfg;
+        let placement = &self.master.placement;
+        let workload = &*self.workload;
+        let mut results: Vec<Result<usize>> =
+            (0..self.workers.len()).map(|_| Ok(0)).collect();
+        {
+            let mut slots: Vec<(&mut Worker, &mut Result<usize>)> =
+                self.workers.iter_mut().zip(results.iter_mut()).collect();
+            crate::util::par::for_each_mut(&mut slots, |(w, slot)| {
+                **slot = w.run_map_phase(cfg, placement, workload);
+            });
+        }
+        let mut total = 0usize;
+        for r in results {
+            total += r?;
+        }
+        Ok(total)
+    }
+
+    /// Run one coded stage: every member of every group broadcasts its Δ,
+    /// then every member decodes its missing chunk.
+    fn shuffle_stage_coded(
+        &mut self,
+        groups: &[crate::shuffle::multicast::GroupPlan],
+        stage: Stage,
+    ) -> Result<()> {
+        for plan in groups {
+            // Encode: one broadcast per member, from local state only.
+            let mut deltas: Vec<Vec<u8>> = Vec::with_capacity(plan.members.len());
+            for (t, &m) in plan.members.iter().enumerate() {
+                let delta = self.workers[m].encode_for_group(plan)?;
+                let recipients: Vec<usize> =
+                    plan.members.iter().copied().filter(|&x| x != m).collect();
+                self.bus.multicast(stage, m, recipients, delta.len());
+                debug_assert_eq!(t, deltas.len());
+                deltas.push(delta);
+            }
+            // Decode: each member reconstructs its chunk and stores it.
+            for &m in &plan.members {
+                self.workers[m].decode_from_group(plan, &deltas)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage 3: fused unicasts within parallel classes (Eq. (5)).
+    fn shuffle_stage3(&mut self, schedule: &Schedule) -> Result<()> {
+        let agg = self.workload.aggregator();
+        for u in &schedule.stage3 {
+            let v = self.workers[u.sender].fuse_for_unicast(agg, u)?;
+            self.bus.unicast(Stage::Stage3, u.sender, u.receiver, v.len());
+            self.workers[u.receiver].receive_fused(u, v)?;
+        }
+        Ok(())
+    }
+
+    /// Reduce phase (§III-D) + oracle verification.
+    fn reduce_phase(&mut self) -> Result<bool> {
+        let cfg = self.master.cfg.clone();
+        let agg = self.workload.aggregator();
+        for f in 0..cfg.functions() {
+            let reducer = cfg.reducer_of(f);
+            for j in 0..cfg.jobs() {
+                let out =
+                    self.workers[reducer].reduce(&cfg, &self.master.placement, agg, j, f)?;
+                self.outputs.insert((j, f), out);
+            }
+        }
+        if !self.verify {
+            return Ok(true);
+        }
+        // Oracle check, parallel over (job, func).
+        let workload = &*self.workload;
+        let pairs: Vec<(JobId, FuncId)> = self.outputs.keys().copied().collect();
+        let outputs = &self.outputs;
+        let failures: Vec<String> = crate::util::par::map_indexed(pairs.len(), |i| {
+            let (j, f) = pairs[i];
+            let want = match workload.oracle(&cfg, j, f) {
+                Ok(w) => w,
+                Err(e) => return Some(format!("oracle job {j} func {f}: {e}")),
+            };
+            let got = &outputs[&(j, f)];
+            check_output(workload, j, f, got, &want).err().map(|e| e.to_string())
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        if let Some(first) = failures.first() {
+            return Err(CamrError::Verification(format!(
+                "{} of {} outputs mismatched; first: {first}",
+                failures.len(),
+                pairs.len()
+            )));
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synth::SyntheticWorkload;
+
+    fn run(k: usize, q: usize, gamma: usize) -> RunOutcome {
+        let cfg = SystemConfig::new(k, q, gamma).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 0xC0FFEE);
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        e.run().unwrap()
+    }
+
+    #[test]
+    fn example1_measured_loads_match_paper() {
+        // Paper §III-C: L1 = 1/4, L2 = 1/4, L3 = 1/2, total 1.
+        let out = run(3, 2, 2);
+        assert!(out.verified);
+        assert!((out.stage_load(1) - 0.25).abs() < 1e-12, "L1 = {}", out.stage_load(1));
+        assert!((out.stage_load(2) - 0.25).abs() < 1e-12, "L2 = {}", out.stage_load(2));
+        assert!((out.stage_load(3) - 0.50).abs() < 1e-12, "L3 = {}", out.stage_load(3));
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loads_match_closed_form_across_parameters() {
+        // L_CAMR = (k(q-1)+1)/(q(k-1)) for every (k, q); value_bytes = 64
+        // is divisible by k-1 for these picks, so no padding slack.
+        for (k, q) in [(2, 2), (2, 3), (3, 2), (3, 3), (5, 2)] {
+            let out = run(k, q, 1);
+            let expect = (k as f64 * (q as f64 - 1.0) + 1.0) / (q as f64 * (k as f64 - 1.0));
+            assert!(
+                (out.total_load() - expect).abs() < 1e-12,
+                "k={k} q={q}: measured {} expected {expect}",
+                out.total_load()
+            );
+            assert!(out.verified);
+        }
+    }
+
+    #[test]
+    fn computation_load_is_k_minus_one_times_dataset() {
+        // Each subfile is mapped by exactly k-1 servers (the owners that
+        // store its batch): total invocations = (k-1)·J·N.
+        let out = run(3, 2, 2);
+        assert_eq!(out.map_invocations, 2 * 4 * 6);
+    }
+
+    #[test]
+    fn multi_round_load_unchanged() {
+        // Q = 2K repeats the shuffle; the load (normalized by JQB) is
+        // identical (§II: "repeat the Shuffle phase Q/K times").
+        let cfg = SystemConfig::with_options(3, 2, 2, 2, 64).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 1);
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+        assert!(out.verified);
+    }
+
+    #[test]
+    fn outputs_are_complete() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 3);
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert_eq!(out.outputs, 4 * 6);
+        assert!(e.output(0, 0).is_some());
+        assert!(e.output(3, 5).is_some());
+    }
+}

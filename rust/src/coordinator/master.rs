@@ -1,0 +1,95 @@
+//! The master (leader) node: builds the design, placement and the full
+//! shuffle schedule before the run starts (the paper's "master node
+//! judiciously places each subfile…", §II).
+//!
+//! The master performs *no* data-plane work — it only produces plans;
+//! workers execute them against local state. This mirrors the separation
+//! in real deployments (driver vs executors).
+
+use crate::config::SystemConfig;
+use crate::design::{verify::verify_design, ResolvableDesign};
+use crate::error::Result;
+use crate::placement::{storage::audit_storage, Placement};
+use crate::shuffle::multicast::GroupPlan;
+use crate::shuffle::plan::UnicastSpec;
+use crate::shuffle::{stage1, stage2, stage3};
+
+/// The full static schedule of one CAMR run.
+pub struct Schedule {
+    /// Stage-1 groups (one per job per round).
+    pub stage1: Vec<GroupPlan>,
+    /// Stage-2 groups (one per transversal group per round).
+    pub stage2: Vec<GroupPlan>,
+    /// Stage-3 unicasts.
+    pub stage3: Vec<UnicastSpec>,
+}
+
+/// The master: owns the design, placement and schedule.
+pub struct Master {
+    /// System parameters.
+    pub cfg: SystemConfig,
+    /// The resolvable design (verified at construction).
+    pub design: ResolvableDesign,
+    /// Algorithm-1 placement (validated and storage-audited).
+    pub placement: Placement,
+}
+
+impl Master {
+    /// Build and verify design + placement for a config.
+    pub fn new(cfg: SystemConfig) -> Result<Self> {
+        cfg.validate()?;
+        let design = ResolvableDesign::new(cfg.k, cfg.q)?;
+        verify_design(&design)?;
+        let placement = Placement::new(&design, &cfg)?;
+        placement.validate()?;
+        audit_storage(&placement, &cfg)?;
+        Ok(Master { cfg, design, placement })
+    }
+
+    /// Produce the complete three-stage shuffle schedule.
+    pub fn schedule(&self) -> Result<Schedule> {
+        Ok(Schedule {
+            stage1: stage1::plan(&self.cfg, &self.placement)?,
+            stage2: stage2::plan(&self.cfg, &self.design, &self.placement)?,
+            stage3: stage3::plan(&self.cfg, &self.design, &self.placement)?,
+        })
+    }
+
+    /// Expected total shuffle bytes (closed forms of §IV, incl. padding).
+    pub fn expected_shuffle_bytes(&self) -> usize {
+        stage1::expected_bytes(&self.cfg)
+            + stage2::expected_bytes(&self.cfg)
+            + stage3::expected_bytes(&self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn master_builds_verified_example() {
+        let m = Master::new(SystemConfig::new(3, 2, 2).unwrap()).unwrap();
+        let s = m.schedule().unwrap();
+        assert_eq!(s.stage1.len(), 4);
+        assert_eq!(s.stage2.len(), 4);
+        assert_eq!(s.stage3.len(), 12);
+    }
+
+    #[test]
+    fn expected_bytes_equals_paper_total() {
+        // Example 1: 6B + 6B + 12B = 24B = J·Q·B → L = 1.
+        let m = Master::new(SystemConfig::new(3, 2, 2).unwrap()).unwrap();
+        assert_eq!(m.expected_shuffle_bytes(), 24 * m.cfg.value_bytes);
+    }
+
+    #[test]
+    fn schedule_counts_scale_with_rounds() {
+        let cfg = SystemConfig::with_options(3, 2, 2, 3, 64).unwrap();
+        let m = Master::new(cfg).unwrap();
+        let s = m.schedule().unwrap();
+        assert_eq!(s.stage1.len(), 12);
+        assert_eq!(s.stage2.len(), 12);
+        assert_eq!(s.stage3.len(), 36);
+    }
+}

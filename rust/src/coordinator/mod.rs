@@ -1,0 +1,19 @@
+//! The CAMR coordinator: per-server workers, the master, and the
+//! end-to-end engine (the paper's system contribution, L3).
+//!
+//! - [`values`] — per-server store of batch-level aggregates.
+//! - [`worker`] — a server: maps, combines, encodes/decodes coded
+//!   packets, reduces.
+//! - [`master`] — phase orchestration and schedule distribution.
+//! - [`engine`] — drives map → shuffle (3 stages) → reduce, verifies
+//!   against the oracle, and reports measured loads.
+//! - [`cluster`] — async (tokio) deployment of the same protocol over
+//!   message channels, one task per server.
+
+pub mod cluster;
+pub mod engine;
+pub mod master;
+pub mod values;
+pub mod worker;
+
+pub use engine::{Engine, RunOutcome};

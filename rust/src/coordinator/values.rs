@@ -1,0 +1,192 @@
+//! Per-server value store: batch-level aggregates of intermediate values.
+//!
+//! The paper's Map phase ends with each mapper combining the values of
+//! each (function, job, batch) triple it stores (§III-B) — the store
+//! holds exactly those aggregates, plus everything decoded during the
+//! shuffle. Keys are dense-packed into a flat `u64` for hashing speed
+//! (this map sits on the shuffle hot path).
+
+use crate::agg::Value;
+use crate::error::{CamrError, Result};
+use crate::{BatchId, FuncId, JobId};
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiplicative hasher for the already-dense-packed `u64` keys —
+/// (~2× faster than SipHash on this map, which sits on the shuffle hot
+/// path; see EXPERIMENTS.md §Perf). Keys are not attacker-controlled.
+#[derive(Default)]
+pub struct PackedKeyHasher(u64);
+
+impl Hasher for PackedKeyHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("PackedKeyHasher only hashes u64 keys");
+    }
+
+    fn write_u64(&mut self, x: u64) {
+        // Fibonacci multiply + xor-fold: full avalanche for dense keys.
+        let h = x.wrapping_mul(0x9E3779B97F4A7C15);
+        self.0 = h ^ (h >> 29);
+    }
+}
+
+type FastMap = HashMap<u64, Value, BuildHasherDefault<PackedKeyHasher>>;
+
+/// Key of a batch aggregate: (job, func, batch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ValueKey {
+    pub job: JobId,
+    pub func: FuncId,
+    pub batch: BatchId,
+}
+
+/// A server-local store of batch aggregates.
+///
+/// `fused` holds stage-3 style multi-batch aggregates keyed by
+/// (job, func) — the receiver never needs them at batch granularity.
+#[derive(Debug, Default, Clone)]
+pub struct ValueStore {
+    batch_aggs: FastMap,
+    fused: FastMap,
+    dims: (usize, usize, usize), // (jobs, funcs, batches) for packing
+}
+
+impl ValueStore {
+    /// Create a store for the given dimensions.
+    pub fn new(jobs: usize, funcs: usize, batches: usize) -> Self {
+        ValueStore {
+            batch_aggs: FastMap::default(),
+            fused: FastMap::default(),
+            dims: (jobs, funcs, batches),
+        }
+    }
+
+    fn pack(&self, k: ValueKey) -> u64 {
+        debug_assert!(k.job < self.dims.0 && k.func < self.dims.1 && k.batch < self.dims.2);
+        ((k.job as u64 * self.dims.1 as u64) + k.func as u64) * self.dims.2 as u64
+            + k.batch as u64
+    }
+
+    fn pack_jf(&self, job: JobId, func: FuncId) -> u64 {
+        job as u64 * self.dims.1 as u64 + func as u64
+    }
+
+    /// Insert (or overwrite) a batch aggregate.
+    pub fn put(&mut self, key: ValueKey, v: Value) {
+        let k = self.pack(key);
+        self.batch_aggs.insert(k, v);
+    }
+
+    /// Fetch a batch aggregate.
+    pub fn get(&self, key: ValueKey) -> Result<&Value> {
+        let k = self.pack(key);
+        self.batch_aggs.get(&k).ok_or_else(|| {
+            CamrError::MissingValue(format!(
+                "batch aggregate job={} func={} batch={}",
+                key.job, key.func, key.batch
+            ))
+        })
+    }
+
+    /// Whether a batch aggregate is present.
+    pub fn contains(&self, key: ValueKey) -> bool {
+        self.batch_aggs.contains_key(&self.pack(key))
+    }
+
+    /// Insert a fused (multi-batch) aggregate for (job, func).
+    pub fn put_fused(&mut self, job: JobId, func: FuncId, v: Value) {
+        let k = self.pack_jf(job, func);
+        self.fused.insert(k, v);
+    }
+
+    /// Fetch a fused aggregate.
+    pub fn get_fused(&self, job: JobId, func: FuncId) -> Result<&Value> {
+        self.fused.get(&self.pack_jf(job, func)).ok_or_else(|| {
+            CamrError::MissingValue(format!("fused aggregate job={job} func={func}"))
+        })
+    }
+
+    /// Number of stored batch aggregates (storage accounting / tests).
+    pub fn len(&self) -> usize {
+        self.batch_aggs.len()
+    }
+
+    /// True when no batch aggregates are stored.
+    pub fn is_empty(&self) -> bool {
+        self.batch_aggs.is_empty()
+    }
+
+    /// Clear everything (between runs).
+    pub fn clear(&mut self) {
+        self.batch_aggs.clear();
+        self.fused.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = ValueStore::new(4, 6, 3);
+        let key = ValueKey { job: 2, func: 5, batch: 1 };
+        s.put(key, vec![1, 2, 3]);
+        assert_eq!(s.get(key).unwrap(), &vec![1, 2, 3]);
+        assert!(s.contains(key));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let s = ValueStore::new(4, 6, 3);
+        let e = s.get(ValueKey { job: 0, func: 0, batch: 0 });
+        assert!(matches!(e, Err(CamrError::MissingValue(_))));
+    }
+
+    #[test]
+    fn fused_separate_namespace() {
+        let mut s = ValueStore::new(4, 6, 3);
+        s.put_fused(1, 2, vec![9]);
+        assert_eq!(s.get_fused(1, 2).unwrap(), &vec![9]);
+        assert!(s.get(ValueKey { job: 1, func: 2, batch: 0 }).is_err());
+    }
+
+    #[test]
+    fn keys_do_not_collide() {
+        // Dense packing must be injective across the whole key space.
+        let mut s = ValueStore::new(5, 7, 4);
+        let mut count = 0;
+        for j in 0..5 {
+            for f in 0..7 {
+                for b in 0..4 {
+                    s.put(ValueKey { job: j, func: f, batch: b }, vec![j as u8, f as u8, b as u8]);
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(s.len(), count);
+        for j in 0..5 {
+            for f in 0..7 {
+                for b in 0..4 {
+                    let v = s.get(ValueKey { job: j, func: f, batch: b }).unwrap();
+                    assert_eq!(v, &vec![j as u8, f as u8, b as u8]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clear_empties_both_maps() {
+        let mut s = ValueStore::new(2, 2, 2);
+        s.put(ValueKey { job: 0, func: 0, batch: 0 }, vec![1]);
+        s.put_fused(0, 0, vec![2]);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(s.get_fused(0, 0).is_err());
+    }
+}

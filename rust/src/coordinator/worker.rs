@@ -1,0 +1,255 @@
+//! A CAMR worker (one of the `K` servers).
+//!
+//! Workers hold only *local* state: the batch aggregates they computed in
+//! the Map phase plus whatever they decoded during the shuffle. All
+//! encode/decode operations read exclusively from this local store — the
+//! engine never "cheats" by reaching across servers, so a successful run
+//! is a proof that the schedule is information-theoretically valid.
+
+use super::values::{ValueKey, ValueStore};
+use crate::agg::{Aggregator, Value};
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::placement::Placement;
+use crate::shuffle::multicast::GroupPlan;
+use crate::shuffle::plan::UnicastSpec;
+use crate::workload::Workload;
+use crate::{FuncId, JobId, ServerId};
+
+/// One server of the cluster.
+pub struct Worker {
+    /// This worker's id (`U_{id+1}` in the paper).
+    pub id: ServerId,
+    /// Local batch aggregates + decoded shuffle values.
+    pub store: ValueStore,
+    value_bytes: usize,
+}
+
+impl Worker {
+    /// Create an empty worker.
+    pub fn new(id: ServerId, cfg: &SystemConfig) -> Self {
+        Worker {
+            id,
+            store: ValueStore::new(cfg.jobs(), cfg.functions(), cfg.batches()),
+            value_bytes: cfg.value_bytes,
+        }
+    }
+
+    /// Map phase (§III-B): map every subfile of every stored batch for
+    /// every output function, then aggregate per (job, func, batch).
+    ///
+    /// Returns the number of map invocations (for compute accounting —
+    /// the paper's computation load is `r = K·μ` times the dataset).
+    pub fn run_map_phase(
+        &mut self,
+        cfg: &SystemConfig,
+        placement: &Placement,
+        workload: &dyn Workload,
+    ) -> Result<usize> {
+        let agg = workload.aggregator();
+        let mut invocations = 0usize;
+        for (job, batch) in placement.inventory(self.id) {
+            // Aggregate each function's values across the batch.
+            let mut accs: Vec<Value> =
+                (0..cfg.functions()).map(|_| agg.identity(self.value_bytes)).collect();
+            for n in placement.batch_subfiles(batch) {
+                let vals = workload.map_subfile(job, n)?;
+                if vals.len() != cfg.functions() {
+                    return Err(CamrError::Aggregation(format!(
+                        "workload returned {} values, expected Q = {}",
+                        vals.len(),
+                        cfg.functions()
+                    )));
+                }
+                invocations += 1;
+                for (f, v) in vals.iter().enumerate() {
+                    if v.len() != self.value_bytes {
+                        return Err(CamrError::Aggregation(format!(
+                            "value size {} != configured B = {}",
+                            v.len(),
+                            self.value_bytes
+                        )));
+                    }
+                    agg.combine_into(&mut accs[f], v)?;
+                }
+            }
+            for (f, acc) in accs.into_iter().enumerate() {
+                self.store.put(ValueKey { job, func: f, batch }, acc);
+            }
+        }
+        Ok(invocations)
+    }
+
+    /// Borrow the chunk payload for position `p` of a group plan from the
+    /// local store (zero-copy encode/decode path, §Perf).
+    fn chunk_ref(&self, plan: &GroupPlan, p: usize) -> Result<&[u8]> {
+        let c = plan.chunks[p];
+        Ok(self.store.get(ValueKey { job: c.job, func: c.func, batch: c.batch })?.as_slice())
+    }
+
+    /// Produce this worker's coded broadcast `Δ` for a group it belongs
+    /// to (Algorithm 2, Eq. (3)).
+    pub fn encode_for_group(&self, plan: &GroupPlan) -> Result<Vec<u8>> {
+        let t = self.position_in(plan)?;
+        plan.encode_ref(t, self.value_bytes, |p| self.chunk_ref(plan, p))
+    }
+
+    /// Decode this worker's missing chunk from the group's broadcasts and
+    /// store it. `deltas[t]` is the broadcast of `plan.members[t]`.
+    pub fn decode_from_group(&mut self, plan: &GroupPlan, deltas: &[Vec<u8>]) -> Result<()> {
+        let r = self.position_in(plan)?;
+        let chunk =
+            plan.decode_ref(r, self.value_bytes, deltas, |p| self.chunk_ref(plan, p))?;
+        let c = plan.chunks[r];
+        self.store.put(ValueKey { job: c.job, func: c.func, batch: c.batch }, chunk);
+        Ok(())
+    }
+
+    /// Build the stage-3 fused aggregate (Eq. (5)) for a unicast this
+    /// worker must send.
+    pub fn fuse_for_unicast(&self, agg: &dyn Aggregator, u: &UnicastSpec) -> Result<Value> {
+        if u.sender != self.id {
+            return Err(CamrError::Placement(format!(
+                "worker {} asked to send unicast owned by {}",
+                self.id, u.sender
+            )));
+        }
+        let mut acc = agg.identity(self.value_bytes);
+        for &b in &u.batches {
+            let v = self.store.get(ValueKey { job: u.job, func: u.func, batch: b })?;
+            agg.combine_into(&mut acc, v)?;
+        }
+        Ok(acc)
+    }
+
+    /// Receive a stage-3 fused aggregate.
+    pub fn receive_fused(&mut self, u: &UnicastSpec, v: Value) -> Result<()> {
+        if u.receiver != self.id {
+            return Err(CamrError::Placement(format!(
+                "worker {} received unicast for {}",
+                self.id, u.receiver
+            )));
+        }
+        self.store.put_fused(u.job, u.func, v);
+        Ok(())
+    }
+
+    /// Reduce `φ_f^{(j)}` (§III-D) from local + received values.
+    ///
+    /// - Owned job: fold the k-1 locally mapped batch aggregates with the
+    ///   stage-1 decoded aggregate of the missing batch.
+    /// - Non-owned job: fold the stage-2 batch aggregate with the stage-3
+    ///   fused aggregate.
+    pub fn reduce(
+        &self,
+        cfg: &SystemConfig,
+        placement: &Placement,
+        agg: &dyn Aggregator,
+        job: JobId,
+        func: FuncId,
+    ) -> Result<Value> {
+        if cfg.reducer_of(func) != self.id {
+            return Err(CamrError::Placement(format!(
+                "worker {} reducing function {func} assigned to {}",
+                self.id,
+                cfg.reducer_of(func)
+            )));
+        }
+        if placement.owns(self.id, job) {
+            // All k batch aggregates are in the store: k-1 mapped locally,
+            // 1 decoded in stage 1.
+            let mut acc = agg.identity(self.value_bytes);
+            for b in 0..cfg.batches() {
+                let v = self.store.get(ValueKey { job, func, batch: b })?;
+                agg.combine_into(&mut acc, v)?;
+            }
+            Ok(acc)
+        } else {
+            // Stage 2 delivered one batch aggregate; stage 3 the fused
+            // remainder. Find the stage-2 batch: the one present locally.
+            let mut acc: Option<Value> = None;
+            for b in 0..cfg.batches() {
+                if let Ok(v) = self.store.get(ValueKey { job, func, batch: b }) {
+                    if acc.is_some() {
+                        return Err(CamrError::Verification(format!(
+                            "non-owner {} has >1 batch aggregate for job {job}",
+                            self.id
+                        )));
+                    }
+                    acc = Some(v.clone());
+                }
+            }
+            let beta = acc.ok_or_else(|| {
+                CamrError::MissingValue(format!(
+                    "worker {}: stage-2 aggregate for job {job} func {func}",
+                    self.id
+                ))
+            })?;
+            let fused = self.store.get_fused(job, func)?;
+            agg.combine(&beta, fused)
+        }
+    }
+
+    /// This worker's position inside a group plan.
+    fn position_in(&self, plan: &GroupPlan) -> Result<usize> {
+        plan.members.iter().position(|&m| m == self.id).ok_or_else(|| {
+            CamrError::Placement(format!("worker {} not in group {:?}", self.id, plan.members))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::ResolvableDesign;
+    use crate::workload::synth::SyntheticWorkload;
+
+    fn setup() -> (SystemConfig, Placement, SyntheticWorkload) {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let d = ResolvableDesign::new(3, 2).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 42);
+        (cfg, p, wl)
+    }
+
+    #[test]
+    fn map_phase_fills_inventory() {
+        let (cfg, p, wl) = setup();
+        let mut w = Worker::new(0, &cfg);
+        let invocations = w.run_map_phase(&cfg, &p, &wl).unwrap();
+        // U1 stores 4 batches × γ=2 subfiles.
+        assert_eq!(invocations, 8);
+        // 4 (job, batch) pairs × Q=6 functions.
+        assert_eq!(w.store.len(), 24);
+    }
+
+    #[test]
+    fn map_phase_respects_placement() {
+        let (cfg, p, wl) = setup();
+        let mut w = Worker::new(1, &cfg); // U2 owns jobs 3, 4 (1-based)
+        w.run_map_phase(&cfg, &p, &wl).unwrap();
+        // Stores nothing for job 0 (not an owner).
+        for f in 0..cfg.functions() {
+            for b in 0..cfg.batches() {
+                assert!(!w.store.contains(ValueKey { job: 0, func: f, batch: b }));
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_rejects_wrong_function() {
+        let (cfg, p, wl) = setup();
+        let mut w = Worker::new(0, &cfg);
+        w.run_map_phase(&cfg, &p, &wl).unwrap();
+        let agg = wl.aggregator();
+        assert!(w.reduce(&cfg, &p, agg, 0, 1).is_err()); // func 1 belongs to U2
+    }
+
+    #[test]
+    fn fuse_rejects_foreign_unicast() {
+        let (cfg, _, wl) = setup();
+        let w = Worker::new(0, &cfg);
+        let u = UnicastSpec { sender: 1, receiver: 0, job: 2, func: 0, batches: vec![0, 1] };
+        assert!(w.fuse_for_unicast(wl.aggregator(), &u).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Resolvable designs from single-parity-check codes (paper §III).
+//!
+//! The combinatorial heart of CAMR: a `(k, k-1)` SPC code over `Z_q`
+//! yields a resolvable design whose points are the `J = q^(k-1)` jobs
+//! and whose `k·q` blocks are the servers, partitioned into `k` parallel
+//! classes of `q` blocks each (Lemma 1).
+
+pub mod resolvable;
+pub mod spc;
+pub mod verify;
+
+pub use resolvable::{Block, ResolvableDesign};
+pub use spc::SpcCode;

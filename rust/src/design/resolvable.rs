@@ -1,0 +1,317 @@
+//! Resolvable design construction from SPC codes (paper Lemma 1, Eq. (1)).
+//!
+//! Points are the `J = q^{k-1}` codeword indices (= jobs). Block
+//! `B_{i,l} = { j : T[i][j] = l }` collects the codewords whose `i`-th
+//! coordinate equals `l`. The `k·q` blocks are the servers; blocks with
+//! the same row `i` form parallel class `P_i` (each class partitions the
+//! point set — the defining property of resolvability).
+//!
+//! Server indexing convention (paper §III-A): server `U_m` (1-based in
+//! the paper, 0-based here) corresponds to block `B_{⌈m/q⌉, (m-1) mod q}`,
+//! i.e. with 0-based `s`: row `i = s / q`, level `l = s mod q`.
+
+use super::spc::SpcCode;
+use crate::error::Result;
+use crate::{JobId, ServerId};
+
+/// A block of the design: the set of points (jobs) whose codeword has
+/// value `level` at coordinate `row`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Block {
+    /// Parallel-class index `i` (0-based row of `T`).
+    pub row: usize,
+    /// Coordinate value `l ∈ Z_q`.
+    pub level: u32,
+    /// Sorted point (job) ids in this block; always `q^{k-2}` of them.
+    pub points: Vec<JobId>,
+}
+
+/// The resolvable design `(X_SPC, A_SPC)` of Lemma 1, with the
+/// block ↔ server correspondence baked in.
+#[derive(Debug, Clone)]
+pub struct ResolvableDesign {
+    /// The underlying SPC code.
+    pub code: SpcCode,
+    /// All `k·q` blocks, indexed by server id (`s = row·q + level`).
+    blocks: Vec<Block>,
+    /// `owners[j]` = the `k` servers whose blocks contain point `j`,
+    /// one per parallel class, sorted ascending (equivalently by row).
+    owners: Vec<Vec<ServerId>>,
+}
+
+impl ResolvableDesign {
+    /// Build the design for parameters `(k, q)`.
+    pub fn new(k: usize, q: usize) -> Result<Self> {
+        let code = SpcCode::new(k, q)?;
+        let j_total = code.num_codewords();
+        let mut blocks: Vec<Block> = (0..k * q)
+            .map(|s| Block { row: s / q, level: (s % q) as u32, points: Vec::new() })
+            .collect();
+        let mut owners: Vec<Vec<ServerId>> = vec![Vec::with_capacity(k); j_total];
+        for j in 0..j_total {
+            for i in 0..k {
+                let l = code.t(i, j);
+                let s = i * q + l as usize;
+                blocks[s].points.push(j);
+                owners[j].push(s);
+            }
+        }
+        Ok(ResolvableDesign { code, blocks, owners })
+    }
+
+    /// Cluster size `K = k·q` (= number of blocks).
+    pub fn servers(&self) -> usize {
+        self.code.k * self.code.q
+    }
+
+    /// Number of points / jobs `J = q^{k-1}`.
+    pub fn jobs(&self) -> usize {
+        self.code.num_codewords()
+    }
+
+    /// Number of parallel classes (= `k`).
+    pub fn classes(&self) -> usize {
+        self.code.k
+    }
+
+    /// The block associated with server `s`.
+    pub fn block(&self, s: ServerId) -> &Block {
+        &self.blocks[s]
+    }
+
+    /// The server id of block `B_{row, level}` (0-based row).
+    pub fn server_of_block(&self, row: usize, level: u32) -> ServerId {
+        debug_assert!(row < self.code.k);
+        debug_assert!((level as usize) < self.code.q);
+        row * self.code.q + level as usize
+    }
+
+    /// The parallel class (0-based row) that server `s` belongs to.
+    pub fn class_of(&self, s: ServerId) -> usize {
+        s / self.code.q
+    }
+
+    /// All servers in parallel class `i`, ascending.
+    pub fn class_members(&self, i: usize) -> Vec<ServerId> {
+        (0..self.code.q).map(|l| i * self.code.q + l).collect()
+    }
+
+    /// The `k` owner servers of job `j` (paper's `X^{(j)}`), sorted
+    /// ascending — one per parallel class.
+    pub fn owners(&self, j: JobId) -> &[ServerId] {
+        &self.owners[j]
+    }
+
+    /// Whether server `s` owns (is assigned) job `j`.
+    pub fn owns(&self, s: ServerId, j: JobId) -> bool {
+        let i = self.class_of(s);
+        self.owners[j][i] == s
+    }
+
+    /// The unique owner of job `j` inside parallel class `i`.
+    pub fn owner_in_class(&self, j: JobId, i: usize) -> ServerId {
+        self.owners[j][i]
+    }
+
+    /// Jobs **not** owned by server `s` — `J - q^{k-2}` of them.
+    pub fn non_owned_jobs(&self, s: ServerId) -> Vec<JobId> {
+        (0..self.jobs()).filter(|&j| !self.owns(s, j)).collect()
+    }
+
+    /// Enumerate stage-2 transversal groups: one server per parallel
+    /// class with empty common intersection — equivalently, the coordinate
+    /// vectors over `Z_q` that are *not* codewords (§III-C.2). Each group
+    /// is returned sorted by row, i.e. `[B_{1,v_1}, …, B_{k,v_k}]`.
+    ///
+    /// There are exactly `q^{k-1}(q-1)` such groups.
+    pub fn transversal_groups(&self) -> Vec<Vec<ServerId>> {
+        self.code
+            .all_non_codewords()
+            .into_iter()
+            .map(|v| {
+                v.iter().enumerate().map(|(i, &l)| self.server_of_block(i, l)).collect()
+            })
+            .collect()
+    }
+
+    /// For a transversal group `g` (sorted by row) and the member at row
+    /// `i`, return `(job, remaining_owner)`: the unique job jointly owned
+    /// by `g \ {g[i]}`, and its owner in class `i` (which is *not* `g[i]`).
+    ///
+    /// This is the stage-2 chunk identification (paper §III-C.2).
+    pub fn stage2_target(&self, group: &[ServerId], i: usize) -> (JobId, ServerId) {
+        debug_assert_eq!(group.len(), self.code.k);
+        let v: Vec<u32> = group.iter().map(|&s| (s % self.code.q) as u32).collect();
+        let j = self.code.complete_except(&v, i);
+        let rem = self.owner_in_class(j, i);
+        debug_assert_ne!(rem, group[i], "remaining owner must differ from excluded server");
+        (j, rem)
+    }
+
+    /// Check that a candidate group (one server per class) has empty
+    /// intersection, i.e. is a valid stage-2 group.
+    pub fn is_transversal_group(&self, group: &[ServerId]) -> bool {
+        if group.len() != self.code.k {
+            return false;
+        }
+        for (i, &s) in group.iter().enumerate() {
+            if self.class_of(s) != i {
+                return false;
+            }
+        }
+        let v: Vec<u32> = group.iter().map(|&s| (s % self.code.q) as u32).collect();
+        !self.code.is_codeword(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example_design() -> ResolvableDesign {
+        ResolvableDesign::new(3, 2).unwrap()
+    }
+
+    #[test]
+    fn example2_ownership() {
+        // Paper Eq. (2): X^(1)={U1,U3,U5}, X^(2)={U1,U4,U6},
+        //                X^(3)={U2,U3,U6}, X^(4)={U2,U4,U5}. (1-based)
+        let d = example_design();
+        assert_eq!(d.owners(0), &[0, 2, 4]);
+        assert_eq!(d.owners(1), &[0, 3, 5]);
+        assert_eq!(d.owners(2), &[1, 2, 5]);
+        assert_eq!(d.owners(3), &[1, 3, 4]);
+    }
+
+    #[test]
+    fn block_sizes_are_q_pow_k2() {
+        for (k, q) in [(3, 2), (3, 3), (4, 2), (2, 4), (4, 3)] {
+            let d = ResolvableDesign::new(k, q).unwrap();
+            for s in 0..d.servers() {
+                assert_eq!(
+                    d.block(s).points.len(),
+                    q.pow(k as u32 - 2),
+                    "k={k} q={q} s={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_classes_partition_points() {
+        for (k, q) in [(3, 2), (3, 3), (4, 2), (2, 5)] {
+            let d = ResolvableDesign::new(k, q).unwrap();
+            for i in 0..d.classes() {
+                let mut seen = vec![false; d.jobs()];
+                for s in d.class_members(i) {
+                    for &p in &d.block(s).points {
+                        assert!(!seen[p], "point {p} twice in class {i}");
+                        seen[p] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&b| b), "class {i} misses points");
+            }
+        }
+    }
+
+    #[test]
+    fn owners_one_per_class_and_consistent() {
+        let d = ResolvableDesign::new(4, 3).unwrap();
+        for j in 0..d.jobs() {
+            let own = d.owners(j);
+            assert_eq!(own.len(), 4);
+            for (i, &s) in own.iter().enumerate() {
+                assert_eq!(d.class_of(s), i);
+                assert!(d.block(s).points.contains(&j));
+                assert!(d.owns(s, j));
+            }
+            // Sorted ascending because class i servers are i*q..(i+1)*q.
+            let mut sorted = own.to_vec();
+            sorted.sort_unstable();
+            assert_eq!(own, &sorted[..]);
+        }
+    }
+
+    #[test]
+    fn transversal_group_count() {
+        for (k, q) in [(3, 2), (3, 3), (4, 2), (2, 4)] {
+            let d = ResolvableDesign::new(k, q).unwrap();
+            let groups = d.transversal_groups();
+            assert_eq!(groups.len(), q.pow(k as u32 - 1) * (q - 1), "k={k} q={q}");
+            for g in &groups {
+                assert!(d.is_transversal_group(g));
+                // Empty intersection: no job owned by all members.
+                for j in 0..d.jobs() {
+                    assert!(
+                        !g.iter().all(|&s| d.owns(s, j)),
+                        "group {g:?} jointly owns job {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stage2_target_properties() {
+        // For every group and excluded row i: the k-1 remaining members
+        // all own the target job, the excluded member does not, and the
+        // remaining owner is in the excluded member's class.
+        for (k, q) in [(3, 2), (3, 3), (4, 2)] {
+            let d = ResolvableDesign::new(k, q).unwrap();
+            for g in d.transversal_groups() {
+                for i in 0..k {
+                    let (j, rem) = d.stage2_target(&g, i);
+                    for (t, &s) in g.iter().enumerate() {
+                        if t == i {
+                            assert!(!d.owns(s, j));
+                        } else {
+                            assert!(d.owns(s, j));
+                        }
+                    }
+                    assert!(d.owns(rem, j));
+                    assert_eq!(d.class_of(rem), d.class_of(g[i]));
+                    assert_ne!(rem, g[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn example4_group_u1_u3_u6() {
+        // Paper Example 4: G = {U1, U3, U6} (1-based) = {0, 2, 5}.
+        // No job is common to all three, but each pair owns one.
+        let d = example_design();
+        let g = vec![0usize, 2, 5];
+        assert!(d.is_transversal_group(&g));
+        // Removing U1 → {U3,U6} jointly own J3 (0-based job 2).
+        assert_eq!(d.stage2_target(&g, 0).0, 2);
+        // Removing U3 → {U1,U6} jointly own J2 (0-based job 1).
+        assert_eq!(d.stage2_target(&g, 1).0, 1);
+        // Removing U6 → {U1,U3} jointly own J1 (0-based job 0).
+        assert_eq!(d.stage2_target(&g, 2).0, 0);
+    }
+
+    #[test]
+    fn stage2_pair_coverage_is_exact() {
+        // Every (server, non-owned job) pair is covered exactly once
+        // across all (group, excluded-row) combinations — the counting
+        // identity k·q^{k-1}(q-1) = K(J - q^{k-2}).
+        for (k, q) in [(3, 2), (3, 3), (4, 2)] {
+            let d = ResolvableDesign::new(k, q).unwrap();
+            let mut cover = std::collections::HashMap::new();
+            for g in d.transversal_groups() {
+                for i in 0..k {
+                    let (j, _) = d.stage2_target(&g, i);
+                    *cover.entry((g[i], j)).or_insert(0usize) += 1;
+                }
+            }
+            for s in 0..d.servers() {
+                for j in d.non_owned_jobs(s) {
+                    assert_eq!(cover.get(&(s, j)), Some(&1), "k={k} q={q} s={s} j={j}");
+                }
+            }
+            let total: usize = cover.values().sum();
+            assert_eq!(total, d.servers() * (d.jobs() - q.pow(k as u32 - 2)));
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! `(k, k-1)` single-parity-check codes over `Z_q` (paper §III, Eq. before (1)).
+//!
+//! The generator matrix is `G = [ I_{k-1} | 1 ]`, so a message
+//! `u ∈ Z_q^{k-1}` encodes to `c = (u_1, …, u_{k-1}, Σ u_i mod q)`.
+//! The `q^{k-1}` codewords are stacked as the columns of the `k × q^{k-1}`
+//! matrix `T`; column `j` is the codeword of job `J_{j+1}`.
+//!
+//! The construction works for any `q ≥ 2` — `Z_q` need not be a field
+//! (paper footnote 1).
+
+use crate::error::{CamrError, Result};
+
+/// A `(k, k-1)` single-parity-check code over `Z_q`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpcCode {
+    /// Code length (= number of parallel classes).
+    pub k: usize,
+    /// Alphabet size (= blocks per parallel class).
+    pub q: usize,
+}
+
+impl SpcCode {
+    /// Construct a `(k, k-1)` SPC code over `Z_q`.
+    pub fn new(k: usize, q: usize) -> Result<Self> {
+        if k < 2 {
+            return Err(CamrError::InvalidConfig(format!("SPC code needs k >= 2, got {k}")));
+        }
+        if q < 2 {
+            return Err(CamrError::InvalidConfig(format!("SPC code needs q >= 2, got {q}")));
+        }
+        Ok(SpcCode { k, q })
+    }
+
+    /// Number of codewords `q^{k-1}` (= number of jobs / design points).
+    pub fn num_codewords(&self) -> usize {
+        self.q.pow(self.k as u32 - 1)
+    }
+
+    /// The message vector of codeword index `j`, i.e. the base-`q` digits
+    /// of `j`, **most-significant digit first**. This makes codeword index
+    /// order equal lexicographic order — the order the paper lists
+    /// codewords in (Example 2: {000, 011, 101, 110} are jobs 1–4).
+    pub fn message(&self, j: usize) -> Vec<u32> {
+        let mut digits = vec![0u32; self.k - 1];
+        let mut x = j;
+        for slot in digits.iter_mut().rev() {
+            *slot = (x % self.q) as u32;
+            x /= self.q;
+        }
+        digits
+    }
+
+    /// The index of the codeword whose message digits are `u`
+    /// (MSD-first, inverse of [`SpcCode::message`]).
+    pub fn index_of_message(&self, u: &[u32]) -> usize {
+        debug_assert_eq!(u.len(), self.k - 1);
+        let mut j = 0usize;
+        for &d in u.iter() {
+            j = j * self.q + d as usize;
+        }
+        j
+    }
+
+    /// Encode message index `j` into a length-`k` codeword
+    /// `c = u · G = (u, Σu mod q)`.
+    pub fn codeword(&self, j: usize) -> Vec<u32> {
+        let mut c = self.message(j);
+        let parity: u32 = c.iter().fold(0u32, |acc, &d| (acc + d) % self.q as u32);
+        c.push(parity);
+        c
+    }
+
+    /// Entry `T[i][j]`: coordinate `i` (0-based row) of codeword `j`
+    /// (0-based column). `i` indexes the parallel class, `j` the job.
+    pub fn t(&self, i: usize, j: usize) -> u32 {
+        debug_assert!(i < self.k);
+        debug_assert!(j < self.num_codewords());
+        if i < self.k - 1 {
+            // MSD-first digit i of j in base q.
+            ((j / self.q.pow((self.k - 2 - i) as u32)) % self.q) as u32
+        } else {
+            // Parity coordinate: sum of message digits mod q.
+            self.message(j)
+                .iter()
+                .fold(0u32, |acc, &d| (acc + d) % self.q as u32)
+        }
+    }
+
+    /// Whether a length-`k` vector over `Z_q` is a codeword
+    /// (parity coordinate equals the sum of the message coordinates).
+    pub fn is_codeword(&self, v: &[u32]) -> bool {
+        debug_assert_eq!(v.len(), self.k);
+        let parity: u32 = v[..self.k - 1].iter().fold(0u32, |acc, &d| (acc + d) % self.q as u32);
+        v[self.k - 1] == parity
+    }
+
+    /// The unique codeword that agrees with `v` on every coordinate
+    /// *except* row `i` (any `k-1` coordinates of an SPC codeword
+    /// determine the remaining one). Returns the codeword index.
+    ///
+    /// This is the stage-2 "joint job" computation: a transversal group
+    /// minus one server pins down exactly one job (paper §III-C.2).
+    pub fn complete_except(&self, v: &[u32], i: usize) -> usize {
+        debug_assert_eq!(v.len(), self.k);
+        debug_assert!(i < self.k);
+        let q = self.q as u32;
+        if i == self.k - 1 {
+            // Message fully known; parity is ignored.
+            let u: Vec<u32> = v[..self.k - 1].to_vec();
+            self.index_of_message(&u)
+        } else {
+            // Missing message digit = parity - (sum of other message digits).
+            let others: u32 = v[..self.k - 1]
+                .iter()
+                .enumerate()
+                .filter(|&(t, _)| t != i)
+                .fold(0u32, |acc, (_, &d)| (acc + d) % q);
+            let digit = (v[self.k - 1] + q - others) % q;
+            let mut u: Vec<u32> = v[..self.k - 1].to_vec();
+            u[i] = digit;
+            self.index_of_message(&u)
+        }
+    }
+
+    /// Enumerate all codewords as rows (index order).
+    pub fn all_codewords(&self) -> Vec<Vec<u32>> {
+        (0..self.num_codewords()).map(|j| self.codeword(j)).collect()
+    }
+
+    /// Enumerate all length-`k` vectors over `Z_q` that are **not**
+    /// codewords — exactly the stage-2 transversal groups of §III-C.2.
+    /// There are `q^k - q^{k-1} = q^{k-1}(q-1)` of them.
+    pub fn all_non_codewords(&self) -> Vec<Vec<u32>> {
+        let mut out = Vec::with_capacity(self.num_codewords() * (self.q - 1));
+        let total = self.q.pow(self.k as u32);
+        for x in 0..total {
+            let mut v = Vec::with_capacity(self.k);
+            let mut y = x;
+            for _ in 0..self.k {
+                v.push((y % self.q) as u32);
+                y /= self.q;
+            }
+            if !self.is_codeword(&v) {
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example2_codewords() {
+        // Paper Example 2: q = 2, k = 3 → codewords {000, 011, 101, 110}.
+        let code = SpcCode::new(3, 2).unwrap();
+        let cws: Vec<Vec<u32>> = code.all_codewords();
+        assert_eq!(cws.len(), 4);
+        // MSD-first indexing makes our job order exactly the paper's
+        // lexicographic listing: jobs 1..4 ↔ {000, 011, 101, 110}.
+        let expected: Vec<Vec<u32>> =
+            vec![vec![0, 0, 0], vec![0, 1, 1], vec![1, 0, 1], vec![1, 1, 0]];
+        assert_eq!(cws, expected);
+        for cw in cws {
+            assert!(code.is_codeword(&cw));
+        }
+    }
+
+    #[test]
+    fn t_matrix_matches_codeword() {
+        let code = SpcCode::new(4, 3).unwrap();
+        for j in 0..code.num_codewords() {
+            let cw = code.codeword(j);
+            for i in 0..code.k {
+                assert_eq!(code.t(i, j), cw[i], "T[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn message_index_roundtrip() {
+        let code = SpcCode::new(5, 3).unwrap();
+        for j in 0..code.num_codewords() {
+            let u = code.message(j);
+            assert_eq!(code.index_of_message(&u), j);
+        }
+    }
+
+    #[test]
+    fn non_codeword_count_is_qk1_qm1() {
+        for (k, q) in [(2, 2), (3, 2), (3, 3), (4, 2), (2, 5)] {
+            let code = SpcCode::new(k, q).unwrap();
+            let ncw = code.all_non_codewords();
+            assert_eq!(ncw.len(), q.pow(k as u32 - 1) * (q - 1), "k={k} q={q}");
+            for v in &ncw {
+                assert!(!code.is_codeword(v));
+            }
+        }
+    }
+
+    #[test]
+    fn complete_except_recovers_codewords() {
+        // For every codeword and every erased coordinate, completion must
+        // return that codeword.
+        for (k, q) in [(3, 2), (3, 3), (4, 2), (2, 4)] {
+            let code = SpcCode::new(k, q).unwrap();
+            for j in 0..code.num_codewords() {
+                let cw = code.codeword(j);
+                for i in 0..k {
+                    // Corrupt coordinate i arbitrarily: completion ignores it.
+                    let mut v = cw.clone();
+                    v[i] = (v[i] + 1) % q as u32;
+                    assert_eq!(code.complete_except(&v, i), j, "k={k} q={q} j={j} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn complete_except_on_non_codeword_differs_at_i() {
+        // For a non-codeword v, the completed codeword must differ from v
+        // exactly at coordinate i (this underpins stage 2: the remaining
+        // owner is in the same parallel class as the excluded server).
+        let code = SpcCode::new(3, 2).unwrap();
+        for v in code.all_non_codewords() {
+            for i in 0..3 {
+                let j = code.complete_except(&v, i);
+                let cw = code.codeword(j);
+                for t in 0..3 {
+                    if t == i {
+                        assert_ne!(cw[t], v[t], "v={v:?} i={i}");
+                    } else {
+                        assert_eq!(cw[t], v[t], "v={v:?} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn works_for_non_prime_q() {
+        // Footnote 1: Z_q need not be a field. q = 6 composite.
+        let code = SpcCode::new(3, 6).unwrap();
+        assert_eq!(code.num_codewords(), 36);
+        for j in 0..36 {
+            assert!(code.is_codeword(&code.codeword(j)));
+        }
+        assert_eq!(code.all_non_codewords().len(), 36 * 5);
+    }
+}

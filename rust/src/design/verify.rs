@@ -1,0 +1,170 @@
+//! Structural verification of resolvable designs.
+//!
+//! [`verify_design`] re-checks every invariant promised by Lemma 1
+//! directly from the block structure (no reliance on how the design was
+//! constructed). The engine runs it once at startup; tests and proptest
+//! harnesses use it to validate randomized parameter sweeps.
+
+use super::resolvable::ResolvableDesign;
+use crate::error::{CamrError, Result};
+
+/// A full structural report of a design verification.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DesignReport {
+    /// Number of points (jobs).
+    pub points: usize,
+    /// Number of blocks (servers).
+    pub blocks: usize,
+    /// Number of parallel classes.
+    pub classes: usize,
+    /// Common block cardinality `q^{k-2}`.
+    pub block_size: usize,
+    /// Replication of each point (must equal `k` — one block per class).
+    pub replication: usize,
+}
+
+/// Verify every Lemma-1 invariant of the design; returns a report on
+/// success, or the first violated invariant as an error.
+pub fn verify_design(d: &ResolvableDesign) -> Result<DesignReport> {
+    let k = d.code.k;
+    let q = d.code.q;
+    let expect_block = q.pow(k as u32 - 2);
+
+    // 1. Every block has cardinality q^{k-2} and sorted distinct points.
+    for s in 0..d.servers() {
+        let b = d.block(s);
+        if b.points.len() != expect_block {
+            return Err(CamrError::DesignInvariant(format!(
+                "block {s} has {} points, expected {expect_block}",
+                b.points.len()
+            )));
+        }
+        if b.points.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(CamrError::DesignInvariant(format!(
+                "block {s} points not strictly increasing"
+            )));
+        }
+        if b.points.iter().any(|&p| p >= d.jobs()) {
+            return Err(CamrError::DesignInvariant(format!("block {s} point out of range")));
+        }
+    }
+
+    // 2. Each parallel class partitions the point set (resolution).
+    for i in 0..d.classes() {
+        let mut seen = vec![false; d.jobs()];
+        for s in d.class_members(i) {
+            if d.class_of(s) != i {
+                return Err(CamrError::DesignInvariant(format!(
+                    "server {s} reported in class {i} but class_of = {}",
+                    d.class_of(s)
+                )));
+            }
+            for &p in &d.block(s).points {
+                if seen[p] {
+                    return Err(CamrError::DesignInvariant(format!(
+                        "class {i}: point {p} appears in two blocks — not a parallel class"
+                    )));
+                }
+                seen[p] = true;
+            }
+        }
+        if let Some(p) = seen.iter().position(|&b| !b) {
+            return Err(CamrError::DesignInvariant(format!(
+                "class {i}: point {p} not covered — classes must partition the points"
+            )));
+        }
+    }
+
+    // 3. Every point lies in exactly k blocks (one per class) and the
+    //    owner bookkeeping agrees with raw block membership.
+    for j in 0..d.jobs() {
+        let own = d.owners(j);
+        if own.len() != k {
+            return Err(CamrError::DesignInvariant(format!(
+                "job {j} has {} owners, expected {k}",
+                own.len()
+            )));
+        }
+        for (i, &s) in own.iter().enumerate() {
+            if d.class_of(s) != i || !d.block(s).points.contains(&j) {
+                return Err(CamrError::DesignInvariant(format!(
+                    "job {j}: owner list inconsistent at class {i}"
+                )));
+            }
+        }
+    }
+
+    // 4. Any two blocks from *different* classes intersect in exactly
+    //    q^{k-3} points when k >= 3 (and at most 1 point when k = 2);
+    //    blocks within a class are disjoint. This is the structure that
+    //    makes stage-2 groups pin down unique jobs.
+    for a in 0..d.servers() {
+        for b in (a + 1)..d.servers() {
+            let ba = d.block(a);
+            let bb = d.block(b);
+            let inter = ba.points.iter().filter(|p| bb.points.contains(p)).count();
+            if d.class_of(a) == d.class_of(b) {
+                if inter != 0 {
+                    return Err(CamrError::DesignInvariant(format!(
+                        "blocks {a},{b} in the same class intersect ({inter} points)"
+                    )));
+                }
+            } else if k >= 3 {
+                // Fixing two coordinates of an SPC codeword leaves
+                // q^{k-3} free message digits.
+                let expect = q.pow(k as u32 - 3);
+                if inter != expect {
+                    return Err(CamrError::DesignInvariant(format!(
+                        "cross-class blocks {a},{b} intersect in {inter}, expected {expect}"
+                    )));
+                }
+            } else {
+                // k = 2: a codeword is (u, u) — blocks from the two
+                // classes intersect in exactly one point when their
+                // levels agree and are disjoint otherwise.
+                let expect = usize::from(d.block(a).level == d.block(b).level);
+                if inter != expect {
+                    return Err(CamrError::DesignInvariant(format!(
+                        "k=2 blocks {a},{b} intersect in {inter}, expected {expect}"
+                    )));
+                }
+            }
+        }
+    }
+
+    Ok(DesignReport {
+        points: d.jobs(),
+        blocks: d.servers(),
+        classes: d.classes(),
+        block_size: expect_block,
+        replication: k,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::resolvable::ResolvableDesign;
+
+    #[test]
+    fn verifies_small_designs() {
+        for (k, q) in [(2, 2), (2, 5), (3, 2), (3, 3), (3, 4), (4, 2), (4, 3), (5, 2)] {
+            let d = ResolvableDesign::new(k, q).unwrap();
+            let r = verify_design(&d).unwrap_or_else(|e| panic!("k={k} q={q}: {e}"));
+            assert_eq!(r.points, q.pow(k as u32 - 1));
+            assert_eq!(r.blocks, k * q);
+            assert_eq!(r.classes, k);
+            assert_eq!(r.block_size, q.pow(k as u32 - 2));
+            assert_eq!(r.replication, k);
+        }
+    }
+
+    #[test]
+    fn verifies_non_prime_q() {
+        // Footnote 1: Z_q need not be a field.
+        for q in [4usize, 6, 8, 9] {
+            let d = ResolvableDesign::new(3, q).unwrap();
+            verify_design(&d).unwrap();
+        }
+    }
+}

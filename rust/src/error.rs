@@ -1,0 +1,80 @@
+//! Error types for the CAMR crate.
+
+use std::fmt;
+
+/// All errors surfaced by the CAMR library.
+#[derive(Debug)]
+pub enum CamrError {
+    /// Invalid system parameters (e.g. `k < 2`, `q < 2`, `γ < 1`).
+    InvalidConfig(String),
+    /// A design-theory invariant was violated (block sizes, resolution…).
+    DesignInvariant(String),
+    /// Placement inconsistency (missing batch, wrong owner set…).
+    Placement(String),
+    /// Shuffle decode failure: a worker could not reconstruct a chunk.
+    ShuffleDecode(String),
+    /// A worker was asked for a value it does not store.
+    MissingValue(String),
+    /// Aggregation error (mismatched lengths / types).
+    Aggregation(String),
+    /// Reduce-phase verification against the oracle failed.
+    Verification(String),
+    /// PJRT runtime error (artifact load / compile / execute).
+    Runtime(String),
+    /// I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for CamrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CamrError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            CamrError::DesignInvariant(m) => write!(f, "design invariant violated: {m}"),
+            CamrError::Placement(m) => write!(f, "placement error: {m}"),
+            CamrError::ShuffleDecode(m) => write!(f, "shuffle decode error: {m}"),
+            CamrError::MissingValue(m) => write!(f, "missing value: {m}"),
+            CamrError::Aggregation(m) => write!(f, "aggregation error: {m}"),
+            CamrError::Verification(m) => write!(f, "verification failed: {m}"),
+            CamrError::Runtime(m) => write!(f, "runtime error: {m}"),
+            CamrError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CamrError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CamrError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CamrError {
+    fn from(e: std::io::Error) -> Self {
+        CamrError::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, CamrError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        let e = CamrError::InvalidConfig("k must be >= 2".into());
+        assert_eq!(e.to_string(), "invalid config: k must be >= 2");
+        let e = CamrError::ShuffleDecode("chunk 3".into());
+        assert!(e.to_string().contains("chunk 3"));
+    }
+
+    #[test]
+    fn io_error_preserves_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = CamrError::from(io);
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

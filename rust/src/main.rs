@@ -1,0 +1,365 @@
+//! `camr` — CLI launcher for the CAMR coded-shuffle runtime.
+//!
+//! ```text
+//! camr run      [--k 3] [--q 2] [--gamma 2] [--workload word_count]
+//!               [--artifact artifacts/map_kernel.hlo.txt] [--seed N]
+//!               [--json] [--config run.toml]
+//! camr sweep    [--max-k 4] [--max-q 4]
+//! camr table3
+//! camr example1
+//! camr serve    [--k 3] [--q 2] [--gamma 2]
+//! ```
+//!
+//! The argument parser is in-tree (this workspace builds offline); it
+//! supports `--flag value`, `--flag=value` and boolean `--flag`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use camr::analysis::{jobs, load, TimeModel};
+use camr::baseline::{run_ablation, CcdcEngine, CodingChoice};
+use camr::config::{RunConfig, SystemConfig, WorkloadKind};
+use camr::coordinator::cluster;
+use camr::coordinator::engine::Engine;
+use camr::metrics::LoadReport;
+use camr::net::Stage;
+use camr::report::Table;
+use camr::workload::gradient::GradientWorkload;
+use camr::workload::matvec::{MatVecWorkload, NativeShardCompute};
+use camr::workload::synth::SyntheticWorkload;
+use camr::workload::wordcount::WordCountWorkload;
+use camr::workload::Workload;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Minimal flag parser: `--key value`, `--key=value`, boolean `--key`.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Self> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument {arg} (flags start with --)"))?;
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if bool_flags.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+            } else {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| anyhow!("flag --{key} expects a value"))?;
+                flags.insert(key.to_string(), v.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_opt(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    fn get_bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+const USAGE: &str = "camr — Coded Aggregated MapReduce (ISIT 2019 reproduction)
+
+USAGE:
+  camr run      [--k N] [--q N] [--gamma N] [--workload KIND] [--seed N]
+                [--artifact PATH] [--json] [--config FILE]
+  camr sweep    [--max-k N] [--max-q N]
+  camr table3
+  camr example1
+  camr serve    [--k N] [--q N] [--gamma N]
+  camr ablation [--k N] [--q N]
+  camr ccdc     [--servers N] [--k N]
+  camr timemodel [--k N] [--q N] [--gamma N] [--value-bytes N]
+
+KIND: word_count | mat_vec | gradient | synthetic
+";
+
+fn build_workload(
+    kind: WorkloadKind,
+    cfg: &SystemConfig,
+    seed: u64,
+    artifact: Option<&PathBuf>,
+) -> Result<Box<dyn Workload>> {
+    Ok(match kind {
+        WorkloadKind::WordCount => Box::new(WordCountWorkload::synthetic(cfg, seed, 40)),
+        WorkloadKind::Synthetic => Box::new(SyntheticWorkload::new(cfg, seed)),
+        WorkloadKind::Gradient => {
+            let params_per_func = cfg.value_bytes / 4;
+            Box::new(GradientWorkload::synthetic(cfg, seed, params_per_func, 4)?)
+        }
+        WorkloadKind::MatVec => {
+            let rows_per_func = cfg.value_bytes / 4;
+            let compute: Arc<dyn camr::workload::matvec::ShardCompute> = match artifact {
+                Some(path) => Arc::new(camr::runtime::PjrtShardCompute::new(path)?),
+                None => Arc::new(NativeShardCompute),
+            };
+            Box::new(MatVecWorkload::synthetic(cfg, seed, rows_per_func, 8, compute)?)
+        }
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (cfg, kind, seed, artifact, json) = match args.get_opt("config") {
+        Some(path) => {
+            let rc = RunConfig::from_path(std::path::Path::new(&path))?;
+            (rc.system, rc.workload, rc.seed, rc.artifact.map(PathBuf::from), rc.json)
+        }
+        None => (
+            SystemConfig::new(
+                args.get_usize("k", 3)?,
+                args.get_usize("q", 2)?,
+                args.get_usize("gamma", 2)?,
+            )?,
+            WorkloadKind::parse(&args.get_str("workload", "word_count"))?,
+            args.get_u64("seed", 0xCA3A)?,
+            args.get_opt("artifact").map(PathBuf::from),
+            args.get_bool("json"),
+        ),
+    };
+    let wl = build_workload(kind, &cfg, seed, artifact.as_ref())?;
+    let name = wl.name().to_string();
+    let mut engine = Engine::new(cfg.clone(), wl)?;
+    let out = engine.run()?;
+    let report = LoadReport::from_outcome(&cfg, &out);
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        println!("workload: {name}");
+        print!("{report}");
+        if !report.matches_analysis() {
+            bail!("measured load deviates from §IV closed form");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let max_k = args.get_usize("max-k", 4)?;
+    let max_q = args.get_usize("max-q", 4)?;
+    let mut t = Table::new(vec![
+        "k", "q", "K", "J", "mu", "L_camr(meas)", "L_camr(form)", "L_ccdc", "L_unc_agg",
+        "J_ccdc",
+    ]);
+    for k in 2..=max_k {
+        for q in 2..=max_q {
+            let cfg = SystemConfig::new(k, q, 2)?;
+            let wl = SyntheticWorkload::new(&cfg, 7);
+            let mut e = Engine::new(cfg.clone(), Box::new(wl))?;
+            e.verify = false;
+            let out = e.run()?;
+            t.row(vec![
+                k.to_string(),
+                q.to_string(),
+                cfg.servers().to_string(),
+                cfg.jobs().to_string(),
+                format!("{:.4}", cfg.storage_fraction()),
+                format!("{:.4}", out.total_load()),
+                format!("{:.4}", load::camr_total(k, q)),
+                format!("{:.4}", load::ccdc_total(k - 1, cfg.servers())),
+                format!("{:.4}", load::uncoded_aggregated_total(k, q)),
+                jobs::JobRequirement::for_params(k, q).ccdc.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table3() -> Result<()> {
+    println!("Table III — minimum number of jobs, K = 100:\n");
+    let mut t = Table::new(vec!["k", "CAMR", "CCDC", "ratio"]);
+    for row in jobs::table3() {
+        t.row(vec![
+            row.k.to_string(),
+            row.camr.to_string(),
+            row.ccdc.to_string(),
+            format!("{:.1}x", row.ratio()),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_example1() -> Result<()> {
+    let cfg = SystemConfig::new(3, 2, 2)?;
+    let wl = WordCountWorkload::example1(&cfg);
+    let mut engine = Engine::new(cfg.clone(), Box::new(wl))?;
+
+    println!("== Paper Example 1: K = 6, q = 2, k = 3, J = 4, N = 6, γ = 2 ==\n");
+    println!("Ownership (Eq. 2) and placement (Fig. 1):");
+    let mut t = Table::new(vec!["server", "class", "owned jobs", "stored (job:batch)"]);
+    {
+        let m = &engine.master;
+        for s in 0..cfg.servers() {
+            let inv = m.placement.inventory(s);
+            let stored: Vec<String> =
+                inv.iter().map(|(j, b)| format!("J{}:B{}", j + 1, b + 1)).collect();
+            let owned: Vec<String> =
+                m.design.block(s).points.iter().map(|j| format!("J{}", j + 1)).collect();
+            t.row(vec![
+                format!("U{}", s + 1),
+                format!("P{}", m.design.class_of(s) + 1),
+                owned.join(","),
+                stored.join(" "),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    let out = engine.run()?;
+    println!("\nShuffle ledger:");
+    for stage in [Stage::Stage1, Stage::Stage2, Stage::Stage3] {
+        let count = engine.bus.stage_count(stage);
+        let bytes = engine.bus.stage_bytes(stage);
+        println!(
+            "  {stage}: {count} transmissions, {bytes} bytes, load {:.4}",
+            engine.bus.stage_load(stage, cfg.load_normalizer())
+        );
+    }
+    let report = LoadReport::from_outcome(&cfg, &out);
+    println!();
+    print!("{report}");
+    println!(
+        "\nPaper §III-C: L1 = 1/4, L2 = 1/4, L3 = 1/2, total = 1. CCDC would need C(6,3) = 20 jobs; CAMR used 4."
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 3)?;
+    let q = args.get_usize("q", 2)?;
+    let gamma = args.get_usize("gamma", 2)?;
+    let cfg = SystemConfig::new(k, q, gamma)?;
+    let wl = Arc::new(SyntheticWorkload::new(&cfg, 1));
+    let out = cluster::run_cluster(cfg.clone(), wl)?;
+    println!(
+        "cluster: K={} J={} load={:.4} (expected {:.4}), {} outputs, {} map calls",
+        cfg.servers(),
+        cfg.jobs(),
+        out.total_load(),
+        load::camr_total(k, q),
+        out.outputs,
+        out.map_invocations
+    );
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 3)?;
+    let q = args.get_usize("q", 2)?;
+    let cfg = SystemConfig::with_options(k, q, 2, 1, 120)?;
+    println!("stage-coding ablation — K={} J={} (all variants oracle-verified):\n", cfg.servers(), cfg.jobs());
+    let mut t = Table::new(vec!["variant", "L1", "L2", "L3", "total", "expected"]);
+    for choice in CodingChoice::all() {
+        let wl = SyntheticWorkload::new(&cfg, 1);
+        let out = run_ablation(cfg.clone(), Box::new(wl), choice)?;
+        let n = out.normalizer;
+        t.row(vec![
+            choice.label(),
+            format!("{:.4}", out.stage_bytes[0] as f64 / n),
+            format!("{:.4}", out.stage_bytes[1] as f64 / n),
+            format!("{:.4}", out.stage_bytes[2] as f64 / n),
+            format!("{:.4}", out.total_load()),
+            format!("{:.4}", choice.expected_load(k, q)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\ncoding each stage saves a factor k-1 = {} on that stage's bytes", k - 1);
+    Ok(())
+}
+
+fn cmd_ccdc(args: &Args) -> Result<()> {
+    let servers = args.get_usize("servers", 6)?;
+    let k = args.get_usize("k", 3)?;
+    let mut e = CcdcEngine::new(servers, k, 2, 64, 7)?;
+    let out = e.run()?;
+    println!(
+        "CCDC baseline: K={servers} k={k} → {} jobs (C({servers},{k}))\n  Eq.(6) load {:.4}   measured (this impl) {:.4}   encode ops {}   verified {}",
+        out.jobs,
+        out.paper_load(),
+        out.measured_load(),
+        out.encode_ops,
+        out.verified
+    );
+    println!(
+        "CAMR at the same μ would need q^(k-1) jobs with K = k·q (e.g. q = {}: {} jobs).",
+        servers / k,
+        (servers / k).pow(k as u32 - 1)
+    );
+    Ok(())
+}
+
+fn cmd_timemodel(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 3)?;
+    let q = args.get_usize("q", 2)?;
+    let gamma = args.get_usize("gamma", 2)?;
+    let bytes = args.get_usize("value-bytes", 1 << 20)?;
+    let tm = TimeModel::commodity();
+    let (tc, tu, speedup) = tm.camr_vs_uncoded(k, q, gamma, bytes);
+    let fc = tm.shuffle_fraction(k, q, gamma, bytes, load::camr_total(k, q));
+    let fu = tm.shuffle_fraction(k, q, gamma, bytes, load::uncoded_aggregated_total(k, q));
+    println!(
+        "job-time model (1 Gb/s link, 1 ms map): K={} J={} B={bytes}",
+        k * q,
+        q.pow(k as u32 - 1)
+    );
+    println!("  uncoded aggregated: {tu:.4}s  (shuffle share {:.0}%)", fu * 100.0);
+    println!("  CAMR coded:         {tc:.4}s  (shuffle share {:.0}%)", fc * 100.0);
+    println!("  end-to-end speedup: {speedup:.2}x");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    let bool_flags = ["json"];
+    match cmd.as_str() {
+        "run" => cmd_run(&Args::parse(rest, &bool_flags)?),
+        "sweep" => cmd_sweep(&Args::parse(rest, &bool_flags)?),
+        "table3" => cmd_table3(),
+        "example1" => cmd_example1(),
+        "serve" => cmd_serve(&Args::parse(rest, &bool_flags)?),
+        "ablation" => cmd_ablation(&Args::parse(rest, &bool_flags)?),
+        "ccdc" => cmd_ccdc(&Args::parse(rest, &bool_flags)?),
+        "timemodel" => cmd_timemodel(&Args::parse(rest, &bool_flags)?),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other}\n{USAGE}"),
+    }
+}

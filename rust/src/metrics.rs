@@ -1,0 +1,203 @@
+//! Measured-vs-analytic load reporting.
+//!
+//! Bundles a run's measured byte counts with the §IV closed forms so
+//! every report doubles as a reproduction check of the paper's analysis.
+
+use crate::analysis::load;
+use crate::config::SystemConfig;
+use crate::coordinator::engine::RunOutcome;
+use crate::util::json::Json;
+
+/// One stage's measured vs expected load.
+#[derive(Debug, Clone, Copy)]
+pub struct StageMetric {
+    /// 1-based stage index.
+    pub stage: usize,
+    /// Bytes measured on the shared link.
+    pub bytes: usize,
+    /// Measured load (bytes / JQB).
+    pub measured: f64,
+    /// Closed-form load from §IV.
+    pub expected: f64,
+}
+
+/// Full report of a CAMR run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Parameters `(k, q, γ, rounds, B)`.
+    pub k: usize,
+    /// `q`.
+    pub q: usize,
+    /// `γ`.
+    pub gamma: usize,
+    /// Shuffle rounds (Q/K).
+    pub rounds: usize,
+    /// Value size in bytes.
+    pub value_bytes: usize,
+    /// Cluster size.
+    pub servers: usize,
+    /// Job count.
+    pub jobs: usize,
+    /// Storage fraction μ.
+    pub mu: f64,
+    /// Per-stage metrics.
+    pub stages: Vec<StageMetric>,
+    /// Measured total load.
+    pub total_measured: f64,
+    /// Closed-form total load.
+    pub total_expected: f64,
+    /// CCDC load at the same μ (must equal CAMR's, §V).
+    pub ccdc_load: f64,
+    /// Map invocations (computation load).
+    pub map_invocations: usize,
+    /// Oracle verification status.
+    pub verified: bool,
+    /// Phase wall times in microseconds (map, shuffle, reduce).
+    pub phase_us: [u128; 3],
+}
+
+impl LoadReport {
+    /// Build a report from a run outcome.
+    pub fn from_outcome(cfg: &SystemConfig, out: &RunOutcome) -> Self {
+        let breakdown = load::camr_stages(cfg.k, cfg.q);
+        let expected = [breakdown.stage1, breakdown.stage2, breakdown.stage3];
+        let stages: Vec<StageMetric> = (0..3)
+            .map(|i| StageMetric {
+                stage: i + 1,
+                bytes: out.stage_bytes[i],
+                measured: out.stage_load(i + 1),
+                expected: expected[i],
+            })
+            .collect();
+        LoadReport {
+            k: cfg.k,
+            q: cfg.q,
+            gamma: cfg.gamma,
+            rounds: cfg.rounds,
+            value_bytes: cfg.value_bytes,
+            servers: cfg.servers(),
+            jobs: cfg.jobs(),
+            mu: cfg.storage_fraction(),
+            stages,
+            total_measured: out.total_load(),
+            total_expected: breakdown.total(),
+            ccdc_load: load::ccdc_total(cfg.k - 1, cfg.servers()),
+            map_invocations: out.map_invocations,
+            verified: out.verified,
+            phase_us: [
+                out.map_time.as_micros(),
+                out.shuffle_time.as_micros(),
+                out.reduce_time.as_micros(),
+            ],
+        }
+    }
+
+    /// Measured load is within padding slack of the closed form.
+    pub fn matches_analysis(&self) -> bool {
+        // Padding inflates stages 1–2 by at most (k-2)/B relatively.
+        let slack = (self.k as f64) / (self.value_bytes as f64) + 1e-9;
+        (self.total_measured - self.total_expected).abs()
+            <= self.total_expected * slack + 1e-12
+    }
+
+    /// Serialize to JSON (stable key order).
+    pub fn to_json(&self) -> String {
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("stage", Json::UInt(s.stage as u128)),
+                    ("bytes", Json::UInt(s.bytes as u128)),
+                    ("measured", Json::Num(s.measured)),
+                    ("expected", Json::Num(s.expected)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("k", Json::UInt(self.k as u128)),
+            ("q", Json::UInt(self.q as u128)),
+            ("gamma", Json::UInt(self.gamma as u128)),
+            ("rounds", Json::UInt(self.rounds as u128)),
+            ("value_bytes", Json::UInt(self.value_bytes as u128)),
+            ("servers", Json::UInt(self.servers as u128)),
+            ("jobs", Json::UInt(self.jobs as u128)),
+            ("mu", Json::Num(self.mu)),
+            ("stages", Json::Arr(stages)),
+            ("total_measured", Json::Num(self.total_measured)),
+            ("total_expected", Json::Num(self.total_expected)),
+            ("ccdc_load", Json::Num(self.ccdc_load)),
+            ("map_invocations", Json::UInt(self.map_invocations as u128)),
+            ("verified", Json::Bool(self.verified)),
+            (
+                "phase_us",
+                Json::Arr(self.phase_us.iter().map(|&x| Json::UInt(x)).collect()),
+            ),
+        ])
+        .render()
+    }
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "CAMR run  k={} q={} γ={} rounds={} B={}  (K={} J={} μ={:.4})",
+            self.k, self.q, self.gamma, self.rounds, self.value_bytes, self.servers,
+            self.jobs, self.mu
+        )?;
+        writeln!(f, "  {:<8} {:>12} {:>12} {:>12}", "stage", "bytes", "measured", "expected")?;
+        for s in &self.stages {
+            writeln!(
+                f,
+                "  {:<8} {:>12} {:>12.6} {:>12.6}",
+                format!("stage{}", s.stage),
+                s.bytes,
+                s.measured,
+                s.expected
+            )?;
+        }
+        writeln!(
+            f,
+            "  {:<8} {:>12} {:>12.6} {:>12.6}   (CCDC at same μ: {:.6})",
+            "total",
+            self.stages.iter().map(|s| s.bytes).sum::<usize>(),
+            self.total_measured,
+            self.total_expected,
+            self.ccdc_load
+        )?;
+        writeln!(
+            f,
+            "  map invocations: {}   phases: map {}µs shuffle {}µs reduce {}µs   verified: {}",
+            self.map_invocations, self.phase_us[0], self.phase_us[1], self.phase_us[2],
+            self.verified
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+    use crate::workload::synth::SyntheticWorkload;
+
+    #[test]
+    fn report_matches_analysis_for_example1() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 9);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        let rep = LoadReport::from_outcome(&cfg, &out);
+        assert!(rep.matches_analysis());
+        assert!((rep.total_measured - 1.0).abs() < 1e-12);
+        assert!((rep.ccdc_load - 1.0).abs() < 1e-12);
+        // JSON rendering contains the key fields.
+        let js = rep.to_json();
+        assert!(js.contains("\"jobs\":4"));
+        assert!(js.contains("\"verified\":true"));
+        assert!(crate::util::json::get_field(&js, "k").unwrap() == "3");
+        // Display renders all stages.
+        let text = rep.to_string();
+        assert!(text.contains("stage1") && text.contains("stage3"));
+    }
+}

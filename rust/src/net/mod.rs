@@ -1,0 +1,178 @@
+//! Shared-link network simulator with byte-exact accounting.
+//!
+//! The paper's model (§II): servers exchange data over a *shared
+//! multicast-capable link*; the communication load `L` (Definition 3) is
+//! the total bytes put on the link normalized by `J·Q·B`. A multicast is
+//! therefore charged **once**, regardless of how many servers decode it —
+//! this is exactly where coded shuffling wins.
+//!
+//! [`Bus`] records every transmission with its phase/stage tag so the
+//! per-stage loads of §IV can be measured rather than merely computed.
+
+use crate::ServerId;
+use std::fmt;
+
+/// Which protocol phase a transmission belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// CAMR stage 1: coded multicast among the owners of each job.
+    Stage1,
+    /// CAMR stage 2: coded multicast within transversal groups.
+    Stage2,
+    /// CAMR stage 3: unicasts within parallel classes.
+    Stage3,
+    /// Baseline traffic (uncoded / CCDC), tagged with a label instead.
+    Baseline,
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Stage::Stage1 => write!(f, "stage1"),
+            Stage::Stage2 => write!(f, "stage2"),
+            Stage::Stage3 => write!(f, "stage3"),
+            Stage::Baseline => write!(f, "baseline"),
+        }
+    }
+}
+
+/// A single transmission on the shared link.
+#[derive(Debug, Clone)]
+pub struct Transmission {
+    /// Protocol stage.
+    pub stage: Stage,
+    /// Transmitting server.
+    pub sender: ServerId,
+    /// Intended recipients (decoders). Empty = broadcast to all.
+    pub recipients: Vec<ServerId>,
+    /// Payload size in bytes — counted once on the shared link.
+    pub bytes: usize,
+}
+
+/// The shared link: a ledger of every transmission.
+///
+/// The bus itself performs no routing — the engine hands decoded payloads
+/// to workers directly; the bus exists to make the *cost* auditable and
+/// the schedule inspectable (used to print the paper's Tables I/II).
+#[derive(Debug, Default, Clone)]
+pub struct Bus {
+    ledger: Vec<Transmission>,
+}
+
+impl Bus {
+    /// New empty bus.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a multicast from `sender` to `recipients` of `bytes` bytes.
+    pub fn multicast(
+        &mut self,
+        stage: Stage,
+        sender: ServerId,
+        recipients: Vec<ServerId>,
+        bytes: usize,
+    ) {
+        self.ledger.push(Transmission { stage, sender, recipients, bytes });
+    }
+
+    /// Record a unicast.
+    pub fn unicast(&mut self, stage: Stage, sender: ServerId, to: ServerId, bytes: usize) {
+        self.multicast(stage, sender, vec![to], bytes);
+    }
+
+    /// Total bytes on the link (all stages).
+    pub fn total_bytes(&self) -> usize {
+        self.ledger.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Total bytes for one stage.
+    pub fn stage_bytes(&self, stage: Stage) -> usize {
+        self.ledger.iter().filter(|t| t.stage == stage).map(|t| t.bytes).sum()
+    }
+
+    /// Number of transmissions in one stage.
+    pub fn stage_count(&self, stage: Stage) -> usize {
+        self.ledger.iter().filter(|t| t.stage == stage).count()
+    }
+
+    /// All transmissions (for schedule inspection / table printing).
+    pub fn ledger(&self) -> &[Transmission] {
+        &self.ledger
+    }
+
+    /// Communication load: total bytes / normalizer (Definition 3).
+    pub fn load(&self, normalizer: f64) -> f64 {
+        self.total_bytes() as f64 / normalizer
+    }
+
+    /// Per-stage load.
+    pub fn stage_load(&self, stage: Stage, normalizer: f64) -> f64 {
+        self.stage_bytes(stage) as f64 / normalizer
+    }
+
+    /// Clear the ledger (reused between runs).
+    pub fn reset(&mut self) {
+        self.ledger.clear();
+    }
+
+    /// Bytes transmitted per server (length `servers`). The SPC design
+    /// is symmetric, so a correct CAMR run loads every server equally —
+    /// asserted by the traffic-balance tests.
+    pub fn per_server_tx(&self, servers: usize) -> Vec<usize> {
+        let mut tx = vec![0usize; servers];
+        for t in &self.ledger {
+            tx[t.sender] += t.bytes;
+        }
+        tx
+    }
+
+    /// Bytes addressed to each server (multicasts count once per
+    /// recipient — this is *decode* work, not link load).
+    pub fn per_server_rx(&self, servers: usize) -> Vec<usize> {
+        let mut rx = vec![0usize; servers];
+        for t in &self.ledger {
+            for &r in &t.recipients {
+                rx[r] += t.bytes;
+            }
+        }
+        rx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multicast_counted_once() {
+        let mut bus = Bus::new();
+        bus.multicast(Stage::Stage1, 0, vec![1, 2, 3], 100);
+        // 100 bytes on the shared link, not 300.
+        assert_eq!(bus.total_bytes(), 100);
+        assert_eq!(bus.stage_count(Stage::Stage1), 1);
+    }
+
+    #[test]
+    fn per_stage_accounting() {
+        let mut bus = Bus::new();
+        bus.multicast(Stage::Stage1, 0, vec![1], 10);
+        bus.multicast(Stage::Stage2, 1, vec![0, 2], 20);
+        bus.unicast(Stage::Stage3, 2, 0, 30);
+        assert_eq!(bus.stage_bytes(Stage::Stage1), 10);
+        assert_eq!(bus.stage_bytes(Stage::Stage2), 20);
+        assert_eq!(bus.stage_bytes(Stage::Stage3), 30);
+        assert_eq!(bus.total_bytes(), 60);
+        assert!((bus.load(120.0) - 0.5).abs() < 1e-12);
+        assert!((bus.stage_load(Stage::Stage3, 60.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_ledger() {
+        let mut bus = Bus::new();
+        bus.unicast(Stage::Baseline, 0, 1, 5);
+        bus.reset();
+        assert_eq!(bus.total_bytes(), 0);
+        assert!(bus.ledger().is_empty());
+    }
+}

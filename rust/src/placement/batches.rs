@@ -1,0 +1,263 @@
+//! Algorithm 1: batch labeling and per-server storage maps.
+//!
+//! ## Labeling convention
+//!
+//! Algorithm 1 says "label each batch with a distinct index of an owner"
+//! but leaves the bijection free. We fix the convention that reproduces
+//! the paper's Example 2 exactly: with the owners of job `j` sorted
+//! ascending as `owners[0..k]`, batch `b` (covering subfiles
+//! `[bγ, (b+1)γ)`) is labeled with `owners[(b+1) mod k]`.
+//!
+//! Check against Example 2 (job `J_1`, owners `{U_1, U_3, U_5}`):
+//! batch 0 = {1,2} → label `U_3`, batch 1 = {3,4} → label `U_5`,
+//! batch 2 = {5,6} → label `U_1` — precisely the paper's
+//! `B^{(1)}_{[i_3]}, B^{(1)}_{[i_5]}, B^{(1)}_{[i_1]}`.
+
+use crate::config::SystemConfig;
+use crate::design::ResolvableDesign;
+use crate::error::{CamrError, Result};
+use crate::{BatchId, JobId, ServerId, SubfileId};
+
+/// The complete file placement for a CAMR deployment.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    k: usize,
+    gamma: usize,
+    jobs: usize,
+    servers: usize,
+    /// `label[j][b]` = owner server that batch `b` of job `j` is labeled
+    /// with (the unique owner *not* storing that batch).
+    label: Vec<Vec<ServerId>>,
+    /// `owner_pos[j]` maps each owner of `j` to its position in the
+    /// sorted owner list (parallel-class index).
+    owners: Vec<Vec<ServerId>>,
+}
+
+impl Placement {
+    /// Build the Algorithm-1 placement from a design and config.
+    pub fn new(design: &ResolvableDesign, cfg: &SystemConfig) -> Result<Self> {
+        if design.code.k != cfg.k || design.code.q != cfg.q {
+            return Err(CamrError::Placement(
+                "design parameters do not match the system config".into(),
+            ));
+        }
+        let jobs = design.jobs();
+        let k = cfg.k;
+        let mut label = Vec::with_capacity(jobs);
+        let mut owners = Vec::with_capacity(jobs);
+        for j in 0..jobs {
+            let own = design.owners(j).to_vec();
+            // Batch b is labeled with owners[(b+1) mod k] (see module doc).
+            let lab: Vec<ServerId> = (0..k).map(|b| own[(b + 1) % k]).collect();
+            label.push(lab);
+            owners.push(own);
+        }
+        Ok(Placement { k, gamma: cfg.gamma, jobs, servers: cfg.servers(), label, owners })
+    }
+
+    /// Number of batches per job (= `k`).
+    pub fn batches_per_job(&self) -> usize {
+        self.k
+    }
+
+    /// Subfiles per batch (`γ`).
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    /// The subfiles in batch `b`: `[bγ, (b+1)γ)`.
+    pub fn batch_subfiles(&self, b: BatchId) -> std::ops::Range<SubfileId> {
+        b * self.gamma..(b + 1) * self.gamma
+    }
+
+    /// The batch containing subfile `n`.
+    pub fn batch_of_subfile(&self, n: SubfileId) -> BatchId {
+        n / self.gamma
+    }
+
+    /// The owner that batch `b` of job `j` is labeled with — the unique
+    /// owner **not** storing that batch.
+    pub fn batch_label(&self, j: JobId, b: BatchId) -> ServerId {
+        self.label[j][b]
+    }
+
+    /// The unique batch of job `j` labeled with owner `s` — the one batch
+    /// of its job that `s` is missing. Errors if `s` is not an owner.
+    pub fn missing_batch(&self, j: JobId, s: ServerId) -> Result<BatchId> {
+        self.label[j]
+            .iter()
+            .position(|&o| o == s)
+            .ok_or_else(|| CamrError::Placement(format!("server {s} does not own job {j}")))
+    }
+
+    /// The owners of job `j`, sorted ascending (one per parallel class).
+    pub fn owners(&self, j: JobId) -> &[ServerId] {
+        &self.owners[j]
+    }
+
+    /// Whether server `s` owns job `j`.
+    pub fn owns(&self, s: ServerId, j: JobId) -> bool {
+        self.owners[j].binary_search(&s).is_ok()
+    }
+
+    /// Whether server `s` stores batch `b` of job `j`: true iff `s` owns
+    /// `j` and the batch is not labeled with `s`.
+    pub fn stores_batch(&self, s: ServerId, j: JobId, b: BatchId) -> bool {
+        self.owns(s, j) && self.label[j][b] != s
+    }
+
+    /// Whether server `s` stores subfile `n` of job `j`.
+    pub fn stores_subfile(&self, s: ServerId, j: JobId, n: SubfileId) -> bool {
+        self.stores_batch(s, j, self.batch_of_subfile(n))
+    }
+
+    /// All batches of job `j` stored by server `s` (empty if non-owner).
+    pub fn stored_batches(&self, s: ServerId, j: JobId) -> Vec<BatchId> {
+        if !self.owns(s, j) {
+            return Vec::new();
+        }
+        (0..self.k).filter(|&b| self.label[j][b] != s).collect()
+    }
+
+    /// All `(job, batch)` pairs stored by server `s` — its local cache
+    /// inventory.
+    pub fn inventory(&self, s: ServerId) -> Vec<(JobId, BatchId)> {
+        let mut inv = Vec::new();
+        for j in 0..self.jobs {
+            for b in self.stored_batches(s, j) {
+                inv.push((j, b));
+            }
+        }
+        inv
+    }
+
+    /// Number of jobs in the placement.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Number of servers in the placement.
+    pub fn servers(&self) -> usize {
+        self.servers
+    }
+
+    /// Validate placement invariants (each batch stored by exactly `k-1`
+    /// owners; each owner misses exactly one batch per owned job).
+    pub fn validate(&self) -> Result<()> {
+        for j in 0..self.jobs {
+            // Labels must be a permutation of the owners.
+            let mut lab = self.label[j].clone();
+            lab.sort_unstable();
+            if lab != self.owners[j] {
+                return Err(CamrError::Placement(format!(
+                    "job {j}: batch labels are not a permutation of owners"
+                )));
+            }
+            for b in 0..self.k {
+                let holders: Vec<ServerId> = (0..self.servers)
+                    .filter(|&s| self.stores_batch(s, j, b))
+                    .collect();
+                if holders.len() != self.k - 1 {
+                    return Err(CamrError::Placement(format!(
+                        "job {j} batch {b}: stored by {} servers, expected k-1 = {}",
+                        holders.len(),
+                        self.k - 1
+                    )));
+                }
+                if holders.contains(&self.label[j][b]) {
+                    return Err(CamrError::Placement(format!(
+                        "job {j} batch {b}: stored by its own label"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::design::ResolvableDesign;
+
+    fn example() -> (ResolvableDesign, SystemConfig, Placement) {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let d = ResolvableDesign::new(3, 2).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        (d, cfg, p)
+    }
+
+    #[test]
+    fn example2_batch_labels() {
+        // Job J_1 (0-based 0), owners {U1,U3,U5} = {0,2,4}:
+        // batch {1,2} → U3, batch {3,4} → U5, batch {5,6} → U1.
+        let (_, _, p) = example();
+        assert_eq!(p.batch_label(0, 0), 2);
+        assert_eq!(p.batch_label(0, 1), 4);
+        assert_eq!(p.batch_label(0, 2), 0);
+    }
+
+    #[test]
+    fn example2_storage_sets() {
+        // Fig. 1 + Example 2: U1 stores {1,2},{3,4} of J1; U3 stores
+        // {3,4},{5,6}; U5 stores {1,2},{5,6}.
+        let (_, _, p) = example();
+        assert_eq!(p.stored_batches(0, 0), vec![0, 1]); // U1
+        assert_eq!(p.stored_batches(2, 0), vec![1, 2]); // U3
+        assert_eq!(p.stored_batches(4, 0), vec![0, 2]); // U5
+        assert_eq!(p.stored_batches(1, 0), Vec::<usize>::new()); // U2 non-owner
+    }
+
+    #[test]
+    fn missing_batch_is_label_inverse() {
+        let (_, _, p) = example();
+        for j in 0..p.jobs() {
+            for &s in &p.owners(j).to_vec() {
+                let b = p.missing_batch(j, s).unwrap();
+                assert_eq!(p.batch_label(j, b), s);
+                assert!(!p.stores_batch(s, j, b));
+            }
+        }
+    }
+
+    #[test]
+    fn missing_batch_rejects_non_owner() {
+        let (_, _, p) = example();
+        assert!(p.missing_batch(0, 1).is_err()); // U2 does not own J1
+    }
+
+    #[test]
+    fn validate_passes_for_sweep() {
+        for (k, q, g) in [(2, 2, 1), (3, 2, 2), (3, 3, 1), (4, 2, 3), (2, 5, 2)] {
+            let cfg = SystemConfig::new(k, q, g).unwrap();
+            let d = ResolvableDesign::new(k, q).unwrap();
+            let p = Placement::new(&d, &cfg).unwrap();
+            p.validate().unwrap_or_else(|e| panic!("k={k} q={q}: {e}"));
+        }
+    }
+
+    #[test]
+    fn subfile_batch_mapping() {
+        let (_, _, p) = example();
+        assert_eq!(p.batch_subfiles(0), 0..2);
+        assert_eq!(p.batch_subfiles(2), 4..6);
+        assert_eq!(p.batch_of_subfile(5), 2);
+        assert!(p.stores_subfile(0, 0, 0)); // U1 stores subfile 1 of J1
+        assert!(!p.stores_subfile(0, 0, 5)); // but not subfile 6
+    }
+
+    #[test]
+    fn inventory_counts_match_mu() {
+        // Each server stores q^{k-2} jobs × (k-1) batches.
+        for (k, q) in [(3, 2), (3, 3), (4, 2)] {
+            let cfg = SystemConfig::new(k, q, 2).unwrap();
+            let d = ResolvableDesign::new(k, q).unwrap();
+            let p = Placement::new(&d, &cfg).unwrap();
+            for s in 0..cfg.servers() {
+                let inv = p.inventory(s);
+                assert_eq!(inv.len(), q.pow(k as u32 - 2) * (k - 1));
+            }
+        }
+    }
+}

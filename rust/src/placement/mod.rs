@@ -1,0 +1,12 @@
+//! Job assignment and file placement (paper §III-A, Algorithm 1).
+//!
+//! Each job's `N = k·γ` subfiles are partitioned into `k` batches of `γ`
+//! subfiles. Each batch is labeled with one of the job's `k` owners; an
+//! owner stores **all batches except the one labeled with itself**. The
+//! resulting storage fraction is `μ = (k-1)/K`.
+
+pub mod batches;
+pub mod storage;
+
+pub use batches::Placement;
+pub use storage::StorageReport;

@@ -1,0 +1,84 @@
+//! Storage accounting: verifies the `μ = (k-1)/K` requirement of §III-A.
+
+use super::batches::Placement;
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+
+/// Per-cluster storage accounting report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageReport {
+    /// Subfiles stored per server (identical across servers by symmetry).
+    pub subfiles_per_server: usize,
+    /// Total subfiles across all jobs (`J·N`).
+    pub total_subfiles: usize,
+    /// Measured storage fraction per server.
+    pub measured_mu: f64,
+    /// The paper's closed form `(k-1)/K`.
+    pub expected_mu: f64,
+}
+
+/// Audit the storage of every server against `μ = (k-1)/K`.
+///
+/// Errors if any server's stored fraction deviates from the closed form
+/// (they must be *exactly* equal — the counts are integers).
+pub fn audit_storage(p: &Placement, cfg: &SystemConfig) -> Result<StorageReport> {
+    let total = cfg.jobs() * cfg.subfiles();
+    let expected_mu = cfg.storage_fraction();
+    // Each server owns q^{k-2} jobs (= J/q) and stores k-1 batches of γ
+    // subfiles for each (§III-A).
+    let expected_count = (cfg.jobs() / cfg.q) * (cfg.k - 1) * cfg.gamma;
+    let mut first: Option<usize> = None;
+    for s in 0..cfg.servers() {
+        let count: usize = p.inventory(s).len() * cfg.gamma;
+        if count != expected_count {
+            return Err(CamrError::Placement(format!(
+                "server {s} stores {count} subfiles, expected {expected_count}"
+            )));
+        }
+        let mu = count as f64 / total as f64;
+        if (mu - expected_mu).abs() > 1e-12 {
+            return Err(CamrError::Placement(format!(
+                "server {s} storage fraction {mu} != (k-1)/K = {expected_mu}"
+            )));
+        }
+        first.get_or_insert(count);
+    }
+    Ok(StorageReport {
+        subfiles_per_server: first.unwrap_or(0),
+        total_subfiles: total,
+        measured_mu: first.unwrap_or(0) as f64 / total as f64,
+        expected_mu,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::ResolvableDesign;
+
+    #[test]
+    fn example2_mu_is_one_third() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let d = ResolvableDesign::new(3, 2).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        let rep = audit_storage(&p, &cfg).unwrap();
+        assert!((rep.measured_mu - 1.0 / 3.0).abs() < 1e-12);
+        // 4 batches × γ=2 subfiles per server (Fig. 1).
+        assert_eq!(rep.subfiles_per_server, 8);
+        assert_eq!(rep.total_subfiles, 24);
+    }
+
+    #[test]
+    fn mu_matches_closed_form_across_sweep() {
+        for (k, q, g) in [(2, 3, 1), (3, 2, 1), (3, 4, 2), (4, 2, 2), (4, 3, 1), (5, 2, 1)] {
+            let cfg = SystemConfig::new(k, q, g).unwrap();
+            let d = ResolvableDesign::new(k, q).unwrap();
+            let p = Placement::new(&d, &cfg).unwrap();
+            let rep = audit_storage(&p, &cfg).unwrap();
+            assert!(
+                (rep.measured_mu - rep.expected_mu).abs() < 1e-12,
+                "k={k} q={q} γ={g}"
+            );
+        }
+    }
+}

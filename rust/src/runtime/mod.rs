@@ -1,0 +1,276 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO **text**,
+//! see `python/compile/aot.py`) and executes them on the map path.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
+//! `Sync`), while the engine's map phase fans out across rayon workers.
+//! We therefore run PJRT on a dedicated **service thread** that owns the
+//! client and all compiled executables; map workers submit shard-product
+//! requests over a channel and block on the reply. This keeps all PJRT
+//! state on one thread (no `unsafe impl Send`) and mirrors how a real
+//! deployment pins an accelerator context to a driver thread.
+//!
+//! Python never runs here: artifacts are produced once by
+//! `make artifacts` and loaded from disk.
+
+use crate::error::{CamrError, Result};
+use crate::util::json::get_field;
+use crate::workload::matvec::ShardCompute;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc as smpsc;
+use std::sync::Mutex;
+
+/// Metadata emitted by `python/compile/aot.py` alongside each artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Row count `M` of the shard matmul.
+    pub m: usize,
+    /// Column count of each shard.
+    pub cols: usize,
+    /// Element type (only "f32" is supported).
+    pub dtype: String,
+    /// Which kernel produced this HLO ("pallas_matvec" / "jnp_ref").
+    pub kernel: String,
+}
+
+impl ArtifactMeta {
+    /// Parse the flat JSON meta file written by `aot.py`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let field = |k: &str| {
+            get_field(text, k)
+                .ok_or_else(|| CamrError::Runtime(format!("artifact meta missing `{k}`")))
+        };
+        let m = field("m")?
+            .parse::<usize>()
+            .map_err(|e| CamrError::Runtime(format!("meta m: {e}")))?;
+        let cols = field("cols")?
+            .parse::<usize>()
+            .map_err(|e| CamrError::Runtime(format!("meta cols: {e}")))?;
+        Ok(ArtifactMeta { m, cols, dtype: field("dtype")?, kernel: field("kernel")? })
+    }
+}
+
+/// A request to the service thread.
+enum Request {
+    /// Compute `A_shard (m×cols) · x_shard` and reply with the m-vector.
+    MatVec { a: Vec<f32>, x: Vec<f32>, reply: smpsc::Sender<Result<Vec<f32>>> },
+    /// Shut down.
+    Stop,
+}
+
+/// Handle to the PJRT service thread.
+///
+/// Cloneable-ish via `Arc`; `Send + Sync` because it only holds a
+/// mutex-guarded channel sender.
+pub struct PjrtService {
+    tx: Mutex<smpsc::Sender<Request>>,
+    meta: ArtifactMeta,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Load `<artifact>.hlo.txt` + `<artifact>.meta.json`, compile on the
+    /// PJRT CPU client, and start the service thread.
+    ///
+    /// `artifact` is the path to the `.hlo.txt` file; the meta file is
+    /// derived by replacing the extension.
+    pub fn start(artifact: &Path) -> Result<Self> {
+        let meta_path = meta_path_for(artifact);
+        let meta_text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            CamrError::Runtime(format!("read {}: {e}", meta_path.display()))
+        })?;
+        let meta = ArtifactMeta::parse(&meta_text)?;
+        if meta.dtype != "f32" {
+            return Err(CamrError::Runtime(format!(
+                "unsupported artifact dtype {}",
+                meta.dtype
+            )));
+        }
+        let (tx, rx) = smpsc::channel::<Request>();
+        let artifact = artifact.to_path_buf();
+        let (ready_tx, ready_rx) = smpsc::channel::<Result<()>>();
+        let meta_thread = meta.clone();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(artifact, meta_thread, rx, ready_tx))
+            .map_err(|e| CamrError::Runtime(format!("spawn pjrt thread: {e}")))?;
+        // Wait for compile to finish (or fail) before returning.
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(CamrError::Runtime("pjrt service died during init".into())),
+        }
+        Ok(PjrtService { tx: Mutex::new(tx), meta, join: Some(join) })
+    }
+
+    /// Artifact metadata (shapes).
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute one shard product on the service thread.
+    pub fn matvec(&self, a: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.meta.cols || a.len() != self.meta.m * self.meta.cols {
+            return Err(CamrError::Runtime(format!(
+                "shard shape {}×{} does not match artifact {}×{}",
+                a.len() / x.len().max(1),
+                x.len(),
+                self.meta.m,
+                self.meta.cols
+            )));
+        }
+        let (rtx, rrx) = smpsc::channel();
+        {
+            let tx = self.tx.lock().map_err(|_| CamrError::Runtime("pjrt tx poisoned".into()))?;
+            tx.send(Request::MatVec { a: a.to_vec(), x: x.to_vec(), reply: rtx })
+                .map_err(|_| CamrError::Runtime("pjrt service stopped".into()))?;
+        }
+        rrx.recv().map_err(|_| CamrError::Runtime("pjrt service dropped reply".into()))?
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Stop);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The meta file path for an artifact: `model.hlo.txt → model.meta.json`.
+pub fn meta_path_for(artifact: &Path) -> PathBuf {
+    let stem = artifact
+        .file_name()
+        .and_then(|s| s.to_str())
+        .map(|s| s.trim_end_matches(".hlo.txt").to_string())
+        .unwrap_or_else(|| "model".into());
+    artifact.with_file_name(format!("{stem}.meta.json"))
+}
+
+/// Service thread main: owns the client + executable, serves requests.
+fn service_main(
+    artifact: PathBuf,
+    meta: ArtifactMeta,
+    rx: smpsc::Receiver<Request>,
+    ready: smpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| CamrError::Runtime(format!("pjrt cpu client: {e}")))?;
+        let proto = xla::HloModuleProto::from_text_file(&artifact)
+            .map_err(|e| CamrError::Runtime(format!("load {}: {e}", artifact.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| CamrError::Runtime(format!("compile artifact: {e}")))?;
+        Ok((client, exe))
+    })();
+    let (_client, exe) = match setup {
+        Ok(pair) => {
+            let _ = ready.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Stop => break,
+            Request::MatVec { a, x, reply } => {
+                let result = (|| -> Result<Vec<f32>> {
+                    let a_lit = xla::Literal::vec1(&a)
+                        .reshape(&[meta.m as i64, meta.cols as i64])
+                        .map_err(|e| CamrError::Runtime(format!("reshape A: {e}")))?;
+                    let x_lit = xla::Literal::vec1(&x)
+                        .reshape(&[meta.cols as i64])
+                        .map_err(|e| CamrError::Runtime(format!("reshape x: {e}")))?;
+                    let bufs = exe
+                        .execute::<xla::Literal>(&[a_lit, x_lit])
+                        .map_err(|e| CamrError::Runtime(format!("execute: {e}")))?;
+                    let lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| CamrError::Runtime(format!("fetch result: {e}")))?;
+                    // aot.py lowers with return_tuple=True → 1-tuple.
+                    let out = lit
+                        .to_tuple1()
+                        .map_err(|e| CamrError::Runtime(format!("untuple: {e}")))?;
+                    out.to_vec::<f32>()
+                        .map_err(|e| CamrError::Runtime(format!("to_vec: {e}")))
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+/// [`ShardCompute`] backend that runs the AOT Pallas/JAX kernel via PJRT.
+pub struct PjrtShardCompute {
+    service: PjrtService,
+}
+
+impl PjrtShardCompute {
+    /// Start a service for the artifact and wrap it.
+    pub fn new(artifact: &Path) -> Result<Self> {
+        Ok(PjrtShardCompute { service: PjrtService::start(artifact)? })
+    }
+
+    /// The artifact's shard shape `(m, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.service.meta().m, self.service.meta().cols)
+    }
+}
+
+impl ShardCompute for PjrtShardCompute {
+    fn partial_product(&self, a_shard: &[f32], x_shard: &[f32], m: usize) -> Result<Vec<f32>> {
+        if m != self.service.meta().m {
+            return Err(CamrError::Runtime(format!(
+                "m = {m} does not match artifact m = {}",
+                self.service.meta().m
+            )));
+        }
+        self.service.matvec(a_shard, x_shard)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let meta = ArtifactMeta::parse(
+            r#"{"m": 24, "cols": 8, "dtype": "f32", "kernel": "pallas_matvec"}"#,
+        )
+        .unwrap();
+        assert_eq!(meta.m, 24);
+        assert_eq!(meta.cols, 8);
+        assert_eq!(meta.dtype, "f32");
+        assert_eq!(meta.kernel, "pallas_matvec");
+        assert!(ArtifactMeta::parse(r#"{"m": 24}"#).is_err());
+    }
+
+    #[test]
+    fn meta_path_derivation() {
+        assert_eq!(
+            meta_path_for(Path::new("artifacts/model.hlo.txt")),
+            PathBuf::from("artifacts/model.meta.json")
+        );
+        assert_eq!(
+            meta_path_for(Path::new("/x/y/map_kernel.hlo.txt")),
+            PathBuf::from("/x/y/map_kernel.meta.json")
+        );
+    }
+
+    // PJRT-backed execution tests live in rust/tests/pjrt_runtime.rs —
+    // they need `make artifacts` to have run first.
+}

@@ -1,0 +1,25 @@
+//! The CAMR shuffle (paper §III-C): Algorithm 2 coded multicast plus the
+//! three stage planners.
+//!
+//! - [`packet`] — chunk ↔ packet splitting and XOR primitives.
+//! - [`multicast`] — Algorithm 2: within a group of `g` machines where
+//!   each misses exactly one chunk jointly stored by the others, `g`
+//!   coded broadcasts of `B/(g-1)` bytes deliver every missing chunk
+//!   (Lemma 2).
+//! - [`plan`] — chunk / unicast descriptors shared by the stages.
+//! - [`stage1`] — owners of each job exchange their missing batch
+//!   aggregates.
+//! - [`stage2`] — transversal groups deliver one batch aggregate of a
+//!   non-owned job to each member.
+//! - [`stage3`] — parallel-class unicasts deliver the remaining fused
+//!   aggregate of every non-owned job.
+
+pub mod multicast;
+pub mod packet;
+pub mod plan;
+pub mod stage1;
+pub mod stage2;
+pub mod stage3;
+
+pub use multicast::GroupPlan;
+pub use plan::{ChunkSpec, UnicastSpec};

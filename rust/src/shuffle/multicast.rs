@@ -1,0 +1,309 @@
+//! Algorithm 2 — the coded multicast of Lemma 2.
+//!
+//! Setting: a group `G = {m_0, …, m_{g-1}}` of `g` machines such that for
+//! every `p`, the machines `G \ {m_p}` all store a chunk `D_p` (of `B`
+//! bytes) that `m_p` does not. Each chunk is split into `g-1` packets;
+//! packet `i` of `D_p` is associated with the `i`-th machine of
+//! `G \ {m_p}` (in group order). Machine `m_t` broadcasts the XOR of the
+//! packets associated with it (one per other member's chunk); every
+//! machine cancels what it knows and recovers its missing packet. After
+//! `g` broadcasts of `⌈B/(g-1)⌉` bytes, every machine has its chunk —
+//! `g/(g-1) · B` bytes total (Lemma 2).
+//!
+//! The implementation is *byte-exact*: encoding really XORs payload
+//! packets, decoding really cancels them, and the engine verifies every
+//! decoded chunk. Nothing is accounted that is not actually transmitted.
+
+use super::packet;
+use super::plan::ChunkSpec;
+use crate::error::{CamrError, Result};
+use crate::ServerId;
+
+/// One Lemma-2 group: `members[p]` must decode the chunk described by
+/// `chunks[p]`, which every *other* member can compute locally.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupPlan {
+    /// Group members in canonical order (`G` of Lemma 2).
+    pub members: Vec<ServerId>,
+    /// `chunks[p]` is the chunk missing at `members[p]`.
+    pub chunks: Vec<ChunkSpec>,
+}
+
+impl GroupPlan {
+    /// Group size `g`.
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Packets per chunk (`g - 1`).
+    pub fn parts(&self) -> usize {
+        self.members.len() - 1
+    }
+
+    /// The members of `G \ {members[p]}` in group order.
+    pub fn others(&self, p: usize) -> Vec<ServerId> {
+        let mut o = self.members.clone();
+        o.remove(p);
+        o
+    }
+
+    /// The packet index of chunk `p` associated with member position `t`
+    /// (`t ≠ p`): position of `members[t]` within `others(p)`.
+    pub fn packet_index(&self, p: usize, t: usize) -> usize {
+        debug_assert_ne!(p, t);
+        if t < p {
+            t
+        } else {
+            t - 1
+        }
+    }
+
+    /// XOR packet `idx` of `chunk` into `delta` without materializing the
+    /// packet: the zero padding of the last packet is a XOR no-op, so only
+    /// the real bytes are touched. This is the shuffle hot path (§Perf).
+    fn xor_packet_into(delta: &mut [u8], chunk: &[u8], idx: usize, plen: usize) -> Result<()> {
+        let start = (idx * plen).min(chunk.len());
+        let end = ((idx + 1) * plen).min(chunk.len());
+        packet::xor_into(&mut delta[..end - start], &chunk[start..end])
+    }
+
+    /// The broadcast `Δ_t` of member position `t` (paper Eq. (3)):
+    /// XOR over all chunks `p ≠ t` of the packet associated with `t`.
+    ///
+    /// `chunk_bytes(p)` supplies a borrowed view of chunk `p`'s payload
+    /// (the engine reads it from the **sender's** local store — every
+    /// chunk `p ≠ t` is stored by `members[t]` by construction). No
+    /// copies of the chunks are made.
+    pub fn encode_ref<'a, F>(&self, t: usize, chunk_len: usize, mut chunk_bytes: F) -> Result<Vec<u8>>
+    where
+        F: FnMut(usize) -> Result<&'a [u8]>,
+    {
+        let g = self.size();
+        if g < 2 {
+            return Err(CamrError::ShuffleDecode("group size must be >= 2".into()));
+        }
+        let plen = packet::packet_len(chunk_len, self.parts());
+        let mut delta = vec![0u8; plen];
+        for p in 0..g {
+            if p == t {
+                continue;
+            }
+            let chunk = chunk_bytes(p)?;
+            if chunk.len() != chunk_len {
+                return Err(CamrError::ShuffleDecode(format!(
+                    "chunk {p} has {} bytes, expected {chunk_len}",
+                    chunk.len()
+                )));
+            }
+            Self::xor_packet_into(&mut delta, chunk, self.packet_index(p, t), plen)?;
+        }
+        Ok(delta)
+    }
+
+    /// Owned-payload convenience wrapper over [`GroupPlan::encode_ref`]
+    /// (used by tests and the CCDC baseline).
+    pub fn encode<F>(&self, t: usize, chunk_len: usize, mut chunk_bytes: F) -> Result<Vec<u8>>
+    where
+        F: FnMut(usize) -> Result<Vec<u8>>,
+    {
+        let g = self.size();
+        let chunks: Vec<Option<Vec<u8>>> = (0..g)
+            .map(|p| if p == t { Ok(None) } else { chunk_bytes(p).map(Some) })
+            .collect::<Result<_>>()?;
+        self.encode_ref(t, chunk_len, |p| {
+            chunks[p]
+                .as_deref()
+                .ok_or_else(|| CamrError::ShuffleDecode(format!("chunk {p} unavailable")))
+        })
+    }
+
+    /// Decode at member position `r`: given the broadcasts
+    /// `deltas[t]` for every `t ≠ r` (entry `r` is ignored), reconstruct
+    /// chunk `r`. `chunk_bytes(p)` supplies borrowed views of the chunks
+    /// `p ≠ r` from the decoder's local store (used to cancel known
+    /// packets); nothing is copied or split.
+    pub fn decode_ref<'a, F>(
+        &self,
+        r: usize,
+        chunk_len: usize,
+        deltas: &[Vec<u8>],
+        mut chunk_bytes: F,
+    ) -> Result<Vec<u8>>
+    where
+        F: FnMut(usize) -> Result<&'a [u8]>,
+    {
+        let g = self.size();
+        if deltas.len() != g {
+            return Err(CamrError::ShuffleDecode(format!(
+                "need {g} delta slots, got {}",
+                deltas.len()
+            )));
+        }
+        let parts = self.parts();
+        let plen = packet::packet_len(chunk_len, parts);
+        // Borrow the decoder's known chunks once.
+        let mut known: Vec<Option<&[u8]>> = vec![None; g];
+        for p in 0..g {
+            if p == r {
+                continue;
+            }
+            known[p] = Some(chunk_bytes(p)?);
+        }
+        // Recover packet i of chunk r from the broadcast of others(r)[i],
+        // writing straight into the output buffer. Iterating t ascending
+        // yields packet_index(r, t) = 0, 1, …, g-2 in order.
+        let mut out = vec![0u8; chunk_len];
+        let mut scratch = vec![0u8; plen];
+        for t in (0..g).filter(|&t| t != r) {
+            let delta = &deltas[t];
+            if delta.len() != plen {
+                return Err(CamrError::ShuffleDecode(format!(
+                    "delta from position {t} has {} bytes, expected {plen}",
+                    delta.len()
+                )));
+            }
+            scratch.copy_from_slice(delta);
+            for p in (0..g).filter(|&p| p != t && p != r) {
+                let chunk = known[p].expect("known chunk");
+                Self::xor_packet_into(&mut scratch, chunk, self.packet_index(p, t), plen)?;
+            }
+            let idx = self.packet_index(r, t);
+            let start = (idx * plen).min(chunk_len);
+            let end = ((idx + 1) * plen).min(chunk_len);
+            out[start..end].copy_from_slice(&scratch[..end - start]);
+        }
+        Ok(out)
+    }
+
+    /// Owned-payload convenience wrapper over [`GroupPlan::decode_ref`].
+    pub fn decode<F>(
+        &self,
+        r: usize,
+        chunk_len: usize,
+        deltas: &[Vec<u8>],
+        mut chunk_bytes: F,
+    ) -> Result<Vec<u8>>
+    where
+        F: FnMut(usize) -> Result<Vec<u8>>,
+    {
+        let g = self.size();
+        let chunks: Vec<Option<Vec<u8>>> = (0..g)
+            .map(|p| if p == r { Ok(None) } else { chunk_bytes(p).map(Some) })
+            .collect::<Result<_>>()?;
+        self.decode_ref(r, chunk_len, deltas, |p| {
+            chunks[p]
+                .as_deref()
+                .ok_or_else(|| CamrError::ShuffleDecode(format!("chunk {p} unavailable")))
+        })
+    }
+
+    /// Bytes put on the link by this group's exchange:
+    /// `g · ⌈B/(g-1)⌉` (Lemma 2's `B·g/(g-1)` plus padding).
+    pub fn link_bytes(&self, chunk_len: usize) -> usize {
+        self.size() * packet::packet_len(chunk_len, self.parts())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a synthetic group where chunk p's payload is a deterministic
+    /// pattern, run the full encode/decode exchange, and check every
+    /// member recovers its chunk byte-exactly.
+    fn run_exchange(g: usize, chunk_len: usize) {
+        let members: Vec<ServerId> = (0..g).collect();
+        let chunks: Vec<ChunkSpec> = (0..g)
+            .map(|p| ChunkSpec { receiver: p, job: p, func: p, batch: p })
+            .collect();
+        let plan = GroupPlan { members, chunks };
+        let payload = |p: usize| -> Vec<u8> {
+            (0..chunk_len).map(|i| (p as u8).wrapping_mul(31).wrapping_add(i as u8)).collect()
+        };
+        // Every member broadcasts.
+        let deltas: Vec<Vec<u8>> = (0..g)
+            .map(|t| plan.encode(t, chunk_len, |p| Ok(payload(p))).unwrap())
+            .collect();
+        // Every member decodes its missing chunk.
+        for r in 0..g {
+            let got = plan.decode(r, chunk_len, &deltas, |p| Ok(payload(p))).unwrap();
+            assert_eq!(got, payload(r), "member {r} failed to decode (g={g}, B={chunk_len})");
+        }
+        // Lemma 2's cost: g packets of ⌈B/(g-1)⌉ bytes.
+        let total: usize = deltas.iter().map(|d| d.len()).sum();
+        assert_eq!(total, plan.link_bytes(chunk_len));
+        assert_eq!(total, g * chunk_len.div_ceil(g - 1));
+    }
+
+    #[test]
+    fn lemma2_exchange_small_groups() {
+        for g in 2..=6 {
+            for chunk_len in [1usize, 2, 7, 8, 64, 65] {
+                run_exchange(g, chunk_len);
+            }
+        }
+    }
+
+    #[test]
+    fn lemma2_cost_matches_closed_form_when_divisible() {
+        // When (g-1) | B the measured cost is exactly B·g/(g-1).
+        let g = 4;
+        let b = 99; // 3 | 99
+        let members: Vec<ServerId> = (0..g).collect();
+        let chunks: Vec<ChunkSpec> =
+            (0..g).map(|p| ChunkSpec { receiver: p, job: 0, func: p, batch: p }).collect();
+        let plan = GroupPlan { members, chunks };
+        assert_eq!(plan.link_bytes(b), b * g / (g - 1));
+    }
+
+    #[test]
+    fn packet_index_is_position_in_others() {
+        let plan = GroupPlan {
+            members: vec![10, 20, 30, 40],
+            chunks: (0..4).map(|p| ChunkSpec { receiver: p, job: 0, func: p, batch: 0 }).collect(),
+        };
+        assert_eq!(plan.others(1), vec![10, 30, 40]);
+        assert_eq!(plan.packet_index(1, 0), 0);
+        assert_eq!(plan.packet_index(1, 2), 1);
+        assert_eq!(plan.packet_index(1, 3), 2);
+    }
+
+    #[test]
+    fn encode_rejects_wrong_chunk_length() {
+        let plan = GroupPlan {
+            members: vec![0, 1, 2],
+            chunks: (0..3).map(|p| ChunkSpec { receiver: p, job: 0, func: p, batch: 0 }).collect(),
+        };
+        let err = plan.encode(0, 8, |_| Ok(vec![0u8; 4]));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn decode_rejects_wrong_delta_count() {
+        let plan = GroupPlan {
+            members: vec![0, 1, 2],
+            chunks: (0..3).map(|p| ChunkSpec { receiver: p, job: 0, func: p, batch: 0 }).collect(),
+        };
+        let err = plan.decode(0, 8, &[vec![0u8; 4]], |_| Ok(vec![0u8; 8]));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn group_of_two_degenerates_to_swap() {
+        // g = 2: each Δ is the full opposite chunk (k-1 = 1 packet).
+        let plan = GroupPlan {
+            members: vec![7, 9],
+            chunks: (0..2).map(|p| ChunkSpec { receiver: p, job: 0, func: p, batch: 0 }).collect(),
+        };
+        let c0 = vec![1u8, 2, 3];
+        let c1 = vec![9u8, 8, 7];
+        let chunk = |p: usize| if p == 0 { Ok(c0.clone()) } else { Ok(c1.clone()) };
+        let d0 = plan.encode(0, 3, chunk).unwrap(); // member 0 sends chunk 1
+        let d1 = plan.encode(1, 3, chunk).unwrap(); // member 1 sends chunk 0
+        assert_eq!(d0, c1);
+        assert_eq!(d1, c0);
+        let deltas = vec![d0, d1];
+        assert_eq!(plan.decode(0, 3, &deltas, chunk).unwrap(), c0);
+        assert_eq!(plan.decode(1, 3, &deltas, chunk).unwrap(), c1);
+    }
+}

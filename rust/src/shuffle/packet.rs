@@ -1,0 +1,154 @@
+//! Packetization and XOR primitives for Algorithm 2.
+//!
+//! A chunk of `B` bytes is split into `p` packets of `⌈B/p⌉` bytes each
+//! (zero-padded). The padding overhead is measured, not hidden: the
+//! engine's byte accounting charges the padded packet size, and the
+//! integration tests assert the measured load matches the closed form
+//! exactly whenever `p | B` (and is within the padding bound otherwise).
+
+use crate::error::{CamrError, Result};
+
+/// Packet length for a chunk of `chunk_len` bytes split `parts` ways.
+pub fn packet_len(chunk_len: usize, parts: usize) -> usize {
+    debug_assert!(parts >= 1);
+    chunk_len.div_ceil(parts)
+}
+
+/// Split `chunk` into exactly `parts` packets of equal (padded) length.
+pub fn split(chunk: &[u8], parts: usize) -> Vec<Vec<u8>> {
+    let plen = packet_len(chunk.len(), parts);
+    (0..parts)
+        .map(|i| {
+            let start = (i * plen).min(chunk.len());
+            let end = ((i + 1) * plen).min(chunk.len());
+            let mut p = chunk[start..end].to_vec();
+            p.resize(plen, 0u8);
+            p
+        })
+        .collect()
+}
+
+/// Reassemble packets into a chunk of `chunk_len` bytes (drop padding).
+pub fn join(packets: &[Vec<u8>], chunk_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(chunk_len);
+    for p in packets {
+        out.extend_from_slice(p);
+    }
+    if out.len() < chunk_len {
+        return Err(CamrError::ShuffleDecode(format!(
+            "joined packets give {} bytes, need {chunk_len}",
+            out.len()
+        )));
+    }
+    out.truncate(chunk_len);
+    Ok(out)
+}
+
+/// XOR `src` into `dst` in place. Lengths must match.
+pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
+    if dst.len() != src.len() {
+        return Err(CamrError::ShuffleDecode(format!(
+            "xor length mismatch: {} vs {}",
+            dst.len(),
+            src.len()
+        )));
+    }
+    // Wide lanes first — this is the shuffle hot path (see §Perf).
+    let n = dst.len();
+    let words = n / 8;
+    for i in 0..words {
+        let o = i * 8;
+        let a = u64::from_ne_bytes(dst[o..o + 8].try_into().unwrap());
+        let b = u64::from_ne_bytes(src[o..o + 8].try_into().unwrap());
+        dst[o..o + 8].copy_from_slice(&(a ^ b).to_ne_bytes());
+    }
+    for i in words * 8..n {
+        dst[i] ^= src[i];
+    }
+    Ok(())
+}
+
+/// XOR a set of equal-length slices together (returns zeroes when empty
+/// and `len` is provided via the first slice — callers pass ≥1 slice).
+pub fn xor_all(slices: &[&[u8]]) -> Result<Vec<u8>> {
+    let first = slices
+        .first()
+        .ok_or_else(|| CamrError::ShuffleDecode("xor_all needs >= 1 slice".into()))?;
+    let mut acc = first.to_vec();
+    for s in &slices[1..] {
+        xor_into(&mut acc, s)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_join_roundtrip_exact() {
+        let chunk: Vec<u8> = (0..12u8).collect();
+        let packets = split(&chunk, 3);
+        assert_eq!(packets.len(), 3);
+        assert!(packets.iter().all(|p| p.len() == 4));
+        assert_eq!(join(&packets, 12).unwrap(), chunk);
+    }
+
+    #[test]
+    fn split_join_roundtrip_padded() {
+        let chunk: Vec<u8> = (0..10u8).collect();
+        let packets = split(&chunk, 3); // ⌈10/3⌉ = 4 bytes each
+        assert!(packets.iter().all(|p| p.len() == 4));
+        assert_eq!(join(&packets, 10).unwrap(), chunk);
+    }
+
+    #[test]
+    fn split_single_part_is_whole_chunk() {
+        let chunk = vec![9u8, 8, 7];
+        let packets = split(&chunk, 1);
+        assert_eq!(packets, vec![chunk.clone()]);
+        assert_eq!(join(&packets, 3).unwrap(), chunk);
+    }
+
+    #[test]
+    fn split_more_parts_than_bytes() {
+        let chunk = vec![1u8, 2];
+        let packets = split(&chunk, 4); // plen = 1, trailing packets all padding
+        assert_eq!(packets.len(), 4);
+        assert!(packets.iter().all(|p| p.len() == 1));
+        assert_eq!(join(&packets, 2).unwrap(), chunk);
+    }
+
+    #[test]
+    fn xor_roundtrip() {
+        let a: Vec<u8> = (0..33u8).collect(); // odd length exercises tail loop
+        let b: Vec<u8> = (100..133u8).collect();
+        let mut x = a.clone();
+        xor_into(&mut x, &b).unwrap();
+        xor_into(&mut x, &b).unwrap();
+        assert_eq!(x, a);
+    }
+
+    #[test]
+    fn xor_all_matches_manual() {
+        let a = vec![0b1010u8];
+        let b = vec![0b0110u8];
+        let c = vec![0b0001u8];
+        let x = xor_all(&[&a, &b, &c]).unwrap();
+        assert_eq!(x, vec![0b1101u8]);
+    }
+
+    #[test]
+    fn xor_length_mismatch_errors() {
+        let mut a = vec![0u8; 4];
+        assert!(xor_into(&mut a, &[0u8; 5]).is_err());
+        assert!(xor_all(&[]).is_err());
+    }
+
+    #[test]
+    fn packet_len_divides_and_rounds() {
+        assert_eq!(packet_len(12, 3), 4);
+        assert_eq!(packet_len(10, 3), 4);
+        assert_eq!(packet_len(1, 4), 1);
+    }
+}

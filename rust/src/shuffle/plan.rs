@@ -1,0 +1,35 @@
+//! Shuffle plan descriptors shared by all three stages.
+
+use crate::{BatchId, FuncId, JobId, ServerId};
+
+/// Identifies one *chunk* of Lemma 2: the aggregate of the intermediate
+/// values of `func` over batch `batch` of job `job`, destined to
+/// `receiver` (who cannot compute it locally).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChunkSpec {
+    /// The server that must decode this chunk.
+    pub receiver: ServerId,
+    /// Job the aggregate belongs to.
+    pub job: JobId,
+    /// Output function of the aggregate (the receiver's function).
+    pub func: FuncId,
+    /// Batch whose `γ` per-subfile values are aggregated.
+    pub batch: BatchId,
+}
+
+/// A stage-3 unicast: `sender` fuses the aggregates of `batches` (all the
+/// batches of `job` it stores) for the receiver's `func` and sends one
+/// value of `B` bytes (paper Eq. (5)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnicastSpec {
+    /// The unique owner of `job` in the receiver's parallel class.
+    pub sender: ServerId,
+    /// The non-owner server that still misses these values.
+    pub receiver: ServerId,
+    /// Job the fused aggregate belongs to.
+    pub job: JobId,
+    /// Output function (the receiver's function).
+    pub func: FuncId,
+    /// The `k-1` batches fused into the single transmitted value.
+    pub batches: Vec<BatchId>,
+}

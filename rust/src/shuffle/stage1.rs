@@ -1,0 +1,122 @@
+//! Stage 1 (paper §III-C.1): for each job, its `k` owners exchange their
+//! missing batch aggregates via Algorithm 2.
+//!
+//! For job `j` with owners `X^{(j)}`, owner `U_{k'}` misses exactly the
+//! batch labeled with itself; the other `k-1` owners all store that batch
+//! and can compute the aggregate `α^{(j)}_{[k']}` of the receiver's own
+//! function over it. One Lemma-2 group per (job, round).
+//!
+//! Load: `J·k·⌈B/(k-1)⌉` bytes per round → `k / (K(k-1))` (paper §IV).
+
+use super::multicast::GroupPlan;
+use super::plan::ChunkSpec;
+use crate::config::SystemConfig;
+use crate::error::Result;
+use crate::placement::Placement;
+
+/// Build all stage-1 group plans (one per job per round).
+pub fn plan(cfg: &SystemConfig, placement: &Placement) -> Result<Vec<GroupPlan>> {
+    let mut groups = Vec::with_capacity(cfg.jobs() * cfg.rounds);
+    for round in 0..cfg.rounds {
+        for j in 0..cfg.jobs() {
+            let members = placement.owners(j).to_vec();
+            let chunks: Vec<ChunkSpec> = members
+                .iter()
+                .map(|&owner| {
+                    let batch = placement
+                        .missing_batch(j, owner)
+                        .expect("owner always has a missing batch");
+                    ChunkSpec {
+                        receiver: owner,
+                        job: j,
+                        func: round * cfg.servers() + owner,
+                        batch,
+                    }
+                })
+                .collect();
+            groups.push(GroupPlan { members, chunks });
+        }
+    }
+    Ok(groups)
+}
+
+/// Expected bytes on the link for stage 1 (with padding).
+pub fn expected_bytes(cfg: &SystemConfig) -> usize {
+    let parts = cfg.k - 1;
+    cfg.rounds * cfg.jobs() * cfg.k * cfg.value_bytes.div_ceil(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::ResolvableDesign;
+
+    fn setup(k: usize, q: usize, g: usize) -> (SystemConfig, Placement) {
+        let cfg = SystemConfig::new(k, q, g).unwrap();
+        let d = ResolvableDesign::new(k, q).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        (cfg, p)
+    }
+
+    #[test]
+    fn one_group_per_job() {
+        let (cfg, p) = setup(3, 2, 2);
+        let groups = plan(&cfg, &p).unwrap();
+        assert_eq!(groups.len(), 4);
+        for (j, g) in groups.iter().enumerate() {
+            assert_eq!(g.members, p.owners(j));
+            assert_eq!(g.chunks.len(), 3);
+        }
+    }
+
+    #[test]
+    fn example3_chunks_for_job1() {
+        // Paper Example 3: owners of J1 = {U1, U3, U5}; U1 needs the
+        // φ_1 aggregate of batch {5,6} (batch 2), U3 of batch {1,2}
+        // (batch 0), U5 of batch {3,4} (batch 1).
+        let (cfg, p) = setup(3, 2, 2);
+        let groups = plan(&cfg, &p).unwrap();
+        let g0 = &groups[0];
+        assert_eq!(g0.members, vec![0, 2, 4]);
+        assert_eq!(g0.chunks[0], ChunkSpec { receiver: 0, job: 0, func: 0, batch: 2 });
+        assert_eq!(g0.chunks[1], ChunkSpec { receiver: 2, job: 0, func: 2, batch: 0 });
+        assert_eq!(g0.chunks[2], ChunkSpec { receiver: 4, job: 0, func: 4, batch: 1 });
+    }
+
+    #[test]
+    fn senders_store_every_chunk_they_encode() {
+        // Feasibility: each member must store every other member's chunk.
+        for (k, q) in [(2, 3), (3, 2), (3, 3), (4, 2)] {
+            let (cfg, p) = setup(k, q, 2);
+            for g in plan(&cfg, &p).unwrap() {
+                for (pos, &m) in g.members.iter().enumerate() {
+                    for (cpos, c) in g.chunks.iter().enumerate() {
+                        if cpos == pos {
+                            assert!(!p.stores_batch(m, c.job, c.batch));
+                        } else {
+                            assert!(p.stores_batch(m, c.job, c.batch));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expected_bytes_matches_formula() {
+        // Example 1: J·k·B/(k-1) = 4·3·B/2 = 6B (paper: 6B → L = 1/4).
+        let (cfg, _) = setup(3, 2, 2);
+        assert_eq!(expected_bytes(&cfg), 6 * cfg.value_bytes);
+    }
+
+    #[test]
+    fn multi_round_duplicates_with_shifted_funcs() {
+        let cfg = SystemConfig::with_options(3, 2, 2, 2, 64).unwrap();
+        let d = ResolvableDesign::new(3, 2).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        let groups = plan(&cfg, &p).unwrap();
+        assert_eq!(groups.len(), 8);
+        // Round 2 chunk funcs are shifted by K = 6.
+        assert_eq!(groups[4].chunks[0].func, 6);
+    }
+}

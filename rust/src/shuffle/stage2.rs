@@ -1,0 +1,155 @@
+//! Stage 2 (paper §III-C.2): transversal groups — one block per parallel
+//! class with empty intersection — exchange batch aggregates of jobs the
+//! excluded member does *not* own.
+//!
+//! For group `G` and member `U_{k'}` at class `i`, the subset
+//! `P = G \ {U_{k'}}` jointly owns a unique job `j` (SPC parity pins it
+//! down); the remaining owner `U_l` of `j` lies in class `i` too, and `P`
+//! shares the batch labeled `U_l`. Every server of `P` can therefore
+//! compute `β^{(j)}_{[k']}` — the receiver's-function aggregate over that
+//! batch (Eq. (4)) — and Algorithm 2 delivers it.
+//!
+//! There are `q^{k-1}(q-1)` groups; load `(q-1)·k/(K(k-1))` (§IV).
+
+use super::multicast::GroupPlan;
+use super::plan::ChunkSpec;
+use crate::config::SystemConfig;
+use crate::design::ResolvableDesign;
+use crate::error::Result;
+use crate::placement::Placement;
+
+/// Build all stage-2 group plans (one per transversal group per round).
+pub fn plan(
+    cfg: &SystemConfig,
+    design: &ResolvableDesign,
+    placement: &Placement,
+) -> Result<Vec<GroupPlan>> {
+    let transversals = design.transversal_groups();
+    let mut groups = Vec::with_capacity(transversals.len() * cfg.rounds);
+    for round in 0..cfg.rounds {
+        for members in &transversals {
+            let chunks: Vec<ChunkSpec> = (0..cfg.k)
+                .map(|i| {
+                    let (job, remaining_owner) = design.stage2_target(members, i);
+                    let batch = placement
+                        .missing_batch(job, remaining_owner)
+                        .expect("remaining owner misses exactly one batch");
+                    ChunkSpec {
+                        receiver: members[i],
+                        job,
+                        func: round * cfg.servers() + members[i],
+                        batch,
+                    }
+                })
+                .collect();
+            groups.push(GroupPlan { members: members.clone(), chunks });
+        }
+    }
+    Ok(groups)
+}
+
+/// Expected bytes on the link for stage 2 (with padding).
+pub fn expected_bytes(cfg: &SystemConfig) -> usize {
+    let parts = cfg.k - 1;
+    let num_groups = cfg.jobs() * (cfg.q - 1); // q^{k-1}(q-1)
+    cfg.rounds * num_groups * cfg.k * cfg.value_bytes.div_ceil(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::ResolvableDesign;
+
+    fn setup(k: usize, q: usize, g: usize) -> (SystemConfig, ResolvableDesign, Placement) {
+        let cfg = SystemConfig::new(k, q, g).unwrap();
+        let d = ResolvableDesign::new(k, q).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        (cfg, d, p)
+    }
+
+    #[test]
+    fn group_count_is_qk1_qm1() {
+        for (k, q) in [(3, 2), (3, 3), (4, 2), (2, 4)] {
+            let (cfg, d, p) = setup(k, q, 1);
+            let groups = plan(&cfg, &d, &p).unwrap();
+            assert_eq!(groups.len(), q.pow(k as u32 - 1) * (q - 1));
+        }
+    }
+
+    #[test]
+    fn table1_group_u1_u3_u6() {
+        // Paper Table I: group {U1, U3, U6} = servers {0, 2, 5}.
+        //  U1 recovers α(ν^{(3)}_{1,5}, ν^{(3)}_{1,6}) → job 2 (0-based),
+        //    batch {5,6} = batch 2, func 0.
+        //  U3 recovers α(ν^{(2)}_{3,1}, ν^{(2)}_{3,2}) → job 1, batch 0,
+        //    func 2.
+        //  U6 recovers α(ν^{(1)}_{6,3}, ν^{(1)}_{6,4}) → job 0, batch 1,
+        //    func 5.
+        let (cfg, d, p) = setup(3, 2, 2);
+        let groups = plan(&cfg, &d, &p).unwrap();
+        let g = groups
+            .iter()
+            .find(|g| g.members == vec![0, 2, 5])
+            .expect("group {U1,U3,U6} must exist");
+        assert_eq!(g.chunks[0], ChunkSpec { receiver: 0, job: 2, func: 0, batch: 2 });
+        assert_eq!(g.chunks[1], ChunkSpec { receiver: 2, job: 1, func: 2, batch: 0 });
+        assert_eq!(g.chunks[2], ChunkSpec { receiver: 5, job: 0, func: 5, batch: 1 });
+    }
+
+    #[test]
+    fn receivers_do_not_own_their_chunk_jobs() {
+        for (k, q) in [(3, 2), (3, 3), (4, 2)] {
+            let (cfg, d, p) = setup(k, q, 1);
+            for g in plan(&cfg, &d, &p).unwrap() {
+                for c in &g.chunks {
+                    assert!(!p.owns(c.receiver, c.job), "receiver owns its stage-2 job");
+                    let _ = d;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn senders_store_every_chunk_they_encode() {
+        for (k, q) in [(3, 2), (3, 3), (4, 2)] {
+            let (cfg, d, p) = setup(k, q, 2);
+            for g in plan(&cfg, &d, &p).unwrap() {
+                for (pos, &m) in g.members.iter().enumerate() {
+                    for (cpos, c) in g.chunks.iter().enumerate() {
+                        if cpos != pos {
+                            assert!(
+                                p.stores_batch(m, c.job, c.batch),
+                                "k={k} q={q}: member {m} cannot encode chunk {c:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn covers_every_nonowner_job_batch_once() {
+        // Across all groups, each (server, non-owned job) appears exactly
+        // once as a receiver — and the delivered batch is the one whose
+        // label (the remaining owner) lies in the receiver's class.
+        let (cfg, d, p) = setup(3, 3, 1);
+        let mut seen = std::collections::HashSet::new();
+        for g in plan(&cfg, &d, &p).unwrap() {
+            for c in &g.chunks {
+                assert!(seen.insert((c.receiver, c.job)), "duplicate {c:?}");
+                let label = p.batch_label(c.job, c.batch);
+                assert_eq!(d.class_of(label), d.class_of(c.receiver));
+            }
+        }
+        let expect = cfg.servers() * (cfg.jobs() - cfg.jobs() / cfg.q);
+        assert_eq!(seen.len(), expect);
+    }
+
+    #[test]
+    fn example_load_is_one_quarter() {
+        // Paper: L_stage2 = 4 groups × 3 × B/2 = 6B → 6B/24B = 1/4.
+        let (cfg, _, _) = setup(3, 2, 2);
+        assert_eq!(expected_bytes(&cfg), 6 * cfg.value_bytes);
+    }
+}

@@ -1,0 +1,156 @@
+//! Stage 3 (paper §III-C.3): parallel-class unicasts.
+//!
+//! After stage 2, server `U_m` still misses, for every job `j` it does
+//! not own, the aggregates of the `k-1` batches other than the one stage
+//! 2 delivered. All those batches live at a *single* server: the unique
+//! owner `U_l` of `j` in `U_m`'s own parallel class (resolvability makes
+//! it unique — blocks of a class are disjoint). `U_l` fuses them into one
+//! value (Eq. (5)) and unicasts `B` bytes to `U_m`.
+//!
+//! Per server: `J - q^{k-2}` missing jobs → load `(q-1)/q` (§IV).
+
+use super::plan::UnicastSpec;
+use crate::config::SystemConfig;
+use crate::design::ResolvableDesign;
+use crate::error::Result;
+use crate::placement::Placement;
+
+/// Build all stage-3 unicasts (one per (receiver, non-owned job, round)).
+pub fn plan(
+    cfg: &SystemConfig,
+    design: &ResolvableDesign,
+    placement: &Placement,
+) -> Result<Vec<UnicastSpec>> {
+    let mut unicasts = Vec::new();
+    for round in 0..cfg.rounds {
+        for m in 0..cfg.servers() {
+            let class = design.class_of(m);
+            for j in design.non_owned_jobs(m) {
+                let sender = design.owner_in_class(j, class);
+                debug_assert_ne!(sender, m);
+                let batches = placement.stored_batches(sender, j);
+                debug_assert_eq!(batches.len(), cfg.k - 1);
+                unicasts.push(UnicastSpec {
+                    sender,
+                    receiver: m,
+                    job: j,
+                    func: round * cfg.servers() + m,
+                    batches,
+                });
+            }
+        }
+    }
+    Ok(unicasts)
+}
+
+/// Expected bytes on the link for stage 3 (no packetization — whole
+/// values are unicast, so no padding either).
+pub fn expected_bytes(cfg: &SystemConfig) -> usize {
+    let missing_jobs = cfg.jobs() - cfg.jobs() / cfg.q; // J - q^{k-2}
+    cfg.rounds * cfg.servers() * missing_jobs * cfg.value_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::ResolvableDesign;
+
+    fn setup(k: usize, q: usize, g: usize) -> (SystemConfig, ResolvableDesign, Placement) {
+        let cfg = SystemConfig::new(k, q, g).unwrap();
+        let d = ResolvableDesign::new(k, q).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        (cfg, d, p)
+    }
+
+    #[test]
+    fn table2_needs_for_example1() {
+        // Paper Table II (appendix), translated to 0-based ids: each
+        // server's stage-3 needs. E.g. U1 needs the fused aggregates of
+        // jobs 3 and 4 (0-based 2, 3): subfiles {1..4} = batches {0,1}.
+        let (cfg, d, p) = setup(3, 2, 2);
+        let unicasts = plan(&cfg, &d, &p).unwrap();
+        // U1 (server 0): non-owned jobs are 2 and 3.
+        let u1: Vec<&UnicastSpec> =
+            unicasts.iter().filter(|u| u.receiver == 0).collect();
+        assert_eq!(u1.len(), 2);
+        let j2 = u1.iter().find(|u| u.job == 2).unwrap();
+        // Table II: α(ν^{(3)}_{1,1..4}) → batches {0, 1}; sender must be
+        // U2 (server 1), the owner of J3 in U1's class (Example 5).
+        assert_eq!(j2.sender, 1);
+        assert_eq!(j2.batches, vec![0, 1]);
+        assert_eq!(j2.func, 0);
+        let j3 = u1.iter().find(|u| u.job == 3).unwrap();
+        assert_eq!(j3.sender, 1); // U2 also owns J4
+        assert_eq!(j3.batches, vec![0, 1]);
+    }
+
+    #[test]
+    fn table2_all_rows() {
+        // Full Table II: (server, job, subfile-set) for all six servers,
+        // 0-based. Subfiles given as sorted batch-subfile unions.
+        let (cfg, d, p) = setup(3, 2, 2);
+        let unicasts = plan(&cfg, &d, &p).unwrap();
+        let expect: Vec<(usize, usize, Vec<usize>)> = vec![
+            (0, 2, vec![0, 1, 2, 3]),
+            (0, 3, vec![0, 1, 2, 3]),
+            (1, 0, vec![0, 1, 2, 3]),
+            (1, 1, vec![0, 1, 2, 3]),
+            (2, 1, vec![2, 3, 4, 5]),
+            (2, 3, vec![2, 3, 4, 5]),
+            (3, 0, vec![2, 3, 4, 5]),
+            (3, 2, vec![2, 3, 4, 5]),
+            (4, 1, vec![0, 1, 4, 5]),
+            (4, 2, vec![0, 1, 4, 5]),
+            (5, 0, vec![0, 1, 4, 5]),
+            (5, 3, vec![0, 1, 4, 5]),
+        ];
+        assert_eq!(unicasts.len(), expect.len());
+        for (recv, job, subfiles) in expect {
+            let u = unicasts
+                .iter()
+                .find(|u| u.receiver == recv && u.job == job)
+                .unwrap_or_else(|| panic!("missing unicast recv={recv} job={job}"));
+            let got: Vec<usize> =
+                u.batches.iter().flat_map(|&b| p.batch_subfiles(b)).collect();
+            assert_eq!(got, subfiles, "recv={recv} job={job}");
+        }
+    }
+
+    #[test]
+    fn sender_is_unique_class_owner_and_stores_batches() {
+        for (k, q) in [(2, 3), (3, 2), (3, 3), (4, 2)] {
+            let (cfg, d, p) = setup(k, q, 1);
+            for u in plan(&cfg, &d, &p).unwrap() {
+                assert_eq!(d.class_of(u.sender), d.class_of(u.receiver));
+                assert!(d.owns(u.sender, u.job));
+                assert!(!d.owns(u.receiver, u.job));
+                for &b in &u.batches {
+                    assert!(p.stores_batch(u.sender, u.job, b));
+                }
+                // Fused batches + the stage-2 batch = all k batches.
+                let missing = p.missing_batch(u.job, u.sender).unwrap();
+                let mut all = u.batches.clone();
+                all.push(missing);
+                all.sort_unstable();
+                assert_eq!(all, (0..cfg.k).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn unicast_count_matches_formula() {
+        for (k, q) in [(3, 2), (3, 3), (4, 2), (2, 5)] {
+            let (cfg, d, p) = setup(k, q, 1);
+            let unicasts = plan(&cfg, &d, &p).unwrap();
+            let j = cfg.jobs();
+            assert_eq!(unicasts.len(), cfg.servers() * (j - j / q));
+        }
+    }
+
+    #[test]
+    fn example_load_is_one_half() {
+        // Paper: L_stage3 = 6 servers × 2 jobs × B / 24B = 1/2.
+        let (cfg, _, _) = setup(3, 2, 2);
+        assert_eq!(expected_bytes(&cfg), 12 * cfg.value_bytes);
+    }
+}

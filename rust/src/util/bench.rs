@@ -1,0 +1,111 @@
+//! Minimal benchmarking harness (in-tree criterion substitute; this
+//! workspace builds offline).
+//!
+//! Each `cargo bench` target is a plain `main()` that drives [`Bench`]:
+//! warmup, N timed iterations, mean / min / stddev reporting, and a
+//! machine-readable `BENCH <name> mean_ns=… min_ns=…` line that
+//! EXPERIMENTS.md extracts. `--quick` (or `CAMR_BENCH_QUICK=1`) drops the
+//! iteration count so CI stays fast.
+
+use std::time::Instant;
+
+/// Runs and reports micro/macro benchmarks.
+pub struct Bench {
+    iters: usize,
+    warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Create with iteration counts honoring `--quick` / env override.
+    pub fn new() -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("CAMR_BENCH_QUICK").is_ok();
+        if quick {
+            Bench { iters: 5, warmup: 1 }
+        } else {
+            Bench { iters: 20, warmup: 3 }
+        }
+    }
+
+    /// Explicit iteration counts.
+    pub fn with_iters(iters: usize, warmup: usize) -> Self {
+        Bench { iters: iters.max(1), warmup }
+    }
+
+    /// Time `f` and report. Returns mean nanoseconds per iteration.
+    ///
+    /// `f` should return something observable (e.g. a byte count) to
+    /// keep the optimizer honest; the value is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> f64 {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+            / samples.len() as f64;
+        let sd = var.sqrt();
+        println!(
+            "BENCH {name} mean_ns={mean:.0} min_ns={min:.0} sd_ns={sd:.0} iters={}",
+            self.iters
+        );
+        println!(
+            "  {name:<46} {:>12}   (min {:>10}, ±{:.1}%)",
+            fmt_ns(mean),
+            fmt_ns(min),
+            if mean > 0.0 { 100.0 * sd / mean } else { 0.0 }
+        );
+        mean
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench::with_iters(3, 0);
+        let mean = b.run("noop_loop", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e10).contains("s"));
+    }
+}

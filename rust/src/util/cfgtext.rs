@@ -1,0 +1,142 @@
+//! TOML-subset parser for run configs.
+//!
+//! Supports exactly what `camr run --config` needs: `[section]` headers,
+//! `key = value` lines (integers, booleans, quoted strings), `#`
+//! comments, and blank lines. Unknown keys are surfaced as errors so
+//! typos never silently fall back to defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed config: section → key → raw value string.
+#[derive(Debug, Default, Clone)]
+pub struct CfgText {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl CfgText {
+    /// Parse the TOML subset. Top-level keys land in section `""`.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = CfgText::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            let mut value = value.trim().to_string();
+            if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+                value = value[1..value.len() - 1].to_string();
+            }
+            cfg.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Raw string value.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Integer value.
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|e| format!("[{section}] {key} = {v}: {e}")),
+        }
+    }
+
+    /// u64 value.
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|e| format!("[{section}] {key} = {v}: {e}")),
+        }
+    }
+
+    /// Boolean value (`true`/`false`).
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("true") => Ok(Some(true)),
+            Some("false") => Ok(Some(false)),
+            Some(v) => Err(format!("[{section}] {key} = {v}: expected true/false")),
+        }
+    }
+
+    /// All keys of a section (for unknown-key validation).
+    pub fn keys(&self, section: &str) -> Vec<String> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// All section names present.
+    pub fn section_names(&self) -> Vec<String> {
+        self.sections.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+            # run config
+            workload = "word_count"
+            seed = 7
+            json = true
+
+            [system]
+            k = 3
+            q = 2   # inline comment
+            gamma = 2
+        "#;
+        let c = CfgText::parse(text).unwrap();
+        assert_eq!(c.get("", "workload"), Some("word_count"));
+        assert_eq!(c.get_u64("", "seed").unwrap(), Some(7));
+        assert_eq!(c.get_bool("", "json").unwrap(), Some(true));
+        assert_eq!(c.get_usize("system", "k").unwrap(), Some(3));
+        assert_eq!(c.get_usize("system", "q").unwrap(), Some(2));
+        assert_eq!(c.get("system", "missing"), None);
+    }
+
+    #[test]
+    fn rejects_garbage_lines() {
+        assert!(CfgText::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_types() {
+        let c = CfgText::parse("k = banana").unwrap();
+        assert!(c.get_usize("", "k").is_err());
+        let c = CfgText::parse("flag = yes").unwrap();
+        assert!(c.get_bool("", "flag").is_err());
+    }
+
+    #[test]
+    fn lists_keys_for_validation() {
+        let c = CfgText::parse("[system]\nk = 1\nq = 2\n").unwrap();
+        let mut keys = c.keys("system");
+        keys.sort();
+        assert_eq!(keys, vec!["k".to_string(), "q".into()]);
+        assert_eq!(c.section_names(), vec!["system".to_string()]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Minimal JSON writer (objects, arrays, numbers, strings, bools) for
+//! report output. Writing only — nothing in the system parses JSON at
+//! runtime except artifact metadata, which has its own tiny reader here.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// null
+    Null,
+    /// true/false
+    Bool(bool),
+    /// Any number (rendered with enough precision to round-trip f64).
+    Num(f64),
+    /// Unsigned integer rendered without decimal point.
+    UInt(u128),
+    /// String (escaped on render).
+    Str(String),
+    /// Ordered array.
+    Arr(Vec<Json>),
+    /// Object with stable (sorted) key order.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Build an object from pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render compactly.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::UInt(x) => {
+                let _ = write!(out, "{x}");
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Extract a flat field from a tiny JSON object like the artifact meta
+/// (`{"m": 128, "cols": 32, "dtype": "f32", "kernel": "pallas_matvec"}`).
+/// Supports string and unsigned-integer values; not a general parser.
+pub fn get_field(text: &str, key: &str) -> Option<String> {
+    let needle = format!("\"{key}\"");
+    let pos = text.find(&needle)?;
+    let rest = &text[pos + needle.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    if let Some(stripped) = rest.strip_prefix('"') {
+        let end = stripped.find('"')?;
+        Some(stripped[..end].to_string())
+    } else {
+        let end = rest
+            .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+'))
+            .unwrap_or(rest.len());
+        if end == 0 {
+            None
+        } else {
+            Some(rest[..end].to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_structures() {
+        let j = Json::obj(vec![
+            ("k", Json::UInt(3)),
+            ("load", Json::Num(1.0)),
+            ("name", Json::Str("camr".into())),
+            ("stages", Json::Arr(vec![Json::Num(0.25), Json::Num(0.25), Json::Num(0.5)])),
+            ("verified", Json::Bool(true)),
+        ]);
+        let s = j.render();
+        assert_eq!(
+            s,
+            r#"{"k":3,"load":1,"name":"camr","stages":[0.25,0.25,0.5],"verified":true}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let s = Json::Str("a\"b\\c\nd".into()).render();
+        assert_eq!(s, r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn get_field_reads_meta() {
+        let meta = r#"{"m": 128, "cols": 32, "dtype": "f32", "kernel": "pallas_matvec"}"#;
+        assert_eq!(get_field(meta, "m").unwrap(), "128");
+        assert_eq!(get_field(meta, "dtype").unwrap(), "f32");
+        assert_eq!(get_field(meta, "kernel").unwrap(), "pallas_matvec");
+        assert!(get_field(meta, "missing").is_none());
+    }
+
+    #[test]
+    fn get_field_handles_tight_spacing() {
+        let meta = r#"{"m":7,"dtype":"f32"}"#;
+        assert_eq!(get_field(meta, "m").unwrap(), "7");
+        assert_eq!(get_field(meta, "dtype").unwrap(), "f32");
+    }
+}

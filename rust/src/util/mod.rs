@@ -1,0 +1,13 @@
+//! Self-contained utility substrates (this workspace builds offline, so
+//! the usual ecosystem crates are implemented in-tree):
+//!
+//! - [`rng`] — SplitMix64 / XorShift64* deterministic RNGs.
+//! - [`par`] — scoped-thread parallel map (rayon-shaped API surface).
+//! - [`json`] — minimal JSON writer for reports.
+//! - [`cfgtext`] — TOML-subset parser for run configs.
+
+pub mod bench;
+pub mod cfgtext;
+pub mod json;
+pub mod par;
+pub mod rng;

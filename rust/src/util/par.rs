@@ -1,0 +1,108 @@
+//! Scoped-thread parallel helpers (in-tree rayon substitute).
+//!
+//! The engine fans the map phase out across servers; these helpers give
+//! it a minimal data-parallel API on top of `std::thread::scope` with a
+//! thread count capped at the machine's parallelism.
+
+/// Effective worker-thread count.
+pub fn threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every element of `items` in parallel (mutably), chunking
+/// the slice across up to [`threads`] scoped threads. `f` must be `Sync`
+/// (it is shared), elements are visited exactly once.
+pub fn for_each_mut<T: Send, F>(items: &mut [T], f: F)
+where
+    F: Fn(&mut T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let workers = threads().min(n);
+    if workers <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for part in items.chunks_mut(chunk) {
+            s.spawn(|| {
+                for it in part.iter_mut() {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over an index range, collecting results in order.
+pub fn map_indexed<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads().min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (c, part) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = c * chunk;
+                for (i, slot) in part.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn for_each_mut_visits_all_once() {
+        let mut v: Vec<usize> = (0..1000).collect();
+        for_each_mut(&mut v, |x| *x += 1);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i + 1));
+    }
+
+    #[test]
+    fn for_each_mut_empty_and_single() {
+        let mut empty: Vec<usize> = vec![];
+        for_each_mut(&mut empty, |_| panic!("must not run"));
+        let mut one = vec![5usize];
+        for_each_mut(&mut one, |x| *x *= 2);
+        assert_eq!(one, vec![10]);
+    }
+
+    #[test]
+    fn map_indexed_in_order() {
+        let out = map_indexed(257, |i| i * i);
+        assert_eq!(out.len(), 257);
+        assert!(out.iter().enumerate().all(|(i, &x)| x == i * i));
+    }
+
+    #[test]
+    fn runs_concurrently_when_possible() {
+        // All threads increment; total must be exact regardless of split.
+        let counter = AtomicUsize::new(0);
+        let mut v = vec![0u8; 10_000];
+        for_each_mut(&mut v, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 10_000);
+    }
+}

@@ -1,0 +1,121 @@
+//! Deterministic pseudo-random generators (no external crates).
+//!
+//! [`SplitMix64`] is the workhorse: tiny state, excellent avalanche,
+//! reproducible across platforms — everything a simulation needs.
+
+/// SplitMix64 (Steele, Lea, Flood 2014).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Seeded generator.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next u64.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)` (n > 0); uses rejection-free modulo (bias is
+    /// negligible for the small `n` used in simulations/tests).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 <= p
+    }
+
+    /// f32 uniform in [-1, 1).
+    pub fn f32_signed(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+    }
+}
+
+/// Stateless mix of a compound key — handy for "random but addressable"
+/// values (workload generators index by (job, subfile, func, lane)).
+pub fn mix_key(seed: u64, parts: &[u64]) -> u64 {
+    let mut acc = seed;
+    for (i, &p) in parts.iter().enumerate() {
+        acc ^= p.rotate_left((i as u32 * 17 + 11) % 64);
+        // one splitmix round
+        acc = acc.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = acc;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        acc = z ^ (z >> 31);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequence() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let x = r.range(3, 9);
+            assert!((3..9).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f32_signed_bounds() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let x = r.f32_signed();
+            assert!((-1.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn chance_rough_frequency() {
+        let mut r = SplitMix64::new(11);
+        let hits = (0..10_000).filter(|_| r.chance(0.7)).count();
+        assert!((6500..7500).contains(&hits), "hits = {hits}");
+    }
+
+    #[test]
+    fn mix_key_distinguishes_parts() {
+        let a = mix_key(0, &[1, 2, 3]);
+        let b = mix_key(0, &[1, 2, 4]);
+        let c = mix_key(0, &[1, 3, 2]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(mix_key(5, &[9, 9]), mix_key(5, &[9, 9]));
+    }
+}

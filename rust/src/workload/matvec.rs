@@ -1,0 +1,251 @@
+//! Distributed matrix–vector products — the paper's §I motivation
+//! ("matrix-vector multiplications performed during the forward and
+//! backward propagation in neural networks. Computing each of these
+//! products constitutes a job").
+//!
+//! Job `j` computes `y^{(j)} = A^{(j)} x^{(j)}` for an `M × D` layer
+//! weight matrix. Subfile `n` is a column shard `A_n` (M × D/N) with the
+//! matching slice `x_n`; its partial product `A_n x_n` is an M-vector,
+//! and `y = Σ_n A_n x_n` — linear aggregation, Definition 1. Output
+//! function `f` owns the row slice `[f·M/Q, (f+1)·M/Q)`.
+//!
+//! The shard product is computed by a pluggable [`ShardCompute`]:
+//! - [`NativeShardCompute`] — straightforward rust loops (reference);
+//! - `runtime::PjrtShardCompute` — the AOT-compiled JAX/Pallas kernel
+//!   executed through PJRT (the L1/L2 layers of this repo).
+
+use super::Workload;
+use crate::agg::{lanes, Aggregator, SumF32, Value};
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::{JobId, SubfileId};
+use std::sync::Arc;
+
+/// Computes one shard's partial product `A_n x_n` (length M).
+pub trait ShardCompute: Send + Sync {
+    /// `a_shard` is row-major `M × cols`, `x_shard` has length `cols`.
+    fn partial_product(&self, a_shard: &[f32], x_shard: &[f32], m: usize) -> Result<Vec<f32>>;
+
+    /// Name for reports ("native", "pjrt").
+    fn name(&self) -> &'static str;
+}
+
+/// Reference implementation in plain rust.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeShardCompute;
+
+impl ShardCompute for NativeShardCompute {
+    fn partial_product(&self, a_shard: &[f32], x_shard: &[f32], m: usize) -> Result<Vec<f32>> {
+        let cols = x_shard.len();
+        if a_shard.len() != m * cols {
+            return Err(CamrError::Aggregation(format!(
+                "shard shape mismatch: {} != {m}×{cols}",
+                a_shard.len()
+            )));
+        }
+        let mut y = vec![0f32; m];
+        for (r, yr) in y.iter_mut().enumerate() {
+            let row = &a_shard[r * cols..(r + 1) * cols];
+            let mut acc = 0f32;
+            for (a, x) in row.iter().zip(x_shard) {
+                acc += a * x;
+            }
+            *yr = acc;
+        }
+        Ok(y)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The distributed matvec workload.
+pub struct MatVecWorkload {
+    /// Row-major `M × D` matrices, one per job.
+    matrices: Vec<Vec<f32>>,
+    /// Input vectors, one per job (length D).
+    vectors: Vec<Vec<f32>>,
+    m: usize,
+    d: usize,
+    subfiles: usize,
+    funcs: usize,
+    rows_per_func: usize,
+    compute: Arc<dyn ShardCompute>,
+    agg: SumF32,
+}
+
+impl MatVecWorkload {
+    /// Build with deterministic pseudo-random layer weights.
+    ///
+    /// `rows_per_func` sets `M = Q · rows_per_func`; the value size is
+    /// `4 · rows_per_func` bytes and must equal `cfg.value_bytes`.
+    /// `cols_per_subfile` sets `D = N · cols_per_subfile`.
+    pub fn synthetic(
+        cfg: &SystemConfig,
+        seed: u64,
+        rows_per_func: usize,
+        cols_per_subfile: usize,
+        compute: Arc<dyn ShardCompute>,
+    ) -> Result<Self> {
+        if cfg.value_bytes != 4 * rows_per_func {
+            return Err(CamrError::InvalidConfig(format!(
+                "matvec values are 4·rows_per_func = {} bytes but config B = {}",
+                4 * rows_per_func,
+                cfg.value_bytes
+            )));
+        }
+        let m = cfg.functions() * rows_per_func;
+        let d = cfg.subfiles() * cols_per_subfile;
+        let mut state = seed | 1;
+        let mut next = move || {
+            // xorshift64* → f32 in [-1, 1).
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            let v = state.wrapping_mul(0x2545F4914F6CDD1D);
+            ((v >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        };
+        let matrices: Vec<Vec<f32>> =
+            (0..cfg.jobs()).map(|_| (0..m * d).map(|_| next() * 0.1).collect()).collect();
+        let vectors: Vec<Vec<f32>> =
+            (0..cfg.jobs()).map(|_| (0..d).map(|_| next()).collect()).collect();
+        Ok(MatVecWorkload {
+            matrices,
+            vectors,
+            m,
+            d,
+            subfiles: cfg.subfiles(),
+            funcs: cfg.functions(),
+            rows_per_func,
+            compute,
+            agg: SumF32,
+        })
+    }
+
+    /// Column count per subfile shard.
+    pub fn cols_per_subfile(&self) -> usize {
+        self.d / self.subfiles
+    }
+
+    /// Extract the column shard `A_n` (row-major `M × cols`) and `x_n`.
+    pub fn shard(&self, job: JobId, subfile: SubfileId) -> (Vec<f32>, Vec<f32>) {
+        let cols = self.cols_per_subfile();
+        let lo = subfile * cols;
+        let a = &self.matrices[job];
+        let mut a_shard = Vec::with_capacity(self.m * cols);
+        for r in 0..self.m {
+            a_shard.extend_from_slice(&a[r * self.d + lo..r * self.d + lo + cols]);
+        }
+        let x_shard = self.vectors[job][lo..lo + cols].to_vec();
+        (a_shard, x_shard)
+    }
+
+    /// Single-node full product (test/verification helper).
+    pub fn full_product(&self, job: JobId) -> Vec<f32> {
+        let a = &self.matrices[job];
+        let x = &self.vectors[job];
+        (0..self.m)
+            .map(|r| a[r * self.d..(r + 1) * self.d].iter().zip(x).map(|(p, q)| p * q).sum())
+            .collect()
+    }
+
+    /// The backend used for shard products.
+    pub fn compute_name(&self) -> &'static str {
+        self.compute.name()
+    }
+}
+
+impl Workload for MatVecWorkload {
+    fn name(&self) -> &str {
+        "matvec"
+    }
+
+    fn aggregator(&self) -> &dyn Aggregator {
+        &self.agg
+    }
+
+    fn map_subfile(&self, job: JobId, subfile: SubfileId) -> Result<Vec<Value>> {
+        let (a_shard, x_shard) = self.shard(job, subfile);
+        let y = self.compute.partial_product(&a_shard, &x_shard, self.m)?;
+        Ok((0..self.funcs)
+            .map(|f| {
+                lanes::from_f32(&y[f * self.rows_per_func..(f + 1) * self.rows_per_func])
+            })
+            .collect())
+    }
+
+    fn tolerance(&self) -> Option<f32> {
+        Some(2e-4) // f32 sums are order-sensitive across batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+
+    fn cfg_for(rows_per_func: usize) -> SystemConfig {
+        SystemConfig::with_options(3, 2, 2, 1, 4 * rows_per_func).unwrap()
+    }
+
+    #[test]
+    fn shards_partition_the_product() {
+        let cfg = cfg_for(4);
+        let wl =
+            MatVecWorkload::synthetic(&cfg, 7, 4, 3, Arc::new(NativeShardCompute)).unwrap();
+        // Sum of partial products over all subfiles == full product.
+        for job in 0..cfg.jobs() {
+            let mut acc = vec![0f32; wl.m];
+            for n in 0..cfg.subfiles() {
+                let (a, x) = wl.shard(job, n);
+                let p = NativeShardCompute.partial_product(&a, &x, wl.m).unwrap();
+                for (s, v) in acc.iter_mut().zip(&p) {
+                    *s += v;
+                }
+            }
+            let full = wl.full_product(job);
+            for (a, b) in acc.iter().zip(&full) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_value_bytes() {
+        let cfg = SystemConfig::with_options(3, 2, 2, 1, 64).unwrap();
+        assert!(
+            MatVecWorkload::synthetic(&cfg, 7, 4, 3, Arc::new(NativeShardCompute)).is_err()
+        );
+    }
+
+    #[test]
+    fn native_rejects_bad_shapes() {
+        let e = NativeShardCompute.partial_product(&[0.0; 10], &[0.0; 3], 4);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn end_to_end_matvec_verifies() {
+        // Full pipeline on NN-layer matvec jobs; reduce must reproduce
+        // every y^{(j)} row slice within f32 tolerance.
+        let cfg = cfg_for(4);
+        let wl =
+            MatVecWorkload::synthetic(&cfg, 42, 4, 5, Arc::new(NativeShardCompute)).unwrap();
+        let full: Vec<Vec<f32>> = (0..cfg.jobs()).map(|j| wl.full_product(j)).collect();
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified);
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+        // Outputs really are the row slices of A x.
+        for j in 0..cfg.jobs() {
+            for f in 0..cfg.functions() {
+                let got = lanes::as_f32(e.output(j, f).unwrap());
+                let want = &full[j][f * 4..(f + 1) * 4];
+                for (x, y) in got.iter().zip(want) {
+                    assert!((x - y).abs() < 2e-4 * 1.0f32.max(y.abs()), "{x} vs {y}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Workloads: the pluggable map computations CAMR coordinates.
+//!
+//! A [`Workload`] defines how a subfile of a job maps to `Q` intermediate
+//! values (one per output function), which aggregator combines them, and
+//! how reduce outputs are verified. The paper's motivating applications
+//! are all here: word counting (Example 1), matrix–vector products for
+//! neural-network layers (§I), and distributed gradient aggregation.
+
+pub mod gradient;
+pub mod matvec;
+pub mod synth;
+pub mod wordcount;
+
+use crate::agg::{Aggregator, Value};
+use crate::config::SystemConfig;
+use crate::error::Result;
+use crate::{FuncId, JobId, SubfileId};
+
+/// A distributed computation with aggregatable intermediate values
+/// (paper Definition 1).
+pub trait Workload: Send + Sync {
+    /// Human-readable name.
+    fn name(&self) -> &str;
+
+    /// The combiner for this workload's values.
+    fn aggregator(&self) -> &dyn Aggregator;
+
+    /// Map one subfile of one job to its `Q` intermediate values
+    /// `ν^{(j)}_{q,n}` — each exactly `value_bytes` long.
+    fn map_subfile(&self, job: JobId, subfile: SubfileId) -> Result<Vec<Value>>;
+
+    /// Verification tolerance per f32 lane; `None` means bit-exact
+    /// (integer aggregators). Floating-point sums are order-sensitive,
+    /// so f32 workloads verify with a small tolerance.
+    fn tolerance(&self) -> Option<f32> {
+        None
+    }
+
+    /// Single-node oracle for `φ_f^{(j)}`: aggregate over all subfiles.
+    /// The default maps every subfile; workloads with a closed form may
+    /// override for speed.
+    fn oracle(&self, cfg: &SystemConfig, job: JobId, func: FuncId) -> Result<Value> {
+        let agg = self.aggregator();
+        let mut acc = agg.identity(cfg.value_bytes);
+        for n in 0..cfg.subfiles() {
+            let vals = self.map_subfile(job, n)?;
+            acc = agg.combine(&acc, &vals[func])?;
+        }
+        Ok(acc)
+    }
+}
+
+/// Compare a reduced output against the oracle value under the
+/// workload's tolerance. Returns Ok(()) or a descriptive error.
+pub fn check_output(
+    wl: &dyn Workload,
+    job: JobId,
+    func: FuncId,
+    got: &[u8],
+    want: &[u8],
+) -> Result<()> {
+    use crate::error::CamrError;
+    match wl.tolerance() {
+        None => {
+            if got != want {
+                return Err(CamrError::Verification(format!(
+                    "{}: job {job} func {func}: bit-exact mismatch",
+                    wl.name()
+                )));
+            }
+        }
+        Some(tol) => {
+            let g = crate::agg::lanes::as_f32(got);
+            let w = crate::agg::lanes::as_f32(want);
+            if g.len() != w.len() {
+                return Err(CamrError::Verification(format!(
+                    "{}: job {job} func {func}: lane count mismatch",
+                    wl.name()
+                )));
+            }
+            for (i, (x, y)) in g.iter().zip(&w).enumerate() {
+                let scale = 1.0f32.max(y.abs());
+                if (x - y).abs() > tol * scale {
+                    return Err(CamrError::Verification(format!(
+                        "{}: job {job} func {func} lane {i}: {x} vs {y} (tol {tol})",
+                        wl.name()
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}

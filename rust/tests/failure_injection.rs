@@ -1,0 +1,202 @@
+//! Failure injection: the engine's strict local-state model means any
+//! corruption or loss must surface as a typed error or an oracle
+//! mismatch — never as a silently wrong answer.
+
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::master::Master;
+use camr::coordinator::values::ValueKey;
+use camr::coordinator::worker::Worker;
+use camr::error::CamrError;
+use camr::shuffle::multicast::GroupPlan;
+use camr::shuffle::plan::ChunkSpec;
+use camr::workload::synth::SyntheticWorkload;
+use camr::workload::Workload;
+
+/// A workload wrapper that flips one bit in one intermediate value —
+/// models a corrupted mapper (bad disk/memory on one server).
+struct CorruptingWorkload {
+    inner: SyntheticWorkload,
+    job: usize,
+    subfile: usize,
+    func: usize,
+}
+
+impl Workload for CorruptingWorkload {
+    fn name(&self) -> &str {
+        "corrupting"
+    }
+    fn aggregator(&self) -> &dyn camr::agg::Aggregator {
+        self.inner.aggregator()
+    }
+    fn map_subfile(&self, job: usize, subfile: usize) -> camr::error::Result<Vec<Vec<u8>>> {
+        let mut vals = self.inner.map_subfile(job, subfile)?;
+        if job == self.job && subfile == self.subfile {
+            vals[self.func][0] ^= 0x01;
+        }
+        Ok(vals)
+    }
+    // The oracle uses the *uncorrupted* inner workload, so the mapper
+    // corruption is detectable.
+    fn oracle(
+        &self,
+        cfg: &SystemConfig,
+        job: usize,
+        func: usize,
+    ) -> camr::error::Result<Vec<u8>> {
+        self.inner.oracle(cfg, job, func)
+    }
+}
+
+#[test]
+fn corrupted_mapper_is_caught_by_verification() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = CorruptingWorkload {
+        inner: SyntheticWorkload::new(&cfg, 5),
+        job: 1,
+        subfile: 3,
+        func: 2,
+    };
+    let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+    match e.run() {
+        Err(CamrError::Verification(msg)) => {
+            assert!(msg.contains("mismatch"), "unexpected message: {msg}");
+        }
+        other => panic!("expected verification failure, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_map_phase_fails_encode() {
+    // A worker that skipped its map phase cannot encode its broadcasts.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let master = Master::new(cfg.clone()).unwrap();
+    let schedule = master.schedule().unwrap();
+    let w = Worker::new(0, &cfg); // empty store
+    let plan = &schedule.stage1[0];
+    assert!(matches!(
+        w.encode_for_group(plan),
+        Err(CamrError::MissingValue(_))
+    ));
+}
+
+#[test]
+fn corrupted_delta_is_caught_by_verification() {
+    // Manually corrupt one coded broadcast: the receiver decodes garbage
+    // and its reduce output must mismatch the oracle.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let master = Master::new(cfg.clone()).unwrap();
+    let schedule = master.schedule().unwrap();
+    let wl = SyntheticWorkload::new(&cfg, 6);
+    let mut workers: Vec<Worker> =
+        (0..cfg.servers()).map(|s| Worker::new(s, &cfg)).collect();
+    for w in workers.iter_mut() {
+        w.run_map_phase(&cfg, &master.placement, &wl).unwrap();
+    }
+    let plan = &schedule.stage1[0];
+    let mut deltas: Vec<Vec<u8>> = plan
+        .members
+        .iter()
+        .map(|&m| workers[m].encode_for_group(plan).unwrap())
+        .collect();
+    deltas[0][0] ^= 0xFF; // corruption on the wire
+    // Member at position 1 decodes using the corrupted delta from 0.
+    let m = plan.members[1];
+    workers[m].decode_from_group(plan, &deltas).unwrap();
+    let c = plan.chunks[1];
+    let got = workers[m]
+        .store
+        .get(ValueKey { job: c.job, func: c.func, batch: c.batch })
+        .unwrap()
+        .clone();
+    // Compare against an honest re-encode.
+    let honest = workers[plan.members[0]].encode_for_group(plan).unwrap();
+    let mut honest_deltas = deltas.clone();
+    honest_deltas[0] = honest;
+    workers[m].decode_from_group(plan, &honest_deltas).unwrap();
+    let want = workers[m]
+        .store
+        .get(ValueKey { job: c.job, func: c.func, batch: c.batch })
+        .unwrap()
+        .clone();
+    assert_ne!(got, want, "corruption must change the decoded chunk");
+}
+
+#[test]
+fn wrong_group_membership_is_rejected() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let w = Worker::new(0, &cfg);
+    let plan = GroupPlan {
+        members: vec![1, 2, 3], // worker 0 not a member
+        chunks: (0..3)
+            .map(|p| ChunkSpec { receiver: p + 1, job: 0, func: p + 1, batch: p })
+            .collect(),
+    };
+    assert!(matches!(w.encode_for_group(&plan), Err(CamrError::Placement(_))));
+}
+
+#[test]
+fn truncated_delta_is_rejected() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let master = Master::new(cfg.clone()).unwrap();
+    let schedule = master.schedule().unwrap();
+    let wl = SyntheticWorkload::new(&cfg, 6);
+    let mut workers: Vec<Worker> =
+        (0..cfg.servers()).map(|s| Worker::new(s, &cfg)).collect();
+    for w in workers.iter_mut() {
+        w.run_map_phase(&cfg, &master.placement, &wl).unwrap();
+    }
+    let plan = &schedule.stage1[0];
+    let mut deltas: Vec<Vec<u8>> = plan
+        .members
+        .iter()
+        .map(|&m| workers[m].encode_for_group(plan).unwrap())
+        .collect();
+    deltas[2].truncate(3); // short packet
+    let m = plan.members[0];
+    assert!(matches!(
+        workers[m].decode_from_group(plan, &deltas),
+        Err(CamrError::ShuffleDecode(_))
+    ));
+}
+
+#[test]
+fn traffic_is_perfectly_balanced_across_servers() {
+    // The SPC design is symmetric: every server transmits the same
+    // number of bytes in a full run (stages 1+2+3 combined).
+    for (k, q) in [(3usize, 2usize), (3, 3), (4, 2)] {
+        let cfg = SystemConfig::with_options(k, q, 2, 1, 120).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 2);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.run().unwrap();
+        let tx = e.bus.per_server_tx(cfg.servers());
+        assert!(
+            tx.iter().all(|&b| b == tx[0]),
+            "k={k} q={q}: unbalanced tx {tx:?}"
+        );
+        let rx = e.bus.per_server_rx(cfg.servers());
+        assert!(
+            rx.iter().all(|&b| b == rx[0]),
+            "k={k} q={q}: unbalanced rx {rx:?}"
+        );
+    }
+}
+
+#[test]
+fn reduce_before_shuffle_fails_cleanly() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let master = Master::new(cfg.clone()).unwrap();
+    let wl = SyntheticWorkload::new(&cfg, 1);
+    let mut w = Worker::new(0, &cfg);
+    w.run_map_phase(&cfg, &master.placement, &wl).unwrap();
+    // Owned job without stage-1 value: missing the last batch aggregate.
+    assert!(matches!(
+        w.reduce(&cfg, &master.placement, wl.aggregator(), 0, 0),
+        Err(CamrError::MissingValue(_))
+    ));
+    // Non-owned job without stage-2/3 values.
+    assert!(matches!(
+        w.reduce(&cfg, &master.placement, wl.aggregator(), 2, 0),
+        Err(CamrError::MissingValue(_))
+    ));
+}

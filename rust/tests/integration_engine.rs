@@ -1,0 +1,196 @@
+//! Cross-module integration: full pipeline runs across the parameter
+//! grid and every workload, all oracle-verified with byte-exact loads.
+
+use camr::analysis::load;
+use camr::baseline::{UncodedEngine, UncodedMode};
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::metrics::LoadReport;
+use camr::workload::gradient::GradientWorkload;
+use camr::workload::matvec::{MatVecWorkload, NativeShardCompute};
+use camr::workload::synth::SyntheticWorkload;
+use camr::workload::wordcount::WordCountWorkload;
+use std::sync::Arc;
+
+#[test]
+fn parameter_grid_all_verified_exact_loads() {
+    // B = 120 divides by k-1 for k ∈ {2..=5} → zero padding slack.
+    for (k, q, gamma) in [
+        (2usize, 2usize, 1usize),
+        (2, 3, 2),
+        (2, 5, 1),
+        (3, 2, 1),
+        (3, 2, 3),
+        (3, 3, 2),
+        (3, 4, 1),
+        (4, 2, 2),
+        (4, 3, 1),
+        (5, 2, 1),
+    ] {
+        let cfg = SystemConfig::with_options(k, q, gamma, 1, 120).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 0xFEED ^ (k as u64) << 8 ^ q as u64);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified, "k={k} q={q} γ={gamma}");
+        let expect = load::camr_total(k, q);
+        assert!(
+            (out.total_load() - expect).abs() < 1e-12,
+            "k={k} q={q} γ={gamma}: {} vs {expect}",
+            out.total_load()
+        );
+        let report = LoadReport::from_outcome(&cfg, &out);
+        assert!(report.matches_analysis());
+    }
+}
+
+#[test]
+fn all_workloads_verify_on_example1_shape() {
+    // wordcount (u64 exact)
+    {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = WordCountWorkload::synthetic(&cfg, 5, 30);
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        assert!(e.run().unwrap().verified);
+    }
+    // matvec (f32 tolerance)
+    {
+        let cfg = SystemConfig::with_options(3, 2, 2, 1, 64).unwrap();
+        let wl =
+            MatVecWorkload::synthetic(&cfg, 5, 16, 8, Arc::new(NativeShardCompute)).unwrap();
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        assert!(e.run().unwrap().verified);
+    }
+    // gradient (f32 tolerance)
+    {
+        let cfg = SystemConfig::with_options(3, 2, 2, 1, 8).unwrap();
+        let wl = GradientWorkload::synthetic(&cfg, 5, 2, 4).unwrap();
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        assert!(e.run().unwrap().verified);
+    }
+    // synthetic (u64 exact)
+    {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 5);
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        assert!(e.run().unwrap().verified);
+    }
+}
+
+#[test]
+fn multi_round_q_equals_2k_and_3k() {
+    for rounds in [2usize, 3] {
+        let cfg = SystemConfig::with_options(3, 2, 2, rounds, 64).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 7);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified);
+        // Load normalized by JQB is round-invariant (§II).
+        assert!((out.total_load() - 1.0).abs() < 1e-12, "rounds={rounds}");
+        assert_eq!(out.outputs, cfg.jobs() * cfg.functions());
+    }
+}
+
+#[test]
+fn odd_value_sizes_stay_within_padding_slack() {
+    // B not divisible by k-1: measured load may exceed the closed form
+    // by at most the padding bound (k-1 extra bytes per packet-split
+    // value → handled by LoadReport::matches_analysis).
+    for bytes in [8usize, 24, 40, 56, 104] {
+        let cfg = SystemConfig::with_options(3, 2, 2, 1, bytes).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 1);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified, "B={bytes}");
+        let report = LoadReport::from_outcome(&cfg, &out);
+        assert!(report.matches_analysis(), "B={bytes}: load {}", out.total_load());
+        assert!(out.total_load() >= load::camr_total(3, 2) - 1e-12);
+    }
+}
+
+#[test]
+fn uncoded_baselines_verify_and_order_correctly() {
+    let cfg = SystemConfig::new(3, 3, 2).unwrap();
+    let camr = {
+        let wl = SyntheticWorkload::new(&cfg, 9);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.run().unwrap().total_load()
+    };
+    let agg = {
+        let wl = SyntheticWorkload::new(&cfg, 9);
+        let mut e =
+            UncodedEngine::new(cfg.clone(), Box::new(wl), UncodedMode::Aggregated).unwrap();
+        e.run().unwrap().load()
+    };
+    let raw = {
+        let wl = SyntheticWorkload::new(&cfg, 9);
+        let mut e = UncodedEngine::new(cfg.clone(), Box::new(wl), UncodedMode::Raw).unwrap();
+        e.run().unwrap().load()
+    };
+    assert!(camr < agg, "coding must beat aggregated unicast for k=3");
+    assert!(agg < raw, "aggregation must beat raw shuffle");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let run = |seed: u64| {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, seed);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.run().unwrap();
+        (0..cfg.jobs())
+            .flat_map(|j| (0..cfg.functions()).map(move |f| (j, f)))
+            .map(|(j, f)| e.output(j, f).unwrap().clone())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(42), run(42));
+    assert_ne!(run(42), run(43));
+}
+
+#[test]
+fn engine_reports_phase_times_and_outputs() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = SyntheticWorkload::new(&cfg, 3);
+    let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert_eq!(out.outputs, 24);
+    assert_eq!(out.map_invocations, (cfg.k - 1) * cfg.jobs() * cfg.subfiles());
+    // Phase durations are populated (non-zero map work happened).
+    assert!(out.map_time.as_nanos() > 0);
+}
+
+#[test]
+fn rerun_is_idempotent() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = SyntheticWorkload::new(&cfg, 4);
+    let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+    let a = e.run().unwrap();
+    let b = e.run().unwrap();
+    assert_eq!(a.stage_bytes, b.stage_bytes);
+    assert!(b.verified);
+}
+
+#[test]
+fn run_config_fixtures_parse_and_run() {
+    // The shipped config files must stay valid.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let rc = camr::config::RunConfig::from_path(&root.join("configs/example1.toml")).unwrap();
+    assert_eq!(rc.system.jobs(), 4);
+    let wl = WordCountWorkload::synthetic(&rc.system, rc.seed, 40);
+    let mut e = Engine::new(rc.system.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+
+    let rc = camr::config::RunConfig::from_path(&root.join("configs/matvec_pjrt.toml")).unwrap();
+    assert_eq!(rc.artifact.as_deref(), Some("artifacts/map_kernel.hlo.txt"));
+}
+
+#[test]
+#[ignore = "stress: ~36 servers, 64 jobs — run with --ignored"]
+fn stress_k3_q8() {
+    let cfg = SystemConfig::with_options(3, 8, 2, 1, 256).unwrap();
+    let wl = SyntheticWorkload::new(&cfg, 1);
+    let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+    assert!((out.total_load() - load::camr_total(3, 8)).abs() < 1e-12);
+}

@@ -1,0 +1,153 @@
+//! Paper-exact reproduction tests for the running example (K = 6,
+//! q = 2, k = 3): Eq. (2) ownership, Fig. 1 placement, Example 3 /
+//! Fig. 2 stage-1 chunks, Table I stage-2 transmissions, Table II
+//! stage-3 needs, and the §III-C loads 1/4 + 1/4 + 1/2 = 1.
+//!
+//! Every id below is 0-based (paper is 1-based).
+
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::master::Master;
+use camr::net::Stage;
+use camr::shuffle::plan::ChunkSpec;
+use camr::workload::wordcount::WordCountWorkload;
+
+fn master() -> Master {
+    Master::new(SystemConfig::new(3, 2, 2).unwrap()).unwrap()
+}
+
+#[test]
+fn eq2_ownership() {
+    let m = master();
+    assert_eq!(m.design.owners(0), &[0, 2, 4]); // X^(1) = {U1,U3,U5}
+    assert_eq!(m.design.owners(1), &[0, 3, 5]); // X^(2) = {U1,U4,U6}
+    assert_eq!(m.design.owners(2), &[1, 2, 5]); // X^(3) = {U2,U3,U6}
+    assert_eq!(m.design.owners(3), &[1, 3, 4]); // X^(4) = {U2,U4,U5}
+}
+
+#[test]
+fn fig1_placement() {
+    // Fig. 1 (via Example 2): per-server stored batches. 4 batches of
+    // γ = 2 subfiles each, μ = 1/3.
+    let m = master();
+    let inv = |s: usize| m.placement.inventory(s);
+    // U1 stores J1:{B1,B2} and J2:{B1,B2} (its two owned jobs, minus the
+    // self-labeled batch).
+    assert_eq!(inv(0), vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    assert_eq!(inv(1), vec![(2, 0), (2, 1), (3, 0), (3, 1)]); // U2
+    assert_eq!(inv(2), vec![(0, 1), (0, 2), (2, 1), (2, 2)]); // U3
+    assert_eq!(inv(3), vec![(1, 1), (1, 2), (3, 1), (3, 2)]); // U4
+    assert_eq!(inv(4), vec![(0, 0), (0, 2), (3, 0), (3, 2)]); // U5
+    assert_eq!(inv(5), vec![(1, 0), (1, 2), (2, 0), (2, 2)]); // U6
+    // Dotted lines of Fig. 1: parallel classes {U1,U2}, {U3,U4}, {U5,U6}.
+    assert_eq!(m.design.class_members(0), vec![0, 1]);
+    assert_eq!(m.design.class_members(1), vec![2, 3]);
+    assert_eq!(m.design.class_members(2), vec![4, 5]);
+}
+
+#[test]
+fn example3_fig2_stage1_chunks() {
+    // Example 3: among owners {U1,U3,U5} of J1, U1 needs the φ1
+    // aggregate of batch {5,6}, U3 of {1,2}, U5 of {3,4}.
+    let m = master();
+    let schedule = m.schedule().unwrap();
+    let g = &schedule.stage1[0];
+    assert_eq!(g.members, vec![0, 2, 4]);
+    assert_eq!(g.chunks[0], ChunkSpec { receiver: 0, job: 0, func: 0, batch: 2 });
+    assert_eq!(g.chunks[1], ChunkSpec { receiver: 2, job: 0, func: 2, batch: 0 });
+    assert_eq!(g.chunks[2], ChunkSpec { receiver: 4, job: 0, func: 4, batch: 1 });
+    // Fig. 2: each broadcast is one packet of B/2 and there are k = 3 of
+    // them per job → stage-1 total = J·k·B/2 = 6B.
+}
+
+#[test]
+fn table1_stage2_group() {
+    // Table I: the group {U1, U3, U6} recovers:
+    //  U1 ← α(ν^{(3)}_{1,5}, ν^{(3)}_{1,6})   (job 3, batch {5,6})
+    //  U3 ← α(ν^{(2)}_{3,1}, ν^{(2)}_{3,2})   (job 2, batch {1,2})
+    //  U6 ← α(ν^{(1)}_{6,3}, ν^{(1)}_{6,4})   (job 1, batch {3,4})
+    let m = master();
+    let schedule = m.schedule().unwrap();
+    let g = schedule
+        .stage2
+        .iter()
+        .find(|g| g.members == vec![0, 2, 5])
+        .expect("group {U1,U3,U6}");
+    assert_eq!(g.chunks[0], ChunkSpec { receiver: 0, job: 2, func: 0, batch: 2 });
+    assert_eq!(g.chunks[1], ChunkSpec { receiver: 2, job: 1, func: 2, batch: 0 });
+    assert_eq!(g.chunks[2], ChunkSpec { receiver: 5, job: 0, func: 5, batch: 1 });
+}
+
+#[test]
+fn stage2_has_q_pow_k1_qm1_groups() {
+    // §III-C.2: q^{k-1}(q-1) = 4 groups for Example 1.
+    let m = master();
+    let schedule = m.schedule().unwrap();
+    assert_eq!(schedule.stage2.len(), 4);
+}
+
+#[test]
+fn table2_stage3_needs() {
+    // Table II, all rows (0-based): receiver ← (job, fused subfiles).
+    let m = master();
+    let schedule = m.schedule().unwrap();
+    let expect: Vec<(usize, usize, Vec<usize>)> = vec![
+        (0, 2, vec![0, 1, 2, 3]),
+        (0, 3, vec![0, 1, 2, 3]),
+        (1, 0, vec![0, 1, 2, 3]),
+        (1, 1, vec![0, 1, 2, 3]),
+        (2, 1, vec![2, 3, 4, 5]),
+        (2, 3, vec![2, 3, 4, 5]),
+        (3, 0, vec![2, 3, 4, 5]),
+        (3, 2, vec![2, 3, 4, 5]),
+        (4, 1, vec![0, 1, 4, 5]),
+        (4, 2, vec![0, 1, 4, 5]),
+        (5, 0, vec![0, 1, 4, 5]),
+        (5, 3, vec![0, 1, 4, 5]),
+    ];
+    assert_eq!(schedule.stage3.len(), expect.len());
+    for (recv, job, subfiles) in expect {
+        let u = schedule
+            .stage3
+            .iter()
+            .find(|u| u.receiver == recv && u.job == job)
+            .unwrap_or_else(|| panic!("missing unicast recv={recv} job={job}"));
+        let got: Vec<usize> =
+            u.batches.iter().flat_map(|&b| m.placement.batch_subfiles(b)).collect();
+        assert_eq!(got, subfiles, "recv={recv} job={job}");
+        // Example 5: the sender is the unique class-mate owner.
+        assert_eq!(m.design.class_of(u.sender), m.design.class_of(recv));
+    }
+}
+
+#[test]
+fn example5_sender_is_u2_for_u1s_missing_jobs() {
+    // Example 5: U1 still misses J3's values; they all reside at U2.
+    let m = master();
+    let schedule = m.schedule().unwrap();
+    let u = schedule.stage3.iter().find(|u| u.receiver == 0 && u.job == 2).unwrap();
+    assert_eq!(u.sender, 1);
+}
+
+#[test]
+fn section3c_loads_measured_exactly() {
+    // L1 = 1/4, L2 = 1/4, L3 = 1/2, total 1 — measured byte-exactly on
+    // the Example-1 word count.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = WordCountWorkload::example1(&cfg);
+    let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+    assert_eq!(e.bus.stage_bytes(Stage::Stage1), 6 * cfg.value_bytes); // 6B
+    assert_eq!(e.bus.stage_bytes(Stage::Stage2), 6 * cfg.value_bytes); // 6B
+    assert_eq!(e.bus.stage_bytes(Stage::Stage3), 12 * cfg.value_bytes); // 12B
+    assert!((out.stage_load(1) - 0.25).abs() < 1e-15);
+    assert!((out.stage_load(2) - 0.25).abs() < 1e-15);
+    assert!((out.stage_load(3) - 0.5).abs() < 1e-15);
+    assert!((out.total_load() - 1.0).abs() < 1e-15);
+    // Transmission counts: stage 1 = J·k = 12 broadcasts, stage 2 =
+    // 4 groups × 3, stage 3 = 12 unicasts.
+    assert_eq!(e.bus.stage_count(Stage::Stage1), 12);
+    assert_eq!(e.bus.stage_count(Stage::Stage2), 12);
+    assert_eq!(e.bus.stage_count(Stage::Stage3), 12);
+}

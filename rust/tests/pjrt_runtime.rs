@@ -1,0 +1,123 @@
+//! PJRT runtime integration: load the AOT JAX/Pallas artifact, execute
+//! it from rust, and run the full engine with the PJRT-backed mapper.
+//!
+//! These tests need `make artifacts` to have produced
+//! `artifacts/map_kernel.hlo.txt`; they are skipped (with a message)
+//! when the artifact is absent so `cargo test` works pre-build too.
+
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::runtime::{meta_path_for, PjrtService, PjrtShardCompute};
+use camr::workload::matvec::{MatVecWorkload, NativeShardCompute, ShardCompute};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn artifact() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/map_kernel.hlo.txt");
+    if p.exists() && meta_path_for(&p).exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/map_kernel.hlo.txt not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_matvec_matches_native() {
+    let Some(path) = artifact() else { return };
+    let svc = PjrtService::start(&path).unwrap();
+    let (m, cols) = (svc.meta().m, svc.meta().cols);
+    // Deterministic inputs.
+    let a: Vec<f32> = (0..m * cols).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
+    let x: Vec<f32> = (0..cols).map(|i| (i as f32 + 1.0) * 0.25).collect();
+    let got = svc.matvec(&a, &x).unwrap();
+    let want = NativeShardCompute.partial_product(&a, &x, m).unwrap();
+    assert_eq!(got.len(), m);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4 * 1.0f32.max(w.abs()), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn pjrt_rejects_wrong_shapes() {
+    let Some(path) = artifact() else { return };
+    let svc = PjrtService::start(&path).unwrap();
+    let cols = svc.meta().cols;
+    assert!(svc.matvec(&[0f32; 4], &vec![0f32; cols]).is_err());
+    assert!(svc.matvec(&vec![0f32; svc.meta().m * cols], &[0f32; 1]).is_err());
+}
+
+#[test]
+fn pjrt_service_survives_many_calls() {
+    let Some(path) = artifact() else { return };
+    let svc = PjrtService::start(&path).unwrap();
+    let (m, cols) = (svc.meta().m, svc.meta().cols);
+    let a = vec![0.5f32; m * cols];
+    let x = vec![2.0f32; cols];
+    for _ in 0..50 {
+        let y = svc.matvec(&a, &x).unwrap();
+        assert!((y[0] - cols as f32).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn pjrt_service_usable_from_many_threads() {
+    let Some(path) = artifact() else { return };
+    let svc = Arc::new(PjrtService::start(&path).unwrap());
+    let (m, cols) = (svc.meta().m, svc.meta().cols);
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let svc = Arc::clone(&svc);
+            s.spawn(move || {
+                let a = vec![t as f32 * 0.1; m * cols];
+                let x = vec![1.0f32; cols];
+                let y = svc.matvec(&a, &x).unwrap();
+                assert!((y[0] - t as f32 * 0.1 * cols as f32).abs() < 1e-3);
+            });
+        }
+    });
+}
+
+#[test]
+fn full_engine_with_pjrt_mapper_verifies() {
+    // The end-to-end three-layer composition: the engine's map phase
+    // calls the AOT Pallas kernel through PJRT for every (job, subfile),
+    // the coded shuffle runs byte-exactly, and the reduce matches both
+    // the PJRT oracle and a pure-rust ground truth.
+    let Some(path) = artifact() else { return };
+    let compute = PjrtShardCompute::new(&path).unwrap();
+    let (m, cols) = compute.shape();
+    let cfg = SystemConfig::with_options(3, 2, 2, 1, 64).unwrap();
+    let rows_per_func = cfg.value_bytes / 4;
+    assert_eq!(m, cfg.functions() * rows_per_func, "artifact matches config");
+    let wl =
+        MatVecWorkload::synthetic(&cfg, 0xE2E, rows_per_func, cols, Arc::new(compute)).unwrap();
+    let truth: Vec<Vec<f32>> = (0..cfg.jobs()).map(|j| wl.full_product(j)).collect();
+    let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+    assert!((out.total_load() - 1.0).abs() < 1e-12);
+    for (j, t) in truth.iter().enumerate() {
+        for f in 0..cfg.functions() {
+            let got = camr::agg::lanes::as_f32(e.output(j, f).unwrap());
+            let want = &t[f * rows_per_func..(f + 1) * rows_per_func];
+            for (g, w) in got.iter().zip(want) {
+                assert!((g - w).abs() < 2e-4 * 1.0f32.max(w.abs()));
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_agg_artifact_exists_and_parses() {
+    // The fused map+combine artifact (L2's map_batch) is also exported.
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/batch_agg.hlo.txt");
+    if !p.exists() {
+        eprintln!("skipping: batch_agg artifact not built");
+        return;
+    }
+    let text = std::fs::read_to_string(&p).unwrap();
+    assert!(text.contains("HloModule"));
+    let meta = std::fs::read_to_string(meta_path_for(&p)).unwrap();
+    assert!(meta.contains("pallas_matvec+sum"));
+}

@@ -1,0 +1,192 @@
+//! Property-based tests (in-tree driver: deterministic SplitMix64 sweeps
+//! over randomized parameters — the offline substitute for proptest).
+//!
+//! Each property runs against dozens of randomly drawn configurations;
+//! failures print the exact parameters for reproduction.
+
+use camr::agg::{lanes, Aggregator, MaxU64, SumF32, SumU64, XorBytes};
+use camr::analysis::load;
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::design::{verify::verify_design, ResolvableDesign};
+use camr::placement::{storage::audit_storage, Placement};
+use camr::shuffle::multicast::GroupPlan;
+use camr::shuffle::plan::ChunkSpec;
+use camr::util::rng::SplitMix64;
+use camr::workload::synth::SyntheticWorkload;
+
+/// Draw a random-but-small (k, q) pair.
+fn draw_kq(rng: &mut SplitMix64) -> (usize, usize) {
+    let k = rng.range(2, 6);
+    // Cap q so q^{k-1} stays small enough for dozens of runs.
+    let qmax = match k {
+        2 => 13,
+        3 => 7,
+        4 => 4,
+        _ => 3,
+    };
+    (k, rng.range(2, qmax))
+}
+
+#[test]
+fn prop_design_invariants_hold() {
+    let mut rng = SplitMix64::new(0xD0_0D);
+    for case in 0..60 {
+        let (k, q) = draw_kq(&mut rng);
+        let d = ResolvableDesign::new(k, q).unwrap();
+        verify_design(&d).unwrap_or_else(|e| panic!("case {case}: k={k} q={q}: {e}"));
+        // Stage-2 group count q^{k-1}(q-1).
+        assert_eq!(
+            d.transversal_groups().len(),
+            q.pow(k as u32 - 1) * (q - 1),
+            "case {case}: k={k} q={q}"
+        );
+    }
+}
+
+#[test]
+fn prop_placement_storage_exact() {
+    let mut rng = SplitMix64::new(0xBEE);
+    for case in 0..50 {
+        let (k, q) = draw_kq(&mut rng);
+        let gamma = rng.range(1, 5);
+        let cfg = SystemConfig::new(k, q, gamma).unwrap();
+        let d = ResolvableDesign::new(k, q).unwrap();
+        let p = Placement::new(&d, &cfg).unwrap();
+        p.validate().unwrap_or_else(|e| panic!("case {case}: k={k} q={q} γ={gamma}: {e}"));
+        let rep = audit_storage(&p, &cfg).unwrap();
+        assert!(
+            (rep.measured_mu - rep.expected_mu).abs() < 1e-12,
+            "case {case}: k={k} q={q} γ={gamma}"
+        );
+    }
+}
+
+#[test]
+fn prop_lemma2_exchange_decodes_for_random_groups() {
+    let mut rng = SplitMix64::new(0xC0DE);
+    for case in 0..80 {
+        let g = rng.range(2, 8);
+        let chunk_len = rng.range(1, 300);
+        let members: Vec<usize> = (0..g).map(|i| i * 7 + 3).collect();
+        let chunks: Vec<ChunkSpec> = (0..g)
+            .map(|p| ChunkSpec { receiver: members[p], job: p, func: p, batch: 0 })
+            .collect();
+        let plan = GroupPlan { members, chunks };
+        // Random payloads per chunk.
+        let payloads: Vec<Vec<u8>> = (0..g)
+            .map(|p| {
+                let mut r = SplitMix64::new((case * 100 + p) as u64);
+                (0..chunk_len).map(|_| r.next_u64() as u8).collect()
+            })
+            .collect();
+        let deltas: Vec<Vec<u8>> = (0..g)
+            .map(|t| plan.encode(t, chunk_len, |p| Ok(payloads[p].clone())).unwrap())
+            .collect();
+        for r in 0..g {
+            let got = plan.decode(r, chunk_len, &deltas, |p| Ok(payloads[p].clone())).unwrap();
+            assert_eq!(got, payloads[r], "case {case}: g={g} B={chunk_len} member {r}");
+        }
+        // Lemma-2 cost.
+        let total: usize = deltas.iter().map(|d| d.len()).sum();
+        assert_eq!(total, g * chunk_len.div_ceil(g - 1));
+    }
+}
+
+#[test]
+fn prop_measured_load_matches_formula_when_divisible() {
+    let mut rng = SplitMix64::new(0x10AD);
+    for case in 0..25 {
+        let (k, q) = draw_kq(&mut rng);
+        let gamma = rng.range(1, 4);
+        // Choose B = (k-1) * 8 * r so packets split exactly and u64
+        // lanes stay aligned.
+        let bytes = (k - 1) * 8 * rng.range(1, 5);
+        let cfg = SystemConfig::with_options(k, q, gamma, 1, bytes).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, case as u64);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified, "case {case}: k={k} q={q} γ={gamma} B={bytes}");
+        let expect = load::camr_total(k, q);
+        assert!(
+            (out.total_load() - expect).abs() < 1e-12,
+            "case {case}: k={k} q={q} γ={gamma} B={bytes}: {} vs {expect}",
+            out.total_load()
+        );
+        // Per-stage too.
+        let forms = load::camr_stages(k, q);
+        for (i, f) in [forms.stage1, forms.stage2, forms.stage3].iter().enumerate() {
+            assert!(
+                (out.stage_load(i + 1) - f).abs() < 1e-12,
+                "case {case}: stage {}",
+                i + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_aggregator_laws_random_values() {
+    let mut rng = SplitMix64::new(0xA66);
+    for case in 0..200 {
+        let lanes_n = rng.range(1, 9);
+        let len = lanes_n * 8;
+        let draw = |r: &mut SplitMix64| -> Vec<u8> {
+            (0..len).map(|_| r.next_u64() as u8).collect()
+        };
+        let a = draw(&mut rng);
+        let b = draw(&mut rng);
+        let c = draw(&mut rng);
+        for agg in [&SumU64 as &dyn Aggregator, &MaxU64, &XorBytes] {
+            let ab = agg.combine(&a, &b).unwrap();
+            let ba = agg.combine(&b, &a).unwrap();
+            assert_eq!(ab, ba, "case {case}: {} commutativity", agg.name());
+            let ab_c = agg.combine(&ab, &c).unwrap();
+            let a_bc = agg.combine(&a, &agg.combine(&b, &c).unwrap()).unwrap();
+            assert_eq!(ab_c, a_bc, "case {case}: {} associativity", agg.name());
+            let id = agg.identity(len);
+            assert_eq!(agg.combine(&a, &id).unwrap(), a, "case {case}: {} identity", agg.name());
+        }
+        // f32 commutativity (exact) — associativity is approximate.
+        let fa = lanes::from_f32(&(0..lanes_n * 2).map(|i| i as f32 * 0.5 - 3.0).collect::<Vec<_>>());
+        let fb = lanes::from_f32(&(0..lanes_n * 2).map(|i| 1.0 / (i as f32 + 1.0)).collect::<Vec<_>>());
+        assert_eq!(
+            SumF32.combine(&fa, &fb).unwrap(),
+            SumF32.combine(&fb, &fa).unwrap(),
+            "case {case}: sum_f32 commutativity"
+        );
+    }
+}
+
+#[test]
+fn prop_stage2_groups_pin_unique_jobs() {
+    let mut rng = SplitMix64::new(0x57A6E2);
+    for _ in 0..30 {
+        let (k, q) = draw_kq(&mut rng);
+        let d = ResolvableDesign::new(k, q).unwrap();
+        for g in d.transversal_groups() {
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..k {
+                let (job, rem) = d.stage2_target(&g, i);
+                // Each excluded member maps to a distinct (member, job).
+                assert!(seen.insert((g[i], job)));
+                assert!(d.owns(rem, job));
+                assert!(!d.owns(g[i], job));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_k2_degenerate_designs_work_end_to_end() {
+    // k = 2: single-packet chunks, q^0 = 1-job blocks; the full pipeline
+    // must still verify for a range of q.
+    for q in [2usize, 3, 5, 8, 11] {
+        let cfg = SystemConfig::with_options(2, q, 2, 1, 64).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, q as u64);
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified, "q={q}");
+        assert!((out.total_load() - load::camr_total(2, q)).abs() < 1e-12);
+    }
+}
