@@ -1,0 +1,131 @@
+//! Serial vs thread-per-worker engine: map-phase wall-clock speedup.
+//!
+//! The acceptance bar for the parallel engine: at `K ≥ 8` workers with a
+//! compute-heavy map kernel, the map phase must run > 1.5× faster than
+//! the serial reference while charging byte-identical stage ledgers.
+//! The map work here is a deterministic spin kernel layered over the
+//! synthetic workload — heavy enough that thread fan-out dominates
+//! channel/barrier overhead, like a real map kernel would be.
+
+use camr::agg::{Aggregator, Value};
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
+use camr::error::Result;
+use camr::util::bench::fmt_ns;
+use camr::workload::synth::SyntheticWorkload;
+use camr::workload::Workload;
+use std::time::Duration;
+
+/// Synthetic values plus a deterministic CPU burn per map invocation.
+struct HeavyWorkload {
+    inner: SyntheticWorkload,
+    spins: u64,
+}
+
+impl Workload for HeavyWorkload {
+    fn name(&self) -> &str {
+        "heavy-synthetic"
+    }
+
+    fn aggregator(&self) -> &dyn Aggregator {
+        self.inner.aggregator()
+    }
+
+    fn map_subfile(&self, job: usize, subfile: usize) -> Result<Vec<Value>> {
+        // Emulate a real map kernel: ~spins dependent multiplies.
+        let mut acc = ((job as u64) << 32) ^ subfile as u64 ^ 0x9E3779B97F4A7C15;
+        for i in 0..self.spins {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        self.inner.map_subfile(job, subfile)
+    }
+}
+
+/// Best-of-N map/shuffle times for one engine kind.
+fn measure<F: FnMut() -> (Duration, Duration, [usize; 3])>(
+    iters: usize,
+    mut f: F,
+) -> (Duration, Duration, [usize; 3]) {
+    let mut best_map = Duration::MAX;
+    let mut best_shuffle = Duration::MAX;
+    let mut bytes = [0usize; 3];
+    for _ in 0..iters {
+        let (m, s, b) = f();
+        best_map = best_map.min(m);
+        best_shuffle = best_shuffle.min(s);
+        bytes = b;
+    }
+    (best_map, best_shuffle, bytes)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("CAMR_BENCH_QUICK").is_ok();
+    let iters = if quick { 3 } else { 7 };
+    let spins: u64 = if quick { 8_000 } else { 25_000 };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("== Map-phase speedup: serial engine vs thread-per-worker ==");
+    println!("   ({cores} hardware threads available, spin kernel {spins} iters/map)\n");
+    println!(
+        "{:>3} {:>3} {:>4} {:>6} {:>12} {:>12} {:>9} {:>12} {:>12}",
+        "k", "q", "K", "maps", "map_serial", "map_par", "speedup", "shuf_serial", "shuf_par"
+    );
+
+    let mut k8_speedup: Option<f64> = None;
+    for (k, q, gamma) in [
+        (4usize, 2usize, 8usize), // K = 8, 768 map invocations
+        (2, 4, 32),               // K = 8, k = 2 corner
+        (3, 3, 8),                // K = 9
+        (4, 3, 4),                // K = 12
+    ] {
+        let cfg = SystemConfig::with_options(k, q, gamma, 1, 256).unwrap();
+        let (smap, sshuf, sbytes) = measure(iters, || {
+            let wl = HeavyWorkload { inner: SyntheticWorkload::new(&cfg, 7), spins };
+            let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+            e.verify = false;
+            let out = e.run().unwrap();
+            (out.map_time, out.shuffle_time, out.stage_bytes)
+        });
+        let (pmap, pshuf, pbytes) = measure(iters, || {
+            let wl = HeavyWorkload { inner: SyntheticWorkload::new(&cfg, 7), spins };
+            let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+            e.verify = false;
+            let out = e.run().unwrap();
+            (out.map_time, out.shuffle_time, out.stage_bytes)
+        });
+        assert_eq!(sbytes, pbytes, "k={k} q={q}: ledgers diverged");
+        let speedup = smap.as_secs_f64() / pmap.as_secs_f64().max(1e-12);
+        let maps = (k - 1) * cfg.jobs() * cfg.subfiles();
+        println!(
+            "{:>3} {:>3} {:>4} {:>6} {:>12} {:>12} {:>8.2}x {:>12} {:>12}",
+            k,
+            q,
+            cfg.servers(),
+            maps,
+            fmt_ns(smap.as_nanos() as f64),
+            fmt_ns(pmap.as_nanos() as f64),
+            speedup,
+            fmt_ns(sshuf.as_nanos() as f64),
+            fmt_ns(pshuf.as_nanos() as f64),
+        );
+        println!(
+            "BENCH par_speedup_k{k}_q{q} serial_map_ns={} par_map_ns={} speedup={speedup:.3}",
+            smap.as_nanos(),
+            pmap.as_nanos()
+        );
+        if cfg.servers() >= 8 && k8_speedup.is_none() {
+            k8_speedup = Some(speedup);
+        }
+    }
+
+    if let Some(s) = k8_speedup {
+        println!(
+            "\nmap-phase speedup at K >= 8: {s:.2}x (target > 1.5x; needs >= 2 hardware threads)"
+        );
+        if cores >= 2 && s <= 1.5 {
+            println!("WARNING: speedup below 1.5x despite {cores} hardware threads");
+        }
+    }
+}

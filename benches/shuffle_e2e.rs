@@ -8,6 +8,7 @@
 use camr::config::SystemConfig;
 use camr::coordinator::cluster::run_cluster;
 use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
 use camr::util::bench::{fmt_ns, Bench};
 use camr::workload::synth::SyntheticWorkload;
 use std::sync::Arc;
@@ -51,6 +52,21 @@ fn main() {
             "  k={k} q={q} B={bytes}: {total} link bytes in {} → {gbps:.2} GB/s effective",
             fmt_ns(out.shuffle_time.as_nanos() as f64)
         );
+    }
+
+    println!("\n== Thread-per-worker engine (same pipeline, barrier-synchronized) ==\n");
+    for (k, q) in [(3usize, 2usize), (3, 4), (4, 3)] {
+        let cfg = SystemConfig::with_options(k, q, 2, 1, 1024).unwrap();
+        let name = format!("parallel_k{k}_q{q} (K={})", cfg.servers());
+        let cfg2 = cfg.clone();
+        // Byte-for-byte ledger equality with the serial engine is
+        // asserted by rust/tests/parallel_engine.rs; here we only time.
+        b.run(&name, move || {
+            let wl = SyntheticWorkload::new(&cfg2, 7);
+            let mut e = ParallelEngine::new(cfg2.clone(), Box::new(wl)).unwrap();
+            e.verify = false;
+            e.run().unwrap().stage_bytes
+        });
     }
 
     println!("\n== Message-passing cluster deployment (one thread per server) ==\n");

@@ -7,6 +7,7 @@ use camr::analysis::load;
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;
 use camr::coordinator::master::Master;
+use camr::coordinator::parallel::ParallelEngine;
 use camr::util::bench::Bench;
 use camr::workload::synth::SyntheticWorkload;
 
@@ -74,13 +75,22 @@ fn main() {
         let out = e.run().unwrap();
         (out.map_time, out.shuffle_time)
     });
-    // Report the phase split of one instrumented run.
+    // Report the phase split of one instrumented run per engine.
     let wl = SyntheticWorkload::new(&cfg, 9);
     let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
     e.verify = false;
     let out = e.run().unwrap();
     println!(
-        "\nphase split: map {:?}  shuffle {:?}  reduce {:?}  (stage bytes {:?})",
+        "\nphase split (serial):   map {:?}  shuffle {:?}  reduce {:?}  (stage bytes {:?})",
         out.map_time, out.shuffle_time, out.reduce_time, out.stage_bytes
+    );
+    let wl = SyntheticWorkload::new(&cfg, 9);
+    let mut p = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+    p.verify = false;
+    let pout = p.run().unwrap();
+    assert_eq!(pout.stage_bytes, out.stage_bytes, "engines must charge identical bytes");
+    println!(
+        "phase split (parallel): map {:?}  shuffle {:?}  reduce {:?}  (stage bytes {:?})",
+        pout.map_time, pout.shuffle_time, pout.reduce_time, pout.stage_bytes
     );
 }

@@ -11,6 +11,7 @@
 use camr::analysis::{jobs, load};
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
 use camr::metrics::LoadReport;
 use camr::net::Stage;
 use camr::report::Table;
@@ -72,6 +73,20 @@ fn main() -> anyhow::Result<()> {
     print!("{report}");
     assert!(out.verified, "oracle verification must pass");
     assert!(report.matches_analysis(), "measured load must match §IV");
+
+    // ---- Same run on the thread-per-worker engine: one OS thread per
+    // server, coded packets over channels — and the identical ledger.
+    let mut par = ParallelEngine::new(cfg.clone(), Box::new(WordCountWorkload::example1(&cfg)))?;
+    let pout = par.run()?;
+    assert!(pout.verified, "parallel engine must verify too");
+    assert_eq!(
+        pout.stage_bytes, out.stage_bytes,
+        "parallel and serial engines must charge identical bytes"
+    );
+    println!(
+        "\nthread-per-worker engine: same stage bytes {:?}, map {:?} vs serial {:?}",
+        pout.stage_bytes, pout.map_time, out.map_time
+    );
 
     // ---- The headline: same load as CCDC, exponentially fewer jobs.
     let req = jobs::JobRequirement::for_params(cfg.k, cfg.q);

@@ -5,6 +5,14 @@
 //! XOR-encoded from the sender's local store and really decoded at each
 //! receiver from its local store; a bug anywhere in the combinatorics
 //! surfaces as a reduce-phase mismatch against the single-node oracle.
+//!
+//! This is the **serial reference implementation**: all workers execute
+//! on the calling thread, one protocol step at a time, in schedule
+//! order. Its [`Bus`] ledger is the canonical transcript that the
+//! thread-per-worker [`super::parallel::ParallelEngine`] must reproduce
+//! byte-for-byte — the property tests diff the two ledgers directly.
+//! (Only the oracle *verification* fans out across threads; it is a
+//! check, not part of the protocol.)
 
 use super::master::{Master, Schedule};
 use super::worker::Worker;
@@ -130,23 +138,16 @@ impl Engine {
     }
 
     /// Map phase: every worker maps its stored subfiles for all functions
-    /// and aggregates per batch (§III-B). Workers run on scoped threads.
+    /// and aggregates per batch (§III-B). Workers run strictly one after
+    /// another on this thread — the serial baseline the parallel engine's
+    /// map-phase speedup is measured against.
     fn map_phase(&mut self) -> Result<usize> {
         let cfg = &self.master.cfg;
         let placement = &self.master.placement;
         let workload = &*self.workload;
-        let mut results: Vec<Result<usize>> =
-            (0..self.workers.len()).map(|_| Ok(0)).collect();
-        {
-            let mut slots: Vec<(&mut Worker, &mut Result<usize>)> =
-                self.workers.iter_mut().zip(results.iter_mut()).collect();
-            crate::util::par::for_each_mut(&mut slots, |(w, slot)| {
-                **slot = w.run_map_phase(cfg, placement, workload);
-            });
-        }
         let mut total = 0usize;
-        for r in results {
-            total += r?;
+        for w in &mut self.workers {
+            total += w.run_map_phase(cfg, placement, workload)?;
         }
         Ok(total)
     }
@@ -203,31 +204,40 @@ impl Engine {
         if !self.verify {
             return Ok(true);
         }
-        // Oracle check, parallel over (job, func).
-        let workload = &*self.workload;
-        let pairs: Vec<(JobId, FuncId)> = self.outputs.keys().copied().collect();
-        let outputs = &self.outputs;
-        let failures: Vec<String> = crate::util::par::map_indexed(pairs.len(), |i| {
-            let (j, f) = pairs[i];
-            let want = match workload.oracle(&cfg, j, f) {
-                Ok(w) => w,
-                Err(e) => return Some(format!("oracle job {j} func {f}: {e}")),
-            };
-            let got = &outputs[&(j, f)];
-            check_output(workload, j, f, got, &want).err().map(|e| e.to_string())
-        })
-        .into_iter()
-        .flatten()
-        .collect();
-        if let Some(first) = failures.first() {
-            return Err(CamrError::Verification(format!(
-                "{} of {} outputs mismatched; first: {first}",
-                failures.len(),
-                pairs.len()
-            )));
-        }
+        verify_outputs(&cfg, &*self.workload, &self.outputs)?;
         Ok(true)
     }
+}
+
+/// Check every reduced output against the workload's single-node oracle
+/// (parallel over (job, func) pairs — a verification-only fan-out, not
+/// part of the protocol). Shared by the serial and parallel engines.
+pub(crate) fn verify_outputs(
+    cfg: &SystemConfig,
+    workload: &dyn Workload,
+    outputs: &HashMap<(JobId, FuncId), Value>,
+) -> Result<()> {
+    let pairs: Vec<(JobId, FuncId)> = outputs.keys().copied().collect();
+    let failures: Vec<String> = crate::util::par::map_indexed(pairs.len(), |i| {
+        let (j, f) = pairs[i];
+        let want = match workload.oracle(cfg, j, f) {
+            Ok(w) => w,
+            Err(e) => return Some(format!("oracle job {j} func {f}: {e}")),
+        };
+        let got = &outputs[&(j, f)];
+        check_output(workload, j, f, got, &want).err().map(|e| e.to_string())
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    if let Some(first) = failures.first() {
+        return Err(CamrError::Verification(format!(
+            "{} of {} outputs mismatched; first: {first}",
+            failures.len(),
+            pairs.len()
+        )));
+    }
+    Ok(())
 }
 
 #[cfg(test)]

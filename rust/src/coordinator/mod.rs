@@ -1,19 +1,43 @@
 //! The CAMR coordinator: per-server workers, the master, and the
-//! end-to-end engine (the paper's system contribution, L3).
+//! end-to-end engines (the paper's system contribution, L3).
 //!
 //! - [`values`] — per-server store of batch-level aggregates.
 //! - [`worker`] — a server: maps, combines, encodes/decodes coded
 //!   packets, reduces.
 //! - [`master`] — phase orchestration and schedule distribution.
-//! - [`engine`] — drives map → shuffle (3 stages) → reduce, verifies
-//!   against the oracle, and reports measured loads.
-//! - [`cluster`] — async (tokio) deployment of the same protocol over
-//!   message channels, one task per server.
+//! - [`engine`] — the **serial reference engine**: drives map →
+//!   shuffle (3 stages) → reduce on one thread in schedule order,
+//!   verifies against the oracle, and reports measured loads. Its bus
+//!   ledger is the canonical transcript.
+//! - [`parallel`] — the **thread-per-worker engine**: one OS thread per
+//!   server (pool sized to `K`), barrier-synchronized phases, coded
+//!   packets exchanged through per-worker channels, and a channel-backed
+//!   shared-link recorder whose sequence-numbered ledger collapses to
+//!   exactly the serial transcript. Same protocol, same bytes, real
+//!   concurrency.
+//! - [`cluster`] — message-passing deployment of the same protocol (one
+//!   std thread per server driven lockstep by a leader thread over
+//!   command channels) — the extension point where stragglers, retries
+//!   and backpressure would live.
+//!
+//! ## Threading model
+//!
+//! The protocol is bulk-synchronous: map ‖ → stage 1 ‖ → stage 2 ‖ →
+//! stage 3 ‖ → reduce ‖, where ‖ marks a barrier. Workers never share
+//! memory — each owns its [`values::ValueStore`] exclusively on its own
+//! thread, and everything crossing server boundaries is an explicit
+//! packet on a channel, charged to the shared link at its schedule
+//! sequence number. That is why the measured loads are identical between
+//! the serial and parallel engines: the bytes on the link are a pure
+//! function of the schedule, and the schedule is fixed by the master
+//! before any thread starts.
 
 pub mod cluster;
 pub mod engine;
 pub mod master;
+pub mod parallel;
 pub mod values;
 pub mod worker;
 
 pub use engine::{Engine, RunOutcome};
+pub use parallel::ParallelEngine;

@@ -1,0 +1,580 @@
+//! Thread-per-worker execution engine: real concurrency, byte-exact
+//! accounting.
+//!
+//! [`ParallelEngine`] runs the identical CAMR protocol as the serial
+//! [`super::engine::Engine`], but with one OS thread per server (pool
+//! sized to `K`). The phases are separated by [`std::sync::Barrier`]
+//! synchronization, matching the bulk-synchronous structure of the
+//! paper's protocol:
+//!
+//! ```text
+//! map ─barrier─ stage 1 ─barrier─ stage 2 ─barrier─ stage 3 ─barrier─ reduce
+//! ```
+//!
+//! - **Map**: every worker maps its stored batches concurrently — this
+//!   is where the wall-clock speedup over the serial engine comes from.
+//! - **Stages 1–2** (coded multicasts): each worker encodes the `Δ`
+//!   broadcasts for every Lemma-2 group it belongs to and sends them to
+//!   the other group members through per-worker mpsc channels; it then
+//!   decodes each group once all of that group's broadcasts arrived.
+//!   Groups of a stage proceed concurrently — correct because every
+//!   encode reads only map-phase aggregates while every decode writes a
+//!   fresh `(job, func, batch)` key, and each worker's store is touched
+//!   only by its own thread.
+//! - **Stage 3** (unicasts): senders fuse and ship, receivers store.
+//! - **Reduce**: each worker reduces the functions it is responsible
+//!   for; the main thread collects outputs and runs oracle verification.
+//!
+//! ## Why load accounting stays exact under concurrency
+//!
+//! Workers charge the shared link through a channel-backed
+//! [`crate::net::BusRecorder`], tagging every transmission with its
+//! *schedule sequence number* — the position it would occupy in a serial
+//! execution. [`crate::net::SharedBus::collect`] sorts by that tag, so
+//! the ledger (order, senders, recipients, byte counts) is identical to
+//! the serial engine's regardless of thread interleaving; multicasts are
+//! still charged exactly once. The property tests assert ledger equality
+//! byte for byte.
+//!
+//! ## Failure handling
+//!
+//! A worker that hits an error (e.g. a failing map kernel) raises a
+//! shared poison flag and keeps meeting every barrier without doing
+//! work; peers waiting on its packets time out, observe the flag, and
+//! abort their phase the same way. The run then surfaces the
+//! lowest-numbered worker's error instead of deadlocking.
+
+use super::engine::{verify_outputs, RunOutcome};
+use super::master::{Master, Schedule};
+use super::worker::Worker;
+use crate::agg::Value;
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::net::{Bus, BusRecorder, SharedBus, Stage};
+use crate::placement::Placement;
+use crate::shuffle::multicast::GroupPlan;
+use crate::workload::Workload;
+use crate::{FuncId, JobId, ServerId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Barrier};
+use std::time::{Duration, Instant};
+
+/// A packet exchanged worker-to-worker through channels.
+enum Packet {
+    /// Coded broadcast `Δ` from member position `from` of the flattened
+    /// stage-1/2 group with global index `group`.
+    Delta { group: usize, from: usize, delta: Vec<u8> },
+    /// Stage-3 fused unicast payload for `schedule.stage3[spec]`.
+    Fused { spec: usize, value: Vec<u8> },
+}
+
+/// One stage-1/2 group, flattened with its ledger sequence base.
+struct StageGroup<'a> {
+    /// Which coded stage the group belongs to.
+    stage: Stage,
+    /// Barrier phase: 0 for stage 1, 1 for stage 2.
+    phase: usize,
+    /// The Lemma-2 plan.
+    plan: &'a GroupPlan,
+    /// Sequence number of this group's first broadcast in a serial run.
+    seq_base: u64,
+}
+
+/// Read-only state shared by every worker thread for one run.
+struct Shared<'a> {
+    cfg: &'a SystemConfig,
+    placement: &'a Placement,
+    workload: &'a dyn Workload,
+    schedule: &'a Schedule,
+    groups: Vec<StageGroup<'a>>,
+    /// Sequence number of the first stage-3 unicast.
+    stage3_base: u64,
+    barrier: &'a Barrier,
+    failed: &'a AtomicBool,
+}
+
+/// What a worker thread hands back when it finishes.
+struct WorkerDone {
+    worker: Worker,
+    map_invocations: usize,
+    outputs: Vec<((JobId, FuncId), Value)>,
+    error: Option<CamrError>,
+}
+
+/// Per-group receive state during a coded phase.
+struct GroupState {
+    /// This worker's member position in the group.
+    pos: usize,
+    /// Broadcast slots, one per member position.
+    deltas: Vec<Option<Vec<u8>>>,
+}
+
+/// The thread-per-worker engine. Produces the same [`RunOutcome`] (and
+/// the same [`Bus`] ledger) as the serial engine for the same config and
+/// workload.
+pub struct ParallelEngine {
+    /// The master (design, placement, schedule factory).
+    pub master: Master,
+    workers: Vec<Worker>,
+    workload: Box<dyn Workload>,
+    /// Ledger of the last run, in canonical (serial-equivalent) order.
+    pub bus: Bus,
+    /// Skip oracle verification (for large load-sweep runs).
+    pub verify: bool,
+    outputs: HashMap<(JobId, FuncId), Value>,
+}
+
+impl ParallelEngine {
+    /// Build an engine for a config and workload.
+    pub fn new(cfg: SystemConfig, workload: Box<dyn Workload>) -> Result<Self> {
+        let master = Master::new(cfg)?;
+        let workers =
+            (0..master.cfg.servers()).map(|s| Worker::new(s, &master.cfg)).collect();
+        Ok(ParallelEngine {
+            master,
+            workers,
+            workload,
+            bus: Bus::new(),
+            verify: true,
+            outputs: HashMap::new(),
+        })
+    }
+
+    /// Access the system config.
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.master.cfg
+    }
+
+    /// A reduced output (after `run`).
+    pub fn output(&self, job: JobId, func: FuncId) -> Option<&Value> {
+        self.outputs.get(&(job, func))
+    }
+
+    /// Run the full protocol with one thread per server and return
+    /// measured loads.
+    pub fn run(&mut self) -> Result<RunOutcome> {
+        self.outputs.clear();
+        let schedule = self.master.schedule()?;
+        let servers = self.master.cfg.servers();
+
+        // Flatten the coded groups with ledger sequence numbers matching
+        // the serial engine's emission order: all stage-1 groups in
+        // schedule order (one broadcast per member, in member order),
+        // then all stage-2 groups, then the stage-3 unicasts.
+        let mut groups: Vec<StageGroup<'_>> =
+            Vec::with_capacity(schedule.stage1.len() + schedule.stage2.len());
+        let mut seq = 0u64;
+        for (stage, phase, plans) in [
+            (Stage::Stage1, 0usize, &schedule.stage1),
+            (Stage::Stage2, 1usize, &schedule.stage2),
+        ] {
+            for plan in plans.iter() {
+                groups.push(StageGroup { stage, phase, plan, seq_base: seq });
+                seq += plan.members.len() as u64;
+            }
+        }
+        let stage3_base = seq;
+
+        let mut workers: Vec<Worker> = self.workers.drain(..).collect();
+        for w in &mut workers {
+            w.store.clear();
+        }
+
+        let cfg = &self.master.cfg;
+        let placement = &self.master.placement;
+        let workload: &dyn Workload = &*self.workload;
+        let barrier = Barrier::new(servers + 1);
+        let failed = AtomicBool::new(false);
+        let shared = Shared {
+            cfg,
+            placement,
+            workload,
+            schedule: &schedule,
+            groups,
+            stage3_base,
+            barrier: &barrier,
+            failed: &failed,
+        };
+
+        let shared_bus = SharedBus::new();
+        let (done_tx, done_rx) = mpsc::channel::<WorkerDone>();
+        let mut inboxes: Vec<mpsc::Sender<Packet>> = Vec::with_capacity(servers);
+        let mut receivers: Vec<mpsc::Receiver<Packet>> = Vec::with_capacity(servers);
+        for _ in 0..servers {
+            let (tx, rx) = mpsc::channel();
+            inboxes.push(tx);
+            receivers.push(rx);
+        }
+
+        let t0 = Instant::now();
+        let (map_time, shuffle_time, t_reduce) = std::thread::scope(|s| {
+            for (id, (worker, inbox)) in workers.drain(..).zip(receivers).enumerate() {
+                let peers = inboxes.clone();
+                let bus = shared_bus.recorder();
+                let done = done_tx.clone();
+                let shared = &shared;
+                std::thread::Builder::new()
+                    .name(format!("camr-worker-{id}"))
+                    .spawn_scoped(s, move || {
+                        worker_main(id, worker, shared, &inbox, &peers, &bus, &done)
+                    })
+                    .expect("spawn worker thread");
+            }
+            // The main thread participates in the four phase barriers
+            // only to timestamp them.
+            barrier.wait(); // map done
+            let map_time = t0.elapsed();
+            let t1 = Instant::now();
+            barrier.wait(); // stage 1 done
+            barrier.wait(); // stage 2 done
+            barrier.wait(); // stage 3 done
+            let shuffle_time = t1.elapsed();
+            (map_time, shuffle_time, Instant::now())
+        });
+        drop(done_tx);
+        drop(inboxes);
+
+        // All threads have exited: gather workers, outputs and errors.
+        let mut map_invocations = 0usize;
+        let mut outputs: HashMap<(JobId, FuncId), Value> = HashMap::new();
+        let mut returned: Vec<Worker> = Vec::with_capacity(servers);
+        let mut errors: Vec<(ServerId, CamrError)> = Vec::new();
+        for done in done_rx.iter() {
+            map_invocations += done.map_invocations;
+            if let Some(e) = done.error {
+                errors.push((done.worker.id, e));
+            }
+            for (key, v) in done.outputs {
+                outputs.insert(key, v);
+            }
+            returned.push(done.worker);
+        }
+        returned.sort_by_key(|w| w.id);
+        self.workers = returned;
+        self.bus = shared_bus.collect();
+
+        if !errors.is_empty() {
+            // Surface the root cause: workers that merely timed out
+            // waiting on a failed peer report a secondary "aborted after
+            // peer failure" — prefer any primary error over those.
+            errors.sort_by_key(|(id, _)| *id);
+            let root = errors
+                .iter()
+                .position(|(_, e)| !e.to_string().contains("aborted after peer failure"))
+                .unwrap_or(0);
+            return Err(errors.remove(root).1);
+        }
+
+        let verified = if self.verify {
+            verify_outputs(cfg, workload, &outputs)?;
+            true
+        } else {
+            true
+        };
+        let reduce_time = t_reduce.elapsed();
+        self.outputs = outputs;
+
+        Ok(RunOutcome {
+            stage_bytes: [
+                self.bus.stage_bytes(Stage::Stage1),
+                self.bus.stage_bytes(Stage::Stage2),
+                self.bus.stage_bytes(Stage::Stage3),
+            ],
+            normalizer: cfg.load_normalizer(),
+            map_invocations,
+            verified,
+            outputs: self.outputs.len(),
+            map_time,
+            shuffle_time,
+            reduce_time,
+        })
+    }
+}
+
+/// Body of one worker thread: all five phases, with a barrier after the
+/// map phase and after each shuffle stage. On error the worker poisons
+/// the shared flag but keeps meeting every barrier so nobody deadlocks.
+fn worker_main(
+    id: ServerId,
+    mut worker: Worker,
+    sh: &Shared<'_>,
+    inbox: &mpsc::Receiver<Packet>,
+    peers: &[mpsc::Sender<Packet>],
+    bus: &BusRecorder,
+    done: &mpsc::Sender<WorkerDone>,
+) {
+    let mut error: Option<CamrError> = None;
+    let fail = |e: CamrError, slot: &mut Option<CamrError>, flag: &AtomicBool| {
+        flag.store(true, Ordering::SeqCst);
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    };
+
+    // ---- Map.
+    let mut map_invocations = 0usize;
+    match worker.run_map_phase(sh.cfg, sh.placement, sh.workload) {
+        Ok(n) => map_invocations = n,
+        Err(e) => fail(e, &mut error, sh.failed),
+    }
+    sh.barrier.wait();
+
+    // ---- Coded stages 1 and 2.
+    for phase in 0..2 {
+        if error.is_none() && !sh.failed.load(Ordering::SeqCst) {
+            if let Err(e) = run_coded_phase(id, &mut worker, sh, phase, inbox, peers, bus) {
+                fail(e, &mut error, sh.failed);
+            }
+        }
+        sh.barrier.wait();
+    }
+
+    // ---- Stage 3.
+    if error.is_none() && !sh.failed.load(Ordering::SeqCst) {
+        if let Err(e) = run_stage3(id, &mut worker, sh, inbox, peers, bus) {
+            fail(e, &mut error, sh.failed);
+        }
+    }
+    sh.barrier.wait();
+
+    // ---- Reduce.
+    let mut outputs = Vec::new();
+    if error.is_none() && !sh.failed.load(Ordering::SeqCst) {
+        match run_reduce(id, &worker, sh) {
+            Ok(o) => outputs = o,
+            Err(e) => fail(e, &mut error, sh.failed),
+        }
+    }
+
+    let _ = done.send(WorkerDone { worker, map_invocations, outputs, error });
+}
+
+/// Receive one packet, bailing out (instead of blocking forever) once the
+/// shared failure flag is raised and the inbox has drained.
+fn recv_packet(inbox: &mpsc::Receiver<Packet>, failed: &AtomicBool) -> Option<Packet> {
+    loop {
+        match inbox.recv_timeout(Duration::from_millis(10)) {
+            Ok(p) => return Some(p),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if failed.load(Ordering::SeqCst) {
+                    // Final non-blocking sweep: packets already in flight
+                    // must not be mistaken for missing ones.
+                    return inbox.try_recv().ok();
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+        }
+    }
+}
+
+/// One coded phase (stage 1 or 2) for one worker: encode and broadcast
+/// `Δ` for every owned group, then receive peers' broadcasts, then decode
+/// every group's missing chunk into the local store.
+fn run_coded_phase(
+    id: ServerId,
+    worker: &mut Worker,
+    sh: &Shared<'_>,
+    phase: usize,
+    inbox: &mpsc::Receiver<Packet>,
+    peers: &[mpsc::Sender<Packet>],
+    bus: &BusRecorder,
+) -> Result<()> {
+    // The groups of this phase that this worker belongs to.
+    let mut mine: HashMap<usize, GroupState> = HashMap::new();
+    let mut order: Vec<usize> = Vec::new();
+    let mut expected = 0usize;
+    for (gi, g) in sh.groups.iter().enumerate() {
+        if g.phase != phase {
+            continue;
+        }
+        if let Some(pos) = g.plan.members.iter().position(|&m| m == id) {
+            expected += g.plan.members.len() - 1;
+            mine.insert(gi, GroupState { pos, deltas: vec![None; g.plan.members.len()] });
+            order.push(gi);
+        }
+    }
+
+    // Encode + broadcast in schedule order.
+    for &gi in &order {
+        let g = &sh.groups[gi];
+        let delta = worker.encode_for_group(g.plan)?;
+        let st = mine.get_mut(&gi).expect("own group");
+        let recipients: Vec<ServerId> =
+            g.plan.members.iter().copied().filter(|&m| m != id).collect();
+        bus.multicast(g.seq_base + st.pos as u64, g.stage, id, recipients, delta.len());
+        for &m in g.plan.members.iter().filter(|&&m| m != id) {
+            let _ = peers[m].send(Packet::Delta {
+                group: gi,
+                from: st.pos,
+                delta: delta.clone(),
+            });
+        }
+        st.deltas[st.pos] = Some(delta);
+    }
+
+    // Receive the other members' broadcasts.
+    let mut received = 0usize;
+    while received < expected {
+        let Some(pkt) = recv_packet(inbox, sh.failed) else {
+            return Err(CamrError::Runtime(format!(
+                "worker {id}: coded stage aborted after peer failure"
+            )));
+        };
+        match pkt {
+            Packet::Delta { group, from, delta } => {
+                let st = mine.get_mut(&group).ok_or_else(|| {
+                    CamrError::Runtime(format!(
+                        "worker {id}: delta for group {group} it is not a member of"
+                    ))
+                })?;
+                if st.deltas[from].replace(delta).is_some() {
+                    return Err(CamrError::Runtime(format!(
+                        "worker {id}: duplicate delta from position {from} of group {group}"
+                    )));
+                }
+                received += 1;
+            }
+            Packet::Fused { .. } => {
+                return Err(CamrError::Runtime(format!(
+                    "worker {id}: stage-3 packet during a coded stage"
+                )))
+            }
+        }
+    }
+
+    // Decode every group (schedule order for determinism of any error).
+    for &gi in &order {
+        let g = &sh.groups[gi];
+        let st = &mine[&gi];
+        let deltas: Vec<Vec<u8>> =
+            st.deltas.iter().map(|d| d.clone().expect("all broadcasts received")).collect();
+        worker.decode_from_group(g.plan, &deltas)?;
+    }
+    Ok(())
+}
+
+/// Stage 3 for one worker: fuse + send every unicast it owns, then
+/// receive and store every fused aggregate addressed to it.
+fn run_stage3(
+    id: ServerId,
+    worker: &mut Worker,
+    sh: &Shared<'_>,
+    inbox: &mpsc::Receiver<Packet>,
+    peers: &[mpsc::Sender<Packet>],
+    bus: &BusRecorder,
+) -> Result<()> {
+    let agg = sh.workload.aggregator();
+    let mut expected = 0usize;
+    for (si, u) in sh.schedule.stage3.iter().enumerate() {
+        if u.receiver == id {
+            expected += 1;
+        }
+        if u.sender == id {
+            let v = worker.fuse_for_unicast(agg, u)?;
+            bus.unicast(sh.stage3_base + si as u64, Stage::Stage3, id, u.receiver, v.len());
+            let _ = peers[u.receiver].send(Packet::Fused { spec: si, value: v });
+        }
+    }
+    let mut received = 0usize;
+    while received < expected {
+        let Some(pkt) = recv_packet(inbox, sh.failed) else {
+            return Err(CamrError::Runtime(format!(
+                "worker {id}: stage 3 aborted after peer failure"
+            )));
+        };
+        match pkt {
+            Packet::Fused { spec, value } => {
+                worker.receive_fused(&sh.schedule.stage3[spec], value)?;
+                received += 1;
+            }
+            Packet::Delta { .. } => {
+                return Err(CamrError::Runtime(format!(
+                    "worker {id}: coded-stage packet during stage 3"
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Reduce every (job, func) pair this worker is the reducer of.
+fn run_reduce(
+    id: ServerId,
+    worker: &Worker,
+    sh: &Shared<'_>,
+) -> Result<Vec<((JobId, FuncId), Value)>> {
+    let agg = sh.workload.aggregator();
+    let mut out = Vec::new();
+    for f in 0..sh.cfg.functions() {
+        if sh.cfg.reducer_of(f) != id {
+            continue;
+        }
+        for j in 0..sh.cfg.jobs() {
+            out.push(((j, f), worker.reduce(sh.cfg, sh.placement, agg, j, f)?));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+    use crate::workload::synth::SyntheticWorkload;
+
+    fn run_parallel(k: usize, q: usize, gamma: usize, seed: u64) -> (ParallelEngine, RunOutcome) {
+        let cfg = SystemConfig::new(k, q, gamma).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, seed);
+        let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        (e, out)
+    }
+
+    #[test]
+    fn example1_loads_match_paper() {
+        let (_, out) = run_parallel(3, 2, 2, 0xC0FFEE);
+        assert!(out.verified);
+        assert!((out.stage_load(1) - 0.25).abs() < 1e-12);
+        assert!((out.stage_load(2) - 0.25).abs() < 1e-12);
+        assert!((out.stage_load(3) - 0.50).abs() < 1e-12);
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_serial_engine_bytes_and_outputs() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut serial =
+            Engine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, 9))).unwrap();
+        let sout = serial.run().unwrap();
+        let (par, pout) = run_parallel(3, 2, 2, 9);
+        assert_eq!(sout.stage_bytes, pout.stage_bytes);
+        assert_eq!(sout.outputs, pout.outputs);
+        for j in 0..cfg.jobs() {
+            for f in 0..cfg.functions() {
+                assert_eq!(serial.output(j, f), par.output(j, f), "job {j} func {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn rerun_is_idempotent() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 4);
+        let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+        let a = e.run().unwrap();
+        let b = e.run().unwrap();
+        assert_eq!(a.stage_bytes, b.stage_bytes);
+        assert!(b.verified);
+    }
+
+    #[test]
+    fn multi_round_verified() {
+        let cfg = SystemConfig::with_options(3, 2, 2, 2, 64).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 1);
+        let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified);
+        assert!((out.total_load() - 1.0).abs() < 1e-12);
+    }
+}

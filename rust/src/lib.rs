@@ -24,8 +24,11 @@
 //!   byte-level reducers.
 //! - [`shuffle`] — Algorithm 2 coded multicast and the three shuffle
 //!   stages (paper §III-C).
-//! - [`net`] — shared-link network simulator with byte-exact accounting.
-//! - [`coordinator`] — workers, master, and the end-to-end engine.
+//! - [`net`] — shared-link network simulator with byte-exact accounting,
+//!   including the channel-backed recorder the parallel engine uses.
+//! - [`coordinator`] — workers, master, and the end-to-end engines:
+//!   the serial reference [`coordinator::engine::Engine`] and the
+//!   thread-per-worker [`coordinator::parallel::ParallelEngine`].
 //! - [`baseline`] — CCDC and uncoded baselines for comparison.
 //! - [`analysis`] — closed-form load formulas (§IV, §V) and job-count
 //!   minimums (Table III).
@@ -49,6 +52,38 @@
 //! let outcome = engine.run().unwrap();
 //! assert!(outcome.verified);
 //! // Measured communication load equals the paper's closed form: L = 1.
+//! assert!((outcome.total_load() - 1.0).abs() < 1e-9);
+//! ```
+//!
+//! ## Execution engines and the threading model
+//!
+//! Two engines run the same protocol from the same master schedule:
+//!
+//! - [`coordinator::engine::Engine`] — the serial reference: one thread,
+//!   schedule order, canonical [`net::Bus`] ledger.
+//! - [`coordinator::parallel::ParallelEngine`] — thread-per-worker
+//!   (pool sized to `K`): the map phase fans out across all servers
+//!   concurrently, the three shuffle stages exchange coded packets
+//!   through per-worker channels, and [`std::sync::Barrier`]s separate
+//!   the phases (map ‖ stage 1 ‖ stage 2 ‖ stage 3 ‖ reduce).
+//!
+//! Load accounting stays *exact* under concurrency: every transmission
+//! is charged to the shared link through a channel-backed recorder
+//! tagged with its schedule sequence number, so the collected ledger is
+//! byte-for-byte the serial one no matter how the threads interleave —
+//! multicasts are still charged once, and `RunOutcome::total_load()`
+//! is identical between the engines (asserted by the property tests).
+//!
+//! ```
+//! use camr::config::SystemConfig;
+//! use camr::coordinator::parallel::ParallelEngine;
+//! use camr::workload::synth::SyntheticWorkload;
+//!
+//! let cfg = SystemConfig::new(3, 2, 1).unwrap();
+//! let wl = SyntheticWorkload::new(&cfg, 7);
+//! let mut engine = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+//! let outcome = engine.run().unwrap();
+//! assert!(outcome.verified);
 //! assert!((outcome.total_load() - 1.0).abs() < 1e-9);
 //! ```
 

@@ -3,11 +3,12 @@
 //! ```text
 //! camr run      [--k 3] [--q 2] [--gamma 2] [--workload word_count]
 //!               [--artifact artifacts/map_kernel.hlo.txt] [--seed N]
-//!               [--json] [--config run.toml]
+//!               [--json] [--parallel] [--config run.toml]
 //! camr sweep    [--max-k 4] [--max-q 4]
 //! camr table3
 //! camr example1
 //! camr serve    [--k 3] [--q 2] [--gamma 2]
+//! camr speedup  [--k 4] [--q 2] [--gamma 8] [--value-bytes 256]
 //! ```
 //!
 //! The argument parser is in-tree (this workspace builds offline); it
@@ -19,6 +20,7 @@ use camr::baseline::{run_ablation, CcdcEngine, CodingChoice};
 use camr::config::{RunConfig, SystemConfig, WorkloadKind};
 use camr::coordinator::cluster;
 use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
 use camr::metrics::LoadReport;
 use camr::net::Stage;
 use camr::report::Table;
@@ -92,16 +94,21 @@ const USAGE: &str = "camr — Coded Aggregated MapReduce (ISIT 2019 reproduction
 
 USAGE:
   camr run      [--k N] [--q N] [--gamma N] [--workload KIND] [--seed N]
-                [--artifact PATH] [--json] [--config FILE]
+                [--artifact PATH] [--json] [--parallel] [--config FILE]
   camr sweep    [--max-k N] [--max-q N]
   camr table3
   camr example1
   camr serve    [--k N] [--q N] [--gamma N]
+  camr speedup  [--k N] [--q N] [--gamma N] [--value-bytes N]
   camr ablation [--k N] [--q N]
   camr ccdc     [--servers N] [--k N]
   camr timemodel [--k N] [--q N] [--gamma N] [--value-bytes N]
 
 KIND: word_count | mat_vec | gradient | synthetic
+
+--parallel runs the thread-per-worker engine (one OS thread per server);
+the default is the serial reference engine. Both produce byte-identical
+load ledgers.
 ";
 
 fn build_workload(
@@ -148,18 +155,73 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let wl = build_workload(kind, &cfg, seed, artifact.as_ref())?;
     let name = wl.name().to_string();
-    let mut engine = Engine::new(cfg.clone(), wl)?;
-    let out = engine.run()?;
+    let parallel = args.get_bool("parallel");
+    let out = if parallel {
+        ParallelEngine::new(cfg.clone(), wl)?.run()?
+    } else {
+        Engine::new(cfg.clone(), wl)?.run()?
+    };
     let report = LoadReport::from_outcome(&cfg, &out);
     if json {
         println!("{}", report.to_json());
     } else {
-        println!("workload: {name}");
+        println!(
+            "workload: {name}   engine: {}",
+            if parallel { "parallel (thread-per-worker)" } else { "serial" }
+        );
         print!("{report}");
         if !report.matches_analysis() {
             bail!("measured load deviates from §IV closed form");
         }
     }
+    Ok(())
+}
+
+fn cmd_speedup(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 4)?;
+    let q = args.get_usize("q", 2)?;
+    let gamma = args.get_usize("gamma", 8)?;
+    let bytes = args.get_usize("value-bytes", 256)?;
+    let cfg = SystemConfig::with_options(k, q, gamma, 1, bytes)?;
+    println!(
+        "serial vs thread-per-worker — K={} servers, J={} jobs, γ={gamma}, B={bytes}\n",
+        cfg.servers(),
+        cfg.jobs()
+    );
+    let serial = {
+        let wl = SyntheticWorkload::new(&cfg, 7);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl))?;
+        e.verify = false;
+        e.run()?
+    };
+    let par = {
+        let wl = SyntheticWorkload::new(&cfg, 7);
+        let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl))?;
+        e.verify = false;
+        e.run()?
+    };
+    if serial.stage_bytes != par.stage_bytes {
+        bail!(
+            "ledgers diverged: serial {:?} vs parallel {:?}",
+            serial.stage_bytes,
+            par.stage_bytes
+        );
+    }
+    let speedup = |s: std::time::Duration, p: std::time::Duration| {
+        s.as_secs_f64() / p.as_secs_f64().max(1e-12)
+    };
+    println!("  {:<10} {:>12} {:>12} {:>9}", "phase", "serial", "parallel", "speedup");
+    for (phase, s, p) in [
+        ("map", serial.map_time, par.map_time),
+        ("shuffle", serial.shuffle_time, par.shuffle_time),
+    ] {
+        println!("  {:<10} {:>12?} {:>12?} {:>8.2}x", phase, s, p, speedup(s, p));
+    }
+    println!(
+        "\nstage bytes identical: {:?} (load {:.4} both engines)",
+        par.stage_bytes,
+        par.total_load()
+    );
     Ok(())
 }
 
@@ -346,13 +408,14 @@ fn main() -> Result<()> {
         return Ok(());
     };
     let rest = &argv[1..];
-    let bool_flags = ["json"];
+    let bool_flags = ["json", "parallel"];
     match cmd.as_str() {
         "run" => cmd_run(&Args::parse(rest, &bool_flags)?),
         "sweep" => cmd_sweep(&Args::parse(rest, &bool_flags)?),
         "table3" => cmd_table3(),
         "example1" => cmd_example1(),
         "serve" => cmd_serve(&Args::parse(rest, &bool_flags)?),
+        "speedup" => cmd_speedup(&Args::parse(rest, &bool_flags)?),
         "ablation" => cmd_ablation(&Args::parse(rest, &bool_flags)?),
         "ccdc" => cmd_ccdc(&Args::parse(rest, &bool_flags)?),
         "timemodel" => cmd_timemodel(&Args::parse(rest, &bool_flags)?),

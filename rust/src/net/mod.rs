@@ -8,9 +8,22 @@
 //!
 //! [`Bus`] records every transmission with its phase/stage tag so the
 //! per-stage loads of §IV can be measured rather than merely computed.
+//!
+//! ## Concurrency
+//!
+//! [`Bus`] itself is single-threaded (the serial engine owns it). The
+//! thread-per-worker engine instead hands each worker a cloned
+//! [`BusRecorder`]: a channel-backed handle that serializes every
+//! transmission onto one [`SharedBus`] collector, each tagged with its
+//! deterministic *schedule sequence number*. [`SharedBus::collect`]
+//! sorts by that sequence, so the resulting ledger is byte-for-byte
+//! identical to the one the serial engine would have produced — a
+//! multicast is still charged exactly once, and the nondeterministic
+//! arrival order of concurrent sends never leaks into the accounting.
 
 use crate::ServerId;
 use std::fmt;
+use std::sync::mpsc;
 
 /// Which protocol phase a transmission belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -140,6 +153,77 @@ impl Bus {
     }
 }
 
+/// A thread-safe handle workers use to charge the shared link from their
+/// own threads. Clones share one [`SharedBus`] collector.
+///
+/// Every record carries a schedule sequence number assigned by the
+/// engine (the position the transmission would occupy in a serial
+/// execution of the same schedule); the collector orders by it, making
+/// the ledger independent of thread interleaving.
+#[derive(Clone)]
+pub struct BusRecorder {
+    tx: mpsc::Sender<(u64, Transmission)>,
+}
+
+impl BusRecorder {
+    /// Record a multicast (charged once on the shared link).
+    pub fn multicast(
+        &self,
+        seq: u64,
+        stage: Stage,
+        sender: ServerId,
+        recipients: Vec<ServerId>,
+        bytes: usize,
+    ) {
+        let _ = self.tx.send((seq, Transmission { stage, sender, recipients, bytes }));
+    }
+
+    /// Record a unicast.
+    pub fn unicast(&self, seq: u64, stage: Stage, sender: ServerId, to: ServerId, bytes: usize) {
+        self.multicast(seq, stage, sender, vec![to], bytes);
+    }
+}
+
+/// Collector side of the channel-backed shared link.
+pub struct SharedBus {
+    tx: mpsc::Sender<(u64, Transmission)>,
+    rx: mpsc::Receiver<(u64, Transmission)>,
+}
+
+impl Default for SharedBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SharedBus {
+    /// New collector with no recorders yet.
+    pub fn new() -> Self {
+        let (tx, rx) = mpsc::channel();
+        SharedBus { tx, rx }
+    }
+
+    /// A new recorder handle for one worker thread.
+    pub fn recorder(&self) -> BusRecorder {
+        BusRecorder { tx: self.tx.clone() }
+    }
+
+    /// Drain every record and fold them, ordered by sequence number, into
+    /// a plain [`Bus`]. Call only after all [`BusRecorder`] clones have
+    /// been dropped (i.e. the worker threads have exited) — otherwise
+    /// this would block waiting for more records.
+    pub fn collect(self) -> Bus {
+        drop(self.tx);
+        let mut records: Vec<(u64, Transmission)> = self.rx.iter().collect();
+        records.sort_by_key(|(seq, _)| *seq);
+        let mut bus = Bus::new();
+        for (_, t) in records {
+            bus.multicast(t.stage, t.sender, t.recipients, t.bytes);
+        }
+        bus
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +258,41 @@ mod tests {
         bus.reset();
         assert_eq!(bus.total_bytes(), 0);
         assert!(bus.ledger().is_empty());
+    }
+
+    #[test]
+    fn shared_bus_orders_by_sequence_across_threads() {
+        // 8 threads record in scrambled wall-clock order; the collected
+        // ledger must come out in schedule order with exact bytes.
+        let shared = SharedBus::new();
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let rec = shared.recorder();
+                s.spawn(move || {
+                    // Higher thread ids record *earlier* sequence numbers.
+                    let seq = 7 - t;
+                    rec.multicast(seq, Stage::Stage1, t as usize, vec![0, 1], (seq + 1) as usize);
+                });
+            }
+        });
+        let bus = shared.collect();
+        assert_eq!(bus.ledger().len(), 8);
+        for (i, tr) in bus.ledger().iter().enumerate() {
+            assert_eq!(tr.bytes, i + 1, "ledger not in sequence order");
+            assert_eq!(tr.sender, 7 - i);
+        }
+        assert_eq!(bus.total_bytes(), (1..=8).sum::<usize>());
+    }
+
+    #[test]
+    fn shared_bus_unicast_records_single_recipient() {
+        let shared = SharedBus::new();
+        let rec = shared.recorder();
+        rec.unicast(0, Stage::Stage3, 2, 5, 64);
+        drop(rec);
+        let bus = shared.collect();
+        assert_eq!(bus.ledger().len(), 1);
+        assert_eq!(bus.ledger()[0].recipients, vec![5]);
+        assert_eq!(bus.stage_bytes(Stage::Stage3), 64);
     }
 }

@@ -1,10 +1,21 @@
 //! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO **text**,
 //! see `python/compile/aot.py`) and executes them on the map path.
 //!
-//! ## Threading model
+//! ## Feature gating
+//!
+//! The real runtime depends on the external `xla` crate and is compiled
+//! only with the `pjrt` cargo feature (which requires adding that
+//! dependency — this workspace builds offline by default). Without the
+//! feature, [`PjrtShardCompute`] is a stub whose constructor returns a
+//! typed [`CamrError::Runtime`] error, so every call site (CLI
+//! `--artifact`, the matvec example) degrades gracefully to the native
+//! mapper. [`ArtifactMeta`] and [`meta_path_for`] are always available —
+//! artifact metadata is plain JSON and needs no accelerator.
+//!
+//! ## Threading model (with `pjrt`)
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
-//! `Sync`), while the engine's map phase fans out across rayon workers.
+//! `Sync`), while the engine's map phase fans out across worker threads.
 //! We therefore run PJRT on a dedicated **service thread** that owns the
 //! client and all compiled executables; map workers submit shard-product
 //! requests over a channel and block on the reply. This keeps all PJRT
@@ -18,8 +29,6 @@ use crate::error::{CamrError, Result};
 use crate::util::json::get_field;
 use crate::workload::matvec::ShardCompute;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc as smpsc;
-use std::sync::Mutex;
 
 /// Metadata emitted by `python/compile/aot.py` alongside each artifact.
 #[derive(Debug, Clone)]
@@ -51,96 +60,6 @@ impl ArtifactMeta {
     }
 }
 
-/// A request to the service thread.
-enum Request {
-    /// Compute `A_shard (m×cols) · x_shard` and reply with the m-vector.
-    MatVec { a: Vec<f32>, x: Vec<f32>, reply: smpsc::Sender<Result<Vec<f32>>> },
-    /// Shut down.
-    Stop,
-}
-
-/// Handle to the PJRT service thread.
-///
-/// Cloneable-ish via `Arc`; `Send + Sync` because it only holds a
-/// mutex-guarded channel sender.
-pub struct PjrtService {
-    tx: Mutex<smpsc::Sender<Request>>,
-    meta: ArtifactMeta,
-    join: Option<std::thread::JoinHandle<()>>,
-}
-
-impl PjrtService {
-    /// Load `<artifact>.hlo.txt` + `<artifact>.meta.json`, compile on the
-    /// PJRT CPU client, and start the service thread.
-    ///
-    /// `artifact` is the path to the `.hlo.txt` file; the meta file is
-    /// derived by replacing the extension.
-    pub fn start(artifact: &Path) -> Result<Self> {
-        let meta_path = meta_path_for(artifact);
-        let meta_text = std::fs::read_to_string(&meta_path).map_err(|e| {
-            CamrError::Runtime(format!("read {}: {e}", meta_path.display()))
-        })?;
-        let meta = ArtifactMeta::parse(&meta_text)?;
-        if meta.dtype != "f32" {
-            return Err(CamrError::Runtime(format!(
-                "unsupported artifact dtype {}",
-                meta.dtype
-            )));
-        }
-        let (tx, rx) = smpsc::channel::<Request>();
-        let artifact = artifact.to_path_buf();
-        let (ready_tx, ready_rx) = smpsc::channel::<Result<()>>();
-        let meta_thread = meta.clone();
-        let join = std::thread::Builder::new()
-            .name("pjrt-service".into())
-            .spawn(move || service_main(artifact, meta_thread, rx, ready_tx))
-            .map_err(|e| CamrError::Runtime(format!("spawn pjrt thread: {e}")))?;
-        // Wait for compile to finish (or fail) before returning.
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(e),
-            Err(_) => return Err(CamrError::Runtime("pjrt service died during init".into())),
-        }
-        Ok(PjrtService { tx: Mutex::new(tx), meta, join: Some(join) })
-    }
-
-    /// Artifact metadata (shapes).
-    pub fn meta(&self) -> &ArtifactMeta {
-        &self.meta
-    }
-
-    /// Execute one shard product on the service thread.
-    pub fn matvec(&self, a: &[f32], x: &[f32]) -> Result<Vec<f32>> {
-        if x.len() != self.meta.cols || a.len() != self.meta.m * self.meta.cols {
-            return Err(CamrError::Runtime(format!(
-                "shard shape {}×{} does not match artifact {}×{}",
-                a.len() / x.len().max(1),
-                x.len(),
-                self.meta.m,
-                self.meta.cols
-            )));
-        }
-        let (rtx, rrx) = smpsc::channel();
-        {
-            let tx = self.tx.lock().map_err(|_| CamrError::Runtime("pjrt tx poisoned".into()))?;
-            tx.send(Request::MatVec { a: a.to_vec(), x: x.to_vec(), reply: rtx })
-                .map_err(|_| CamrError::Runtime("pjrt service stopped".into()))?;
-        }
-        rrx.recv().map_err(|_| CamrError::Runtime("pjrt service dropped reply".into()))?
-    }
-}
-
-impl Drop for PjrtService {
-    fn drop(&mut self) {
-        if let Ok(tx) = self.tx.lock() {
-            let _ = tx.send(Request::Stop);
-        }
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
 /// The meta file path for an artifact: `model.hlo.txt → model.meta.json`.
 pub fn meta_path_for(artifact: &Path) -> PathBuf {
     let stem = artifact
@@ -151,69 +70,178 @@ pub fn meta_path_for(artifact: &Path) -> PathBuf {
     artifact.with_file_name(format!("{stem}.meta.json"))
 }
 
-/// Service thread main: owns the client + executable, serves requests.
-fn service_main(
-    artifact: PathBuf,
-    meta: ArtifactMeta,
-    rx: smpsc::Receiver<Request>,
-    ready: smpsc::Sender<Result<()>>,
-) {
-    let setup = (|| -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| CamrError::Runtime(format!("pjrt cpu client: {e}")))?;
-        let proto = xla::HloModuleProto::from_text_file(&artifact)
-            .map_err(|e| CamrError::Runtime(format!("load {}: {e}", artifact.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| CamrError::Runtime(format!("compile artifact: {e}")))?;
-        Ok((client, exe))
-    })();
-    let (_client, exe) = match setup {
-        Ok(pair) => {
-            let _ = ready.send(Ok(()));
-            pair
+#[cfg(feature = "pjrt")]
+mod service {
+    use super::ArtifactMeta;
+    use crate::error::{CamrError, Result};
+    use std::path::{Path, PathBuf};
+    use std::sync::mpsc as smpsc;
+    use std::sync::Mutex;
+
+    /// A request to the service thread.
+    enum Request {
+        /// Compute `A_shard (m×cols) · x_shard` and reply with the m-vector.
+        MatVec { a: Vec<f32>, x: Vec<f32>, reply: smpsc::Sender<Result<Vec<f32>>> },
+        /// Shut down.
+        Stop,
+    }
+
+    /// Handle to the PJRT service thread.
+    ///
+    /// Cloneable-ish via `Arc`; `Send + Sync` because it only holds a
+    /// mutex-guarded channel sender.
+    pub struct PjrtService {
+        tx: Mutex<smpsc::Sender<Request>>,
+        meta: ArtifactMeta,
+        join: Option<std::thread::JoinHandle<()>>,
+    }
+
+    impl PjrtService {
+        /// Load `<artifact>.hlo.txt` + `<artifact>.meta.json`, compile on the
+        /// PJRT CPU client, and start the service thread.
+        ///
+        /// `artifact` is the path to the `.hlo.txt` file; the meta file is
+        /// derived by replacing the extension.
+        pub fn start(artifact: &Path) -> Result<Self> {
+            let meta_path = super::meta_path_for(artifact);
+            let meta_text = std::fs::read_to_string(&meta_path).map_err(|e| {
+                CamrError::Runtime(format!("read {}: {e}", meta_path.display()))
+            })?;
+            let meta = ArtifactMeta::parse(&meta_text)?;
+            if meta.dtype != "f32" {
+                return Err(CamrError::Runtime(format!(
+                    "unsupported artifact dtype {}",
+                    meta.dtype
+                )));
+            }
+            let (tx, rx) = smpsc::channel::<Request>();
+            let artifact = artifact.to_path_buf();
+            let (ready_tx, ready_rx) = smpsc::channel::<Result<()>>();
+            let meta_thread = meta.clone();
+            let join = std::thread::Builder::new()
+                .name("pjrt-service".into())
+                .spawn(move || service_main(artifact, meta_thread, rx, ready_tx))
+                .map_err(|e| CamrError::Runtime(format!("spawn pjrt thread: {e}")))?;
+            // Wait for compile to finish (or fail) before returning.
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(CamrError::Runtime("pjrt service died during init".into()))
+                }
+            }
+            Ok(PjrtService { tx: Mutex::new(tx), meta, join: Some(join) })
         }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
+
+        /// Artifact metadata (shapes).
+        pub fn meta(&self) -> &ArtifactMeta {
+            &self.meta
         }
-    };
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Stop => break,
-            Request::MatVec { a, x, reply } => {
-                let result = (|| -> Result<Vec<f32>> {
-                    let a_lit = xla::Literal::vec1(&a)
-                        .reshape(&[meta.m as i64, meta.cols as i64])
-                        .map_err(|e| CamrError::Runtime(format!("reshape A: {e}")))?;
-                    let x_lit = xla::Literal::vec1(&x)
-                        .reshape(&[meta.cols as i64])
-                        .map_err(|e| CamrError::Runtime(format!("reshape x: {e}")))?;
-                    let bufs = exe
-                        .execute::<xla::Literal>(&[a_lit, x_lit])
-                        .map_err(|e| CamrError::Runtime(format!("execute: {e}")))?;
-                    let lit = bufs[0][0]
-                        .to_literal_sync()
-                        .map_err(|e| CamrError::Runtime(format!("fetch result: {e}")))?;
-                    // aot.py lowers with return_tuple=True → 1-tuple.
-                    let out = lit
-                        .to_tuple1()
-                        .map_err(|e| CamrError::Runtime(format!("untuple: {e}")))?;
-                    out.to_vec::<f32>()
-                        .map_err(|e| CamrError::Runtime(format!("to_vec: {e}")))
-                })();
-                let _ = reply.send(result);
+
+        /// Execute one shard product on the service thread.
+        pub fn matvec(&self, a: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+            if x.len() != self.meta.cols || a.len() != self.meta.m * self.meta.cols {
+                return Err(CamrError::Runtime(format!(
+                    "shard shape {}×{} does not match artifact {}×{}",
+                    a.len() / x.len().max(1),
+                    x.len(),
+                    self.meta.m,
+                    self.meta.cols
+                )));
+            }
+            let (rtx, rrx) = smpsc::channel();
+            {
+                let tx = self
+                    .tx
+                    .lock()
+                    .map_err(|_| CamrError::Runtime("pjrt tx poisoned".into()))?;
+                tx.send(Request::MatVec { a: a.to_vec(), x: x.to_vec(), reply: rtx })
+                    .map_err(|_| CamrError::Runtime("pjrt service stopped".into()))?;
+            }
+            rrx.recv().map_err(|_| CamrError::Runtime("pjrt service dropped reply".into()))?
+        }
+    }
+
+    impl Drop for PjrtService {
+        fn drop(&mut self) {
+            if let Ok(tx) = self.tx.lock() {
+                let _ = tx.send(Request::Stop);
+            }
+            if let Some(j) = self.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    /// Service thread main: owns the client + executable, serves requests.
+    fn service_main(
+        artifact: PathBuf,
+        meta: ArtifactMeta,
+        rx: smpsc::Receiver<Request>,
+        ready: smpsc::Sender<Result<()>>,
+    ) {
+        let setup = (|| -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| CamrError::Runtime(format!("pjrt cpu client: {e}")))?;
+            let proto = xla::HloModuleProto::from_text_file(&artifact)
+                .map_err(|e| CamrError::Runtime(format!("load {}: {e}", artifact.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| CamrError::Runtime(format!("compile artifact: {e}")))?;
+            Ok((client, exe))
+        })();
+        let (_client, exe) = match setup {
+            Ok(pair) => {
+                let _ = ready.send(Ok(()));
+                pair
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        };
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Stop => break,
+                Request::MatVec { a, x, reply } => {
+                    let result = (|| -> Result<Vec<f32>> {
+                        let a_lit = xla::Literal::vec1(&a)
+                            .reshape(&[meta.m as i64, meta.cols as i64])
+                            .map_err(|e| CamrError::Runtime(format!("reshape A: {e}")))?;
+                        let x_lit = xla::Literal::vec1(&x)
+                            .reshape(&[meta.cols as i64])
+                            .map_err(|e| CamrError::Runtime(format!("reshape x: {e}")))?;
+                        let bufs = exe
+                            .execute::<xla::Literal>(&[a_lit, x_lit])
+                            .map_err(|e| CamrError::Runtime(format!("execute: {e}")))?;
+                        let lit = bufs[0][0]
+                            .to_literal_sync()
+                            .map_err(|e| CamrError::Runtime(format!("fetch result: {e}")))?;
+                        // aot.py lowers with return_tuple=True → 1-tuple.
+                        let out = lit
+                            .to_tuple1()
+                            .map_err(|e| CamrError::Runtime(format!("untuple: {e}")))?;
+                        out.to_vec::<f32>()
+                            .map_err(|e| CamrError::Runtime(format!("to_vec: {e}")))
+                    })();
+                    let _ = reply.send(result);
+                }
             }
         }
     }
 }
 
+#[cfg(feature = "pjrt")]
+pub use service::PjrtService;
+
 /// [`ShardCompute`] backend that runs the AOT Pallas/JAX kernel via PJRT.
+#[cfg(feature = "pjrt")]
 pub struct PjrtShardCompute {
     service: PjrtService,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtShardCompute {
     /// Start a service for the artifact and wrap it.
     pub fn new(artifact: &Path) -> Result<Self> {
@@ -226,6 +254,7 @@ impl PjrtShardCompute {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ShardCompute for PjrtShardCompute {
     fn partial_product(&self, a_shard: &[f32], x_shard: &[f32], m: usize) -> Result<Vec<f32>> {
         if m != self.service.meta().m {
@@ -239,6 +268,43 @@ impl ShardCompute for PjrtShardCompute {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+/// Stub [`ShardCompute`] backend used when the crate is built without the
+/// `pjrt` feature: construction fails with a typed error so callers fall
+/// back to [`crate::workload::matvec::NativeShardCompute`].
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtShardCompute {
+    _unconstructable: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtShardCompute {
+    /// Always errors: the crate was built without PJRT support.
+    pub fn new(artifact: &Path) -> Result<Self> {
+        Err(CamrError::Runtime(format!(
+            "cannot load {}: camr was built without the `pjrt` feature (add the `xla` \
+             dependency and enable it, or drop --artifact to use the native mapper)",
+            artifact.display()
+        )))
+    }
+
+    /// The artifact's shard shape — unreachable on the stub, which cannot
+    /// be constructed.
+    pub fn shape(&self) -> (usize, usize) {
+        (0, 0)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ShardCompute for PjrtShardCompute {
+    fn partial_product(&self, _a: &[f32], _x: &[f32], _m: usize) -> Result<Vec<f32>> {
+        Err(CamrError::Runtime("pjrt backend unavailable (built without `pjrt`)".into()))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-unavailable"
     }
 }
 
@@ -271,6 +337,13 @@ mod tests {
         );
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_backend_errors_cleanly() {
+        let err = PjrtShardCompute::new(Path::new("artifacts/missing.hlo.txt")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
+
     // PJRT-backed execution tests live in rust/tests/pjrt_runtime.rs —
-    // they need `make artifacts` to have run first.
+    // they need `make artifacts` to have run first and the `pjrt` feature.
 }

@@ -1,0 +1,89 @@
+//! Golden reproduction tests: the paper's Table III minimum job counts
+//! and the per-stage loads of Example 1 (`K = 6, q = 2, k = 3, J = 4`),
+//! measured on both execution engines.
+
+use camr::analysis::jobs::{binomial, table3, JobRequirement};
+use camr::analysis::load;
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
+use camr::workload::wordcount::WordCountWorkload;
+
+#[test]
+fn golden_table3_minimum_job_counts() {
+    // Table III, K = 100: (k, J_CAMR, J_CCDC).
+    let golden: [(usize, u128, u128); 3] =
+        [(2, 50, 4_950), (4, 15_625, 3_921_225), (5, 160_000, 75_287_520)];
+    let rows = table3();
+    assert_eq!(rows.len(), golden.len());
+    for (row, (k, camr, ccdc)) in rows.iter().zip(golden) {
+        assert_eq!(row.k, k);
+        assert_eq!(row.servers, 100);
+        assert_eq!(row.camr, camr, "k={k}: J_CAMR");
+        assert_eq!(row.ccdc, ccdc, "k={k}: J_CCDC");
+        assert!(row.ratio() > 1.0);
+    }
+    // The §III-C running example: CCDC needs C(6,3) = 20 jobs, CAMR 4.
+    assert_eq!(binomial(6, 3), 20);
+    let r = JobRequirement::for_params(3, 2);
+    assert_eq!((r.camr, r.ccdc), (4, 20));
+}
+
+#[test]
+fn golden_example1_parameters_and_per_stage_loads() {
+    // K = 6, q = 2, k = 3 → J = 4 jobs, N = 6 subfiles, μ = 1/3.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    assert_eq!(cfg.servers(), 6);
+    assert_eq!(cfg.jobs(), 4);
+    assert_eq!(cfg.subfiles(), 6);
+    assert!((cfg.storage_fraction() - 1.0 / 3.0).abs() < 1e-12);
+
+    // Closed forms: L1 = 1/4, L2 = 1/4, L3 = 1/2.
+    let forms = load::camr_stages(3, 2);
+    assert!((forms.stage1 - 0.25).abs() < 1e-12);
+    assert!((forms.stage2 - 0.25).abs() < 1e-12);
+    assert!((forms.stage3 - 0.50).abs() < 1e-12);
+
+    // Measured byte-exactly on both engines with the Example-1 workload.
+    let golden_stage_loads = [0.25, 0.25, 0.50];
+    let souts = {
+        let wl = WordCountWorkload::example1(&cfg);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.run().unwrap()
+    };
+    let pouts = {
+        let wl = WordCountWorkload::example1(&cfg);
+        let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.run().unwrap()
+    };
+    for out in [&souts, &pouts] {
+        assert!(out.verified);
+        for (i, want) in golden_stage_loads.iter().enumerate() {
+            assert!(
+                (out.stage_load(i + 1) - want).abs() < 1e-15,
+                "stage {}: {} != {want}",
+                i + 1,
+                out.stage_load(i + 1)
+            );
+        }
+        assert!((out.total_load() - 1.0).abs() < 1e-15);
+        // Computation load: each subfile mapped by k-1 = 2 servers.
+        assert_eq!(out.map_invocations, 2 * 4 * 6);
+    }
+    assert_eq!(souts.stage_bytes, pouts.stage_bytes);
+}
+
+#[test]
+fn golden_loads_across_table_parameters() {
+    // Spot-check the §IV closed form at Table-III-style parameters
+    // without instantiating K = 100 clusters.
+    for (k, q, expect) in [
+        (2usize, 50usize, (2.0 * 49.0 + 1.0) / 50.0),
+        (4, 25, (4.0 * 24.0 + 1.0) / (25.0 * 3.0)),
+        (5, 20, (5.0 * 19.0 + 1.0) / (20.0 * 4.0)),
+    ] {
+        assert!((load::camr_total(k, q) - expect).abs() < 1e-12, "k={k} q={q}");
+        // §V: CCDC at matched μ gives the identical load.
+        assert!((load::ccdc_total(k - 1, k * q) - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Serial vs thread-per-worker engine equivalence, plus concurrency
+//! determinism: for the same config and workload seed the two engines
+//! must produce byte-identical shared-link ledgers (same transmissions,
+//! same order, same byte counts), identical verified outputs, and the
+//! parallel engine must be deterministic across repeated runs — any
+//! data race in the channel-backed bus or worker stores shows up here.
+
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
+use camr::net::{Bus, Stage};
+use camr::workload::synth::SyntheticWorkload;
+use camr::workload::wordcount::WordCountWorkload;
+use camr::workload::Workload;
+
+/// The full ledger as comparable values: (stage, sender, recipients, bytes).
+fn fingerprint(bus: &Bus) -> Vec<(Stage, usize, Vec<usize>, usize)> {
+    bus.ledger()
+        .iter()
+        .map(|t| (t.stage, t.sender, t.recipients.clone(), t.bytes))
+        .collect()
+}
+
+/// All reduced outputs in deterministic (job, func) order.
+fn outputs_of(
+    cfg: &SystemConfig,
+    get: impl Fn(usize, usize) -> Option<Vec<u8>>,
+) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    for j in 0..cfg.jobs() {
+        for f in 0..cfg.functions() {
+            out.push(get(j, f).expect("output present"));
+        }
+    }
+    out
+}
+
+#[test]
+fn ledgers_byte_identical_across_configs() {
+    // Example 1 plus three more (q, k) points, as the acceptance bar asks.
+    for (k, q, gamma, seed) in [
+        (3usize, 2usize, 2usize, 0xE1u64), // Example 1 shape
+        (2, 3, 1, 0xE2),
+        (3, 3, 2, 0xE3),
+        (4, 2, 1, 0xE4),
+        (2, 5, 2, 0xE5),
+    ] {
+        let cfg = SystemConfig::new(k, q, gamma).unwrap();
+        let mut serial =
+            Engine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, seed))).unwrap();
+        let sout = serial.run().unwrap();
+        let mut par = ParallelEngine::new(
+            cfg.clone(),
+            Box::new(SyntheticWorkload::new(&cfg, seed)),
+        )
+        .unwrap();
+        let pout = par.run().unwrap();
+
+        assert!(sout.verified && pout.verified, "k={k} q={q}");
+        assert_eq!(sout.stage_bytes, pout.stage_bytes, "k={k} q={q}: stage bytes");
+        assert_eq!(
+            fingerprint(&serial.bus),
+            fingerprint(&par.bus),
+            "k={k} q={q}: full ledger (order, senders, recipients, bytes)"
+        );
+        assert_eq!(sout.map_invocations, pout.map_invocations, "k={k} q={q}");
+        let souts = outputs_of(&cfg, |j, f| serial.output(j, f).cloned());
+        let pouts = outputs_of(&cfg, |j, f| par.output(j, f).cloned());
+        assert_eq!(souts, pouts, "k={k} q={q}: reduced outputs");
+    }
+}
+
+#[test]
+fn parallel_engine_deterministic_over_10_runs() {
+    // Same config, same seed, 10 fresh engines: the ledger and every
+    // verified output must be identical each time — catches data races
+    // in the channel-backed bus and the barrier structure.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let run_once = || {
+        let wl = SyntheticWorkload::new(&cfg, 0xD0);
+        let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        assert!(out.verified);
+        (fingerprint(&e.bus), outputs_of(&cfg, |j, f| e.output(j, f).cloned()))
+    };
+    let (ledger0, outputs0) = run_once();
+    assert!(!ledger0.is_empty());
+    for i in 1..10 {
+        let (ledger, outputs) = run_once();
+        assert_eq!(ledger, ledger0, "run {i}: ledger diverged");
+        assert_eq!(outputs, outputs0, "run {i}: outputs diverged");
+    }
+}
+
+#[test]
+fn parallel_wordcount_example1_measures_paper_loads() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = WordCountWorkload::example1(&cfg);
+    let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+    assert_eq!(e.bus.stage_bytes(Stage::Stage1), 6 * cfg.value_bytes);
+    assert_eq!(e.bus.stage_bytes(Stage::Stage2), 6 * cfg.value_bytes);
+    assert_eq!(e.bus.stage_bytes(Stage::Stage3), 12 * cfg.value_bytes);
+    assert!((out.total_load() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn parallel_multi_round_matches_serial() {
+    let cfg = SystemConfig::with_options(3, 2, 2, 2, 64).unwrap();
+    let mut serial =
+        Engine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, 5))).unwrap();
+    let sout = serial.run().unwrap();
+    let mut par =
+        ParallelEngine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, 5))).unwrap();
+    let pout = par.run().unwrap();
+    assert!(pout.verified);
+    assert_eq!(sout.stage_bytes, pout.stage_bytes);
+    assert_eq!(fingerprint(&serial.bus), fingerprint(&par.bus));
+    assert_eq!(pout.outputs, cfg.jobs() * cfg.functions());
+}
+
+/// A workload whose map fails for one subfile — the engine must surface
+/// the error instead of deadlocking at a barrier or channel receive.
+struct FailingMapWorkload {
+    inner: SyntheticWorkload,
+}
+
+impl Workload for FailingMapWorkload {
+    fn name(&self) -> &str {
+        "failing-map"
+    }
+    fn aggregator(&self) -> &dyn camr::agg::Aggregator {
+        self.inner.aggregator()
+    }
+    fn map_subfile(&self, job: usize, subfile: usize) -> camr::error::Result<Vec<Vec<u8>>> {
+        if job == 1 && subfile == 2 {
+            return Err(camr::error::CamrError::Runtime("injected map failure".into()));
+        }
+        self.inner.map_subfile(job, subfile)
+    }
+}
+
+#[test]
+fn map_failure_surfaces_as_error_not_deadlock() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = FailingMapWorkload { inner: SyntheticWorkload::new(&cfg, 8) };
+    let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+    let err = e.run().expect_err("run must fail");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("injected map failure") || msg.contains("aborted"),
+        "unexpected error: {msg}"
+    );
+}
+
+#[test]
+fn parallel_engine_recovers_after_failed_run() {
+    // A failed run must not poison the engine: a subsequent clean run on
+    // a fresh engine of the same shape still verifies.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    {
+        let wl = FailingMapWorkload { inner: SyntheticWorkload::new(&cfg, 8) };
+        let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+        assert!(e.run().is_err());
+    }
+    let wl = SyntheticWorkload::new(&cfg, 8);
+    let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+    assert!(e.run().unwrap().verified);
+}

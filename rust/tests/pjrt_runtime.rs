@@ -1,9 +1,12 @@
 //! PJRT runtime integration: load the AOT JAX/Pallas artifact, execute
 //! it from rust, and run the full engine with the PJRT-backed mapper.
 //!
-//! These tests need `make artifacts` to have produced
-//! `artifacts/map_kernel.hlo.txt`; they are skipped (with a message)
-//! when the artifact is absent so `cargo test` works pre-build too.
+//! These tests need the crate to be built with the `pjrt` feature (which
+//! requires the external `xla` dependency) and `make artifacts` to have
+//! produced `artifacts/map_kernel.hlo.txt`; without the feature the whole
+//! file compiles to nothing, and without the artifact each test skips
+//! with a message so `cargo test` works pre-build too.
+#![cfg(feature = "pjrt")]
 
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;

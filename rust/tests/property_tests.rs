@@ -8,6 +8,7 @@ use camr::agg::{lanes, Aggregator, MaxU64, SumF32, SumU64, XorBytes};
 use camr::analysis::load;
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
 use camr::design::{verify::verify_design, ResolvableDesign};
 use camr::placement::{storage::audit_storage, Placement};
 use camr::shuffle::multicast::GroupPlan;
@@ -174,6 +175,61 @@ fn prop_stage2_groups_pin_unique_jobs() {
                 assert!(!d.owns(g[i], job));
             }
         }
+    }
+}
+
+#[test]
+fn prop_total_load_matches_closed_form_on_qk_grid() {
+    // Deterministic sweep over a small (q, k) grid: the measured total
+    // load must equal (k(q-1)+1)/(q(k-1)) within 1e-9. B is chosen as a
+    // multiple of 8(k-1) so packets split exactly (u64 lanes, no
+    // padding slack).
+    for k in 2..=4usize {
+        for q in 2..=4usize {
+            let bytes = (k - 1) * 8 * 2;
+            let cfg = SystemConfig::with_options(k, q, 2, 1, bytes).unwrap();
+            let wl = SyntheticWorkload::new(&cfg, (k * 31 + q) as u64);
+            let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+            let out = e.run().unwrap();
+            assert!(out.verified, "k={k} q={q}");
+            let expect = (k as f64 * (q as f64 - 1.0) + 1.0) / (q as f64 * (k as f64 - 1.0));
+            assert!(
+                (out.total_load() - expect).abs() < 1e-9,
+                "k={k} q={q}: measured {} expected {expect}",
+                out.total_load()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_stage_bytes_identical_to_serial() {
+    // For random (k, q, γ, B, seed): the thread-per-worker engine's
+    // per-stage byte ledger must be byte-identical to the serial
+    // engine's for the same seed and workload, and both must verify.
+    let mut rng = SplitMix64::new(0x9A7A11E1);
+    for case in 0..12 {
+        let (k, q) = draw_kq(&mut rng);
+        let gamma = rng.range(1, 4);
+        let bytes = (k - 1) * 8 * rng.range(1, 4);
+        let seed = rng.next_u64();
+        let cfg = SystemConfig::with_options(k, q, gamma, 1, bytes).unwrap();
+        let sout = {
+            let wl = SyntheticWorkload::new(&cfg, seed);
+            let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+            e.run().unwrap()
+        };
+        let pout = {
+            let wl = SyntheticWorkload::new(&cfg, seed);
+            let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+            e.run().unwrap()
+        };
+        assert!(sout.verified && pout.verified, "case {case}: k={k} q={q}");
+        assert_eq!(
+            sout.stage_bytes, pout.stage_bytes,
+            "case {case}: k={k} q={q} γ={gamma} B={bytes} seed={seed:#x}"
+        );
+        assert_eq!(sout.map_invocations, pout.map_invocations, "case {case}");
     }
 }
 
