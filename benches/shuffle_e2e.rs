@@ -54,6 +54,27 @@ fn main() {
         );
     }
 
+    println!("\n== Pooled vs unpooled shuffle data plane (serial engine) ==\n");
+    // The pooled plane recycles Δ/scratch buffers through shuffle::buf;
+    // the unpooled rows run the legacy allocate-per-packet path. The
+    // ledgers are byte-identical (rust/tests/golden_ledger.rs); only
+    // allocator traffic and wall time differ. xor_throughput.rs records
+    // the same comparison into BENCH_shuffle.json.
+    for (k, q, bytes) in [(3usize, 4usize, 4096usize), (4, 3, 4096), (3, 2, 65536)] {
+        for pooling in [true, false] {
+            let cfg = SystemConfig::with_options(k, q, 2, 1, bytes).unwrap();
+            let tag = if pooling { "pooled" } else { "unpooled" };
+            let name = format!("e2e_{tag}_k{k}_q{q}_B{bytes} (K={})", cfg.servers());
+            b.run(&name, move || {
+                let wl = SyntheticWorkload::new(&cfg, 7);
+                let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+                e.verify = false;
+                e.pooling = pooling;
+                e.run().unwrap().stage_bytes
+            });
+        }
+    }
+
     println!("\n== Thread-per-worker engine (same pipeline, barrier-synchronized) ==\n");
     for (k, q) in [(3usize, 2usize), (3, 4), (4, 3)] {
         let cfg = SystemConfig::with_options(k, q, 2, 1, 1024).unwrap();

@@ -1,0 +1,131 @@
+//! XOR and buffer-pool throughput: the word-wise hot path vs the naive
+//! per-byte reference, pool acquire/release vs fresh allocation, and a
+//! pooled-vs-unpooled end-to-end shuffle comparison.
+//!
+//! Besides the human-readable BENCH lines, this bench writes
+//! `BENCH_shuffle.json` (machine-readable) so later PRs can diff the
+//! shuffle data plane's throughput trajectory and catch regressions.
+
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::shuffle::buf::{self, BufferPool};
+use camr::util::bench::Bench;
+use camr::util::json::Json;
+use camr::workload::synth::SyntheticWorkload;
+
+/// Bytes per nanosecond == GB/s.
+fn gbps(bytes: usize, mean_ns: f64) -> f64 {
+    if mean_ns > 0.0 {
+        bytes as f64 / mean_ns
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    let b = Bench::new();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("CAMR_BENCH_QUICK").is_ok();
+
+    println!("== Word-wise vs per-byte XOR (xor_into vs xor_into_bytewise) ==\n");
+    let sizes: &[(usize, &str)] =
+        &[(4 << 10, "4KiB"), (64 << 10, "64KiB"), (1 << 20, "1MiB"), (4 << 20, "4MiB")];
+    let mut xor_rows = Vec::new();
+    for &(n, label) in sizes {
+        let src: Vec<u8> = (0..n).map(|i| (i.wrapping_mul(31) + 7) as u8).collect();
+        let mut dst = vec![0u8; n];
+        let word_ns = b.run(&format!("xor_wordwise_{label}"), || {
+            buf::xor_into(&mut dst, &src).unwrap();
+            dst[0]
+        });
+        let byte_ns = b.run(&format!("xor_bytewise_{label}"), || {
+            buf::xor_into_bytewise(&mut dst, &src).unwrap();
+            dst[0]
+        });
+        let speedup = if word_ns > 0.0 { byte_ns / word_ns } else { 0.0 };
+        println!(
+            "  {label}: word-wise {:.2} GB/s, per-byte {:.2} GB/s -> {speedup:.1}x\n",
+            gbps(n, word_ns),
+            gbps(n, byte_ns)
+        );
+        xor_rows.push(Json::obj(vec![
+            ("label", Json::Str(label.to_string())),
+            ("bytes", Json::UInt(n as u128)),
+            ("wordwise_mean_ns", Json::Num(word_ns)),
+            ("bytewise_mean_ns", Json::Num(byte_ns)),
+            ("wordwise_gbps", Json::Num(gbps(n, word_ns))),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    println!("== Buffer pool vs fresh allocation (1 MiB buffers) ==\n");
+    let pool = BufferPool::new();
+    drop(pool.acquire(1 << 20)); // warm the free list
+    // The engines' hot paths use acquire_unzeroed (encode fill(0)s and
+    // decode copy_from_slices before reading), so that is the
+    // production number; the zeroing acquire is reported alongside.
+    let pool_ns = b.run("pool_acquire_unzeroed_1MiB", || {
+        let mut buf = pool.acquire_unzeroed(1 << 20);
+        // Touch the buffer like the encoder does (first word write).
+        buf.as_mut_slice()[0] = 1;
+        buf.len()
+    });
+    let pool_zeroed_ns = b.run("pool_acquire_zeroed_1MiB", || {
+        let buf = pool.acquire(1 << 20);
+        buf.len()
+    });
+    let alloc_ns = b.run("fresh_vec_alloc_1MiB", || {
+        let mut v = vec![0u8; 1 << 20];
+        v[0] = 1;
+        v.len()
+    });
+    println!();
+
+    println!("== End-to-end shuffle: pooled vs unpooled data plane ==\n");
+    let mut e2e_rows = Vec::new();
+    for (k, q, bytes) in [(3usize, 4usize, 4096usize), (4, 3, 4096)] {
+        let cfg = SystemConfig::with_options(k, q, 2, 1, bytes).unwrap();
+        let mut means = [0f64; 2];
+        for (i, pooling) in [true, false].into_iter().enumerate() {
+            let cfg2 = cfg.clone();
+            let tag = if pooling { "pooled" } else { "unpooled" };
+            means[i] = b.run(&format!("shuffle_{tag}_k{k}_q{q}_B{bytes}"), move || {
+                let wl = SyntheticWorkload::new(&cfg2, 7);
+                let mut e = Engine::new(cfg2.clone(), Box::new(wl)).unwrap();
+                e.verify = false;
+                e.pooling = pooling;
+                e.run().unwrap().stage_bytes
+            });
+        }
+        let speedup = if means[0] > 0.0 { means[1] / means[0] } else { 0.0 };
+        println!("  k={k} q={q} B={bytes}: pooled/unpooled e2e speedup {speedup:.2}x\n");
+        e2e_rows.push(Json::obj(vec![
+            ("k", Json::UInt(k as u128)),
+            ("q", Json::UInt(q as u128)),
+            ("value_bytes", Json::UInt(bytes as u128)),
+            ("pooled_mean_ns", Json::Num(means[0])),
+            ("unpooled_mean_ns", Json::Num(means[1])),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("shuffle_data_plane".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("xor", Json::Arr(xor_rows)),
+        (
+            "pool",
+            Json::obj(vec![
+                ("acquire_unzeroed_1MiB_mean_ns", Json::Num(pool_ns)),
+                ("acquire_zeroed_1MiB_mean_ns", Json::Num(pool_zeroed_ns)),
+                ("fresh_alloc_1MiB_mean_ns", Json::Num(alloc_ns)),
+            ]),
+        ),
+        ("e2e", Json::Arr(e2e_rows)),
+    ]);
+    let path = "BENCH_shuffle.json";
+    match std::fs::write(path, report.render() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -89,7 +89,8 @@ pub fn run_cluster(cfg: SystemConfig, workload: Arc<dyn Workload>) -> Result<Clu
                             let _ = reply.send(worker.encode_for_group(&plan));
                         }
                         Command::Decode { plan, deltas, reply } => {
-                            let _ = reply.send(worker.decode_from_group(&plan, &deltas));
+                            let _ =
+                                reply.send(worker.decode_from_group(&plan, deltas.as_slice()));
                         }
                         Command::Fuse { spec, reply } => {
                             let _ = reply

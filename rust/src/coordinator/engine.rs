@@ -20,6 +20,7 @@ use crate::agg::Value;
 use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
 use crate::net::{Bus, Stage};
+use crate::shuffle::buf::{BufferPool, PoolStats, SharedBuf};
 use crate::workload::{check_output, Workload};
 use crate::{FuncId, JobId};
 use std::collections::HashMap;
@@ -69,6 +70,11 @@ pub struct Engine {
     pub bus: Bus,
     /// Skip oracle verification (for large load-sweep runs).
     pub verify: bool,
+    /// Route shuffle buffers through the [`BufferPool`] (default). Set
+    /// to `false` to run the legacy allocate-per-packet data plane —
+    /// the ledger must be byte-identical either way (golden test).
+    pub pooling: bool,
+    pool: BufferPool,
     outputs: HashMap<(JobId, FuncId), Value>,
 }
 
@@ -84,6 +90,8 @@ impl Engine {
             workload,
             bus: Bus::new(),
             verify: true,
+            pooling: true,
+            pool: BufferPool::new(),
             outputs: HashMap::new(),
         })
     }
@@ -91,6 +99,11 @@ impl Engine {
     /// Access the system config.
     pub fn cfg(&self) -> &SystemConfig {
         &self.master.cfg
+    }
+
+    /// Counters of the shuffle buffer pool (allocation/recycle traffic).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// A reduced output (after `run`).
@@ -154,25 +167,36 @@ impl Engine {
 
     /// Run one coded stage: every member of every group broadcasts its Δ,
     /// then every member decodes its missing chunk.
+    ///
+    /// With `pooling` on (the default), the Δ buffers are checked out of
+    /// the engine's [`BufferPool`], encoded in place, shared with every
+    /// decoder, and recycled when the group finishes — the bus is still
+    /// charged the exact same byte counts as the allocate-per-packet
+    /// path, so the ledger is invariant under the data-plane choice.
     fn shuffle_stage_coded(
         &mut self,
         groups: &[crate::shuffle::multicast::GroupPlan],
         stage: Stage,
     ) -> Result<()> {
+        let pool = self.pool.clone();
         for plan in groups {
             // Encode: one broadcast per member, from local state only.
-            let mut deltas: Vec<Vec<u8>> = Vec::with_capacity(plan.members.len());
-            for (t, &m) in plan.members.iter().enumerate() {
-                let delta = self.workers[m].encode_for_group(plan)?;
+            let mut deltas: Vec<SharedBuf> = Vec::with_capacity(plan.members.len());
+            for &m in plan.members.iter() {
+                let delta =
+                    self.workers[m].encode_for_group_shared(plan, &pool, self.pooling)?;
                 let recipients: Vec<usize> =
                     plan.members.iter().copied().filter(|&x| x != m).collect();
                 self.bus.multicast(stage, m, recipients, delta.len());
-                debug_assert_eq!(t, deltas.len());
                 deltas.push(delta);
             }
             // Decode: each member reconstructs its chunk and stores it.
             for &m in &plan.members {
-                self.workers[m].decode_from_group(plan, &deltas)?;
+                if self.pooling {
+                    self.workers[m].decode_from_group_pooled(plan, &deltas, &pool)?;
+                } else {
+                    self.workers[m].decode_from_group(plan, &deltas)?;
+                }
             }
         }
         Ok(())
@@ -297,6 +321,35 @@ mod tests {
         let out = e.run().unwrap();
         assert!((out.total_load() - 1.0).abs() < 1e-12);
         assert!(out.verified);
+    }
+
+    #[test]
+    fn pooled_and_unpooled_data_planes_agree() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut pooled =
+            Engine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, 11))).unwrap();
+        assert!(pooled.pooling);
+        let pout = pooled.run().unwrap();
+        let mut legacy =
+            Engine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, 11))).unwrap();
+        legacy.pooling = false;
+        let lout = legacy.run().unwrap();
+        assert!(pout.verified && lout.verified);
+        assert_eq!(pout.stage_bytes, lout.stage_bytes);
+        for j in 0..cfg.jobs() {
+            for f in 0..cfg.functions() {
+                assert_eq!(pooled.output(j, f), legacy.output(j, f), "job {j} func {f}");
+            }
+        }
+        // The pooled plane actually pooled: buffers were acquired,
+        // recycled, and every one returned exactly once.
+        let stats = pooled.pool_stats();
+        assert!(stats.acquired > 0);
+        assert!(stats.recycled > 0, "pool never recycled: {stats:?}");
+        assert_eq!(stats.outstanding(), 0);
+        assert_eq!(stats.acquired, stats.released);
+        // The legacy plane never touched the pool.
+        assert_eq!(legacy.pool_stats().acquired, 0);
     }
 
     #[test]

@@ -36,6 +36,18 @@
 //! still charged exactly once. The property tests assert ledger equality
 //! byte for byte.
 //!
+//! ## Pooled data plane
+//!
+//! Coded `Δ` payloads live in [`crate::shuffle::buf::BufferPool`]
+//! buffers shared across all worker threads: a sender encodes once into
+//! a pooled buffer and ships the *same* payload to every group member
+//! as a cheap [`crate::shuffle::buf::SharedBuf`] clone (an `Arc` bump,
+//! not a byte copy). Decode scratch packets come from the same pool.
+//! When the last reference drops — normally after decode, or during
+//! unwinding on a failure — the backing store returns to the free list
+//! exactly once. None of this changes what the bus records: the ledger
+//! stays byte-identical to the serial engine's, pooling on or off.
+//!
 //! ## Failure handling
 //!
 //! A worker that hits an error (e.g. a failing map kernel) raises a
@@ -52,6 +64,7 @@ use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
 use crate::net::{Bus, BusRecorder, SharedBus, Stage};
 use crate::placement::Placement;
+use crate::shuffle::buf::{BufferPool, PoolStats, SharedBuf};
 use crate::shuffle::multicast::GroupPlan;
 use crate::workload::Workload;
 use crate::{FuncId, JobId, ServerId};
@@ -63,8 +76,10 @@ use std::time::{Duration, Instant};
 /// A packet exchanged worker-to-worker through channels.
 enum Packet {
     /// Coded broadcast `Δ` from member position `from` of the flattened
-    /// stage-1/2 group with global index `group`.
-    Delta { group: usize, from: usize, delta: Vec<u8> },
+    /// stage-1/2 group with global index `group`. The payload is a
+    /// [`SharedBuf`]: one encoded buffer shared by every recipient
+    /// (no per-recipient clone of the bytes).
+    Delta { group: usize, from: usize, delta: SharedBuf },
     /// Stage-3 fused unicast payload for `schedule.stage3[spec]`.
     Fused { spec: usize, value: Vec<u8> },
 }
@@ -92,6 +107,11 @@ struct Shared<'a> {
     stage3_base: u64,
     barrier: &'a Barrier,
     failed: &'a AtomicBool,
+    /// Shared buffer arena for Δ and scratch packets (all threads
+    /// acquire from and release to the same free list).
+    pool: &'a BufferPool,
+    /// Whether to route buffers through the pool (engine's `pooling`).
+    pooling: bool,
 }
 
 /// What a worker thread hands back when it finishes.
@@ -106,8 +126,8 @@ struct WorkerDone {
 struct GroupState {
     /// This worker's member position in the group.
     pos: usize,
-    /// Broadcast slots, one per member position.
-    deltas: Vec<Option<Vec<u8>>>,
+    /// Broadcast slots, one per member position (shared payloads).
+    deltas: Vec<Option<SharedBuf>>,
 }
 
 /// The thread-per-worker engine. Produces the same [`RunOutcome`] (and
@@ -122,6 +142,11 @@ pub struct ParallelEngine {
     pub bus: Bus,
     /// Skip oracle verification (for large load-sweep runs).
     pub verify: bool,
+    /// Route shuffle buffers through the shared [`BufferPool`]
+    /// (default). `false` restores the legacy allocate-per-packet data
+    /// plane; the ledger is byte-identical either way.
+    pub pooling: bool,
+    pool: BufferPool,
     outputs: HashMap<(JobId, FuncId), Value>,
 }
 
@@ -137,6 +162,8 @@ impl ParallelEngine {
             workload,
             bus: Bus::new(),
             verify: true,
+            pooling: true,
+            pool: BufferPool::new(),
             outputs: HashMap::new(),
         })
     }
@@ -144,6 +171,11 @@ impl ParallelEngine {
     /// Access the system config.
     pub fn cfg(&self) -> &SystemConfig {
         &self.master.cfg
+    }
+
+    /// Counters of the shared shuffle buffer pool.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// A reduced output (after `run`).
@@ -195,6 +227,8 @@ impl ParallelEngine {
             stage3_base,
             barrier: &barrier,
             failed: &failed,
+            pool: &self.pool,
+            pooling: self.pooling,
         };
 
         let shared_bus = SharedBus::new();
@@ -395,10 +429,12 @@ fn run_coded_phase(
         }
     }
 
-    // Encode + broadcast in schedule order.
+    // Encode + broadcast in schedule order. Each Δ is encoded once —
+    // into a pooled buffer when pooling is on — and shared with every
+    // recipient through cheap `SharedBuf` clones.
     for &gi in &order {
         let g = &sh.groups[gi];
-        let delta = worker.encode_for_group(g.plan)?;
+        let delta = worker.encode_for_group_shared(g.plan, sh.pool, sh.pooling)?;
         let st = mine.get_mut(&gi).expect("own group");
         let recipients: Vec<ServerId> =
             g.plan.members.iter().copied().filter(|&m| m != id).collect();
@@ -444,12 +480,22 @@ fn run_coded_phase(
     }
 
     // Decode every group (schedule order for determinism of any error).
+    // Deltas are *taken* out of the receive state, so each group's
+    // buffers return to the pool as soon as its decode finishes —
+    // per-group recycling, same as the serial engine.
     for &gi in &order {
         let g = &sh.groups[gi];
-        let st = &mine[&gi];
-        let deltas: Vec<Vec<u8>> =
-            st.deltas.iter().map(|d| d.clone().expect("all broadcasts received")).collect();
-        worker.decode_from_group(g.plan, &deltas)?;
+        let st = mine.get_mut(&gi).expect("own group");
+        let deltas: Vec<SharedBuf> = st
+            .deltas
+            .iter_mut()
+            .map(|d| d.take().expect("all broadcasts received"))
+            .collect();
+        if sh.pooling {
+            worker.decode_from_group_pooled(g.plan, &deltas, sh.pool)?;
+        } else {
+            worker.decode_from_group(g.plan, &deltas)?;
+        }
     }
     Ok(())
 }
@@ -555,6 +601,33 @@ mod tests {
                 assert_eq!(serial.output(j, f), par.output(j, f), "job {j} func {f}");
             }
         }
+    }
+
+    #[test]
+    fn pooled_and_unpooled_ledgers_identical() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut pooled =
+            ParallelEngine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, 21)))
+                .unwrap();
+        let pout = pooled.run().unwrap();
+        let mut legacy =
+            ParallelEngine::new(cfg.clone(), Box::new(SyntheticWorkload::new(&cfg, 21)))
+                .unwrap();
+        legacy.pooling = false;
+        let lout = legacy.run().unwrap();
+        assert!(pout.verified && lout.verified);
+        assert_eq!(pout.stage_bytes, lout.stage_bytes);
+        for j in 0..cfg.jobs() {
+            for f in 0..cfg.functions() {
+                assert_eq!(pooled.output(j, f), legacy.output(j, f), "job {j} func {f}");
+            }
+        }
+        // Every pooled buffer returned exactly once across all threads.
+        let stats = pooled.pool_stats();
+        assert!(stats.acquired > 0);
+        assert_eq!(stats.outstanding(), 0);
+        assert_eq!(stats.acquired, stats.released);
+        assert_eq!(legacy.pool_stats().acquired, 0);
     }
 
     #[test]

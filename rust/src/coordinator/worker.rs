@@ -11,7 +11,9 @@ use crate::agg::{Aggregator, Value};
 use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
 use crate::placement::Placement;
+use crate::shuffle::buf::{BufferPool, SharedBuf};
 use crate::shuffle::multicast::GroupPlan;
+use crate::shuffle::packet;
 use crate::shuffle::plan::UnicastSpec;
 use crate::workload::Workload;
 use crate::{FuncId, JobId, ServerId};
@@ -94,12 +96,70 @@ impl Worker {
         plan.encode_ref(t, self.value_bytes, |p| self.chunk_ref(plan, p))
     }
 
+    /// Encode this worker's coded broadcast `Δ` straight into a
+    /// caller-provided buffer — the allocation-free encode path of the
+    /// pooled data plane (the buffer is zero-filled before encoding, so
+    /// it may come from [`BufferPool::acquire_unzeroed`]).
+    pub fn encode_for_group_into(&self, plan: &GroupPlan, delta: &mut [u8]) -> Result<()> {
+        let t = self.position_in(plan)?;
+        plan.encode_ref_into(t, self.value_bytes, |p| self.chunk_ref(plan, p), delta)
+    }
+
+    /// Encode this worker's `Δ` as a [`SharedBuf`] ready to broadcast:
+    /// through a recycled pool buffer when `pooling` is on, through a
+    /// fresh allocation otherwise. One buffer serves every recipient.
+    /// Shared by both engines so packet sizing stays in one place.
+    pub fn encode_for_group_shared(
+        &self,
+        plan: &GroupPlan,
+        pool: &BufferPool,
+        pooling: bool,
+    ) -> Result<SharedBuf> {
+        if !pooling {
+            return Ok(self.encode_for_group(plan)?.into());
+        }
+        if plan.size() < 2 {
+            return Err(CamrError::ShuffleDecode("group size must be >= 2".into()));
+        }
+        let plen = packet::packet_len(self.value_bytes, plan.parts());
+        let mut buf = pool.acquire_unzeroed(plen);
+        self.encode_for_group_into(plan, buf.as_mut_slice())?;
+        Ok(buf.into())
+    }
+
     /// Decode this worker's missing chunk from the group's broadcasts and
-    /// store it. `deltas[t]` is the broadcast of `plan.members[t]`.
-    pub fn decode_from_group(&mut self, plan: &GroupPlan, deltas: &[Vec<u8>]) -> Result<()> {
+    /// store it. `deltas[t]` is the broadcast of `plan.members[t]` — any
+    /// borrowable byte container (`Vec<u8>`,
+    /// [`crate::shuffle::buf::SharedBuf`], …).
+    pub fn decode_from_group<D: AsRef<[u8]>>(
+        &mut self,
+        plan: &GroupPlan,
+        deltas: &[D],
+    ) -> Result<()> {
         let r = self.position_in(plan)?;
         let chunk =
             plan.decode_ref(r, self.value_bytes, deltas, |p| self.chunk_ref(plan, p))?;
+        let c = plan.chunks[r];
+        self.store.put(ValueKey { job: c.job, func: c.func, batch: c.batch }, chunk);
+        Ok(())
+    }
+
+    /// Like [`Worker::decode_from_group`], but the scratch packet comes
+    /// from `pool` instead of a fresh allocation.
+    pub fn decode_from_group_pooled<D: AsRef<[u8]>>(
+        &mut self,
+        plan: &GroupPlan,
+        deltas: &[D],
+        pool: &BufferPool,
+    ) -> Result<()> {
+        let r = self.position_in(plan)?;
+        let chunk = plan.decode_ref_pooled(
+            r,
+            self.value_bytes,
+            deltas,
+            |p| self.chunk_ref(plan, p),
+            pool,
+        )?;
         let c = plan.chunks[r];
         self.store.put(ValueKey { job: c.job, func: c.func, batch: c.batch }, chunk);
         Ok(())

@@ -23,7 +23,8 @@
 //! - [`agg`] — aggregation (combiner) functions: associative + commutative
 //!   byte-level reducers.
 //! - [`shuffle`] — Algorithm 2 coded multicast and the three shuffle
-//!   stages (paper §III-C).
+//!   stages (paper §III-C), on a pooled zero-copy data plane
+//!   ([`shuffle::buf`]: recycled word-aligned buffers + u64-lane XOR).
 //! - [`net`] — shared-link network simulator with byte-exact accounting,
 //!   including the channel-backed recorder the parallel engine uses.
 //! - [`coordinator`] — workers, master, and the end-to-end engines:
@@ -73,6 +74,21 @@
 //! byte-for-byte the serial one no matter how the threads interleave —
 //! multicasts are still charged once, and `RunOutcome::total_load()`
 //! is identical between the engines (asserted by the property tests).
+//!
+//! ## Performance
+//!
+//! Both engines run the shuffle on a pooled, zero-copy data plane
+//! ([`shuffle::buf`]): coded `Δ` packets are encoded in place into
+//! recycled word-aligned buffers, shared with every decoder without
+//! cloning, and XORed on `u64` lanes. The ledger is byte-identical
+//! with pooling on or off (`Engine::pooling`; pinned by the golden
+//! fixture in `rust/tests/golden_ledger.rs`) — only allocator traffic
+//! and throughput change. Measure the speedup with
+//! `cargo bench --bench xor_throughput` (word-wise vs per-byte XOR,
+//! pool vs fresh allocation, pooled vs unpooled end-to-end; results
+//! also land in the machine-readable `BENCH_shuffle.json`) and
+//! `cargo bench --bench shuffle_e2e` (pooled vs unpooled pipeline
+//! rows, plus the thread-per-worker map-phase speedup).
 //!
 //! ```
 //! use camr::config::SystemConfig;

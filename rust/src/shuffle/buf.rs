@@ -1,0 +1,436 @@
+//! Reusable buffer arena and word-wise XOR — the shuffle data plane's
+//! allocation-free hot path (§Perf).
+//!
+//! ## Why a pool
+//!
+//! Algorithm 2 moves a lot of short-lived byte buffers: one coded `Δ`
+//! per group member per group, one scratch packet per decode, every
+//! round, every stage. Allocating a fresh `Vec<u8>` for each turns the
+//! shuffle into an allocator benchmark; the measured CAMR-vs-baseline
+//! wall-clock gap then reflects `malloc` behaviour instead of bytes on
+//! the wire. [`BufferPool`] recycles the backing stores instead: a
+//! buffer is acquired (zeroed), filled by the encoder, shared with every
+//! decoder, and returned to the pool automatically when the last
+//! reference drops.
+//!
+//! ## Pool lifecycle
+//!
+//! ```text
+//! acquire (zeroed, word-aligned)
+//!    → encode Δ in place (xor_into on u64 lanes)
+//!    → charge bus with Δ.len()          (ledger bytes are unchanged)
+//!    → share with decoders (SharedBuf: one payload, N readers)
+//!    → decode cancels known packets (pooled scratch)
+//!    → release on last drop (back to the free list, never twice)
+//! ```
+//!
+//! Release is tied to `Drop`, so a buffer can never be returned twice —
+//! [`BufferPool::stats`] exposes the acquire/release counters the
+//! failure-injection tests use to prove it (released never exceeds
+//! acquired, and everything outstanding returns even on error paths).
+//!
+//! ## Alignment
+//!
+//! Backing stores are `Vec<u64>`, so every buffer starts on an 8-byte
+//! boundary and [`xor_into`] streams whole `u64` lanes with a byte tail.
+//! The byte-wise reference implementation ([`xor_into_bytewise`]) is
+//! kept for the property tests and the `xor_throughput` bench.
+
+use crate::error::{CamrError, Result};
+use std::sync::{Arc, Mutex};
+
+/// XOR `src` into `dst` in place on `u64` lanes with a byte tail.
+/// Lengths must match. This is the shuffle hot path.
+pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
+    if dst.len() != src.len() {
+        return Err(CamrError::ShuffleDecode(format!(
+            "xor length mismatch: {} vs {}",
+            dst.len(),
+            src.len()
+        )));
+    }
+    let n = dst.len();
+    let words = n / 8;
+    for i in 0..words {
+        let o = i * 8;
+        let a = u64::from_ne_bytes(dst[o..o + 8].try_into().unwrap());
+        let b = u64::from_ne_bytes(src[o..o + 8].try_into().unwrap());
+        dst[o..o + 8].copy_from_slice(&(a ^ b).to_ne_bytes());
+    }
+    for i in words * 8..n {
+        dst[i] ^= src[i];
+    }
+    Ok(())
+}
+
+/// XOR every slice of `srcs` into `acc` in place (word-wise). All
+/// lengths must equal `acc.len()`.
+pub fn xor_fold(acc: &mut [u8], srcs: &[&[u8]]) -> Result<()> {
+    for s in srcs {
+        xor_into(acc, s)?;
+    }
+    Ok(())
+}
+
+/// Naive per-byte XOR — the reference the property tests check
+/// [`xor_into`] against bit-for-bit, and the baseline the
+/// `xor_throughput` bench beats.
+pub fn xor_into_bytewise(dst: &mut [u8], src: &[u8]) -> Result<()> {
+    if dst.len() != src.len() {
+        return Err(CamrError::ShuffleDecode(format!(
+            "xor length mismatch: {} vs {}",
+            dst.len(),
+            src.len()
+        )));
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d ^= s;
+    }
+    Ok(())
+}
+
+/// Counters describing a pool's traffic (see [`BufferPool::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers handed out by [`BufferPool::acquire`].
+    pub acquired: u64,
+    /// Buffers returned to the free list (on drop — at most once each).
+    pub released: u64,
+    /// Acquisitions that had to allocate a fresh backing store.
+    pub allocated: u64,
+    /// Acquisitions served from the free list (allocation avoided).
+    pub recycled: u64,
+}
+
+impl PoolStats {
+    /// Buffers currently in flight (`acquired - released`).
+    pub fn outstanding(&self) -> u64 {
+        self.acquired - self.released
+    }
+}
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    free: Vec<Vec<u64>>,
+    stats: PoolStats,
+}
+
+/// A thread-safe arena of recycled, 8-byte-aligned chunk buffers.
+///
+/// Clones share the same free list (cheap `Arc` clone), so the serial
+/// engine, the parallel engine's worker threads, and tests can all
+/// return buffers to one place. Buffers come back zeroed on acquire.
+#[derive(Debug, Clone, Default)]
+pub struct BufferPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl BufferPool {
+    /// New empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Acquire a zeroed buffer of `len` bytes (word-aligned backing).
+    pub fn acquire(&self, len: usize) -> PooledBuf {
+        self.acquire_inner(len, true)
+    }
+
+    /// Acquire a buffer of `len` bytes whose contents are *unspecified*
+    /// (recycled bytes from an earlier checkout). For paths that fully
+    /// overwrite the buffer before reading it — encode starts with
+    /// `fill(0)`, decode scratch starts with `copy_from_slice` — this
+    /// skips the redundant zeroing memset on the hot path.
+    pub fn acquire_unzeroed(&self, len: usize) -> PooledBuf {
+        self.acquire_inner(len, false)
+    }
+
+    fn acquire_inner(&self, len: usize, zero: bool) -> PooledBuf {
+        let nwords = len.div_ceil(8);
+        let mut words = {
+            let mut inner = self.inner.lock().expect("buffer pool poisoned");
+            inner.stats.acquired += 1;
+            match inner.free.pop() {
+                Some(w) => {
+                    inner.stats.recycled += 1;
+                    w
+                }
+                None => {
+                    inner.stats.allocated += 1;
+                    Vec::new()
+                }
+            }
+        };
+        // Resize outside the lock.
+        if zero {
+            // clear + resize rewrites every live word with zeros.
+            words.clear();
+            words.resize(nwords, 0u64);
+        } else if words.len() < nwords {
+            words.resize(nwords, 0u64);
+        } else {
+            // truncate never touches the retained (stale) words.
+            words.truncate(nwords);
+        }
+        PooledBuf { words, len, pool: Arc::clone(&self.inner) }
+    }
+
+    /// Snapshot of the pool's counters.
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().expect("buffer pool poisoned").stats
+    }
+
+    /// Buffers currently sitting on the free list.
+    pub fn free_buffers(&self) -> usize {
+        self.inner.lock().expect("buffer pool poisoned").free.len()
+    }
+}
+
+/// A buffer checked out of a [`BufferPool`]. Returns its backing store
+/// to the pool exactly once, on drop.
+#[derive(Debug)]
+pub struct PooledBuf {
+    words: Vec<u64>,
+    len: usize,
+    pool: Arc<Mutex<PoolInner>>,
+}
+
+impl PooledBuf {
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the buffer holds zero bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Borrow the bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: `words` owns at least `len.div_ceil(8)` u64s, so bytes
+        // `[0, len)` lie inside the allocation; u8 has no alignment or
+        // validity requirements, and the borrow is tied to `&self`.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
+    }
+
+    /// Borrow the bytes mutably.
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        // SAFETY: as in `as_slice`, plus `&mut self` guarantees
+        // exclusive access to the backing store.
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr().cast::<u8>(), self.len) }
+    }
+}
+
+impl AsRef<[u8]> for PooledBuf {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        let words = std::mem::take(&mut self.words);
+        let mut inner = self.pool.lock().expect("buffer pool poisoned");
+        inner.stats.released += 1;
+        inner.free.push(words);
+    }
+}
+
+#[derive(Debug)]
+enum Backing {
+    Pooled(PooledBuf),
+    Heap(Vec<u8>),
+}
+
+/// An immutable, cheaply clonable view of an encoded payload: one
+/// buffer, any number of readers. The parallel engine ships one
+/// `SharedBuf` to every group member instead of cloning the `Δ` bytes
+/// per recipient; the pooled backing returns to its pool when the last
+/// clone drops.
+#[derive(Debug, Clone)]
+pub struct SharedBuf {
+    inner: Arc<Backing>,
+}
+
+impl SharedBuf {
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.as_ref().len()
+    }
+
+    /// True when the payload holds zero bytes.
+    pub fn is_empty(&self) -> bool {
+        self.as_ref().is_empty()
+    }
+}
+
+impl AsRef<[u8]> for SharedBuf {
+    fn as_ref(&self) -> &[u8] {
+        match &*self.inner {
+            Backing::Pooled(b) => b.as_slice(),
+            Backing::Heap(v) => v.as_slice(),
+        }
+    }
+}
+
+impl From<PooledBuf> for SharedBuf {
+    fn from(b: PooledBuf) -> Self {
+        SharedBuf { inner: Arc::new(Backing::Pooled(b)) }
+    }
+}
+
+impl From<Vec<u8>> for SharedBuf {
+    fn from(v: Vec<u8>) -> Self {
+        SharedBuf { inner: Arc::new(Backing::Heap(v)) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor_wordwise_matches_bytewise() {
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 255] {
+            let a: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
+            let b: Vec<u8> = (0..len).map(|i| (i * 101 + 5) as u8).collect();
+            let mut word = a.clone();
+            let mut byte = a.clone();
+            xor_into(&mut word, &b).unwrap();
+            xor_into_bytewise(&mut byte, &b).unwrap();
+            assert_eq!(word, byte, "len={len}");
+        }
+    }
+
+    #[test]
+    fn xor_fold_matches_sequential() {
+        let a: Vec<u8> = (0..33).map(|i| i as u8).collect();
+        let b: Vec<u8> = (0..33).map(|i| (i * 3) as u8).collect();
+        let c: Vec<u8> = (0..33).map(|i| (i * 7 + 1) as u8).collect();
+        let mut folded = vec![0u8; 33];
+        xor_fold(&mut folded, &[&a, &b, &c]).unwrap();
+        let mut seq = vec![0u8; 33];
+        xor_into(&mut seq, &a).unwrap();
+        xor_into(&mut seq, &b).unwrap();
+        xor_into(&mut seq, &c).unwrap();
+        assert_eq!(folded, seq);
+    }
+
+    #[test]
+    fn xor_length_mismatch_errors() {
+        let mut d = vec![0u8; 4];
+        assert!(xor_into(&mut d, &[0u8; 5]).is_err());
+        assert!(xor_into_bytewise(&mut d, &[0u8; 5]).is_err());
+        assert!(xor_fold(&mut d, &[&[0u8; 4], &[0u8; 3]]).is_err());
+    }
+
+    #[test]
+    fn acquire_is_zeroed_and_recycles() {
+        let pool = BufferPool::new();
+        {
+            let mut b = pool.acquire(24);
+            b.as_mut_slice().fill(0xAB);
+        }
+        // Same backing store comes back, zeroed.
+        let b = pool.acquire(24);
+        assert_eq!(b.len(), 24);
+        assert!(b.as_slice().iter().all(|&x| x == 0));
+        let stats = pool.stats();
+        assert_eq!(stats.acquired, 2);
+        assert_eq!(stats.allocated, 1);
+        assert_eq!(stats.recycled, 1);
+        assert_eq!(stats.outstanding(), 1);
+        drop(b);
+        assert_eq!(pool.stats().outstanding(), 0);
+        assert_eq!(pool.free_buffers(), 1);
+    }
+
+    #[test]
+    fn acquire_unzeroed_recycles_without_rezeroing_guarantee() {
+        let pool = BufferPool::new();
+        {
+            let mut b = pool.acquire(16);
+            b.as_mut_slice().fill(0xCD);
+        }
+        // Unzeroed acquire: correct length, contents unspecified — but
+        // fully writable, and the pool accounting is identical.
+        let mut b = pool.acquire_unzeroed(16);
+        assert_eq!(b.len(), 16);
+        b.as_mut_slice().copy_from_slice(&[1u8; 16]);
+        assert_eq!(b.as_slice(), &[1u8; 16]);
+        drop(b);
+        // Growth beyond the recycled capacity still yields valid bytes.
+        let b = pool.acquire_unzeroed(64);
+        assert_eq!(b.len(), 64);
+        let stats = pool.stats();
+        assert_eq!(stats.acquired, 3);
+        assert_eq!(stats.recycled, 2);
+    }
+
+    #[test]
+    fn zero_length_buffers_work() {
+        let pool = BufferPool::new();
+        let b = pool.acquire(0);
+        assert!(b.is_empty());
+        assert_eq!(b.as_slice(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn odd_lengths_get_word_padding() {
+        let pool = BufferPool::new();
+        for len in [1usize, 7, 9, 13] {
+            let mut b = pool.acquire(len);
+            assert_eq!(b.len(), len);
+            assert_eq!(b.as_mut_slice().len(), len);
+            b.as_mut_slice().fill(0xFF);
+        }
+        assert_eq!(pool.stats().released, 4);
+    }
+
+    #[test]
+    fn shared_buf_single_payload_many_readers() {
+        let pool = BufferPool::new();
+        let mut b = pool.acquire(16);
+        b.as_mut_slice().copy_from_slice(&[7u8; 16]);
+        let shared: SharedBuf = b.into();
+        let clones: Vec<SharedBuf> = (0..5).map(|_| shared.clone()).collect();
+        for c in &clones {
+            assert_eq!(c.as_ref(), &[7u8; 16]);
+            assert_eq!(c.len(), 16);
+        }
+        // Backing stays checked out until the last clone drops.
+        assert_eq!(pool.stats().outstanding(), 1);
+        drop(shared);
+        drop(clones);
+        assert_eq!(pool.stats().outstanding(), 0);
+    }
+
+    #[test]
+    fn heap_backed_shared_buf() {
+        let s: SharedBuf = vec![1u8, 2, 3].into();
+        assert_eq!(s.as_ref(), &[1, 2, 3]);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn pool_is_thread_safe() {
+        let pool = BufferPool::new();
+        std::thread::scope(|s| {
+            for t in 0..8u8 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for i in 0..50usize {
+                        let mut b = pool.acquire(i % 67 + 1);
+                        assert!(b.as_slice().iter().all(|&x| x == 0));
+                        b.as_mut_slice().fill(t);
+                    }
+                });
+            }
+        });
+        let stats = pool.stats();
+        assert_eq!(stats.acquired, 400);
+        assert_eq!(stats.released, 400);
+        assert_eq!(stats.outstanding(), 0);
+    }
+}

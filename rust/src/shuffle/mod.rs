@@ -1,6 +1,9 @@
 //! The CAMR shuffle (paper §III-C): Algorithm 2 coded multicast plus the
-//! three stage planners.
+//! three stage planners, running on a pooled, zero-copy data plane.
 //!
+//! - [`buf`] — the reusable buffer arena ([`buf::BufferPool`]) and the
+//!   word-wise XOR primitives ([`buf::xor_into`], [`buf::xor_fold`])
+//!   that make encode/decode allocation-free.
 //! - [`packet`] — chunk ↔ packet splitting and XOR primitives.
 //! - [`multicast`] — Algorithm 2: within a group of `g` machines where
 //!   each misses exactly one chunk jointly stored by the others, `g`
@@ -13,7 +16,28 @@
 //!   non-owned job to each member.
 //! - [`stage3`] — parallel-class unicasts deliver the remaining fused
 //!   aggregate of every non-owned job.
+//!
+//! ## Pool lifecycle of one coded exchange
+//!
+//! Every `Δ` broadcast follows the same arc through the data plane:
+//!
+//! 1. **acquire** — the encoder checks a zeroed, word-aligned packet
+//!    buffer out of the engine's [`buf::BufferPool`];
+//! 2. **encode** — [`multicast::GroupPlan::encode_ref_into`] XORs the
+//!    sender's locally stored chunks into it in place (u64 lanes);
+//! 3. **bus** — the shared link is charged with `Δ.len()` bytes exactly
+//!    as before: pooling changes *where bytes live*, never how many are
+//!    accounted, so the ledger stays byte-identical to the unpooled
+//!    data plane (the golden-ledger test pins this down);
+//! 4. **decode** — receivers borrow the same payload through cheap
+//!    [`buf::SharedBuf`] clones (one buffer, `g-1` readers) and cancel
+//!    known packets against a pooled scratch buffer;
+//! 5. **release** — when the last reference drops, the backing store
+//!    returns to the pool, ready for the next group. Release rides on
+//!    `Drop`, so a buffer can never be returned twice — even on worker
+//!    failure (asserted by the failure-injection tests).
 
+pub mod buf;
 pub mod multicast;
 pub mod packet;
 pub mod plan;
@@ -21,5 +45,6 @@ pub mod stage1;
 pub mod stage2;
 pub mod stage3;
 
+pub use buf::{BufferPool, SharedBuf};
 pub use multicast::GroupPlan;
 pub use plan::{ChunkSpec, UnicastSpec};

@@ -68,13 +68,21 @@ impl GroupPlan {
     }
 
     /// The broadcast `Δ_t` of member position `t` (paper Eq. (3)):
-    /// XOR over all chunks `p ≠ t` of the packet associated with `t`.
+    /// XOR over all chunks `p ≠ t` of the packet associated with `t`,
+    /// written into the caller-provided `delta` buffer (typically a
+    /// zeroed [`super::buf::PooledBuf`] — no allocation on this path).
     ///
     /// `chunk_bytes(p)` supplies a borrowed view of chunk `p`'s payload
     /// (the engine reads it from the **sender's** local store — every
     /// chunk `p ≠ t` is stored by `members[t]` by construction). No
     /// copies of the chunks are made.
-    pub fn encode_ref<'a, F>(&self, t: usize, chunk_len: usize, mut chunk_bytes: F) -> Result<Vec<u8>>
+    pub fn encode_ref_into<'a, F>(
+        &self,
+        t: usize,
+        chunk_len: usize,
+        mut chunk_bytes: F,
+        delta: &mut [u8],
+    ) -> Result<()>
     where
         F: FnMut(usize) -> Result<&'a [u8]>,
     {
@@ -83,7 +91,13 @@ impl GroupPlan {
             return Err(CamrError::ShuffleDecode("group size must be >= 2".into()));
         }
         let plen = packet::packet_len(chunk_len, self.parts());
-        let mut delta = vec![0u8; plen];
+        if delta.len() != plen {
+            return Err(CamrError::ShuffleDecode(format!(
+                "delta buffer has {} bytes, expected {plen}",
+                delta.len()
+            )));
+        }
+        delta.fill(0);
         for p in 0..g {
             if p == t {
                 continue;
@@ -95,8 +109,21 @@ impl GroupPlan {
                     chunk.len()
                 )));
             }
-            Self::xor_packet_into(&mut delta, chunk, self.packet_index(p, t), plen)?;
+            Self::xor_packet_into(delta, chunk, self.packet_index(p, t), plen)?;
         }
+        Ok(())
+    }
+
+    /// Allocating wrapper over [`GroupPlan::encode_ref_into`].
+    pub fn encode_ref<'a, F>(&self, t: usize, chunk_len: usize, chunk_bytes: F) -> Result<Vec<u8>>
+    where
+        F: FnMut(usize) -> Result<&'a [u8]>,
+    {
+        if self.size() < 2 {
+            return Err(CamrError::ShuffleDecode("group size must be >= 2".into()));
+        }
+        let mut delta = vec![0u8; packet::packet_len(chunk_len, self.parts())];
+        self.encode_ref_into(t, chunk_len, chunk_bytes, &mut delta)?;
         Ok(delta)
     }
 
@@ -117,22 +144,30 @@ impl GroupPlan {
         })
     }
 
-    /// Decode at member position `r`: given the broadcasts
-    /// `deltas[t]` for every `t ≠ r` (entry `r` is ignored), reconstruct
-    /// chunk `r`. `chunk_bytes(p)` supplies borrowed views of the chunks
-    /// `p ≠ r` from the decoder's local store (used to cancel known
-    /// packets); nothing is copied or split.
-    pub fn decode_ref<'a, F>(
+    /// Decode at member position `r` using a caller-provided scratch
+    /// packet buffer (typically a [`super::buf::PooledBuf`]): given the
+    /// broadcasts `deltas[t]` for every `t ≠ r` (entry `r` is ignored),
+    /// reconstruct chunk `r`. `chunk_bytes(p)` supplies borrowed views
+    /// of the chunks `p ≠ r` from the decoder's local store (used to
+    /// cancel known packets); nothing is copied or split. `deltas` may
+    /// be any borrowable byte containers — owned `Vec<u8>`s or shared
+    /// [`super::buf::SharedBuf`] handles alike.
+    pub fn decode_ref_scratch<'a, D, F>(
         &self,
         r: usize,
         chunk_len: usize,
-        deltas: &[Vec<u8>],
+        deltas: &[D],
         mut chunk_bytes: F,
+        scratch: &mut [u8],
     ) -> Result<Vec<u8>>
     where
+        D: AsRef<[u8]>,
         F: FnMut(usize) -> Result<&'a [u8]>,
     {
         let g = self.size();
+        if g < 2 {
+            return Err(CamrError::ShuffleDecode("group size must be >= 2".into()));
+        }
         if deltas.len() != g {
             return Err(CamrError::ShuffleDecode(format!(
                 "need {g} delta slots, got {}",
@@ -141,6 +176,12 @@ impl GroupPlan {
         }
         let parts = self.parts();
         let plen = packet::packet_len(chunk_len, parts);
+        if scratch.len() != plen {
+            return Err(CamrError::ShuffleDecode(format!(
+                "scratch buffer has {} bytes, expected {plen}",
+                scratch.len()
+            )));
+        }
         // Borrow the decoder's known chunks once.
         let mut known: Vec<Option<&[u8]>> = vec![None; g];
         for p in 0..g {
@@ -153,9 +194,8 @@ impl GroupPlan {
         // writing straight into the output buffer. Iterating t ascending
         // yields packet_index(r, t) = 0, 1, …, g-2 in order.
         let mut out = vec![0u8; chunk_len];
-        let mut scratch = vec![0u8; plen];
         for t in (0..g).filter(|&t| t != r) {
-            let delta = &deltas[t];
+            let delta = deltas[t].as_ref();
             if delta.len() != plen {
                 return Err(CamrError::ShuffleDecode(format!(
                     "delta from position {t} has {} bytes, expected {plen}",
@@ -165,7 +205,7 @@ impl GroupPlan {
             scratch.copy_from_slice(delta);
             for p in (0..g).filter(|&p| p != t && p != r) {
                 let chunk = known[p].expect("known chunk");
-                Self::xor_packet_into(&mut scratch, chunk, self.packet_index(p, t), plen)?;
+                Self::xor_packet_into(scratch, chunk, self.packet_index(p, t), plen)?;
             }
             let idx = self.packet_index(r, t);
             let start = (idx * plen).min(chunk_len);
@@ -173,6 +213,49 @@ impl GroupPlan {
             out[start..end].copy_from_slice(&scratch[..end - start]);
         }
         Ok(out)
+    }
+
+    /// Decode with a scratch packet acquired from `pool` — the engines'
+    /// allocation-free path (only the returned chunk itself is allocated,
+    /// because it outlives the exchange inside the worker's store).
+    pub fn decode_ref_pooled<'a, D, F>(
+        &self,
+        r: usize,
+        chunk_len: usize,
+        deltas: &[D],
+        chunk_bytes: F,
+        pool: &super::buf::BufferPool,
+    ) -> Result<Vec<u8>>
+    where
+        D: AsRef<[u8]>,
+        F: FnMut(usize) -> Result<&'a [u8]>,
+    {
+        if self.size() < 2 {
+            return Err(CamrError::ShuffleDecode("group size must be >= 2".into()));
+        }
+        // Unzeroed: decode_ref_scratch overwrites the scratch packet
+        // (copy_from_slice) before ever reading it.
+        let mut scratch = pool.acquire_unzeroed(packet::packet_len(chunk_len, self.parts()));
+        self.decode_ref_scratch(r, chunk_len, deltas, chunk_bytes, scratch.as_mut_slice())
+    }
+
+    /// Allocating wrapper over [`GroupPlan::decode_ref_scratch`].
+    pub fn decode_ref<'a, D, F>(
+        &self,
+        r: usize,
+        chunk_len: usize,
+        deltas: &[D],
+        chunk_bytes: F,
+    ) -> Result<Vec<u8>>
+    where
+        D: AsRef<[u8]>,
+        F: FnMut(usize) -> Result<&'a [u8]>,
+    {
+        if self.size() < 2 {
+            return Err(CamrError::ShuffleDecode("group size must be >= 2".into()));
+        }
+        let mut scratch = vec![0u8; packet::packet_len(chunk_len, self.parts())];
+        self.decode_ref_scratch(r, chunk_len, deltas, chunk_bytes, &mut scratch)
     }
 
     /// Owned-payload convenience wrapper over [`GroupPlan::decode_ref`].

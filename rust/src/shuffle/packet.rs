@@ -45,28 +45,10 @@ pub fn join(packets: &[Vec<u8>], chunk_len: usize) -> Result<Vec<u8>> {
 }
 
 /// XOR `src` into `dst` in place. Lengths must match.
-pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
-    if dst.len() != src.len() {
-        return Err(CamrError::ShuffleDecode(format!(
-            "xor length mismatch: {} vs {}",
-            dst.len(),
-            src.len()
-        )));
-    }
-    // Wide lanes first — this is the shuffle hot path (see §Perf).
-    let n = dst.len();
-    let words = n / 8;
-    for i in 0..words {
-        let o = i * 8;
-        let a = u64::from_ne_bytes(dst[o..o + 8].try_into().unwrap());
-        let b = u64::from_ne_bytes(src[o..o + 8].try_into().unwrap());
-        dst[o..o + 8].copy_from_slice(&(a ^ b).to_ne_bytes());
-    }
-    for i in words * 8..n {
-        dst[i] ^= src[i];
-    }
-    Ok(())
-}
+///
+/// Re-exported from [`super::buf`] (u64 lanes + byte tail) so existing
+/// callers keep one canonical hot-path implementation.
+pub use super::buf::xor_into;
 
 /// XOR a set of equal-length slices together (returns zeroes when empty
 /// and `len` is provided via the first slice — callers pass ≥1 slice).
@@ -75,9 +57,7 @@ pub fn xor_all(slices: &[&[u8]]) -> Result<Vec<u8>> {
         .first()
         .ok_or_else(|| CamrError::ShuffleDecode("xor_all needs >= 1 slice".into()))?;
     let mut acc = first.to_vec();
-    for s in &slices[1..] {
-        xor_into(&mut acc, s)?;
-    }
+    super::buf::xor_fold(&mut acc, &slices[1..])?;
     Ok(acc)
 }
 

@@ -1,10 +1,14 @@
 //! Failure injection: the engine's strict local-state model means any
 //! corruption or loss must surface as a typed error or an oracle
-//! mismatch — never as a silently wrong answer.
+//! mismatch — never as a silently wrong answer. Exercised on **both**
+//! engines (serial and thread-per-worker), including the buffer-pool
+//! hygiene invariant: after any failed run, every pooled buffer has
+//! been returned exactly once — never leaked, never double-released.
 
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;
 use camr::coordinator::master::Master;
+use camr::coordinator::parallel::ParallelEngine;
 use camr::coordinator::values::ValueKey;
 use camr::coordinator::worker::Worker;
 use camr::error::CamrError;
@@ -12,6 +16,29 @@ use camr::shuffle::multicast::GroupPlan;
 use camr::shuffle::plan::ChunkSpec;
 use camr::workload::synth::SyntheticWorkload;
 use camr::workload::Workload;
+
+/// A workload whose map fails for one (job, subfile) — models a dead
+/// mapper kernel on one server.
+struct FailingMapWorkload {
+    inner: SyntheticWorkload,
+    job: usize,
+    subfile: usize,
+}
+
+impl Workload for FailingMapWorkload {
+    fn name(&self) -> &str {
+        "failing-map"
+    }
+    fn aggregator(&self) -> &dyn camr::agg::Aggregator {
+        self.inner.aggregator()
+    }
+    fn map_subfile(&self, job: usize, subfile: usize) -> camr::error::Result<Vec<Vec<u8>>> {
+        if job == self.job && subfile == self.subfile {
+            return Err(CamrError::Runtime("injected map failure".into()));
+        }
+        self.inner.map_subfile(job, subfile)
+    }
+}
 
 /// A workload wrapper that flips one bit in one intermediate value —
 /// models a corrupted mapper (bad disk/memory on one server).
@@ -180,6 +207,105 @@ fn traffic_is_perfectly_balanced_across_servers() {
             "k={k} q={q}: unbalanced rx {rx:?}"
         );
     }
+}
+
+#[test]
+fn serial_engine_map_failure_surfaces_and_leaves_pool_clean() {
+    // The serial engine hits the failing mapper mid map phase: the run
+    // must error out before any shuffle traffic, and every buffer the
+    // pool handed out must have come back exactly once (no buffer is
+    // leaked, none is released twice).
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = FailingMapWorkload { inner: SyntheticWorkload::new(&cfg, 3), job: 1, subfile: 2 };
+    let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+    let err = e.run().expect_err("run must fail");
+    assert!(err.to_string().contains("injected map failure"), "got: {err}");
+    assert_eq!(e.bus.total_bytes(), 0, "no shuffle traffic after a map failure");
+    let stats = e.pool_stats();
+    assert_eq!(stats.outstanding(), 0, "pool leak after failure: {stats:?}");
+    assert_eq!(stats.acquired, stats.released, "double release: {stats:?}");
+}
+
+#[test]
+fn serial_engine_verification_failure_leaves_pool_clean() {
+    // A corrupted mapper makes the run fail *after* the whole shuffle —
+    // by then the pool has seen real traffic, and it must all be back.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = CorruptingWorkload {
+        inner: SyntheticWorkload::new(&cfg, 5),
+        job: 0,
+        subfile: 1,
+        func: 0,
+    };
+    let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+    assert!(matches!(e.run(), Err(CamrError::Verification(_))));
+    let stats = e.pool_stats();
+    assert!(stats.acquired > 0, "shuffle must have used the pool");
+    assert_eq!(stats.outstanding(), 0, "pool leak after failure: {stats:?}");
+    assert_eq!(stats.acquired, stats.released, "double release: {stats:?}");
+}
+
+#[test]
+fn serial_engine_recovers_after_failed_run() {
+    // The same engine object reruns cleanly after a failure: the pool
+    // keeps recycling, and nothing from the failed run lingers.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = CorruptingWorkload {
+        inner: SyntheticWorkload::new(&cfg, 9),
+        job: 2,
+        subfile: 0,
+        func: 3,
+    };
+    let mut bad = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+    assert!(bad.run().is_err());
+    let wl = SyntheticWorkload::new(&cfg, 9);
+    let mut good = Engine::new(cfg, Box::new(wl)).unwrap();
+    let out = good.run().unwrap();
+    assert!(out.verified);
+    assert_eq!(good.pool_stats().outstanding(), 0);
+}
+
+#[test]
+fn parallel_engine_worker_failure_leaves_pool_clean() {
+    // One worker's map fails; the poison-flag protocol aborts the run
+    // without deadlock, all threads exit, and the shared pool gets every
+    // buffer back exactly once — including Δs already in flight through
+    // peer channels when the failure struck.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = FailingMapWorkload { inner: SyntheticWorkload::new(&cfg, 8), job: 1, subfile: 2 };
+    let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+    let err = e.run().expect_err("run must fail");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("injected map failure") || msg.contains("aborted"),
+        "unexpected error: {msg}"
+    );
+    let stats = e.pool_stats();
+    assert_eq!(stats.outstanding(), 0, "pool leak after worker failure: {stats:?}");
+    assert_eq!(stats.acquired, stats.released, "double release: {stats:?}");
+}
+
+#[test]
+fn parallel_engine_pool_stays_clean_across_failure_then_success() {
+    // Failure followed by a clean rerun on the same engine: pooled
+    // buffers from the failed run must not corrupt the next one.
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    {
+        let wl =
+            FailingMapWorkload { inner: SyntheticWorkload::new(&cfg, 8), job: 0, subfile: 0 };
+        let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+        assert!(e.run().is_err());
+        assert_eq!(e.pool_stats().outstanding(), 0);
+    }
+    let wl = SyntheticWorkload::new(&cfg, 8);
+    let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+    let first = e.run().unwrap();
+    assert!(first.verified);
+    let second = e.run().unwrap();
+    assert!(second.verified);
+    let stats = e.pool_stats();
+    assert_eq!(stats.outstanding(), 0);
+    assert!(stats.recycled > 0, "second run should reuse first-run buffers: {stats:?}");
 }
 
 #[test]

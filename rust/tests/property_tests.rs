@@ -5,14 +5,16 @@
 //! failures print the exact parameters for reproduction.
 
 use camr::agg::{lanes, Aggregator, MaxU64, SumF32, SumU64, XorBytes};
-use camr::analysis::load;
+use camr::analysis::{jobs, load};
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;
 use camr::coordinator::parallel::ParallelEngine;
 use camr::design::{verify::verify_design, ResolvableDesign};
 use camr::placement::{storage::audit_storage, Placement};
+use camr::shuffle::buf::{self, BufferPool};
 use camr::shuffle::multicast::GroupPlan;
 use camr::shuffle::plan::ChunkSpec;
+use camr::shuffle::packet;
 use camr::util::rng::SplitMix64;
 use camr::workload::synth::SyntheticWorkload;
 
@@ -91,6 +93,138 @@ fn prop_lemma2_exchange_decodes_for_random_groups() {
         // Lemma-2 cost.
         let total: usize = deltas.iter().map(|d| d.len()).sum();
         assert_eq!(total, g * chunk_len.div_ceil(g - 1));
+    }
+}
+
+/// Coding correctness (Lemma 2), exhaustively over the group/chunk grid
+/// the issue calls out: every group size g in 2..=8 and chunk sizes
+/// including 0, 1, and non-multiples of 8. Encode through the pooled
+/// in-place path, decode through the pooled-scratch path, and require
+/// every member to recover its missing chunk byte-exactly.
+#[test]
+fn prop_algorithm2_roundtrip_all_group_and_chunk_sizes() {
+    let pool = BufferPool::new();
+    for g in 2usize..=8 {
+        for chunk_len in [0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 33, 63, 64, 65, 100] {
+            let members: Vec<usize> = (0..g).map(|i| i * 5 + 2).collect();
+            let chunks: Vec<ChunkSpec> = (0..g)
+                .map(|p| ChunkSpec { receiver: members[p], job: p, func: p, batch: 0 })
+                .collect();
+            let plan = GroupPlan { members, chunks };
+            let payloads: Vec<Vec<u8>> = (0..g)
+                .map(|p| {
+                    let mut r = SplitMix64::new((g * 1000 + p * 10 + chunk_len) as u64);
+                    (0..chunk_len).map(|_| r.next_u64() as u8).collect()
+                })
+                .collect();
+            let plen = packet::packet_len(chunk_len, plan.parts());
+            // Encode every member's Δ into a pooled buffer.
+            let deltas: Vec<camr::shuffle::SharedBuf> = (0..g)
+                .map(|t| {
+                    let mut b = pool.acquire(plen);
+                    plan.encode_ref_into(
+                        t,
+                        chunk_len,
+                        |p| Ok(payloads[p].as_slice()),
+                        b.as_mut_slice(),
+                    )
+                    .unwrap();
+                    b.into()
+                })
+                .collect();
+            // Every member decodes its missing chunk with pooled scratch.
+            for r in 0..g {
+                let got = plan
+                    .decode_ref_pooled(
+                        r,
+                        chunk_len,
+                        &deltas,
+                        |p| Ok(payloads[p].as_slice()),
+                        &pool,
+                    )
+                    .unwrap();
+                assert_eq!(got, payloads[r], "g={g} B={chunk_len} member {r}");
+            }
+            // Lemma 2's cost: g broadcasts of ⌈B/(g-1)⌉ bytes.
+            let total: usize = deltas.iter().map(|d| d.len()).sum();
+            assert_eq!(total, g * chunk_len.div_ceil(g - 1), "g={g} B={chunk_len}");
+        }
+    }
+    let stats = pool.stats();
+    assert_eq!(stats.outstanding(), 0, "property sweep leaked buffers: {stats:?}");
+    assert_eq!(stats.acquired, stats.released);
+    assert!(stats.recycled > 0);
+}
+
+/// The word-wise XOR primitives agree bit-for-bit with the naive
+/// per-byte reference on random data, for lengths spanning the tail
+/// cases (0, 1, non-multiples of 8, exact multiples, large).
+#[test]
+fn prop_xor_wordwise_agrees_with_bytewise_reference() {
+    let mut rng = SplitMix64::new(0x0F0F);
+    for case in 0..200 {
+        let len = match case % 4 {
+            0 => rng.range(0, 9),           // tail-only
+            1 => rng.range(0, 4) * 8,       // whole words
+            2 => rng.range(9, 120),         // mixed
+            _ => rng.range(1000, 5000),     // large
+        };
+        let a: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let b: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mut word = a.clone();
+        let mut byte = a.clone();
+        buf::xor_into(&mut word, &b).unwrap();
+        buf::xor_into_bytewise(&mut byte, &b).unwrap();
+        assert_eq!(word, byte, "case {case}: len={len}");
+        // xor_fold == repeated xor_into_bytewise.
+        let c: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mut folded = a.clone();
+        buf::xor_fold(&mut folded, &[&b, &c]).unwrap();
+        let mut reference = a.clone();
+        buf::xor_into_bytewise(&mut reference, &b).unwrap();
+        buf::xor_into_bytewise(&mut reference, &c).unwrap();
+        assert_eq!(folded, reference, "case {case}: fold len={len}");
+        // Involution: xoring twice restores the original.
+        buf::xor_into(&mut word, &b).unwrap();
+        assert_eq!(word, a, "case {case}: xor not an involution");
+    }
+}
+
+/// Baseline ordering on the (q, k) grid (Table III / §V): the closed
+/// forms must satisfy L_CAMR == L_CCDC < L_uncoded, and CAMR's job
+/// requirement q^(k-1) must not exceed CCDC's C(K, μK+1) — guarding
+/// `analysis::load` / `analysis::jobs` against refactor drift.
+#[test]
+fn prop_baseline_ordering_holds_on_qk_grid() {
+    for k in 2usize..=6 {
+        for q in 2usize..=8 {
+            let camr = load::camr_total(k, q);
+            let ccdc = load::ccdc_total(k - 1, k * q);
+            let uncoded = load::uncoded_aggregated_total(k, q);
+            assert!(
+                (camr - ccdc).abs() < 1e-12,
+                "k={k} q={q}: L_CAMR {camr} != L_CCDC {ccdc}"
+            );
+            if k >= 3 {
+                assert!(camr < uncoded, "k={k} q={q}: {camr} !< {uncoded}");
+            } else {
+                // k = 2 splits chunks into a single packet: no coding
+                // gain, the schemes coincide.
+                assert!((camr - uncoded).abs() < 1e-12, "k=2 q={q}");
+            }
+            // Raw (unaggregated) shuffle is strictly worse still.
+            assert!(uncoded < load::uncoded_raw_total(k, q, 2), "k={k} q={q}: raw");
+            // Job-count requirement (Table III): q^(k-1) <= C(kq, k).
+            let req = jobs::JobRequirement::for_params(k, q);
+            assert!(
+                req.camr <= req.ccdc,
+                "k={k} q={q}: CAMR needs {} jobs > CCDC's {}",
+                req.camr,
+                req.ccdc
+            );
+            assert_eq!(req.camr, (q as u128).pow(k as u32 - 1));
+            assert_eq!(req.ccdc, jobs::binomial((k * q) as u64, k as u64));
+        }
     }
 }
 
