@@ -56,5 +56,7 @@ fn main() {
             run_ablation(cfg2.clone(), Box::new(wl), choice).unwrap().stage_bytes
         });
     }
-    println!("\nThe XOR encode/decode adds CPU work but removes a factor k-1 from stages 1–2 on the wire.");
+    println!(
+        "\nThe XOR encode/decode adds CPU work but removes a factor k-1 from stages 1–2 on the wire."
+    );
 }

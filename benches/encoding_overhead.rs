@@ -66,5 +66,7 @@ fn main() {
             },
         );
     }
-    println!("\nCAMR's smaller job count keeps encode overhead bounded as the cluster scales (Table III / [7]).");
+    println!(
+        "\nCAMR's smaller job count keeps encode overhead bounded as the cluster scales (Table III / [7])."
+    );
 }

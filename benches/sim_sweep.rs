@@ -1,0 +1,164 @@
+//! Simulated completion-time sweep: bandwidth × straggler distribution
+//! × scheme (CAMR vs CCDC vs uncoded), plus wall-time throughput of the
+//! simulator itself.
+//!
+//! The schemes' ledgers come from real engine runs (byte-exact); each
+//! cell replays them through the discrete-event simulator at one
+//! (bandwidth, straggler) point. Besides the human-readable BENCH
+//! lines, this writes machine-readable `BENCH_sim.json` so later PRs
+//! can diff the completion-time trajectory (created on
+//! `cargo bench --bench sim_sweep`; not checked in).
+
+use camr::baseline::{CcdcEngine, UncodedEngine, UncodedMode};
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::net::{Stage, Transmission};
+use camr::sim::{self, LinkKind, SimConfig, StragglerModel};
+use camr::util::bench::Bench;
+use camr::util::json::Json;
+use camr::workload::synth::SyntheticWorkload;
+
+fn main() {
+    let b = Bench::new();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("CAMR_BENCH_QUICK").is_ok();
+
+    // ---- Byte-exact ledgers from real runs (paper Example 1 shape).
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let (camr_ledger, camr_maps) = {
+        let wl = SyntheticWorkload::new(&cfg, 7);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        e.verify = false;
+        e.run().unwrap();
+        (e.bus.ledger().to_vec(), sim::camr_per_worker_maps(&cfg, &e.master.placement))
+    };
+    let unc_ledger = {
+        let wl = SyntheticWorkload::new(&cfg, 7);
+        let mut e = UncodedEngine::new(cfg.clone(), Box::new(wl), UncodedMode::Aggregated)
+            .unwrap();
+        e.run().unwrap();
+        e.bus.ledger().to_vec()
+    };
+    let (ccdc_ledger, ccdc_maps, ccdc_jobs) = {
+        let mut e = CcdcEngine::new(cfg.servers(), cfg.k, cfg.gamma, cfg.value_bytes, 7)
+            .unwrap();
+        let out = e.run().unwrap();
+        let maps = sim::ccdc_per_worker_maps(cfg.servers(), cfg.k, cfg.gamma);
+        (e.bus.ledger().to_vec(), maps, out.jobs)
+    };
+    let schemes: [(&str, &[Transmission], &[usize], usize); 3] = [
+        ("camr", &camr_ledger, &camr_maps, cfg.jobs()),
+        ("ccdc", &ccdc_ledger, &ccdc_maps, ccdc_jobs),
+        ("uncoded", &unc_ledger, &camr_maps, cfg.jobs()),
+    ];
+
+    // ---- Sweep: bandwidth × straggler × scheme.
+    let bandwidths: &[f64] = if quick {
+        &[1.25e8, 1.25e6]
+    } else {
+        &[1.25e9, 1.25e8, 1.25e7, 1.25e6]
+    };
+    let stragglers: &[(&str, StragglerModel)] = &[
+        ("none", StragglerModel::Deterministic),
+        ("shifted_exp_r10", StragglerModel::ShiftedExp { rate: 10.0 }),
+        ("shifted_exp_r2", StragglerModel::ShiftedExp { rate: 2.0 }),
+        ("tail_p05_x10", StragglerModel::Tail { prob: 0.05, factor: 10.0 }),
+    ];
+    println!("== Simulated completion times: bandwidth x straggler x scheme ==\n");
+    let mut rows = Vec::new();
+    for &bw in bandwidths {
+        for (sname, smodel) in stragglers {
+            let mut cell = Vec::new();
+            for (label, ledger, maps, jobs) in &schemes {
+                let sc = SimConfig {
+                    link: LinkKind::Shared,
+                    link_bytes_per_sec: bw,
+                    latency_secs: 0.0,
+                    secs_per_map: 1e-3,
+                    speeds: Vec::new(),
+                    straggler: *smodel,
+                    seed: 42,
+                };
+                let out = sim::simulate(&sc, maps, ledger).unwrap();
+                cell.push((*label, out.total_secs / *jobs as f64, out.total_secs));
+                rows.push(Json::obj(vec![
+                    ("bandwidth", Json::Num(bw)),
+                    ("straggler", Json::Str(sname.to_string())),
+                    ("scheme", Json::Str(label.to_string())),
+                    ("jobs", Json::UInt(*jobs as u128)),
+                    ("map_secs", Json::Num(out.map_secs)),
+                    ("shuffle_secs", Json::Num(out.shuffle_secs)),
+                    ("total_secs", Json::Num(out.total_secs)),
+                    ("secs_per_job", Json::Num(out.total_secs / *jobs as f64)),
+                ]));
+            }
+            let per_job = |l: &str| cell.iter().find(|c| c.0 == l).unwrap().1;
+            println!(
+                "  bw={bw:>9.3e} straggler={sname:<16} t/job: camr {:.6} ccdc {:.6} \
+                 uncoded {:.6}  (camr speedup over uncoded {:.2}x)",
+                per_job("camr"),
+                per_job("ccdc"),
+                per_job("uncoded"),
+                per_job("uncoded") / per_job("camr")
+            );
+            // Same map work, fewer shuffle bytes: CAMR can never lose
+            // to the uncoded baseline in this sweep.
+            assert!(per_job("camr") <= per_job("uncoded") + 1e-15);
+        }
+    }
+    println!();
+
+    // ---- Wall-time of the simulator itself.
+    println!("== Simulator throughput ==\n");
+    let sc = SimConfig {
+        straggler: StragglerModel::ShiftedExp { rate: 5.0 },
+        ..SimConfig::commodity()
+    };
+    let replay_ns = b.run("sim_replay_example1_camr", || {
+        sim::simulate(&sc, &camr_maps, &camr_ledger).unwrap().events
+    });
+    // A big synthetic ledger: 50k transmissions over 12 senders in 3
+    // stage phases, plus 12×2000 map tasks.
+    let big_n = if quick { 5_000 } else { 50_000 };
+    let big_ledger: Vec<Transmission> = (0..big_n)
+        .map(|i| Transmission {
+            stage: match i * 3 / big_n {
+                0 => Stage::Stage1,
+                1 => Stage::Stage2,
+                _ => Stage::Stage3,
+            },
+            sender: i % 12,
+            recipients: vec![(i + 1) % 12],
+            bytes: 4096,
+        })
+        .collect();
+    let big_maps = vec![2000usize; 12];
+    let mut big_events = 0u64;
+    let big_ns = b.run("sim_replay_big_ledger", || {
+        let out = sim::simulate(&sc, &big_maps, &big_ledger).unwrap();
+        big_events = out.events;
+        big_events
+    });
+    let events_per_sec = if big_ns > 0.0 { big_events as f64 / (big_ns * 1e-9) } else { 0.0 };
+    println!("\n  {big_events} events at {events_per_sec:.0} events/s\n");
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("sim_sweep".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("sweep", Json::Arr(rows)),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("replay_example1_mean_ns", Json::Num(replay_ns)),
+                ("replay_big_mean_ns", Json::Num(big_ns)),
+                ("big_events", Json::UInt(big_events as u128)),
+                ("events_per_sec", Json::Num(events_per_sec)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_sim.json";
+    match std::fs::write(path, report.render() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -3,6 +3,7 @@
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;
 use camr::coordinator::master::Master;
+use camr::coordinator::values::ValueKey;
 use camr::coordinator::worker::Worker;
 use camr::shuffle::multicast::GroupPlan;
 use camr::workload::synth::SyntheticWorkload;
@@ -11,16 +12,23 @@ use std::time::Instant;
 fn main() {
     for (k, q, g, b) in [(3usize, 4usize, 4usize, 4096usize), (4, 3, 2, 4096), (3, 2, 2, 65536)] {
         let cfg = SystemConfig::with_options(k, q, g, 1, b).unwrap();
-        let mut best = u128::MAX; let mut sum = 0u128; let n = 15;
+        let mut best = u128::MAX;
+        let mut sum = 0u128;
+        let n = 15;
         for _ in 0..n {
             let wl = SyntheticWorkload::new(&cfg, 9);
             let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
             e.verify = false;
             let out = e.run().unwrap();
             let ns = out.shuffle_time.as_nanos();
-            best = best.min(ns); sum += ns;
+            best = best.min(ns);
+            sum += ns;
         }
-        println!("SHUF k={k} q={q} B={b}: mean {}µs min {}µs", sum / n as u128 / 1000, best / 1000);
+        println!(
+            "SHUF k={k} q={q} B={b}: mean {}µs min {}µs",
+            sum / n as u128 / 1000,
+            best / 1000
+        );
     }
 
     // Micro: encode+decode one stage-2 schedule, cloning vs zero-copy.
@@ -29,12 +37,14 @@ fn main() {
     let schedule = master.schedule().unwrap();
     let wl = SyntheticWorkload::new(&cfg, 9);
     let mut workers: Vec<Worker> = (0..cfg.servers()).map(|s| Worker::new(s, &cfg)).collect();
-    for w in workers.iter_mut() { w.run_map_phase(&cfg, &master.placement, &wl).unwrap(); }
+    for w in workers.iter_mut() {
+        w.run_map_phase(&cfg, &master.placement, &wl).unwrap();
+    }
     let groups: Vec<&GroupPlan> = schedule.stage1.iter().chain(schedule.stage2.iter()).collect();
 
     let chunk = |w: &Worker, plan: &GroupPlan, p: usize| -> camr::error::Result<Vec<u8>> {
         let c = plan.chunks[p];
-        Ok(w.store.get(camr::coordinator::values::ValueKey { job: c.job, func: c.func, batch: c.batch })?.clone())
+        Ok(w.store.get(ValueKey { job: c.job, func: c.func, batch: c.batch })?.clone())
     };
 
     for mode in ["cloning", "zerocopy"] {
@@ -43,21 +53,32 @@ fn main() {
             let t = Instant::now();
             let mut total = 0usize;
             for plan in &groups {
-                let deltas: Vec<Vec<u8>> = plan.members.iter().enumerate().map(|(t_pos, &m)| {
-                    if mode == "cloning" {
-                        plan.encode(t_pos, cfg.value_bytes, |p| chunk(&workers[m], plan, p)).unwrap()
-                    } else {
-                        workers[m].encode_for_group(plan).unwrap()
-                    }
-                }).collect();
+                let deltas: Vec<Vec<u8>> = plan
+                    .members
+                    .iter()
+                    .enumerate()
+                    .map(|(t_pos, &m)| {
+                        if mode == "cloning" {
+                            plan.encode(t_pos, cfg.value_bytes, |p| chunk(&workers[m], plan, p))
+                                .unwrap()
+                        } else {
+                            workers[m].encode_for_group(plan).unwrap()
+                        }
+                    })
+                    .collect();
                 for (r, &m) in plan.members.iter().enumerate() {
                     let out = if mode == "cloning" {
-                        plan.decode(r, cfg.value_bytes, &deltas, |p| chunk(&workers[m], plan, p)).unwrap()
+                        plan.decode(r, cfg.value_bytes, &deltas, |p| chunk(&workers[m], plan, p))
+                            .unwrap()
                     } else {
                         plan.decode_ref(r, cfg.value_bytes, &deltas, |p| {
                             let c = plan.chunks[p];
-                            Ok(workers[m].store.get(camr::coordinator::values::ValueKey { job: c.job, func: c.func, batch: c.batch })?.as_slice())
-                        }).unwrap()
+                            Ok(workers[m]
+                                .store
+                                .get(ValueKey { job: c.job, func: c.func, batch: c.batch })?
+                                .as_slice())
+                        })
+                        .unwrap()
                     };
                     total += out.len();
                 }

@@ -75,6 +75,8 @@ fn main() -> anyhow::Result<()> {
             anyhow::ensure!(l1 < l0, "model {j} loss did not decrease: {l1} !< {l0}");
         }
     }
-    println!("\ngradient_aggregation OK — every model's loss decreased across {steps} coded-shuffle SGD steps");
+    println!(
+        "\ngradient_aggregation OK — every model's loss decreased across {steps} coded-shuffle SGD steps"
+    );
     Ok(())
 }

@@ -1,0 +1,158 @@
+//! Bandwidth crossover: where does CAMR's extra map work pay for
+//! itself?
+//!
+//! CAMR maps every subfile `k-1` times to shrink the shuffle. Against a
+//! *minimal-map* baseline (every batch stored and mapped exactly once,
+//! round-robin; reducers fetch every non-local batch aggregate as a
+//! unicast) that is a real trade: `(k-1)×` the map compute for roughly
+//! `1/(2-k/K)…` of the bytes. On a fast network the minimal mapper wins
+//! (compute-bound); on a slow one CAMR wins (shuffle-bound). This
+//! example sweeps link bandwidth under shifted-exponential stragglers,
+//! brackets the crossover by bisection on the simulator, and
+//! cross-checks it against the closed form
+//! `bw* = Δbytes / Δmap_secs` (exact because latency = 0 makes the
+//! simulated shuffle time `bytes/bw`).
+//!
+//! Run: `cargo run --release --example straggler_sweep [-- --quick]`
+
+use camr::config::SystemConfig;
+use camr::coordinator::engine::Engine;
+use camr::net::{Bus, Stage, Transmission};
+use camr::report::Table;
+use camr::sim::{self, LinkKind, SimConfig, StragglerModel};
+use camr::workload::synth::SyntheticWorkload;
+
+/// Minimal-map scenario: single-copy round-robin placement (batch
+/// `(j, b)` lives only on server `(j·k + b) mod K`), so the map phase
+/// does `1/(k-1)` of CAMR's work, and every reducer unicast-fetches
+/// each non-local batch aggregate.
+fn minimal_map_scenario(cfg: &SystemConfig) -> (Vec<usize>, Bus) {
+    let servers = cfg.servers();
+    let mut maps = vec![0usize; servers];
+    let mut bus = Bus::new();
+    for j in 0..cfg.jobs() {
+        for b in 0..cfg.batches() {
+            maps[(j * cfg.batches() + b) % servers] += cfg.gamma;
+        }
+    }
+    for f in 0..cfg.functions() {
+        let m = cfg.reducer_of(f);
+        for j in 0..cfg.jobs() {
+            for b in 0..cfg.batches() {
+                let holder = (j * cfg.batches() + b) % servers;
+                if holder != m {
+                    bus.unicast(Stage::Baseline, holder, m, cfg.value_bytes);
+                }
+            }
+        }
+    }
+    (maps, bus)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = SystemConfig::new(3, 2, 2)?;
+
+    // CAMR's byte-exact ledger from a real run.
+    let wl = SyntheticWorkload::new(&cfg, 7);
+    let mut e = Engine::new(cfg.clone(), Box::new(wl))?;
+    e.verify = false;
+    e.run()?;
+    let camr_maps = sim::camr_per_worker_maps(&cfg, &e.master.placement);
+    let camr_ledger: Vec<Transmission> = e.bus.ledger().to_vec();
+    let (min_maps, min_bus) = minimal_map_scenario(&cfg);
+
+    let base = SimConfig {
+        link: LinkKind::Shared,
+        link_bytes_per_sec: 1.0, // overwritten per sweep point
+        latency_secs: 0.0,
+        secs_per_map: 1e-3,
+        speeds: Vec::new(),
+        straggler: StragglerModel::ShiftedExp { rate: 5.0 },
+        seed: 42,
+    };
+    let at = |bw: f64| -> anyhow::Result<(f64, f64)> {
+        let mut sc = base.clone();
+        sc.link_bytes_per_sec = bw;
+        let c = sim::simulate(&sc, &camr_maps, &camr_ledger)?;
+        let m = sim::simulate(&sc, &min_maps, min_bus.ledger())?;
+        Ok((c.total_secs, m.total_secs))
+    };
+
+    let camr_tasks: usize = camr_maps.iter().sum();
+    let min_tasks: usize = min_maps.iter().sum();
+    let camr_bytes: usize = camr_ledger.iter().map(|t| t.bytes).sum();
+    let min_bytes: usize = min_bus.ledger().iter().map(|t| t.bytes).sum();
+    println!(
+        "CAMR vs minimal-map baseline — K={} J={} γ={} B={} (shifted_exp stragglers, seed 42)",
+        cfg.servers(),
+        cfg.jobs(),
+        cfg.gamma,
+        cfg.value_bytes
+    );
+    println!(
+        "  map tasks: camr {camr_tasks} vs minimal {min_tasks} ({}x extra compute)",
+        camr_tasks / min_tasks
+    );
+    println!("  shuffle bytes: camr {camr_bytes} vs minimal {min_bytes}\n");
+    anyhow::ensure!(camr_tasks > min_tasks, "CAMR must do extra map work");
+    anyhow::ensure!(camr_bytes < min_bytes, "CAMR must move fewer bytes");
+
+    // Log-spaced bandwidth sweep.
+    let points = if quick { 6 } else { 11 };
+    let (lo_exp, hi_exp) = (4.0f64, 9.0f64);
+    let mut t = Table::new(vec!["bw_bytes_per_sec", "t_camr", "t_minimal", "winner"]);
+    for i in 0..points {
+        let bw = 10f64.powf(lo_exp + (hi_exp - lo_exp) * i as f64 / (points - 1) as f64);
+        let (tc, tm) = at(bw)?;
+        t.row(vec![
+            format!("{bw:.3e}"),
+            format!("{tc:.6}"),
+            format!("{tm:.6}"),
+            if tc < tm { "camr" } else { "minimal" }.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // The regimes must flip across the sweep.
+    let (tc_slow, tm_slow) = at(10f64.powf(lo_exp))?;
+    let (tc_fast, tm_fast) = at(10f64.powf(hi_exp))?;
+    anyhow::ensure!(tc_slow < tm_slow, "on a slow link CAMR must win");
+    anyhow::ensure!(tc_fast > tm_fast, "on a fast link minimal-map must win");
+
+    // Bisect the crossover on log10(bandwidth).
+    let (mut lo, mut hi) = (lo_exp, hi_exp);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        let (tc, tm) = at(10f64.powf(mid))?;
+        if tc < tm {
+            lo = mid; // CAMR still winning: crossover is at higher bw.
+        } else {
+            hi = mid;
+        }
+    }
+    let crossover = 10f64.powf(0.5 * (lo + hi));
+
+    // Closed-form cross-check: with zero latency the simulated time is
+    // map_secs + bytes/bw, so t_camr = t_min at Δbytes / Δmap_secs.
+    let (c_fast, m_fast) = {
+        let mut sc = base.clone();
+        sc.link_bytes_per_sec = 1e30; // shuffle ≈ 0: read off map_secs
+        (
+            sim::simulate(&sc, &camr_maps, &camr_ledger)?.map_secs,
+            sim::simulate(&sc, &min_maps, min_bus.ledger())?.map_secs,
+        )
+    };
+    let analytic = (min_bytes - camr_bytes) as f64 / (c_fast - m_fast);
+    anyhow::ensure!(
+        (crossover - analytic).abs() / analytic < 1e-6,
+        "bisected {crossover} vs analytic {analytic}"
+    );
+    println!(
+        "\ncrossover: {crossover:.4e} B/s ({:.2} Mbit/s) — below this, CAMR's extra map \
+         work pays for itself (analytic {analytic:.4e} B/s)",
+        crossover * 8.0 / 1e6
+    );
+    println!("straggler_sweep OK");
+    Ok(())
+}

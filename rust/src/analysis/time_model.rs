@@ -1,136 +1,8 @@
-//! Job-completion-time model — connects communication load back to the
-//! paper's motivation ("on average, 33% of the overall job execution
-//! time is spent on data shuffling", §I).
-//!
-//! Given a link bandwidth and a per-map-invocation compute cost, the
-//! model converts measured byte counts and map counts into simulated
-//! phase times and end-to-end speedups of CAMR over the uncoded
-//! baselines. Map work runs K-way parallel; the shared link serializes
-//! the shuffle (the paper's single-shared-link model).
+//! Closed-form job-completion-time model — **moved to
+//! [`crate::sim::model`]**, where it is the zero-latency / homogeneous /
+//! no-straggler degenerate case of the discrete-event cluster
+//! simulator (asserted bit-equal in `rust/tests/sim_times.rs`). This
+//! module remains as a re-export so existing `analysis::TimeModel`
+//! callers keep working.
 
-use super::load;
-
-/// Cluster timing parameters.
-#[derive(Debug, Clone, Copy)]
-pub struct TimeModel {
-    /// Shared-link bandwidth in bytes/second.
-    pub link_bytes_per_sec: f64,
-    /// Compute cost of mapping one subfile for all Q functions, seconds.
-    pub secs_per_map: f64,
-}
-
-impl TimeModel {
-    /// A 1 Gb/s Ethernet-class link (the paper's commodity-cluster
-    /// setting) with a 1 ms map task.
-    pub fn commodity() -> Self {
-        TimeModel { link_bytes_per_sec: 125e6, secs_per_map: 1e-3 }
-    }
-
-    /// Simulated phase times for a run: `(map_secs, shuffle_secs)`.
-    ///
-    /// `map_invocations` spread over `servers` parallel workers;
-    /// `shuffle_bytes` serialized on the shared link.
-    pub fn phase_times(
-        &self,
-        servers: usize,
-        map_invocations: usize,
-        shuffle_bytes: f64,
-    ) -> (f64, f64) {
-        let map = map_invocations as f64 / servers as f64 * self.secs_per_map;
-        let shuffle = shuffle_bytes / self.link_bytes_per_sec;
-        (map, shuffle)
-    }
-
-    /// Simulated job time = parallel map + serialized shuffle.
-    pub fn job_time(&self, servers: usize, map_invocations: usize, shuffle_bytes: f64) -> f64 {
-        let (m, s) = self.phase_times(servers, map_invocations, shuffle_bytes);
-        m + s
-    }
-
-    /// Analytic job-time comparison of CAMR vs the uncoded-aggregated
-    /// baseline at the same placement (identical map work — both schemes
-    /// map each subfile k-1 times — so the entire difference is the
-    /// shuffle). Returns `(t_camr, t_uncoded, speedup)` for a job set
-    /// with the given per-value size.
-    pub fn camr_vs_uncoded(
-        &self,
-        k: usize,
-        q: usize,
-        gamma: usize,
-        value_bytes: usize,
-    ) -> (f64, f64, f64) {
-        let servers = k * q;
-        let jobs = q.pow(k as u32 - 1);
-        let subfiles = k * gamma;
-        let normalizer = (jobs * servers * value_bytes) as f64; // J·Q·B, Q = K
-        let maps = (k - 1) * jobs * subfiles;
-        let camr_bytes = load::camr_total(k, q) * normalizer;
-        let unc_bytes = load::uncoded_aggregated_total(k, q) * normalizer;
-        let t_camr = self.job_time(servers, maps, camr_bytes);
-        let t_unc = self.job_time(servers, maps, unc_bytes);
-        (t_camr, t_unc, t_unc / t_camr)
-    }
-
-    /// The shuffle's share of total job time (the paper's "33%"-style
-    /// statistic) for a given scheme load.
-    pub fn shuffle_fraction(
-        &self,
-        k: usize,
-        q: usize,
-        gamma: usize,
-        value_bytes: usize,
-        scheme_load: f64,
-    ) -> f64 {
-        let servers = k * q;
-        let jobs = q.pow(k as u32 - 1);
-        let subfiles = k * gamma;
-        let normalizer = (jobs * servers * value_bytes) as f64;
-        let maps = (k - 1) * jobs * subfiles;
-        let bytes = scheme_load * normalizer;
-        let (m, s) = self.phase_times(servers, maps, bytes);
-        s / (m + s)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn phase_times_scale_linearly() {
-        let tm = TimeModel { link_bytes_per_sec: 1e6, secs_per_map: 1e-3 };
-        let (m, s) = tm.phase_times(10, 100, 2e6);
-        assert!((m - 0.01).abs() < 1e-12); // 100 maps / 10 workers × 1ms
-        assert!((s - 2.0).abs() < 1e-12); // 2 MB / 1 MB/s
-    }
-
-    #[test]
-    fn camr_speedup_over_uncoded_matches_load_ratio_when_shuffle_bound() {
-        // With a slow link (shuffle-dominated), the job-time speedup
-        // approaches the load ratio (2 - k/K) / L_CAMR.
-        let tm = TimeModel { link_bytes_per_sec: 1e3, secs_per_map: 1e-9 };
-        let (tc, tu, speedup) = tm.camr_vs_uncoded(3, 3, 2, 1 << 20);
-        assert!(tc < tu);
-        let load_ratio =
-            load::uncoded_aggregated_total(3, 3) / load::camr_total(3, 3);
-        assert!((speedup - load_ratio).abs() < 1e-6, "{speedup} vs {load_ratio}");
-    }
-
-    #[test]
-    fn compute_bound_cluster_sees_no_speedup() {
-        // A very fast link makes both schemes map-bound: speedup → 1.
-        let tm = TimeModel { link_bytes_per_sec: 1e15, secs_per_map: 1e-3 };
-        let (_, _, speedup) = tm.camr_vs_uncoded(3, 3, 2, 64);
-        assert!((speedup - 1.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn shuffle_fraction_is_a_fraction() {
-        let tm = TimeModel::commodity();
-        let f = tm.shuffle_fraction(3, 2, 2, 1 << 16, load::camr_total(3, 2));
-        assert!(f > 0.0 && f < 1.0);
-        // Coding must lower the shuffle share relative to uncoded.
-        let fu = tm.shuffle_fraction(3, 2, 2, 1 << 16, load::uncoded_aggregated_total(3, 2));
-        assert!(f < fu);
-    }
-}
+pub use crate::sim::model::TimeModel;

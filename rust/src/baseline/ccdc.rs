@@ -111,7 +111,13 @@ pub struct CcdcEngine {
 impl CcdcEngine {
     /// Build for `K` servers with group size `k` (μK = k-1), matching a
     /// CAMR config's storage fraction when `K = k·q`.
-    pub fn new(servers: usize, k: usize, gamma: usize, value_bytes: usize, seed: u64) -> Result<Self> {
+    pub fn new(
+        servers: usize,
+        k: usize,
+        gamma: usize,
+        value_bytes: usize,
+        seed: u64,
+    ) -> Result<Self> {
         if k < 2 || servers <= k {
             return Err(CamrError::InvalidConfig(format!(
                 "CCDC needs 2 <= k < K (got k={k}, K={servers})"
@@ -224,9 +230,9 @@ impl CcdcEngine {
             for &m in owners {
                 let mut acc = vec![0u8; b];
                 for batch in 0..self.k {
-                    let v = store[m]
-                        .get(&(j, m, batch))
-                        .ok_or_else(|| CamrError::MissingValue(format!("job {j} batch {batch} at {m}")))?;
+                    let v = store[m].get(&(j, m, batch)).ok_or_else(|| {
+                        CamrError::MissingValue(format!("job {j} batch {batch} at {m}"))
+                    })?;
                     acc = sum_u64(&acc, v);
                 }
                 outputs.insert((j, m), acc);

@@ -177,6 +177,9 @@ pub struct RunConfig {
     pub artifact: Option<String>,
     /// Emit JSON metrics instead of a human table.
     pub json: bool,
+    /// Optional `[sim]` cluster model (`camr simulate`, and `camr run`
+    /// attaches simulated phase times to its report when present).
+    pub sim: Option<crate::sim::SimConfig>,
 }
 
 impl RunConfig {
@@ -194,6 +197,13 @@ impl RunConfig {
     /// gamma = 2
     /// rounds = 1
     /// value_bytes = 64
+    ///
+    /// # Optional cluster model for `camr simulate` / simulated times.
+    /// [sim]
+    /// link = "shared"              # shared | bisection
+    /// link_bytes_per_sec = 1.25e8
+    /// secs_per_map = 0.001
+    /// straggler = "none"           # none | shifted_exp | tail
     /// ```
     pub fn from_text(text: &str) -> Result<Self> {
         let c = CfgText::parse(text).map_err(CamrError::InvalidConfig)?;
@@ -209,7 +219,7 @@ impl RunConfig {
             }
         }
         for s in c.section_names() {
-            if !matches!(s.as_str(), "" | "system") {
+            if !matches!(s.as_str(), "" | "system" | "sim") {
                 return Err(CamrError::InvalidConfig(format!("unknown section [{s}]")));
             }
         }
@@ -225,7 +235,8 @@ impl RunConfig {
         let seed = c.get_u64("", "seed").map_err(CamrError::InvalidConfig)?.unwrap_or(0xCA3A);
         let artifact = c.get("", "artifact").map(|s| s.to_string());
         let json = c.get_bool("", "json").map_err(CamrError::InvalidConfig)?.unwrap_or(false);
-        Ok(RunConfig { system, workload, seed, artifact, json })
+        let sim = crate::sim::SimConfig::from_cfg(&c)?;
+        Ok(RunConfig { system, workload, seed, artifact, json, sim })
     }
 
     /// Load from a file path.
@@ -301,6 +312,27 @@ mod tests {
         assert_eq!(rc.seed, 7);
         assert!(!rc.json);
         assert!(rc.artifact.is_none());
+        assert!(rc.sim.is_none(), "no [sim] section means no sim config");
+    }
+
+    #[test]
+    fn config_file_parses_sim_section() {
+        let text = r#"
+            [system]
+            k = 3
+            q = 2
+            [sim]
+            link = "shared"
+            link_bytes_per_sec = 1.25e6
+            straggler = "shifted_exp"
+            straggler_rate = 5.0
+            seed = 42
+        "#;
+        let rc = RunConfig::from_text(text).unwrap();
+        let sc = rc.sim.expect("[sim] section parsed");
+        assert_eq!(sc.link_bytes_per_sec, 1.25e6);
+        assert_eq!(sc.seed, 42);
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2\n[sim]\nwat = 1").is_err());
     }
 
     #[test]

@@ -33,6 +33,9 @@
 //! - [`baseline`] — CCDC and uncoded baselines for comparison.
 //! - [`analysis`] — closed-form load formulas (§IV, §V) and job-count
 //!   minimums (Table III).
+//! - [`sim`] — discrete-event cluster simulator: replays byte-exact
+//!   ledgers into end-to-end completion times under link models,
+//!   stragglers, and heterogeneous worker speeds.
 //! - [`workload`] — word counting, distributed matvec (NN layers),
 //!   gradient aggregation.
 //! - [`runtime`] — PJRT client wrapper executing AOT-compiled JAX/Pallas
@@ -102,6 +105,40 @@
 //! assert!(outcome.verified);
 //! assert!((outcome.total_load() - 1.0).abs() < 1e-9);
 //! ```
+//!
+//! ## Simulating a cluster
+//!
+//! The ledgers above are exact in *bytes*; the [`sim`] subsystem turns
+//! them into *time*. A deterministic discrete-event simulator (binary
+//! heap + virtual clock, seeded by [`util::rng`]) replays any recorded
+//! ledger through a configurable cluster: shared-link or
+//! full-bisection bandwidth, per-message latency, per-worker speed
+//! multipliers, and pluggable straggler distributions — with multicast
+//! charged once, exactly like [`net::Bus`]. With zero latency,
+//! homogeneous workers, and no stragglers it reproduces the closed-form
+//! [`sim::TimeModel`] bit-exactly, so the analytic model and the
+//! simulator can never drift apart. Run `camr simulate
+//! configs/example1.toml` to compare CAMR / CCDC / uncoded completion
+//! times, or `cargo run --release --example straggler_sweep` to find
+//! the bandwidth crossover where CAMR's extra map work pays for itself.
+//!
+//! ```
+//! use camr::config::SystemConfig;
+//! use camr::coordinator::engine::Engine;
+//! use camr::sim::{self, SimConfig, StragglerModel};
+//! use camr::workload::synth::SyntheticWorkload;
+//!
+//! let cfg = SystemConfig::new(3, 2, 2).unwrap();
+//! let wl = SyntheticWorkload::new(&cfg, 7);
+//! let mut engine = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+//! engine.run().unwrap();
+//!
+//! let mut sc = SimConfig::commodity(); // 1 Gb/s shared link, 1 ms map
+//! sc.straggler = StragglerModel::ShiftedExp { rate: 5.0 };
+//! let maps = sim::camr_per_worker_maps(&cfg, &engine.master.placement);
+//! let out = sim::simulate(&sc, &maps, engine.bus.ledger()).unwrap();
+//! assert!(out.total_secs > out.map_secs && out.map_secs > 0.0);
+//! ```
 
 pub mod agg;
 pub mod analysis;
@@ -116,6 +153,7 @@ pub mod placement;
 pub mod report;
 pub mod runtime;
 pub mod shuffle;
+pub mod sim;
 pub mod util;
 pub mod workload;
 

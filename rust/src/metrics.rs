@@ -6,6 +6,8 @@
 use crate::analysis::load;
 use crate::config::SystemConfig;
 use crate::coordinator::engine::RunOutcome;
+use crate::net::Stage;
+use crate::sim::SimOutcome;
 use crate::util::json::Json;
 
 /// One stage's measured vs expected load.
@@ -19,6 +21,37 @@ pub struct StageMetric {
     pub measured: f64,
     /// Closed-form load from §IV.
     pub expected: f64,
+}
+
+/// Simulated per-phase times from the discrete-event cluster simulator
+/// ([`crate::sim`]), attached to a report when the run config carries a
+/// `[sim]` section.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimTimes {
+    /// Simulated map-phase duration (slowest worker), seconds.
+    pub map_secs: f64,
+    /// Simulated per-stage shuffle durations `[stage1, stage2, stage3]`.
+    pub stage_secs: [f64; 3],
+    /// Simulated total shuffle duration.
+    pub shuffle_secs: f64,
+    /// Simulated end-to-end completion time.
+    pub total_secs: f64,
+}
+
+impl SimTimes {
+    /// Extract report times from a simulation outcome.
+    pub fn from_outcome(out: &SimOutcome) -> Self {
+        SimTimes {
+            map_secs: out.map_secs,
+            stage_secs: [
+                out.stage_secs(Stage::Stage1),
+                out.stage_secs(Stage::Stage2),
+                out.stage_secs(Stage::Stage3),
+            ],
+            shuffle_secs: out.shuffle_secs,
+            total_secs: out.total_secs,
+        }
+    }
 }
 
 /// Full report of a CAMR run.
@@ -54,6 +87,8 @@ pub struct LoadReport {
     pub verified: bool,
     /// Phase wall times in microseconds (map, shuffle, reduce).
     pub phase_us: [u128; 3],
+    /// Simulated phase times (when the config has a `[sim]` section).
+    pub sim: Option<SimTimes>,
 }
 
 impl LoadReport {
@@ -89,7 +124,13 @@ impl LoadReport {
                 out.shuffle_time.as_micros(),
                 out.reduce_time.as_micros(),
             ],
+            sim: None,
         }
+    }
+
+    /// Attach simulated phase times from the cluster simulator.
+    pub fn attach_sim(&mut self, sim: SimTimes) {
+        self.sim = Some(sim);
     }
 
     /// Measured load is within padding slack of the closed form.
@@ -102,6 +143,18 @@ impl LoadReport {
 
     /// Serialize to JSON (stable key order).
     pub fn to_json(&self) -> String {
+        let sim = match &self.sim {
+            None => Json::Null,
+            Some(s) => Json::obj(vec![
+                ("map_secs", Json::Num(s.map_secs)),
+                (
+                    "stage_secs",
+                    Json::Arr(s.stage_secs.iter().map(|&x| Json::Num(x)).collect()),
+                ),
+                ("shuffle_secs", Json::Num(s.shuffle_secs)),
+                ("total_secs", Json::Num(s.total_secs)),
+            ]),
+        };
         let stages: Vec<Json> = self
             .stages
             .iter()
@@ -133,6 +186,7 @@ impl LoadReport {
                 "phase_us",
                 Json::Arr(self.phase_us.iter().map(|&x| Json::UInt(x)).collect()),
             ),
+            ("sim", sim),
         ])
         .render()
     }
@@ -171,7 +225,21 @@ impl std::fmt::Display for LoadReport {
             "  map invocations: {}   phases: map {}µs shuffle {}µs reduce {}µs   verified: {}",
             self.map_invocations, self.phase_us[0], self.phase_us[1], self.phase_us[2],
             self.verified
-        )
+        )?;
+        if let Some(s) = &self.sim {
+            writeln!(
+                f,
+                "  simulated: map {:.6}s + shuffle {:.6}s = {:.6}s  \
+                 (stage1 {:.6}s, stage2 {:.6}s, stage3 {:.6}s)",
+                s.map_secs,
+                s.shuffle_secs,
+                s.total_secs,
+                s.stage_secs[0],
+                s.stage_secs[1],
+                s.stage_secs[2]
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -199,5 +267,29 @@ mod tests {
         // Display renders all stages.
         let text = rep.to_string();
         assert!(text.contains("stage1") && text.contains("stage3"));
+        // Without a [sim] section the report carries no simulated times.
+        assert!(rep.sim.is_none());
+        assert!(js.contains("\"sim\":null"));
+    }
+
+    #[test]
+    fn attached_sim_times_render_in_json_and_display() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 9);
+        let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+        let out = e.run().unwrap();
+        let mut rep = LoadReport::from_outcome(&cfg, &out);
+        let sc = crate::sim::SimConfig::commodity();
+        let maps = crate::sim::camr_per_worker_maps(&cfg, &e.master.placement);
+        let sim = crate::sim::simulate(&sc, &maps, e.bus.ledger()).unwrap();
+        rep.attach_sim(SimTimes::from_outcome(&sim));
+        let s = rep.sim.unwrap();
+        assert!(s.map_secs > 0.0 && s.total_secs > s.map_secs);
+        // Stage times sum to the shuffle total (up to one rounding per
+        // per-stage readout — the global total uses a single rounding).
+        let sum: f64 = s.stage_secs.iter().sum();
+        assert!((s.shuffle_secs - sum).abs() <= 1e-15 * s.shuffle_secs.max(1.0));
+        assert!(rep.to_json().contains("\"total_secs\""));
+        assert!(rep.to_string().contains("simulated:"));
     }
 }

@@ -49,6 +49,36 @@ impl fmt::Display for Stage {
     }
 }
 
+impl Stage {
+    /// Parse the [`fmt::Display`] rendering back into a stage (used to
+    /// replay checked-in ledger fixtures through the simulator).
+    pub fn parse(s: &str) -> Option<Stage> {
+        match s {
+            "stage1" => Some(Stage::Stage1),
+            "stage2" => Some(Stage::Stage2),
+            "stage3" => Some(Stage::Stage3),
+            "baseline" => Some(Stage::Baseline),
+            _ => None,
+        }
+    }
+}
+
+/// Contiguous same-stage runs of a ledger, in order: the
+/// barrier-separated *phases* of the recorded protocol (a CAMR ledger
+/// yields `[stage1, stage2, stage3]`; a baseline ledger one `baseline`
+/// run). The simulator replays each run behind a barrier.
+pub fn stage_runs(ledger: &[Transmission]) -> Vec<(Stage, std::ops::Range<usize>)> {
+    let mut runs = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=ledger.len() {
+        if i == ledger.len() || ledger[i].stage != ledger[start].stage {
+            runs.push((ledger[start].stage, start..i));
+            start = i;
+        }
+    }
+    runs
+}
+
 /// A single transmission on the shared link.
 #[derive(Debug, Clone)]
 pub struct Transmission {
@@ -122,6 +152,12 @@ impl Bus {
     /// Per-stage load.
     pub fn stage_load(&self, stage: Stage, normalizer: f64) -> f64 {
         self.stage_bytes(stage) as f64 / normalizer
+    }
+
+    /// The ledger's barrier-separated phases: contiguous same-stage
+    /// runs, as `(stage, transmissions)` slices (see [`stage_runs`]).
+    pub fn phases(&self) -> Vec<(Stage, &[Transmission])> {
+        stage_runs(&self.ledger).into_iter().map(|(s, r)| (s, &self.ledger[r])).collect()
     }
 
     /// Clear the ledger (reused between runs).
@@ -249,6 +285,32 @@ mod tests {
         assert_eq!(bus.total_bytes(), 60);
         assert!((bus.load(120.0) - 0.5).abs() < 1e-12);
         assert!((bus.stage_load(Stage::Stage3, 60.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_parse_inverts_display() {
+        for s in [Stage::Stage1, Stage::Stage2, Stage::Stage3, Stage::Baseline] {
+            assert_eq!(Stage::parse(&s.to_string()), Some(s));
+        }
+        assert_eq!(Stage::parse("stage9"), None);
+    }
+
+    #[test]
+    fn stage_runs_split_at_stage_changes() {
+        let mut bus = Bus::new();
+        bus.multicast(Stage::Stage1, 0, vec![1], 10);
+        bus.multicast(Stage::Stage1, 1, vec![0], 11);
+        bus.multicast(Stage::Stage2, 0, vec![1], 12);
+        bus.unicast(Stage::Stage3, 1, 0, 13);
+        bus.unicast(Stage::Stage3, 0, 1, 14);
+        let runs = stage_runs(bus.ledger());
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0], (Stage::Stage1, 0..2));
+        assert_eq!(runs[1], (Stage::Stage2, 2..3));
+        assert_eq!(runs[2], (Stage::Stage3, 3..5));
+        let phases = bus.phases();
+        assert_eq!(phases[2].1.iter().map(|t| t.bytes).sum::<usize>(), 27);
+        assert!(stage_runs(&[]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Discrete-event queue: a binary heap of scheduled events plus a
+//! virtual clock.
+//!
+//! Determinism is load-bearing here (the determinism tests diff whole
+//! JSON reports byte-for-byte), so ties are broken by insertion
+//! sequence number: two events at the same virtual time pop in the
+//! order they were scheduled, on every platform, every run. Times are
+//! ordered with [`f64::total_cmp`]; the queue never stores NaN (guarded
+//! by a debug assertion at schedule time).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Something that happens at a point in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// One map task finished on `worker` (the worker's next task, if
+    /// any, starts immediately).
+    MapTaskDone {
+        /// Which worker finished a task.
+        worker: usize,
+    },
+    /// Transmission `index` (its position in the replayed ledger) left
+    /// the link; the next transmission in its chain may start.
+    TxDone {
+        /// Ledger position of the completed transmission.
+        index: usize,
+    },
+}
+
+/// Heap entry. `Ord` is *reversed* on time so that
+/// [`BinaryHeap`] (a max-heap) pops the earliest event first, with FIFO
+/// order on exact ties via `seq`.
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    at: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: smaller time (then smaller seq) compares greater.
+        other.at.total_cmp(&self.at).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue + virtual clock of one simulation.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    now: f64,
+    processed: u64,
+}
+
+impl EventQueue {
+    /// Empty queue at virtual time 0.
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0, processed: 0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of events still pending.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at virtual time `at` (must be finite and not in
+    /// the past).
+    pub fn schedule(&mut self, at: f64, event: Event) {
+        debug_assert!(at.is_finite(), "non-finite event time {at}");
+        debug_assert!(at >= self.now, "event at {at} scheduled before now = {}", self.now);
+        self.heap.push(Scheduled { at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest pending event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.at >= self.now, "clock would run backwards");
+        self.now = s.at;
+        self.processed += 1;
+        Some((s.at, s.event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, Event::MapTaskDone { worker: 3 });
+        q.schedule(1.0, Event::MapTaskDone { worker: 1 });
+        q.schedule(2.0, Event::MapTaskDone { worker: 2 });
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::MapTaskDone { worker } => worker,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(q.processed(), 3);
+        assert!((q.now() - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ties_break_by_schedule_order() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(1.0, Event::TxDone { index: i });
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::TxDone { index } => index,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(0.5, Event::TxDone { index: 0 });
+        q.schedule(0.5, Event::TxDone { index: 1 });
+        q.schedule(0.75, Event::TxDone { index: 2 });
+        let mut last = 0.0;
+        while let Some((at, _)) = q.pop() {
+            assert!(at >= last);
+            last = at;
+            // Events may schedule follow-ups at the current time.
+            if q.len() == 1 {
+                q.schedule(last, Event::TxDone { index: 9 });
+            }
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.processed(), 4);
+    }
+}

@@ -1,0 +1,171 @@
+//! Link models: how replayed transmissions contend for network
+//! resources.
+//!
+//! Both models charge a multicast **once** — one link occupancy
+//! regardless of recipient count — matching [`crate::net::Bus`]
+//! semantics (Definition 3 counts bytes on the link, and multicast is
+//! exactly where coded shuffling wins).
+//!
+//! - [`LinkKind::Shared`] — the paper's single shared multicast link:
+//!   every transmission in the ledger serializes on one resource, in
+//!   ledger (= schedule) order.
+//! - [`LinkKind::Bisection`] — full-bisection fabric: each *sender's*
+//!   NIC is the bottleneck. Transmissions from different senders
+//!   proceed in parallel; each sender's transmissions serialize in
+//!   ledger order on its own NIC at the same per-link bandwidth.
+//!
+//! A transmission occupies its resource for `latency + bytes/bandwidth`
+//! seconds (fixed per-message overhead plus serialization time).
+//!
+//! Completion times are computed from *integer* accumulators
+//! (`Acc`: message and byte counts) rather than by summing per-message
+//! float durations — so a phase's duration is exactly
+//! `msgs·latency + bytes/bandwidth` with one rounding, which is what
+//! makes the zero-latency degenerate case bit-equal to the closed-form
+//! [`crate::sim::model::TimeModel`].
+
+use crate::error::{CamrError, Result};
+use crate::net::Transmission;
+
+/// Which contention model the simulated network uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// One shared multicast link; all transmissions serialize.
+    Shared,
+    /// Full-bisection fabric; transmissions serialize per sender NIC.
+    Bisection,
+}
+
+impl LinkKind {
+    /// Parse a link-model name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "shared" => Ok(LinkKind::Shared),
+            "bisection" => Ok(LinkKind::Bisection),
+            other => Err(CamrError::InvalidConfig(format!(
+                "unknown link model {other} (shared | bisection)"
+            ))),
+        }
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LinkKind::Shared => "shared",
+            LinkKind::Bisection => "bisection",
+        }
+    }
+}
+
+/// Integer message/byte accumulator for one serialized resource.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct Acc {
+    /// Messages charged so far.
+    pub msgs: u64,
+    /// Bytes charged so far.
+    pub bytes: u64,
+}
+
+impl Acc {
+    /// Charge one message of `bytes` bytes.
+    pub fn add(&mut self, bytes: usize) {
+        self.msgs += 1;
+        self.bytes += bytes as u64;
+    }
+
+    /// Busy time accumulated so far: `msgs·latency + bytes/bandwidth`.
+    pub fn secs(&self, bytes_per_sec: f64, latency_secs: f64) -> f64 {
+        self.msgs as f64 * latency_secs + self.bytes as f64 / bytes_per_sec
+    }
+}
+
+/// The serialization chains of one shuffle phase: each inner `Vec` holds
+/// positions (into the phase's ledger slice) that contend for one
+/// resource, in order; distinct chains run in parallel.
+#[derive(Debug)]
+pub(crate) struct PhaseChains {
+    /// Transmission positions per chain.
+    pub chains: Vec<Vec<usize>>,
+}
+
+impl PhaseChains {
+    /// Group a phase's transmissions into chains for `kind`. Bisection
+    /// chains are keyed by sender in order of first appearance (stable
+    /// and platform-independent).
+    pub fn build(kind: LinkKind, phase: &[Transmission], senders: usize) -> Result<Self> {
+        for t in phase {
+            if t.sender >= senders {
+                return Err(CamrError::InvalidConfig(format!(
+                    "ledger sender {} out of range for a {senders}-worker cluster",
+                    t.sender
+                )));
+            }
+        }
+        let chains = match kind {
+            LinkKind::Shared => vec![(0..phase.len()).collect()],
+            LinkKind::Bisection => {
+                let mut chain_of: Vec<Option<usize>> = vec![None; senders];
+                let mut chains: Vec<Vec<usize>> = Vec::new();
+                for (i, t) in phase.iter().enumerate() {
+                    let c = *chain_of[t.sender].get_or_insert_with(|| {
+                        chains.push(Vec::new());
+                        chains.len() - 1
+                    });
+                    chains[c].push(i);
+                }
+                chains
+            }
+        };
+        Ok(PhaseChains { chains })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Stage;
+
+    fn tx(sender: usize, bytes: usize) -> Transmission {
+        Transmission { stage: Stage::Stage1, sender, recipients: vec![], bytes }
+    }
+
+    #[test]
+    fn parse_and_label() {
+        assert_eq!(LinkKind::parse("shared").unwrap(), LinkKind::Shared);
+        assert_eq!(LinkKind::parse("bisection").unwrap(), LinkKind::Bisection);
+        assert!(LinkKind::parse("token-ring").is_err());
+        assert_eq!(LinkKind::Bisection.label(), "bisection");
+    }
+
+    #[test]
+    fn acc_uses_one_rounding_per_readout() {
+        let mut a = Acc::default();
+        for _ in 0..3 {
+            a.add(100);
+        }
+        // Exactly 300/bw + 3·lat — not a sum of three rounded terms.
+        assert_eq!(a.secs(1e3, 0.0), 300.0 / 1e3);
+        assert_eq!(a.secs(1e3, 0.5), 3.0 * 0.5 + 300.0 / 1e3);
+    }
+
+    #[test]
+    fn shared_is_one_chain_in_ledger_order() {
+        let phase = [tx(0, 1), tx(2, 2), tx(1, 3)];
+        let c = PhaseChains::build(LinkKind::Shared, &phase, 4).unwrap();
+        assert_eq!(c.chains, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn bisection_chains_by_sender_first_appearance() {
+        let phase = [tx(2, 1), tx(0, 2), tx(2, 3), tx(1, 4), tx(0, 5)];
+        let c = PhaseChains::build(LinkKind::Bisection, &phase, 3).unwrap();
+        // Sender 2 appears first, then 0, then 1; per-sender order kept.
+        assert_eq!(c.chains, vec![vec![0, 2], vec![1, 4], vec![3]]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_sender() {
+        let phase = [tx(7, 1)];
+        assert!(PhaseChains::build(LinkKind::Shared, &phase, 4).is_err());
+    }
+}

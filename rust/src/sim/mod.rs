@@ -1,0 +1,695 @@
+//! Discrete-event cluster simulator: turns byte-exact shuffle ledgers
+//! into end-to-end completion times under stragglers, heterogeneity,
+//! and real link models.
+//!
+//! The ledgers produced by [`crate::net::Bus`] (PR 1/2) are exact in
+//! *bytes*, but the bus itself is an instantaneous accounting device —
+//! it cannot answer the paper's headline question, which is about
+//! *time* ("on average, 33% of the overall job execution time is spent
+//! on data shuffling", §I). This module closes that gap: it replays a
+//! recorded ledger — or one freshly produced by a live engine run —
+//! through a configurable cluster model and reports per-phase simulated
+//! times.
+//!
+//! ## Architecture
+//!
+//! - [`event::EventQueue`] — a binary-heap event queue with a virtual
+//!   clock; ties break by schedule order so runs are bit-deterministic.
+//! - **Map phase** — every worker runs its map tasks sequentially while
+//!   workers proceed in parallel; each task's duration is
+//!   `secs_per_map × straggler_factor / speed`. The phase ends at a
+//!   barrier (the slowest worker), which is exactly how stragglers
+//!   hurt real MapReduce clusters.
+//! - **Shuffle** — the ledger is split into barrier-separated phases
+//!   (contiguous same-stage runs, via [`crate::net::stage_runs`]) and
+//!   each phase's transmissions contend per the link model
+//!   ([`link::LinkKind`]): one serializing shared multicast link (the
+//!   paper's model) or a full-bisection fabric that serializes per
+//!   sender NIC. **A multicast is charged once** regardless of
+//!   recipient count, matching `Bus` semantics — this is the property
+//!   that makes coded shuffling win.
+//! - **Stragglers** — pluggable distributions
+//!   ([`straggler::StragglerModel`]): deterministic, shifted
+//!   exponential, percentile tail. Draws are addressable by
+//!   `(seed, worker, task)`, so schemes with identical map layouts see
+//!   identical map randomness and differ only by their shuffles.
+//! - **Heterogeneity** — per-worker compute-speed multipliers.
+//!
+//! ## The closed form is the degenerate case
+//!
+//! With zero latency, homogeneous workers, no stragglers, and the
+//! shared link, the simulator reproduces [`model::TimeModel`] — the
+//! closed-form model this module absorbed from `analysis::time_model` —
+//! **bit-exactly** (`rust/tests/sim_times.rs`). That identity is not an
+//! accident: task completion times are computed from straggler-weighted
+//! work *units* (sums of exact `1.0`s in the degenerate case) and link
+//! times from integer byte accumulators (`link::Acc`), so each readout
+//! performs the same single rounding as the closed form. The two
+//! models cannot silently diverge.
+
+pub mod event;
+pub mod link;
+pub mod model;
+pub mod straggler;
+
+pub use event::{Event, EventQueue};
+pub use link::LinkKind;
+pub use model::TimeModel;
+pub use straggler::StragglerModel;
+
+use crate::analysis::jobs::binomial;
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::net::{stage_runs, Stage, Transmission};
+use crate::placement::Placement;
+use crate::util::cfgtext::CfgText;
+use crate::util::json::Json;
+use link::{Acc, PhaseChains};
+
+/// Full cluster model for one simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    /// Network contention model.
+    pub link: LinkKind,
+    /// Per-link bandwidth in bytes/second.
+    pub link_bytes_per_sec: f64,
+    /// Fixed per-message overhead (seconds) occupying the link.
+    pub latency_secs: f64,
+    /// Nominal compute cost of one map invocation (one subfile, all Q
+    /// functions), seconds.
+    pub secs_per_map: f64,
+    /// Per-worker compute-speed multipliers (task time is divided by
+    /// the worker's speed). Empty = homogeneous cluster (all `1.0`).
+    pub speeds: Vec<f64>,
+    /// Straggler distribution over map-task slowdown factors.
+    pub straggler: StragglerModel,
+    /// Seed for the straggler draws (perturbs *times* only — the ledger
+    /// bytes are an input and are never touched).
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// The commodity-cluster preset: 1 Gb/s shared link, 1 ms map task,
+    /// zero latency, homogeneous, no stragglers — the parameters of
+    /// [`TimeModel::commodity`], of which this is the event-driven
+    /// generalization.
+    pub fn commodity() -> Self {
+        let tm = TimeModel::commodity();
+        SimConfig {
+            link: LinkKind::Shared,
+            link_bytes_per_sec: tm.link_bytes_per_sec,
+            latency_secs: 0.0,
+            secs_per_map: tm.secs_per_map,
+            speeds: Vec::new(),
+            straggler: StragglerModel::Deterministic,
+            seed: 1,
+        }
+    }
+
+    /// The closed-form model with this config's bandwidth and map cost
+    /// (what the simulator degenerates to at zero latency, homogeneous
+    /// speeds, and no stragglers).
+    pub fn time_model(&self) -> TimeModel {
+        TimeModel { link_bytes_per_sec: self.link_bytes_per_sec, secs_per_map: self.secs_per_map }
+    }
+
+    /// Validate all parameters.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.link_bytes_per_sec.is_finite() && self.link_bytes_per_sec > 0.0) {
+            return Err(CamrError::InvalidConfig(format!(
+                "link_bytes_per_sec must be finite and > 0 (got {})",
+                self.link_bytes_per_sec
+            )));
+        }
+        if !(self.latency_secs.is_finite() && self.latency_secs >= 0.0) {
+            return Err(CamrError::InvalidConfig(format!(
+                "latency_secs must be finite and >= 0 (got {})",
+                self.latency_secs
+            )));
+        }
+        if !(self.secs_per_map.is_finite() && self.secs_per_map >= 0.0) {
+            return Err(CamrError::InvalidConfig(format!(
+                "secs_per_map must be finite and >= 0 (got {})",
+                self.secs_per_map
+            )));
+        }
+        for (w, &s) in self.speeds.iter().enumerate() {
+            if !(s.is_finite() && s > 0.0) {
+                return Err(CamrError::InvalidConfig(format!(
+                    "speeds[{w}] must be finite and > 0 (got {s})"
+                )));
+            }
+        }
+        self.straggler.validate()
+    }
+
+    /// Parse the optional `[sim]` section of a run config. Returns
+    /// `Ok(None)` when the section is absent; unknown keys error.
+    pub fn from_cfg(c: &CfgText) -> Result<Option<SimConfig>> {
+        if !c.section_names().iter().any(|s| s == "sim") {
+            return Ok(None);
+        }
+        for key in c.keys("sim") {
+            if !matches!(
+                key.as_str(),
+                "link"
+                    | "link_bytes_per_sec"
+                    | "latency_secs"
+                    | "secs_per_map"
+                    | "straggler"
+                    | "straggler_rate"
+                    | "tail_prob"
+                    | "tail_factor"
+                    | "seed"
+                    | "speeds"
+            ) {
+                return Err(CamrError::InvalidConfig(format!("unknown [sim] key {key}")));
+            }
+        }
+        let f = |k: &str| c.get_f64("sim", k).map_err(CamrError::InvalidConfig);
+        let mut sc = SimConfig::commodity();
+        if let Some(l) = c.get("sim", "link") {
+            sc.link = LinkKind::parse(l)?;
+        }
+        if let Some(v) = f("link_bytes_per_sec")? {
+            sc.link_bytes_per_sec = v;
+        }
+        if let Some(v) = f("latency_secs")? {
+            sc.latency_secs = v;
+        }
+        if let Some(v) = f("secs_per_map")? {
+            sc.secs_per_map = v;
+        }
+        if let Some(v) = c.get_u64("sim", "seed").map_err(CamrError::InvalidConfig)? {
+            sc.seed = v;
+        }
+        let name = c.get("sim", "straggler").unwrap_or("none");
+        // A straggler parameter for a model that does not use it is a
+        // config mistake, not a default to fall back from — reject it
+        // like the unknown-key validation above would.
+        let has = |k: &str| c.get("sim", k).is_some();
+        let stray = match name {
+            "none" | "deterministic" => {
+                has("straggler_rate") || has("tail_prob") || has("tail_factor")
+            }
+            "shifted_exp" => has("tail_prob") || has("tail_factor"),
+            "tail" => has("straggler_rate"),
+            _ => false, // unknown names error in parse() below
+        };
+        if stray {
+            return Err(CamrError::InvalidConfig(format!(
+                "[sim] straggler parameter does not apply to straggler = \"{name}\" \
+                 (straggler_rate needs shifted_exp; tail_prob/tail_factor need tail)"
+            )));
+        }
+        sc.straggler = StragglerModel::parse(
+            name,
+            f("straggler_rate")?.unwrap_or(5.0),
+            f("tail_prob")?.unwrap_or(0.05),
+            f("tail_factor")?.unwrap_or(10.0),
+        )?;
+        if let Some(s) = c.get("sim", "speeds") {
+            sc.speeds = s
+                .split(',')
+                .map(|x| {
+                    x.trim().parse::<f64>().map_err(|e| {
+                        CamrError::InvalidConfig(format!("[sim] speeds entry {x}: {e}"))
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        sc.validate()?;
+        Ok(Some(sc))
+    }
+
+    /// One-line description for CLI output.
+    pub fn describe(&self) -> String {
+        format!(
+            "link={} bw={} B/s latency={}s map={}s straggler={} seed={}",
+            self.link.label(),
+            self.link_bytes_per_sec,
+            self.latency_secs,
+            self.secs_per_map,
+            self.straggler.label(),
+            self.seed
+        )
+    }
+
+    fn speed(&self, w: usize) -> f64 {
+        if self.speeds.is_empty() {
+            1.0
+        } else {
+            self.speeds[w]
+        }
+    }
+}
+
+/// Simulated time of one barrier-separated shuffle phase.
+#[derive(Debug, Clone)]
+pub struct PhaseTime {
+    /// Which protocol stage this phase replays.
+    pub stage: Stage,
+    /// Transmissions in the phase (multicasts count once).
+    pub transmissions: usize,
+    /// Bytes on the link(s) in the phase.
+    pub bytes: usize,
+    /// Simulated phase duration, seconds.
+    pub secs: f64,
+}
+
+/// Result of one simulation.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Map-phase duration (barrier: the slowest worker), seconds.
+    pub map_secs: f64,
+    /// Per-phase shuffle times, in ledger order.
+    pub phases: Vec<PhaseTime>,
+    /// Total shuffle duration, seconds.
+    pub shuffle_secs: f64,
+    /// End-to-end completion time: map + shuffle.
+    pub total_secs: f64,
+    /// Total map tasks executed.
+    pub map_tasks: usize,
+    /// Total transmissions replayed.
+    pub transmissions: usize,
+    /// Total bytes replayed across all phases.
+    pub shuffle_bytes: usize,
+    /// Discrete events processed (map tasks + transmissions).
+    pub events: u64,
+}
+
+impl SimOutcome {
+    /// Summed simulated time of every phase with the given stage tag.
+    pub fn stage_secs(&self, stage: Stage) -> f64 {
+        self.phases.iter().filter(|p| p.stage == stage).map(|p| p.secs).sum()
+    }
+
+    /// Stable JSON rendering (keys sorted; bit-deterministic for a
+    /// given config + seed — the determinism tests diff these strings).
+    pub fn to_json(&self) -> Json {
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("stage", Json::Str(p.stage.to_string())),
+                    ("transmissions", Json::UInt(p.transmissions as u128)),
+                    ("bytes", Json::UInt(p.bytes as u128)),
+                    ("secs", Json::Num(p.secs)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("map_secs", Json::Num(self.map_secs)),
+            ("shuffle_secs", Json::Num(self.shuffle_secs)),
+            ("total_secs", Json::Num(self.total_secs)),
+            ("map_tasks", Json::UInt(self.map_tasks as u128)),
+            ("transmissions", Json::UInt(self.transmissions as u128)),
+            ("shuffle_bytes", Json::UInt(self.shuffle_bytes as u128)),
+            ("events", Json::UInt(self.events as u128)),
+            ("phases", Json::Arr(phases)),
+        ])
+    }
+}
+
+/// Per-worker map-invocation counts for a CAMR (or uncoded-baseline)
+/// run under the Algorithm-1 placement: every stored batch is `γ`
+/// subfile maps. The SPC design is symmetric, so the counts are equal
+/// across workers — which is what lets the homogeneous degenerate case
+/// match the closed form's `map_invocations / K` exactly.
+pub fn camr_per_worker_maps(cfg: &SystemConfig, placement: &Placement) -> Vec<usize> {
+    (0..cfg.servers()).map(|s| placement.inventory(s).len() * cfg.gamma).collect()
+}
+
+/// Per-worker map-invocation counts for the CCDC baseline at matched
+/// `μ`: each server owns `C(K-1, k-1)` jobs and stores `k-1` batches of
+/// `γ` subfiles per owned job.
+pub fn ccdc_per_worker_maps(servers: usize, k: usize, gamma: usize) -> Vec<usize> {
+    let per = binomial((servers - 1) as u64, (k - 1) as u64) as usize * (k - 1) * gamma;
+    vec![per; servers]
+}
+
+/// Run the simulator: replay `ledger` on the cluster described by `sc`,
+/// with `maps[w]` map tasks on worker `w` before the shuffle barrier.
+///
+/// The ledger is any [`crate::net::Bus::ledger`] — a live engine run,
+/// the checked-in golden fixture, or a synthetic scenario. Its bytes
+/// are never modified; the simulator only assigns times.
+pub fn simulate(sc: &SimConfig, maps: &[usize], ledger: &[Transmission]) -> Result<SimOutcome> {
+    sc.validate()?;
+    let workers = maps.len();
+    if workers == 0 {
+        return Err(CamrError::InvalidConfig("simulate needs at least one worker".into()));
+    }
+    if !sc.speeds.is_empty() && sc.speeds.len() != workers {
+        return Err(CamrError::InvalidConfig(format!(
+            "speeds has {} entries for a {workers}-worker cluster",
+            sc.speeds.len()
+        )));
+    }
+    let (bw, lat) = (sc.link_bytes_per_sec, sc.latency_secs);
+    let mut q = EventQueue::new();
+
+    // ---- Map phase: workers in parallel, each its tasks in sequence.
+    // Work is accumulated in straggler-weighted units (exact integers
+    // in the no-straggler case) and multiplied out per readout, so the
+    // degenerate case stays bit-exact against the closed form.
+    let mut done = vec![0usize; workers];
+    let mut work = vec![0.0f64; workers];
+    let map_tasks: usize = maps.iter().sum();
+    let mut remaining = map_tasks;
+    for w in 0..workers {
+        if maps[w] > 0 {
+            work[w] += sc.straggler.factor(sc.seed, w, 0);
+            q.schedule(work[w] * sc.secs_per_map / sc.speed(w), Event::MapTaskDone { worker: w });
+        }
+    }
+    let mut map_secs = 0.0f64;
+    while remaining > 0 {
+        let (at, ev) = q.pop().expect("map events pending");
+        let w = match ev {
+            Event::MapTaskDone { worker } => worker,
+            Event::TxDone { .. } => unreachable!("no transmissions before the map barrier"),
+        };
+        done[w] += 1;
+        remaining -= 1;
+        map_secs = at;
+        if done[w] < maps[w] {
+            work[w] += sc.straggler.factor(sc.seed, w, done[w]);
+            q.schedule(work[w] * sc.secs_per_map / sc.speed(w), Event::MapTaskDone { worker: w });
+        }
+    }
+    debug_assert!(q.is_empty(), "map events left after barrier");
+
+    // ---- Shuffle: barrier-separated phases (contiguous same-stage
+    // runs of the ledger), transmissions contending per link model.
+    let shuffle_start = map_secs;
+    let runs = stage_runs(ledger);
+    let mut phases: Vec<PhaseTime> = Vec::with_capacity(runs.len());
+    let mut shuffle_secs = 0.0f64;
+    match sc.link {
+        LinkKind::Shared => {
+            // The link serializes everything, so phase barriers are
+            // no-ops; one global chain, one global accumulator (single
+            // rounding at each readout — and at the total).
+            for (stage, range) in &runs {
+                let mut acc = Acc::default();
+                for t in &ledger[range.clone()] {
+                    acc.add(t.bytes);
+                }
+                phases.push(PhaseTime {
+                    stage: *stage,
+                    transmissions: range.len(),
+                    bytes: acc.bytes as usize,
+                    secs: acc.secs(bw, lat),
+                });
+            }
+            if !ledger.is_empty() {
+                // Validate senders (bisection does this per phase).
+                let _ = PhaseChains::build(LinkKind::Shared, ledger, workers)?;
+            }
+            let mut global = Acc::default();
+            if !ledger.is_empty() {
+                global.add(ledger[0].bytes);
+                q.schedule(shuffle_start + global.secs(bw, lat), Event::TxDone { index: 0 });
+            }
+            let mut popped = 0usize;
+            while let Some((_, ev)) = q.pop() {
+                let index = match ev {
+                    Event::TxDone { index } => index,
+                    Event::MapTaskDone { .. } => unreachable!("map drained before shuffle"),
+                };
+                popped += 1;
+                let next = index + 1;
+                if next < ledger.len() {
+                    global.add(ledger[next].bytes);
+                    q.schedule(shuffle_start + global.secs(bw, lat), Event::TxDone { index: next });
+                }
+            }
+            debug_assert_eq!(popped, ledger.len());
+            shuffle_secs = global.secs(bw, lat);
+        }
+        LinkKind::Bisection => {
+            let mut phase_start = shuffle_start;
+            for (stage, range) in &runs {
+                let slice = &ledger[range.clone()];
+                let chains = PhaseChains::build(LinkKind::Bisection, slice, workers)?;
+                let mut chain_of = vec![usize::MAX; slice.len()];
+                for (c, ch) in chains.chains.iter().enumerate() {
+                    for &p in ch {
+                        chain_of[p] = c;
+                    }
+                }
+                let mut accs = vec![Acc::default(); chains.chains.len()];
+                let mut cursor = vec![0usize; chains.chains.len()];
+                let mut dur = 0.0f64;
+                for (c, ch) in chains.chains.iter().enumerate() {
+                    accs[c].add(slice[ch[0]].bytes);
+                    let t = accs[c].secs(bw, lat);
+                    dur = dur.max(t);
+                    q.schedule(phase_start + t, Event::TxDone { index: range.start + ch[0] });
+                    cursor[c] = 1;
+                }
+                let mut popped = 0usize;
+                while popped < slice.len() {
+                    let (_, ev) = q.pop().expect("phase events pending");
+                    let index = match ev {
+                        Event::TxDone { index } => index,
+                        Event::MapTaskDone { .. } => unreachable!(),
+                    };
+                    popped += 1;
+                    let c = chain_of[index - range.start];
+                    if cursor[c] < chains.chains[c].len() {
+                        let p = chains.chains[c][cursor[c]];
+                        cursor[c] += 1;
+                        accs[c].add(slice[p].bytes);
+                        let t = accs[c].secs(bw, lat);
+                        dur = dur.max(t);
+                        q.schedule(phase_start + t, Event::TxDone { index: range.start + p });
+                    }
+                }
+                let bytes: usize = slice.iter().map(|t| t.bytes).sum();
+                phases.push(PhaseTime {
+                    stage: *stage,
+                    transmissions: slice.len(),
+                    bytes,
+                    secs: dur,
+                });
+                phase_start += dur;
+                shuffle_secs += dur;
+            }
+        }
+    }
+
+    let shuffle_bytes: usize = ledger.iter().map(|t| t.bytes).sum();
+    Ok(SimOutcome {
+        map_secs,
+        phases,
+        shuffle_secs,
+        total_secs: map_secs + shuffle_secs,
+        map_tasks,
+        transmissions: ledger.len(),
+        shuffle_bytes,
+        events: q.processed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tx(stage: Stage, sender: usize, bytes: usize) -> Transmission {
+        Transmission { stage, sender, recipients: vec![], bytes }
+    }
+
+    fn degenerate(bw: f64, spm: f64) -> SimConfig {
+        SimConfig {
+            link: LinkKind::Shared,
+            link_bytes_per_sec: bw,
+            latency_secs: 0.0,
+            secs_per_map: spm,
+            speeds: Vec::new(),
+            straggler: StragglerModel::Deterministic,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn degenerate_case_is_bit_exact_against_closed_form() {
+        let sc = degenerate(125e6, 1e-3);
+        let maps = [8usize, 8, 8, 8, 8, 8];
+        let ledger: Vec<Transmission> =
+            (0..36).map(|i| tx(Stage::Stage1, i % 6, 64)).collect();
+        let out = simulate(&sc, &maps, &ledger).unwrap();
+        let tm = sc.time_model();
+        let (m, s) = tm.phase_times(6, 48, (36 * 64) as f64);
+        assert_eq!(out.map_secs, m, "map time drifted from the closed form");
+        assert_eq!(out.shuffle_secs, s, "shuffle time drifted from the closed form");
+        assert_eq!(out.total_secs, m + s);
+        assert_eq!(out.events, 48 + 36);
+    }
+
+    #[test]
+    fn multicast_is_charged_once() {
+        let sc = degenerate(1e3, 0.0);
+        let wide = [Transmission {
+            stage: Stage::Stage1,
+            sender: 0,
+            recipients: vec![1, 2, 3, 4, 5],
+            bytes: 100,
+        }];
+        let narrow = [tx(Stage::Stage1, 0, 100)];
+        let a = simulate(&sc, &[0, 0, 0, 0, 0, 0], &wide).unwrap();
+        let b = simulate(&sc, &[0, 0, 0, 0, 0, 0], &narrow).unwrap();
+        assert_eq!(a.total_secs, b.total_secs);
+        assert_eq!(a.shuffle_secs, 100.0 / 1e3);
+    }
+
+    #[test]
+    fn bisection_parallelizes_across_senders_but_not_within() {
+        let mut sc = degenerate(1e3, 0.0);
+        // Two senders, 100 B each: shared serializes (0.2 s), bisection
+        // overlaps (0.1 s).
+        let ledger = [tx(Stage::Stage1, 0, 100), tx(Stage::Stage1, 1, 100)];
+        let shared = simulate(&sc, &[0, 0], &ledger).unwrap();
+        sc.link = LinkKind::Bisection;
+        let bis = simulate(&sc, &[0, 0], &ledger).unwrap();
+        assert_eq!(shared.shuffle_secs, 0.2);
+        assert_eq!(bis.shuffle_secs, 0.1);
+        // Same sender twice: no overlap on its NIC under either model.
+        let ledger2 = [tx(Stage::Stage1, 0, 100), tx(Stage::Stage1, 0, 100)];
+        let bis2 = simulate(&sc, &[0, 0], &ledger2).unwrap();
+        assert_eq!(bis2.shuffle_secs, 0.2);
+    }
+
+    #[test]
+    fn stage_barriers_hold_on_bisection() {
+        let mut sc = degenerate(1e3, 0.0);
+        sc.link = LinkKind::Bisection;
+        // Different stages → a barrier between the phases even though
+        // the senders differ; one stage → full overlap.
+        let two_phases = [tx(Stage::Stage1, 0, 100), tx(Stage::Stage2, 1, 100)];
+        let one_phase = [tx(Stage::Stage1, 0, 100), tx(Stage::Stage1, 1, 100)];
+        let a = simulate(&sc, &[0, 0], &two_phases).unwrap();
+        let b = simulate(&sc, &[0, 0], &one_phase).unwrap();
+        assert_eq!(a.shuffle_secs, 0.2);
+        assert_eq!(a.phases.len(), 2);
+        assert_eq!(b.shuffle_secs, 0.1);
+        assert_eq!(b.phases.len(), 1);
+    }
+
+    #[test]
+    fn latency_charges_per_message() {
+        let mut sc = degenerate(1e3, 0.0);
+        sc.latency_secs = 0.5;
+        let ledger = [tx(Stage::Stage1, 0, 100), tx(Stage::Stage1, 1, 100)];
+        let out = simulate(&sc, &[0, 0], &ledger).unwrap();
+        assert_eq!(out.shuffle_secs, 2.0 * 0.5 + 200.0 / 1e3);
+    }
+
+    #[test]
+    fn stragglers_stretch_the_map_phase_deterministically() {
+        let mut sc = degenerate(1e6, 1e-3);
+        let maps = [8usize, 8, 8, 8];
+        let base = simulate(&sc, &maps, &[]).unwrap();
+        sc.straggler = StragglerModel::ShiftedExp { rate: 2.0 };
+        let a = simulate(&sc, &maps, &[]).unwrap();
+        let b = simulate(&sc, &maps, &[]).unwrap();
+        assert!(a.map_secs > base.map_secs, "stragglers must slow the map barrier");
+        assert_eq!(a.map_secs.to_bits(), b.map_secs.to_bits(), "same seed must be bit-equal");
+        sc.seed = 99;
+        let c = simulate(&sc, &maps, &[]).unwrap();
+        assert_ne!(a.map_secs, c.map_secs, "different seed must perturb times");
+    }
+
+    #[test]
+    fn heterogeneous_speeds_divide_task_time() {
+        let mut sc = degenerate(1e6, 1.0);
+        sc.speeds = vec![1.0, 2.0];
+        let out = simulate(&sc, &[4, 4], &[]).unwrap();
+        // Worker 0: 4 tasks at 1 s; worker 1: 4 tasks at 0.5 s.
+        assert_eq!(out.map_secs, 4.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero_time() {
+        let sc = degenerate(1e6, 1e-3);
+        let out = simulate(&sc, &[0, 0], &[]).unwrap();
+        assert_eq!(out.total_secs, 0.0);
+        assert_eq!(out.events, 0);
+        assert!(out.phases.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let sc = degenerate(1e6, 1e-3);
+        assert!(simulate(&sc, &[], &[]).is_err(), "no workers");
+        let mut bad = sc.clone();
+        bad.speeds = vec![1.0];
+        assert!(simulate(&bad, &[1, 1], &[]).is_err(), "speeds arity");
+        let ledger = [tx(Stage::Stage1, 9, 10)];
+        assert!(simulate(&sc, &[1, 1], &ledger).is_err(), "sender out of range");
+        let mut bad = sc.clone();
+        bad.link_bytes_per_sec = 0.0;
+        assert!(simulate(&bad, &[1], &[]).is_err(), "zero bandwidth");
+    }
+
+    #[test]
+    fn json_report_is_deterministic() {
+        let mut sc = degenerate(1e6, 1e-3);
+        sc.straggler = StragglerModel::Tail { prob: 0.2, factor: 4.0 };
+        let maps = [5usize, 5, 5];
+        let ledger = [tx(Stage::Stage1, 0, 64), tx(Stage::Stage3, 1, 128)];
+        let a = simulate(&sc, &maps, &ledger).unwrap().to_json().render();
+        let b = simulate(&sc, &maps, &ledger).unwrap().to_json().render();
+        assert_eq!(a, b);
+        assert!(a.contains("\"stage\":\"stage1\""));
+        assert!(a.contains("\"shuffle_bytes\":192"));
+    }
+
+    #[test]
+    fn config_parsing_round_trip() {
+        let text = r#"
+            [sim]
+            link = "bisection"
+            link_bytes_per_sec = 1.25e7
+            latency_secs = 0.0001
+            secs_per_map = 0.002
+            straggler = "shifted_exp"
+            straggler_rate = 4.0
+            seed = 9
+            speeds = "1.0, 2.0, 1.5"
+        "#;
+        let c = CfgText::parse(text).unwrap();
+        let sc = SimConfig::from_cfg(&c).unwrap().unwrap();
+        assert_eq!(sc.link, LinkKind::Bisection);
+        assert_eq!(sc.link_bytes_per_sec, 1.25e7);
+        assert_eq!(sc.straggler, StragglerModel::ShiftedExp { rate: 4.0 });
+        assert_eq!(sc.speeds, vec![1.0, 2.0, 1.5]);
+        assert_eq!(sc.seed, 9);
+        // Absent section → None; unknown key → error.
+        assert!(SimConfig::from_cfg(&CfgText::parse("[system]\nk = 3").unwrap())
+            .unwrap()
+            .is_none());
+        assert!(SimConfig::from_cfg(&CfgText::parse("[sim]\nbogus = 1").unwrap()).is_err());
+        assert!(
+            SimConfig::from_cfg(&CfgText::parse("[sim]\nstraggler = \"warp\"").unwrap()).is_err()
+        );
+        // Straggler parameters without a model that uses them are
+        // rejected, not silently dropped.
+        assert!(
+            SimConfig::from_cfg(&CfgText::parse("[sim]\nstraggler_rate = 10.0").unwrap()).is_err()
+        );
+        let tail_on_exp = "[sim]\nstraggler = \"shifted_exp\"\ntail_prob = 0.1";
+        assert!(SimConfig::from_cfg(&CfgText::parse(tail_on_exp).unwrap()).is_err());
+        let rate_on_tail = "[sim]\nstraggler = \"tail\"\nstraggler_rate = 2.0";
+        assert!(SimConfig::from_cfg(&CfgText::parse(rate_on_tail).unwrap()).is_err());
+    }
+
+    #[test]
+    fn ccdc_map_counts_match_combinatorics() {
+        // K=6, k=3, γ=2: each server owns C(5,2)=10 jobs × 2 batches ×
+        // 2 subfiles = 40 maps.
+        assert_eq!(ccdc_per_worker_maps(6, 3, 2), vec![40; 6]);
+    }
+}

@@ -1,0 +1,193 @@
+//! Pluggable straggler distributions for map-task durations.
+//!
+//! Stragglers are the empirical motivation for coded computing (Li et
+//! al., "Coded MapReduce"): a few slow tasks dominate a phase that ends
+//! at a barrier. The simulator models them as a per-task *slowdown
+//! factor* `>= 1` multiplying the nominal task duration.
+//!
+//! Draws are **addressable**: the factor for `(worker, task)` is a pure
+//! function of `(seed, worker, task)` via [`mix_key`], independent of
+//! sampling order. Two schemes with the same map layout therefore see
+//! *identical* map-phase randomness, so a completion-time difference
+//! between them is attributable to the shuffle — never to RNG luck.
+
+use crate::error::{CamrError, Result};
+use crate::util::rng::mix_key;
+
+/// A straggler distribution over per-task slowdown factors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StragglerModel {
+    /// No stragglers: every task takes exactly its nominal duration.
+    Deterministic,
+    /// Shifted exponential: factor `= 1 + Exp(rate)`, the classic
+    /// straggler model (mean slowdown `1 + 1/rate`).
+    ShiftedExp {
+        /// Rate `λ` of the exponential tail (larger = milder).
+        rate: f64,
+    },
+    /// Percentile tail: with probability `prob` a task is `factor`×
+    /// slower (e.g. "5% of tasks run 10× slower"), otherwise nominal.
+    Tail {
+        /// Probability of a task being a straggler.
+        prob: f64,
+        /// Slowdown factor applied to straggler tasks.
+        factor: f64,
+    },
+}
+
+impl StragglerModel {
+    /// Parse a distribution by name with its parameters.
+    pub fn parse(name: &str, rate: f64, prob: f64, factor: f64) -> Result<Self> {
+        let model = match name {
+            "none" | "deterministic" => StragglerModel::Deterministic,
+            "shifted_exp" => StragglerModel::ShiftedExp { rate },
+            "tail" | "percentile_tail" => StragglerModel::Tail { prob, factor },
+            other => {
+                return Err(CamrError::InvalidConfig(format!(
+                    "unknown straggler model {other} (none | shifted_exp | tail)"
+                )))
+            }
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            StragglerModel::Deterministic => Ok(()),
+            StragglerModel::ShiftedExp { rate } => {
+                if !(rate.is_finite() && rate > 0.0) {
+                    return Err(CamrError::InvalidConfig(format!(
+                        "straggler_rate must be finite and > 0 (got {rate})"
+                    )));
+                }
+                Ok(())
+            }
+            StragglerModel::Tail { prob, factor } => {
+                if !(0.0..=1.0).contains(&prob) || !prob.is_finite() {
+                    return Err(CamrError::InvalidConfig(format!(
+                        "tail_prob must be in [0, 1] (got {prob})"
+                    )));
+                }
+                if !(factor.is_finite() && factor >= 1.0) {
+                    return Err(CamrError::InvalidConfig(format!(
+                        "tail_factor must be >= 1 (got {factor})"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            StragglerModel::Deterministic => "none".to_string(),
+            StragglerModel::ShiftedExp { rate } => format!("shifted_exp(rate={rate})"),
+            StragglerModel::Tail { prob, factor } => format!("tail(p={prob},x{factor})"),
+        }
+    }
+
+    /// Deterministic slowdown factor (`>= 1`) for the `task`-th map task
+    /// of `worker`, addressable by `(seed, worker, task)`.
+    pub fn factor(&self, seed: u64, worker: usize, task: usize) -> f64 {
+        if let StragglerModel::Deterministic = self {
+            return 1.0;
+        }
+        let r = mix_key(seed, &[worker as u64, task as u64]);
+        // Uniform in the open interval (0, 1): 53 mantissa bits, offset
+        // by half an ulp so neither endpoint is reachable (ln(0) guard).
+        let u = ((r >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
+        match *self {
+            StragglerModel::Deterministic => 1.0,
+            StragglerModel::ShiftedExp { rate } => 1.0 + (-u.ln()) / rate,
+            StragglerModel::Tail { prob, factor } => {
+                if u < prob {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Expected slowdown factor (used by reports to contextualize
+    /// simulated times; the simulator itself only uses [`Self::factor`]).
+    pub fn mean_factor(&self) -> f64 {
+        match *self {
+            StragglerModel::Deterministic => 1.0,
+            StragglerModel::ShiftedExp { rate } => 1.0 + 1.0 / rate,
+            StragglerModel::Tail { prob, factor } => 1.0 + prob * (factor - 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_is_always_one() {
+        let m = StragglerModel::Deterministic;
+        for w in 0..4 {
+            for t in 0..16 {
+                assert_eq!(m.factor(7, w, t), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn factors_are_addressable_and_seed_dependent() {
+        let m = StragglerModel::ShiftedExp { rate: 5.0 };
+        // Same (seed, worker, task) → bit-identical factor.
+        assert_eq!(m.factor(42, 3, 9).to_bits(), m.factor(42, 3, 9).to_bits());
+        // Different seed, worker, or task all perturb the draw.
+        assert_ne!(m.factor(42, 3, 9), m.factor(43, 3, 9));
+        assert_ne!(m.factor(42, 2, 9), m.factor(42, 3, 9));
+        assert_ne!(m.factor(42, 3, 8), m.factor(42, 3, 9));
+    }
+
+    #[test]
+    fn shifted_exp_mean_is_one_plus_inverse_rate() {
+        let m = StragglerModel::ShiftedExp { rate: 2.0 };
+        let n = 20_000;
+        let sum: f64 = (0..n).map(|t| m.factor(1, 0, t)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - m.mean_factor()).abs() < 0.02, "mean = {mean}");
+        // Every factor is strictly > 1 under the shifted exponential.
+        assert!((0..1000).all(|t| m.factor(1, 0, t) > 1.0));
+    }
+
+    #[test]
+    fn tail_hits_roughly_prob_fraction() {
+        let m = StragglerModel::Tail { prob: 0.1, factor: 8.0 };
+        let hits = (0..20_000).filter(|&t| m.factor(3, 1, t) > 1.0).count();
+        assert!((1600..2400).contains(&hits), "hits = {hits}");
+        // Straggler tasks are exactly `factor`× slower, others nominal.
+        assert!((0..1000).all(|t| {
+            let f = m.factor(3, 1, t);
+            f == 1.0 || f == 8.0
+        }));
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        assert_eq!(
+            StragglerModel::parse("none", 0.0, 0.0, 0.0).unwrap(),
+            StragglerModel::Deterministic
+        );
+        assert_eq!(
+            StragglerModel::parse("shifted_exp", 5.0, 0.0, 0.0).unwrap(),
+            StragglerModel::ShiftedExp { rate: 5.0 }
+        );
+        assert_eq!(
+            StragglerModel::parse("tail", 0.0, 0.05, 10.0).unwrap(),
+            StragglerModel::Tail { prob: 0.05, factor: 10.0 }
+        );
+        assert!(StragglerModel::parse("bogus", 1.0, 0.0, 0.0).is_err());
+        assert!(StragglerModel::parse("shifted_exp", 0.0, 0.0, 0.0).is_err());
+        assert!(StragglerModel::parse("tail", 0.0, 1.5, 10.0).is_err());
+        assert!(StragglerModel::parse("tail", 0.0, 0.5, 0.5).is_err());
+    }
+}

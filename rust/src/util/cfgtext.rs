@@ -68,6 +68,18 @@ impl CfgText {
         }
     }
 
+    /// f64 value (accepts `0.001`, `1.25e7`, …); must be finite.
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<f64>() {
+                Ok(x) if x.is_finite() => Ok(Some(x)),
+                Ok(x) => Err(format!("[{section}] {key} = {v}: {x} is not finite")),
+                Err(e) => Err(format!("[{section}] {key} = {v}: {e}")),
+            },
+        }
+    }
+
     /// Boolean value (`true`/`false`).
     pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
         match self.get(section, key) {
@@ -129,6 +141,16 @@ mod tests {
         assert!(c.get_usize("", "k").is_err());
         let c = CfgText::parse("flag = yes").unwrap();
         assert!(c.get_bool("", "flag").is_err());
+    }
+
+    #[test]
+    fn parses_floats_including_scientific_notation() {
+        let c = CfgText::parse("a = 0.001\nb = 1.25e7\nc = nan\nd = x").unwrap();
+        assert_eq!(c.get_f64("", "a").unwrap(), Some(0.001));
+        assert_eq!(c.get_f64("", "b").unwrap(), Some(1.25e7));
+        assert_eq!(c.get_f64("", "missing").unwrap(), None);
+        assert!(c.get_f64("", "c").is_err(), "NaN must be rejected");
+        assert!(c.get_f64("", "d").is_err());
     }
 
     #[test]

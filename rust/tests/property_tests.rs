@@ -283,8 +283,10 @@ fn prop_aggregator_laws_random_values() {
             assert_eq!(agg.combine(&a, &id).unwrap(), a, "case {case}: {} identity", agg.name());
         }
         // f32 commutativity (exact) — associativity is approximate.
-        let fa = lanes::from_f32(&(0..lanes_n * 2).map(|i| i as f32 * 0.5 - 3.0).collect::<Vec<_>>());
-        let fb = lanes::from_f32(&(0..lanes_n * 2).map(|i| 1.0 / (i as f32 + 1.0)).collect::<Vec<_>>());
+        let fa =
+            lanes::from_f32(&(0..lanes_n * 2).map(|i| i as f32 * 0.5 - 3.0).collect::<Vec<_>>());
+        let fb =
+            lanes::from_f32(&(0..lanes_n * 2).map(|i| 1.0 / (i as f32 + 1.0)).collect::<Vec<_>>());
         assert_eq!(
             SumF32.combine(&fa, &fb).unwrap(),
             SumF32.combine(&fb, &fa).unwrap(),

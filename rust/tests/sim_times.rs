@@ -1,0 +1,234 @@
+//! End-to-end tests of the discrete-event cluster simulator:
+//!
+//! - **Degenerate-case identity** — with zero latency, homogeneous
+//!   workers, and no stragglers, the simulator must reproduce the
+//!   closed-form `TimeModel::phase_times` *bit-exactly*, on the ledgers
+//!   of both engines, so the two models can never silently diverge.
+//! - **Determinism** — same seed + same config ⇒ byte-identical JSON
+//!   across 10 runs, on both serial and parallel engine ledgers;
+//!   different straggler seeds perturb times but never ledger bytes.
+//! - **Golden-fixture replay** — the checked-in PR 2 ledger fixture
+//!   simulates identically to a live run.
+//! - **Pinned straggler scenario** — `configs/straggler.toml` (fixed
+//!   seed, shifted-exponential stragglers, slow link): simulated CAMR
+//!   completion time beats the uncoded baseline.
+
+use camr::baseline::{UncodedEngine, UncodedMode};
+use camr::config::{RunConfig, SystemConfig};
+use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::ParallelEngine;
+use camr::net::{Bus, Stage, Transmission};
+use camr::sim::{self, SimConfig, StragglerModel, TimeModel};
+use camr::workload::synth::SyntheticWorkload;
+use std::path::PathBuf;
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// Run the serial engine; return (per-worker maps, ledger, outcome).
+fn run_serial(cfg: &SystemConfig, seed: u64) -> (Vec<usize>, Bus, usize) {
+    let wl = SyntheticWorkload::new(cfg, seed);
+    let mut e = Engine::new(cfg.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+    let maps = sim::camr_per_worker_maps(cfg, &e.master.placement);
+    (maps, e.bus.clone(), out.map_invocations)
+}
+
+fn run_parallel(cfg: &SystemConfig, seed: u64) -> (Vec<usize>, Bus) {
+    let wl = SyntheticWorkload::new(cfg, seed);
+    let mut e = ParallelEngine::new(cfg.clone(), Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+    let maps = sim::camr_per_worker_maps(cfg, &e.master.placement);
+    (maps, e.bus.clone())
+}
+
+#[test]
+fn degenerate_case_equals_closed_form_bit_exactly() {
+    // Zero latency + homogeneous + no stragglers + shared link must
+    // reproduce TimeModel::phase_times with *f64 equality* — on the
+    // ledgers of both engines, across several (k, q, γ).
+    for (k, q, gamma) in [(3, 2, 2), (3, 3, 1), (4, 2, 2), (2, 3, 1)] {
+        let cfg = SystemConfig::new(k, q, gamma).unwrap();
+        let (maps, bus, invocations) = run_serial(&cfg, 7);
+        assert_eq!(maps.iter().sum::<usize>(), invocations, "map accounting drifted");
+        let sc = SimConfig::commodity();
+        assert_eq!(sc.latency_secs, 0.0);
+        assert!(sc.speeds.is_empty() && sc.straggler == StragglerModel::Deterministic);
+        let tm = sc.time_model();
+        let bytes: usize = bus.ledger().iter().map(|t| t.bytes).sum();
+        let (m, s) = tm.phase_times(cfg.servers(), invocations, bytes as f64);
+
+        let out = sim::simulate(&sc, &maps, bus.ledger()).unwrap();
+        assert_eq!(out.map_secs, m, "k={k} q={q}: map time != closed form");
+        assert_eq!(out.shuffle_secs, s, "k={k} q={q}: shuffle time != closed form");
+        assert_eq!(out.total_secs, tm.job_time(cfg.servers(), invocations, bytes as f64));
+
+        // The parallel engine's ledger is byte-identical, so its
+        // simulated times must be too.
+        let (pmaps, pbus) = run_parallel(&cfg, 7);
+        let pout = sim::simulate(&sc, &pmaps, pbus.ledger()).unwrap();
+        assert_eq!(pout.total_secs, out.total_secs, "k={k} q={q}: engines diverged");
+    }
+}
+
+#[test]
+fn degenerate_case_holds_for_config_file_sim_section() {
+    // configs/example1.toml pins the commodity preset in TOML; parsing
+    // it must land exactly on TimeModel::commodity.
+    let rc = RunConfig::from_path(&repo_path("configs/example1.toml")).unwrap();
+    let sc = rc.sim.expect("example1.toml has a [sim] section");
+    let tm = TimeModel::commodity();
+    assert_eq!(sc.link_bytes_per_sec, tm.link_bytes_per_sec);
+    assert_eq!(sc.secs_per_map, tm.secs_per_map);
+    assert_eq!(sc.latency_secs, 0.0);
+
+    let (maps, bus, invocations) = run_serial(&rc.system, rc.seed);
+    let out = sim::simulate(&sc, &maps, bus.ledger()).unwrap();
+    let bytes: usize = bus.ledger().iter().map(|t| t.bytes).sum();
+    let (m, s) = tm.phase_times(rc.system.servers(), invocations, bytes as f64);
+    assert_eq!(out.map_secs, m);
+    assert_eq!(out.shuffle_secs, s);
+    // Example 1 at 1 Gb/s, 1 ms maps: 8 maps/worker + 1536 B shuffle.
+    assert_eq!(out.map_secs, 0.008);
+    assert_eq!(out.shuffle_bytes, 1536);
+}
+
+#[test]
+fn same_seed_is_byte_identical_across_ten_runs_and_both_engines() {
+    let rc = RunConfig::from_path(&repo_path("configs/straggler.toml")).unwrap();
+    let sc = rc.sim.clone().expect("straggler.toml has a [sim] section");
+    let (maps, bus, _) = run_serial(&rc.system, rc.seed);
+
+    let reference = sim::simulate(&sc, &maps, bus.ledger()).unwrap().to_json().render();
+    for i in 0..10 {
+        let again = sim::simulate(&sc, &maps, bus.ledger()).unwrap().to_json().render();
+        assert_eq!(again, reference, "run {i} diverged");
+    }
+    // The parallel engine's ledger is byte-identical (PR 1 invariant),
+    // so the simulated report must be too.
+    let (pmaps, pbus) = run_parallel(&rc.system, rc.seed);
+    let par = sim::simulate(&sc, &pmaps, pbus.ledger()).unwrap().to_json().render();
+    assert_eq!(par, reference, "parallel-engine ledger simulated differently");
+}
+
+#[test]
+fn different_straggler_seeds_perturb_times_but_never_ledger_bytes() {
+    let rc = RunConfig::from_path(&repo_path("configs/straggler.toml")).unwrap();
+    let mut sc = rc.sim.clone().unwrap();
+    let (maps, bus, _) = run_serial(&rc.system, rc.seed);
+    let ledger_before: Vec<(Stage, usize, usize)> =
+        bus.ledger().iter().map(|t| (t.stage, t.sender, t.bytes)).collect();
+
+    let a = sim::simulate(&sc, &maps, bus.ledger()).unwrap();
+    sc.seed = sc.seed.wrapping_add(1);
+    let b = sim::simulate(&sc, &maps, bus.ledger()).unwrap();
+    assert_ne!(a.total_secs, b.total_secs, "straggler seed must perturb times");
+    assert_eq!(a.shuffle_bytes, b.shuffle_bytes, "bytes are an input, never perturbed");
+
+    // The ledger object itself is untouched, and a fresh engine run
+    // still produces the same bytes regardless of any sim seed.
+    let after: Vec<(Stage, usize, usize)> =
+        bus.ledger().iter().map(|t| (t.stage, t.sender, t.bytes)).collect();
+    assert_eq!(after, ledger_before);
+    let (_, bus2, _) = run_serial(&rc.system, rc.seed);
+    let again: Vec<(Stage, usize, usize)> =
+        bus2.ledger().iter().map(|t| (t.stage, t.sender, t.bytes)).collect();
+    assert_eq!(again, ledger_before);
+}
+
+/// Parse the PR 2 golden fixture into a replayable ledger.
+fn fixture_ledger() -> Vec<Transmission> {
+    let text = std::fs::read_to_string(repo_path("rust/tests/golden/example1_ledger.txt"))
+        .expect("golden fixture present");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let stage = Stage::parse(parts.next().unwrap()).expect("valid stage tag");
+        let sender: usize = parts.next().unwrap().parse().unwrap();
+        let bytes: usize = parts.next().unwrap().parse().unwrap();
+        let recipients: Vec<usize> = parts
+            .next()
+            .map(|r| r.split(',').map(|x| x.parse().unwrap()).collect())
+            .unwrap_or_default();
+        out.push(Transmission { stage, sender, recipients, bytes });
+    }
+    out
+}
+
+#[test]
+fn golden_fixture_replays_identically_to_a_live_run() {
+    // The simulator consumes recorded ledgers: feeding it the
+    // checked-in PR 2 fixture must give byte-identical output to
+    // feeding it a live serial run of the same config.
+    let rc = RunConfig::from_path(&repo_path("configs/example1.toml")).unwrap();
+    let sc = rc.sim.unwrap();
+    let (maps, bus, _) = run_serial(&rc.system, rc.seed);
+    let fixture = fixture_ledger();
+    assert_eq!(fixture.len(), bus.ledger().len(), "fixture/live ledger length mismatch");
+    let live = sim::simulate(&sc, &maps, bus.ledger()).unwrap().to_json().render();
+    let replay = sim::simulate(&sc, &maps, &fixture).unwrap().to_json().render();
+    assert_eq!(replay, live);
+}
+
+#[test]
+fn pinned_straggler_scenario_camr_beats_uncoded() {
+    // configs/straggler.toml: shifted-exponential stragglers (seed 42),
+    // 10 MB/s shared link, heterogeneous speeds. CAMR and the
+    // uncoded-aggregated baseline run the *identical* map phase (same
+    // placement, same per-worker task counts, same addressable
+    // straggler draws), so the completion-time gap is purely the coded
+    // shuffle.
+    let rc = RunConfig::from_path(&repo_path("configs/straggler.toml")).unwrap();
+    let sc = rc.sim.clone().unwrap();
+    assert_eq!(sc.seed, 42, "scenario seed is pinned");
+    assert_eq!(sc.straggler, StragglerModel::ShiftedExp { rate: 5.0 });
+
+    let (maps, camr_bus, _) = run_serial(&rc.system, rc.seed);
+    let wl = SyntheticWorkload::new(&rc.system, rc.seed);
+    let mut ue = UncodedEngine::new(rc.system.clone(), Box::new(wl), UncodedMode::Aggregated)
+        .unwrap();
+    let uout = ue.run().unwrap();
+    assert!(uout.verified);
+
+    let camr = sim::simulate(&sc, &maps, camr_bus.ledger()).unwrap();
+    let unc = sim::simulate(&sc, &maps, ue.bus.ledger()).unwrap();
+
+    // Identical map phases, bit-exactly.
+    assert_eq!(camr.map_secs.to_bits(), unc.map_secs.to_bits());
+    // Stragglers really stretched the map barrier beyond nominal
+    // (8 tasks × 1 ms / slowest speed 0.8 = 10 ms nominal).
+    assert!(camr.map_secs > 0.010, "map barrier = {}", camr.map_secs);
+    // Coded shuffle moves fewer bytes (paper: L=1 vs 2-k/K=1.5) …
+    assert_eq!(camr.shuffle_bytes, 1536);
+    assert_eq!(unc.shuffle_bytes, 2304);
+    // … and therefore finishes sooner, end to end.
+    assert!(camr.shuffle_secs < unc.shuffle_secs);
+    assert!(
+        camr.total_secs < unc.total_secs,
+        "CAMR {} !< uncoded {}",
+        camr.total_secs,
+        unc.total_secs
+    );
+}
+
+#[test]
+fn bisection_link_is_never_slower_than_shared() {
+    let rc = RunConfig::from_path(&repo_path("configs/example1.toml")).unwrap();
+    let mut sc = rc.sim.unwrap();
+    let (maps, bus, _) = run_serial(&rc.system, rc.seed);
+    let shared = sim::simulate(&sc, &maps, bus.ledger()).unwrap();
+    sc.link = camr::sim::LinkKind::Bisection;
+    let bis = sim::simulate(&sc, &maps, bus.ledger()).unwrap();
+    assert!(bis.shuffle_secs <= shared.shuffle_secs);
+    // CAMR's shuffle has many distinct senders per stage, so the
+    // bisection fabric strictly overlaps them.
+    assert!(bis.shuffle_secs < shared.shuffle_secs);
+    assert_eq!(bis.shuffle_bytes, shared.shuffle_bytes);
+}
