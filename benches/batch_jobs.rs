@@ -1,0 +1,133 @@
+//! Batch-runtime sweep: executed wall time and simulated makespan of
+//! the *full job set* — CAMR rounds (serial vs thread-per-worker,
+//! growing batch sizes) against the capped CCDC family and the uncoded
+//! baseline.
+//!
+//! Every cell really executes its jobs end to end (map, coded shuffle,
+//! reduce, oracle verification pipelined behind the next round) through
+//! one persistent engine, then replays the aggregate job-tagged ledger
+//! through the cluster simulator for barriered-vs-pipelined makespans.
+//! Writes machine-readable `BENCH_batch.json` (created on
+//! `cargo bench --bench batch_jobs`; not checked in).
+
+use camr::config::SystemConfig;
+use camr::coordinator::batch::{run_batch_synthetic, BatchOptions, BatchScheme};
+use camr::sim::SimConfig;
+use camr::util::bench::Bench;
+use camr::util::json::Json;
+
+fn main() {
+    let b = Bench::new();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("CAMR_BENCH_QUICK").is_ok();
+    let cfg = SystemConfig::new(3, 2, 2).unwrap(); // paper Example 1 shape
+    let per_round = cfg.jobs();
+    // Slow enough that shuffles dominate and pipelining has something
+    // to hide map work behind.
+    let mut sc = SimConfig::commodity();
+    sc.link_bytes_per_sec = 1e5;
+
+    let round_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("== Batch runtime: executed wall time + simulated makespan ==\n");
+    for &rounds in round_counts {
+        for parallel in [false, true] {
+            let opts = BatchOptions {
+                jobs: Some(rounds * per_round),
+                parallel,
+                ..BatchOptions::default()
+            };
+            let label = format!(
+                "camr_batch_{}x{}jobs_{}",
+                rounds,
+                per_round,
+                if parallel { "parallel" } else { "serial" }
+            );
+            let mut last = None;
+            let wall_ns = b.run(&label, || {
+                let out = run_batch_synthetic(&cfg, BatchScheme::Camr, &opts).unwrap();
+                assert!(out.all_verified());
+                let bytes = out.total_bytes();
+                last = Some(out);
+                bytes
+            });
+            let out = last.expect("at least one timed run");
+            let sim = out.simulate(&sc).unwrap();
+            println!(
+                "    jobs={:<3} units={} bytes={} serial={:.6}s pipelined={:.6}s (saved {:.1}%)\n",
+                out.jobs_executed,
+                out.units.len(),
+                out.total_bytes(),
+                sim.serial_secs,
+                sim.pipelined_secs,
+                100.0 * sim.saved_secs() / sim.serial_secs.max(1e-12)
+            );
+            rows.push(Json::obj(vec![
+                ("scheme", Json::Str("camr".into())),
+                ("engine", Json::Str(if parallel { "parallel" } else { "serial" }.into())),
+                ("rounds", Json::UInt(rounds as u128)),
+                ("jobs", Json::UInt(out.jobs_executed as u128)),
+                ("bytes", Json::UInt(out.total_bytes() as u128)),
+                ("wall_ns", Json::Num(wall_ns)),
+                ("serial_secs", Json::Num(sim.serial_secs)),
+                ("pipelined_secs", Json::Num(sim.pipelined_secs)),
+                ("saved_secs", Json::Num(sim.saved_secs())),
+            ]));
+        }
+    }
+
+    // Baselines at the same storage fraction: the capped CCDC family
+    // and one uncoded round set.
+    for (scheme, label, cap) in [
+        (BatchScheme::Ccdc, "ccdc_family_capped", Some(if quick { 10 } else { 20 })),
+        (BatchScheme::Uncoded, "uncoded_round", None),
+    ] {
+        let opts = BatchOptions { ccdc_cap: cap, ..BatchOptions::default() };
+        let mut last = None;
+        let wall_ns = b.run(label, || {
+            let out = run_batch_synthetic(&cfg, scheme, &opts).unwrap();
+            assert!(out.all_verified());
+            let bytes = out.total_bytes();
+            last = Some(out);
+            bytes
+        });
+        let out = last.expect("at least one timed run");
+        let sim = out.simulate(&sc).unwrap();
+        println!(
+            "    required={} executed={} bytes={} pipelined={:.6}s ({:.6}s/job)\n",
+            out.jobs_required,
+            out.jobs_executed,
+            out.total_bytes(),
+            sim.pipelined_secs,
+            sim.pipelined_secs / out.jobs_executed.max(1) as f64
+        );
+        rows.push(Json::obj(vec![
+            ("scheme", Json::Str(scheme.label().into())),
+            ("engine", Json::Str("serial".into())),
+            ("rounds", Json::UInt(out.units.len() as u128)),
+            ("jobs", Json::UInt(out.jobs_executed as u128)),
+            ("jobs_required", Json::UInt(out.jobs_required)),
+            ("bytes", Json::UInt(out.total_bytes() as u128)),
+            ("wall_ns", Json::Num(wall_ns)),
+            ("serial_secs", Json::Num(sim.serial_secs)),
+            ("pipelined_secs", Json::Num(sim.pipelined_secs)),
+            ("saved_secs", Json::Num(sim.saved_secs())),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("batch_jobs".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("k", Json::UInt(cfg.k as u128)),
+        ("q", Json::UInt(cfg.q as u128)),
+        ("gamma", Json::UInt(cfg.gamma as u128)),
+        ("sim_bandwidth", Json::Num(sc.link_bytes_per_sec)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_batch.json";
+    match std::fs::write(path, report.render() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

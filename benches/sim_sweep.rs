@@ -130,6 +130,7 @@ fn main() {
             sender: i % 12,
             recipients: vec![(i + 1) % 12],
             bytes: 4096,
+            job: 0,
         })
         .collect();
     let big_maps = vec![2000usize; 12];

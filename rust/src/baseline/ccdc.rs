@@ -68,8 +68,12 @@ impl CcdcWorkload {
 /// Outcome of a CCDC run.
 #[derive(Debug, Clone)]
 pub struct CcdcOutcome {
-    /// Jobs executed (`C(K, k)`).
+    /// Jobs actually executed (`C(K, k)`, or the cap passed to
+    /// [`CcdcEngine::run_capped`]).
     pub jobs: usize,
+    /// Size of the full job family `C(K, k)` — what the scheme *requires*
+    /// at this storage fraction, independent of any execution cap.
+    pub family: usize,
     /// Bytes actually transmitted by this implementation.
     pub measured_bytes: usize,
     /// Bytes under [4]'s Eq.-(6) accounting (coded non-owner delivery,
@@ -160,18 +164,56 @@ impl CcdcEngine {
         acc
     }
 
+    /// The sorted owner `k`-subset of one job of the family.
+    pub fn job_owners(&self, job: JobId) -> &[ServerId] {
+        &self.jobs[job]
+    }
+
+    /// Per-worker map-invocation counts of one job: each of its `k`
+    /// owners maps its `k-1` stored batches of `γ` subfiles; everyone
+    /// else maps nothing. Summed over the full family this reproduces
+    /// [`crate::sim::ccdc_per_worker_maps`].
+    pub fn per_worker_maps_per_job(&self, job: JobId) -> Vec<usize> {
+        let mut maps = vec![0usize; self.servers];
+        for &o in &self.jobs[job] {
+            maps[o] = (self.k - 1) * self.gamma;
+        }
+        maps
+    }
+
     /// Run the full CCDC protocol; verifies every output bit-exactly.
     pub fn run(&mut self) -> Result<CcdcOutcome> {
+        self.run_capped(None)
+    }
+
+    /// Run the first `min(cap, C(K, k))` jobs of the family, one job at
+    /// a time — map, owner exchange, non-owner delivery, verify — with
+    /// the bus tagged per job ([`crate::net::Bus::set_job`]), so the
+    /// ledger is a contiguous per-job sequence the batch simulator can
+    /// pipeline. `None` executes the whole family. Per-job loads are
+    /// identical either way; the cap exists because `C(K, k)` grows
+    /// exponentially (the very limitation CAMR removes).
+    pub fn run_capped(&mut self, cap: Option<usize>) -> Result<CcdcOutcome> {
         self.bus.reset();
         let b = self.value_bytes;
         let funcs = self.servers;
+        let executed = cap.map_or(self.jobs.len(), |c| c.min(self.jobs.len()));
+        if executed == 0 {
+            return Err(CamrError::InvalidConfig("CCDC cap must execute >= 1 job".into()));
+        }
 
-        // ---- Map phase: per-server batch aggregates.
-        // store[s] : (job, func, batch) → aggregate. Owner at position p
-        // of job S stores batches {0..k} \ {p}.
-        let mut store: Vec<HashMap<(JobId, FuncId, usize), Value>> =
-            vec![HashMap::new(); self.servers];
-        for (j, owners) in self.jobs.iter().enumerate() {
+        let mut outputs: HashMap<(JobId, FuncId), Value> = HashMap::new();
+        let mut encode_ops = 0usize;
+        let mut nonowner_pairs = 0usize;
+        for j in 0..executed {
+            self.bus.set_job(j);
+            let owners = self.jobs[j].clone();
+
+            // ---- Map: per-owner batch aggregates for this job only.
+            // store[s] : (func, batch) → aggregate. Owner at position p
+            // stores batches {0..k} \ {p}.
+            let mut store: Vec<HashMap<(FuncId, usize), Value>> =
+                vec![HashMap::new(); self.servers];
             for (p, &s) in owners.iter().enumerate() {
                 for batch in (0..self.k).filter(|&x| x != p) {
                     for f in 0..funcs {
@@ -180,17 +222,12 @@ impl CcdcEngine {
                             let n = batch * self.gamma + i;
                             acc = sum_u64(&acc, &self.workload.value(j, n, f));
                         }
-                        store[s].insert((j, f, batch), acc);
+                        store[s].insert((f, batch), acc);
                     }
                 }
             }
-        }
 
-        let mut outputs: HashMap<(JobId, FuncId), Value> = HashMap::new();
-        let mut encode_ops = 0usize;
-
-        // ---- Owner exchange: Lemma-2 coded multicast per job group.
-        for (j, owners) in self.jobs.iter().enumerate() {
+            // ---- Owner exchange: Lemma-2 coded multicast in the group.
             let chunks: Vec<ChunkSpec> = owners
                 .iter()
                 .enumerate()
@@ -202,7 +239,7 @@ impl CcdcEngine {
                 let delta = plan.encode(t, b, |p| {
                     let c = plan.chunks[p];
                     store[m]
-                        .get(&(c.job, c.func, c.batch))
+                        .get(&(c.func, c.batch))
                         .cloned()
                         .ok_or_else(|| CamrError::MissingValue(format!("{c:?} at {m}")))
                 })?;
@@ -219,30 +256,27 @@ impl CcdcEngine {
                 let chunk = plan.decode(r, b, &deltas, |p| {
                     let c = plan.chunks[p];
                     store[m]
-                        .get(&(c.job, c.func, c.batch))
+                        .get(&(c.func, c.batch))
                         .cloned()
                         .ok_or_else(|| CamrError::MissingValue(format!("{c:?} at {m}")))
                 })?;
-                store[m].insert((j, m, r), chunk);
+                store[m].insert((m, r), chunk);
             }
             // Owners reduce now: fold all k batch aggregates of their own
             // function.
-            for &m in owners {
+            for &m in &owners {
                 let mut acc = vec![0u8; b];
                 for batch in 0..self.k {
-                    let v = store[m].get(&(j, m, batch)).ok_or_else(|| {
+                    let v = store[m].get(&(m, batch)).ok_or_else(|| {
                         CamrError::MissingValue(format!("job {j} batch {batch} at {m}"))
                     })?;
                     acc = sum_u64(&acc, v);
                 }
                 outputs.insert((j, m), acc);
             }
-        }
 
-        // ---- Non-owner delivery: two complementary partial aggregates
-        // (measured), accounted at k·B/(k-1) under Eq. (6).
-        let mut nonowner_pairs = 0usize;
-        for (j, owners) in self.jobs.iter().enumerate() {
+            // ---- Non-owner delivery: two complementary partial
+            // aggregates (measured), accounted at k·B/(k-1) under Eq. (6).
             let owner_set: std::collections::HashSet<ServerId> =
                 owners.iter().copied().collect();
             for m in (0..self.servers).filter(|s| !owner_set.contains(s)) {
@@ -252,19 +286,20 @@ impl CcdcEngine {
                 let mut fused = vec![0u8; b];
                 for batch in 1..self.k {
                     let v = store[u0]
-                        .get(&(j, m, batch))
+                        .get(&(m, batch))
                         .ok_or_else(|| CamrError::MissingValue(format!("fused {j}/{m}/{batch}")))?;
                     fused = sum_u64(&fused, v);
                 }
                 self.bus.unicast(Stage::Baseline, u0, m, fused.len());
                 let v0 = store[u1]
-                    .get(&(j, m, 0))
+                    .get(&(m, 0))
                     .ok_or_else(|| CamrError::MissingValue(format!("batch0 {j}/{m}")))?
                     .clone();
                 self.bus.unicast(Stage::Baseline, u1, m, v0.len());
                 outputs.insert((j, m), sum_u64(&fused, &v0));
             }
         }
+        self.bus.set_job(0);
 
         // ---- Verify every output against the oracle (bit-exact).
         for ((j, f), got) in &outputs {
@@ -280,12 +315,13 @@ impl CcdcEngine {
         // Eq.-(6) accounting (exact rational): both the owner exchange
         // and each non-owner delivery cost k·B/(k-1).
         let coded_pair = self.k as f64 * b as f64 / (self.k as f64 - 1.0);
-        let paper_bytes = (self.jobs.len() + nonowner_pairs) as f64 * coded_pair;
+        let paper_bytes = (executed + nonowner_pairs) as f64 * coded_pair;
         Ok(CcdcOutcome {
-            jobs: self.jobs.len(),
+            jobs: executed,
+            family: self.jobs.len(),
             measured_bytes: measured,
             paper_bytes,
-            normalizer: (self.jobs.len() * funcs * b) as f64,
+            normalizer: (executed * funcs * b) as f64,
             verified: true,
             encode_ops,
         })
@@ -377,5 +413,50 @@ mod tests {
     #[test]
     fn rejects_oversized_job_counts() {
         assert!(CcdcEngine::new(100, 5, 1, 64, 0).is_err()); // 75M jobs
+    }
+
+    #[test]
+    fn capped_run_executes_a_verified_prefix_with_per_job_tags() {
+        let mut full = CcdcEngine::new(6, 3, 2, 64, 7).unwrap();
+        let fout = full.run().unwrap();
+        assert_eq!(fout.jobs, 20);
+        assert_eq!(fout.family, 20);
+        // Every job's ledger slice is contiguous and tagged 0..20, and
+        // per-job bytes are uniform (the family is symmetric).
+        assert_eq!(full.bus.job_count(), 20);
+        let j0 = full.bus.job_bytes(0);
+        assert!(j0 > 0);
+        assert!((0..20).all(|j| full.bus.job_bytes(j) == j0));
+        let mut capped = CcdcEngine::new(6, 3, 2, 64, 7).unwrap();
+        let cout = capped.run_capped(Some(5)).unwrap();
+        assert_eq!(cout.jobs, 5);
+        assert_eq!(cout.family, 20);
+        assert!(cout.verified);
+        // Per-job load is cap-invariant: the capped prefix measures the
+        // same Eq.-(6) load as the full family.
+        assert!((cout.paper_load() - fout.paper_load()).abs() < 1e-12);
+        assert!((cout.measured_load() - fout.measured_load()).abs() < 1e-12);
+        // The capped ledger is exactly the first 5 jobs of the full one.
+        assert_eq!(capped.bus.job_count(), 5);
+        assert_eq!(capped.bus.total_bytes(), 5 * j0);
+        // A cap beyond the family is clamped; zero is rejected.
+        let mut over = CcdcEngine::new(6, 3, 2, 64, 7).unwrap();
+        assert_eq!(over.run_capped(Some(999)).unwrap().jobs, 20);
+        assert!(over.run_capped(Some(0)).is_err());
+    }
+
+    #[test]
+    fn per_job_maps_sum_to_family_total() {
+        let e = CcdcEngine::new(6, 3, 2, 64, 1).unwrap();
+        let mut total = vec![0usize; 6];
+        for j in 0..e.job_count() {
+            let per = e.per_worker_maps_per_job(j);
+            assert_eq!(per.iter().filter(|&&m| m > 0).count(), 3, "k owners map");
+            assert!(e.job_owners(j).iter().all(|&o| per[o] == 4), "(k-1)·γ each");
+            for (t, p) in total.iter_mut().zip(per) {
+                *t += p;
+            }
+        }
+        assert_eq!(total, crate::sim::ccdc_per_worker_maps(6, 3, 2));
     }
 }

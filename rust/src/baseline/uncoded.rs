@@ -76,6 +76,18 @@ impl UncodedEngine {
         Ok(UncodedEngine { master, workers, workload, mode, bus: Bus::new() })
     }
 
+    /// Swap in the next job's workload, returning the previous one — the
+    /// batch runtime reuses this engine (workers + placement) across the
+    /// jobs of an uncoded batch.
+    pub fn replace_workload(&mut self, workload: Box<dyn Workload>) -> Box<dyn Workload> {
+        std::mem::replace(&mut self.workload, workload)
+    }
+
+    /// Access the placement (for per-worker map counts in simulation).
+    pub fn placement(&self) -> &crate::placement::Placement {
+        &self.master.placement
+    }
+
     /// Run map → unicast shuffle → reduce, verifying against the oracle.
     pub fn run(&mut self) -> Result<UncodedOutcome> {
         self.bus.reset();

@@ -1,0 +1,740 @@
+//! Multi-job **batch runtime**: execute the *entire* job set of a
+//! scheme — all `q^(k-1)` CAMR jobs, all `C(K, μK+1)` CCDC jobs (under
+//! a cap), or the uncoded baseline — end to end, through one persistent
+//! engine.
+//!
+//! The paper's headline claim (§V, Table III) is about *job counts*,
+//! not single-job loads: CAMR achieves CCDC's communication load while
+//! requiring exponentially fewer concurrent jobs. That claim only
+//! matters if the whole job set actually runs, so this module promotes
+//! the engines from "one run, exact bytes" to "full workload, exact
+//! bytes *and* end-to-end time":
+//!
+//! - **Persistent worker pool** — one [`Engine`] / [`ParallelEngine`]
+//!   (workers, placement, schedule, [`crate::shuffle::buf::BufferPool`])
+//!   is reused across every execution unit of the batch; only the workload
+//!   is swapped per unit ([`Engine::replace_workload`]), so buffers
+//!   recycled by job `i` serve job `i+1` without reallocation.
+//! - **Pipelined verification** — oracle verification of unit `i`
+//!   (a pure check, not part of the protocol) runs on a background
+//!   thread while unit `i+1` executes, hiding its cost behind real work.
+//! - **Aggregate ledger** — each unit's byte-exact ledger is folded
+//!   into one job-tagged transcript ([`crate::net::Bus::append_ledger`]);
+//!   a job-tag change is a phase barrier, so
+//!   [`crate::sim::simulate_batch`] can replay the whole batch and
+//!   report both the barriered makespan and the pipelined makespan
+//!   where unit `i+1` maps (compute) while unit `i` shuffles (link).
+//! - **Per-job failure tolerance** — with [`BatchOptions::strict`] off,
+//!   a CAMR/uncoded unit that fails is recorded while the rest of the
+//!   batch keeps running: a unit that failed to *execute* contributes
+//!   no traffic, while one that executed but failed *verification*
+//!   keeps its (genuine) traffic in the aggregate ledger and is only
+//!   excluded from `jobs_executed`. The shared buffer pool must come
+//!   back clean either way (`outstanding == 0`, asserted by the batch
+//!   tests).
+//!
+//! ## Execution units
+//!
+//! CAMR couples its `J = q^(k-1)` jobs into **one coded execution
+//! round** — that is the whole point of the design — so the CAMR (and
+//! uncoded-baseline) batch executes rounds of `J` jobs each:
+//! `jobs = all` is the scheme's required set (one round), `jobs = N`
+//! executes `⌈N/J⌉` rounds. CCDC's jobs are independent, so its unit is
+//! a single job and `jobs = all` is the full `C(K, k)` family — capped
+//! by [`BatchOptions::ccdc_cap`], because that count is exponential
+//! (which is exactly the limitation CAMR removes).
+
+use super::engine::{verify_outputs, Engine, RunOutcome};
+use super::parallel::ParallelEngine;
+use crate::agg::Value;
+use crate::analysis::jobs::binomial;
+use crate::baseline::ccdc::CcdcEngine;
+use crate::baseline::uncoded::{UncodedEngine, UncodedMode};
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::net::Bus;
+use crate::shuffle::buf::PoolStats;
+use crate::sim::{self, BatchSimOutcome, SimConfig};
+use crate::util::rng::mix_key;
+use crate::workload::Workload;
+use crate::{FuncId, JobId};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Which scheme a batch executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchScheme {
+    /// CAMR coded rounds of `q^(k-1)` jobs each.
+    Camr,
+    /// CCDC baseline: independent jobs, `C(K, k)` required.
+    Ccdc,
+    /// Uncoded-aggregated baseline over the Algorithm-1 placement.
+    Uncoded,
+}
+
+impl BatchScheme {
+    /// Parse a scheme name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "camr" => BatchScheme::Camr,
+            "ccdc" => BatchScheme::Ccdc,
+            "uncoded" => BatchScheme::Uncoded,
+            other => {
+                return Err(CamrError::InvalidConfig(format!(
+                    "unknown batch scheme {other} (camr | ccdc | uncoded)"
+                )))
+            }
+        })
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BatchScheme::Camr => "camr",
+            BatchScheme::Ccdc => "ccdc",
+            BatchScheme::Uncoded => "uncoded",
+        }
+    }
+}
+
+/// Default cap on executed CCDC jobs (`C(K, k)` is exponential).
+pub const DEFAULT_CCDC_CAP: usize = 1000;
+
+/// Knobs of one batch execution.
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// Paper-job budget: `None` = the scheme's full required set;
+    /// `Some(n)` = at least `n` jobs (CAMR/uncoded round up to whole
+    /// rounds of `J`).
+    pub jobs: Option<usize>,
+    /// Use the thread-per-worker [`ParallelEngine`] for CAMR rounds.
+    pub parallel: bool,
+    /// Route shuffle buffers through the shared pool (CAMR engines).
+    pub pooling: bool,
+    /// Oracle-verify every unit's outputs (CAMR rounds; the uncoded and
+    /// CCDC engines verify inside their own runs unconditionally).
+    pub verify: bool,
+    /// Verify unit `i` on a background thread while unit `i+1` runs
+    /// (only meaningful with `verify`; CAMR rounds only).
+    pub pipeline_verify: bool,
+    /// Fail the whole batch on the first unit error. With `false`,
+    /// failed CAMR/uncoded units are recorded and skipped; the CCDC
+    /// family executes atomically, so any of its failures always aborts
+    /// the batch.
+    pub strict: bool,
+    /// Cap on executed CCDC jobs (`None` = run the full family — think
+    /// twice). Ignored by the other schemes.
+    pub ccdc_cap: Option<usize>,
+    /// Base seed; unit `u` draws its workload from
+    /// `mix_key(seed, [u])`, so every unit maps fresh data.
+    pub seed: u64,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions {
+            jobs: None,
+            parallel: false,
+            pooling: true,
+            verify: true,
+            pipeline_verify: true,
+            strict: true,
+            ccdc_cap: Some(DEFAULT_CCDC_CAP),
+            seed: 0xCA3A,
+        }
+    }
+}
+
+/// What happened to one execution unit (a CAMR/uncoded round, or one
+/// CCDC job).
+#[derive(Debug, Clone)]
+pub struct UnitRecord {
+    /// Unit index in attempt order.
+    pub unit: usize,
+    /// Paper jobs covered by this unit.
+    pub jobs: usize,
+    /// Bytes the unit put on the link (0 if it failed).
+    pub bytes: usize,
+    /// Map invocations the unit executed.
+    pub map_invocations: usize,
+    /// Whether the unit's outputs passed oracle verification.
+    pub verified: bool,
+    /// The unit's failure, if any (execution or verification).
+    pub error: Option<String>,
+}
+
+/// Result of one batch execution.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// The scheme executed.
+    pub scheme: BatchScheme,
+    /// Jobs the scheme *requires* at this storage fraction (Table III
+    /// closed form: `q^(k-1)` for CAMR/uncoded, `C(K, k)` for CCDC).
+    pub jobs_required: u128,
+    /// Paper jobs successfully executed end to end.
+    pub jobs_executed: usize,
+    /// Paper jobs attempted (== executed unless units failed).
+    pub jobs_attempted: usize,
+    /// Per-unit records, in attempt order.
+    pub units: Vec<UnitRecord>,
+    /// Aggregate job-tagged ledger of every unit that *executed*
+    /// (including units later vetoed by verification — their traffic
+    /// really crossed the link), tagged `0..n` in execution order.
+    pub bus: Bus,
+    /// Per-executed-unit per-worker map counts, aligned with the
+    /// ledger's job tags (input to [`crate::sim::simulate_batch`]).
+    pub maps: Vec<Vec<usize>>,
+    /// Sum of the executed units' load normalizers (`J·Q·B` each).
+    pub normalizer: f64,
+    /// Buffer-pool counters after the batch (CAMR engines; `None` for
+    /// schemes without a pooled data plane).
+    pub pool: Option<PoolStats>,
+    /// Wall-clock time of the whole batch.
+    pub wall: Duration,
+}
+
+impl BatchOutcome {
+    /// Total bytes across the successful units.
+    pub fn total_bytes(&self) -> usize {
+        self.bus.total_bytes()
+    }
+
+    /// Aggregate communication load (per-unit loads are identical, so
+    /// this equals the single-run load of the scheme).
+    pub fn load(&self) -> f64 {
+        self.total_bytes() as f64 / self.normalizer
+    }
+
+    /// True when every attempted unit executed and verified.
+    pub fn all_verified(&self) -> bool {
+        self.units.iter().all(|u| u.verified && u.error.is_none())
+    }
+
+    /// Paper jobs whose traffic is in the aggregate ledger: every unit
+    /// that executed, including verification-vetoed ones. This is the
+    /// denominator for per-job *time* statistics ([`Self::simulate`]
+    /// replays exactly these jobs), whereas [`Self::jobs_executed`]
+    /// counts only fully successful jobs.
+    ///
+    /// [`Self::jobs_executed`]: BatchOutcome::jobs_executed
+    pub fn jobs_simulated(&self) -> usize {
+        self.units.iter().filter(|u| u.bytes > 0).map(|u| u.jobs).sum()
+    }
+
+    /// Replay the aggregate ledger through the cluster simulator:
+    /// barriered vs pipelined makespan of the whole batch.
+    pub fn simulate(&self, sc: &SimConfig) -> Result<BatchSimOutcome> {
+        sim::simulate_batch(sc, &self.maps, self.bus.ledger())
+    }
+}
+
+/// A workload source for the batch runtime: unit index + derived seed →
+/// that unit's workload. Ignored by the CCDC scheme (its workload is
+/// defined over its own job family).
+pub type WorkloadFactory<'a> = dyn Fn(usize, u64) -> Result<Box<dyn Workload>> + 'a;
+
+/// The engine face the batch loop drives — implemented by both CAMR
+/// engines so the loop is written once.
+trait RoundEngine {
+    fn run_once(&mut self) -> Result<RunOutcome>;
+    fn swap_workload(&mut self, wl: Box<dyn Workload>) -> Box<dyn Workload>;
+    fn grab_outputs(&mut self) -> HashMap<(JobId, FuncId), Value>;
+    fn ledger_bus(&self) -> &Bus;
+    fn worker_maps(&self) -> Vec<usize>;
+    fn pool_counters(&self) -> PoolStats;
+}
+
+impl RoundEngine for Engine {
+    fn run_once(&mut self) -> Result<RunOutcome> {
+        self.run()
+    }
+    fn swap_workload(&mut self, wl: Box<dyn Workload>) -> Box<dyn Workload> {
+        self.replace_workload(wl)
+    }
+    fn grab_outputs(&mut self) -> HashMap<(JobId, FuncId), Value> {
+        self.take_outputs()
+    }
+    fn ledger_bus(&self) -> &Bus {
+        &self.bus
+    }
+    fn worker_maps(&self) -> Vec<usize> {
+        sim::camr_per_worker_maps(self.cfg(), &self.master.placement)
+    }
+    fn pool_counters(&self) -> PoolStats {
+        self.pool_stats()
+    }
+}
+
+impl RoundEngine for ParallelEngine {
+    fn run_once(&mut self) -> Result<RunOutcome> {
+        self.run()
+    }
+    fn swap_workload(&mut self, wl: Box<dyn Workload>) -> Box<dyn Workload> {
+        self.replace_workload(wl)
+    }
+    fn grab_outputs(&mut self) -> HashMap<(JobId, FuncId), Value> {
+        self.take_outputs()
+    }
+    fn ledger_bus(&self) -> &Bus {
+        &self.bus
+    }
+    fn worker_maps(&self) -> Vec<usize> {
+        sim::camr_per_worker_maps(self.cfg(), &self.master.placement)
+    }
+    fn pool_counters(&self) -> PoolStats {
+        self.pool_stats()
+    }
+}
+
+/// Number of CAMR rounds covering a paper-job budget.
+fn rounds_for(cfg: &SystemConfig, jobs: Option<usize>) -> Result<usize> {
+    let per_round = cfg.jobs();
+    let rounds = match jobs {
+        None => 1,
+        Some(0) => return Err(CamrError::InvalidConfig("batch needs >= 1 job".into())),
+        Some(n) => n.div_ceil(per_round),
+    };
+    if rounds > 100_000 {
+        return Err(CamrError::InvalidConfig(format!(
+            "{rounds} rounds is too large a batch to execute"
+        )));
+    }
+    Ok(rounds)
+}
+
+/// Execute a batch of `scheme` over `cfg`. See the module docs for the
+/// execution-unit semantics; `factory` supplies each CAMR/uncoded
+/// unit's workload (use [`run_batch_synthetic`] when any deterministic
+/// aggregatable data will do).
+pub fn run_batch(
+    cfg: &SystemConfig,
+    scheme: BatchScheme,
+    opts: &BatchOptions,
+    factory: &WorkloadFactory<'_>,
+) -> Result<BatchOutcome> {
+    match scheme {
+        BatchScheme::Camr => run_camr_batch(cfg, opts, factory),
+        BatchScheme::Uncoded => run_uncoded_batch(cfg, opts, factory),
+        BatchScheme::Ccdc => run_ccdc_batch(cfg, opts),
+    }
+}
+
+/// [`run_batch`] with a [`crate::workload::synth::SyntheticWorkload`]
+/// per unit (seeded from the unit's derived seed).
+pub fn run_batch_synthetic(
+    cfg: &SystemConfig,
+    scheme: BatchScheme,
+    opts: &BatchOptions,
+) -> Result<BatchOutcome> {
+    let cfg2 = cfg.clone();
+    run_batch(cfg, scheme, opts, &move |_, seed| {
+        Ok(Box::new(crate::workload::synth::SyntheticWorkload::new(&cfg2, seed))
+            as Box<dyn Workload>)
+    })
+}
+
+/// The CAMR batch: rounds of `J` coupled jobs through one persistent
+/// engine (serial or thread-per-worker), verification pipelined behind
+/// the next round's execution.
+fn run_camr_batch(
+    cfg: &SystemConfig,
+    opts: &BatchOptions,
+    factory: &WorkloadFactory<'_>,
+) -> Result<BatchOutcome> {
+    let rounds = rounds_for(cfg, opts.jobs)?;
+    let per_round = cfg.jobs();
+    let t0 = Instant::now();
+
+    let mut engine: Box<dyn RoundEngine> = if opts.parallel {
+        let mut e = ParallelEngine::new(cfg.clone(), factory(0, mix_key(opts.seed, &[0]))?)?;
+        e.pooling = opts.pooling;
+        e.verify = false; // the batch loop owns verification
+        Box::new(e)
+    } else {
+        let mut e = Engine::new(cfg.clone(), factory(0, mix_key(opts.seed, &[0]))?)?;
+        e.pooling = opts.pooling;
+        e.verify = false;
+        Box::new(e)
+    };
+
+    let mut units: Vec<UnitRecord> = Vec::with_capacity(rounds);
+    let mut bus = Bus::new();
+    let mut maps: Vec<Vec<usize>> = Vec::new();
+    let mut normalizer = 0.0f64;
+
+    // Verification results flow back over a channel: (unit, error?).
+    let (vtx, vrx) = mpsc::channel::<(usize, Option<String>)>();
+    std::thread::scope(|scope| -> Result<()> {
+        // The outputs of the last *successful* round, awaiting
+        // verification against its workload (still inside the engine
+        // until the next round's swap hands it back).
+        let mut pending: Option<(usize, HashMap<(JobId, FuncId), Value>)> = None;
+        let verify_now = |unit: usize,
+                          wl: &dyn Workload,
+                          outputs: &HashMap<(JobId, FuncId), Value>| {
+            let res = verify_outputs(cfg, wl, outputs);
+            let _ = vtx.send((unit, res.err().map(|e| e.to_string())));
+        };
+        for r in 0..rounds {
+            if r > 0 {
+                let prev = engine.swap_workload(factory(r, mix_key(opts.seed, &[r as u64]))?);
+                // Launch (or run inline) the previous round's check while
+                // this round executes.
+                if let Some((unit, outputs)) = pending.take() {
+                    if opts.pipeline_verify {
+                        let tx = vtx.clone();
+                        scope.spawn(move || {
+                            let res = verify_outputs(cfg, &*prev, &outputs);
+                            let _ = tx.send((unit, res.err().map(|e| e.to_string())));
+                        });
+                    } else {
+                        verify_now(unit, &*prev, &outputs);
+                    }
+                }
+            }
+            match engine.run_once() {
+                Ok(out) => {
+                    let tag = maps.len();
+                    bus.append_ledger(engine.ledger_bus().ledger(), tag);
+                    maps.push(engine.worker_maps());
+                    normalizer += cfg.load_normalizer();
+                    units.push(UnitRecord {
+                        unit: r,
+                        jobs: per_round,
+                        bytes: out.stage_bytes.iter().sum(),
+                        map_invocations: out.map_invocations,
+                        verified: true, // provisional; vrx may veto below
+                        error: None,
+                    });
+                    if opts.verify {
+                        pending = Some((r, engine.grab_outputs()));
+                    }
+                }
+                Err(e) => {
+                    if opts.strict {
+                        return Err(e);
+                    }
+                    engine.grab_outputs(); // discard partial state
+                    units.push(UnitRecord {
+                        unit: r,
+                        jobs: per_round,
+                        bytes: 0,
+                        map_invocations: 0,
+                        verified: false,
+                        error: Some(e.to_string()),
+                    });
+                }
+            }
+        }
+        // Verify the final successful round inline (there is no next
+        // round to hide it behind).
+        if let Some((unit, outputs)) = pending.take() {
+            let wl = engine.swap_workload(Box::new(NoWorkload));
+            verify_now(unit, &*wl, &outputs);
+        }
+        Ok(())
+    })?;
+    drop(vtx);
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    for (unit, err) in vrx.iter() {
+        if let Some(msg) = err {
+            let rec = units.iter_mut().find(|u| u.unit == unit).expect("verified unit");
+            rec.verified = false;
+            rec.error = Some(msg.clone());
+            failures.push((unit, msg));
+        }
+    }
+    if opts.strict {
+        if let Some((unit, msg)) = failures.first() {
+            return Err(CamrError::Verification(format!("batch unit {unit}: {msg}")));
+        }
+    }
+
+    let jobs_executed: usize =
+        units.iter().filter(|u| u.error.is_none()).map(|u| u.jobs).sum();
+    Ok(BatchOutcome {
+        scheme: BatchScheme::Camr,
+        jobs_required: per_round as u128,
+        jobs_executed,
+        jobs_attempted: rounds * per_round,
+        units,
+        bus,
+        maps,
+        normalizer,
+        pool: Some(engine.pool_counters()),
+        wall: t0.elapsed(),
+    })
+}
+
+/// Placeholder workload installed while a round's real workload is out
+/// being verified; running the engine against it is a bug by
+/// construction, and it reports as such.
+struct NoWorkload;
+
+impl Workload for NoWorkload {
+    fn name(&self) -> &str {
+        "batch-placeholder"
+    }
+    fn aggregator(&self) -> &dyn crate::agg::Aggregator {
+        &crate::agg::SumU64
+    }
+    fn map_subfile(&self, job: JobId, subfile: usize) -> Result<Vec<Value>> {
+        Err(CamrError::Runtime(format!(
+            "batch placeholder workload mapped (job {job}, subfile {subfile}) — \
+             a unit ran before its workload was installed"
+        )))
+    }
+}
+
+/// The uncoded-baseline batch: rounds of the same `J`-job workload over
+/// the identical Algorithm-1 placement, verification inline (the
+/// uncoded engine verifies inside `run`).
+fn run_uncoded_batch(
+    cfg: &SystemConfig,
+    opts: &BatchOptions,
+    factory: &WorkloadFactory<'_>,
+) -> Result<BatchOutcome> {
+    let rounds = rounds_for(cfg, opts.jobs)?;
+    let per_round = cfg.jobs();
+    let t0 = Instant::now();
+    let mut engine = UncodedEngine::new(
+        cfg.clone(),
+        factory(0, mix_key(opts.seed, &[0]))?,
+        UncodedMode::Aggregated,
+    )?;
+    let worker_maps = sim::camr_per_worker_maps(cfg, engine.placement());
+    let mut units: Vec<UnitRecord> = Vec::with_capacity(rounds);
+    let mut bus = Bus::new();
+    let mut maps: Vec<Vec<usize>> = Vec::new();
+    let mut normalizer = 0.0f64;
+    for r in 0..rounds {
+        if r > 0 {
+            engine.replace_workload(factory(r, mix_key(opts.seed, &[r as u64]))?);
+        }
+        match engine.run() {
+            Ok(out) => {
+                let tag = maps.len();
+                bus.append_ledger(engine.bus.ledger(), tag);
+                maps.push(worker_maps.clone());
+                normalizer += cfg.load_normalizer();
+                units.push(UnitRecord {
+                    unit: r,
+                    jobs: per_round,
+                    bytes: out.shuffle_bytes,
+                    map_invocations: (cfg.k - 1) * per_round * cfg.subfiles(),
+                    verified: out.verified,
+                    error: None,
+                });
+            }
+            Err(e) => {
+                if opts.strict {
+                    return Err(e);
+                }
+                units.push(UnitRecord {
+                    unit: r,
+                    jobs: per_round,
+                    bytes: 0,
+                    map_invocations: 0,
+                    verified: false,
+                    error: Some(e.to_string()),
+                });
+            }
+        }
+    }
+    let jobs_executed: usize =
+        units.iter().filter(|u| u.error.is_none()).map(|u| u.jobs).sum();
+    Ok(BatchOutcome {
+        scheme: BatchScheme::Uncoded,
+        jobs_required: per_round as u128,
+        jobs_executed,
+        jobs_attempted: rounds * per_round,
+        units,
+        bus,
+        maps,
+        normalizer,
+        pool: None,
+        wall: t0.elapsed(),
+    })
+}
+
+/// The CCDC batch: the (capped) job family through [`CcdcEngine`], one
+/// unit per independent job, already per-job tagged by the engine.
+///
+/// The CCDC engine executes and bit-verifies its family atomically, so
+/// [`BatchOptions::verify`], `pipeline_verify` and `strict` do not
+/// apply here: every executed job is always verified, and any failure
+/// aborts the whole CCDC batch (see the `BatchOptions` field docs).
+fn run_ccdc_batch(cfg: &SystemConfig, opts: &BatchOptions) -> Result<BatchOutcome> {
+    let family = binomial(cfg.servers() as u64, cfg.k as u64);
+    let budget = match opts.jobs {
+        None => usize::MAX,
+        Some(0) => return Err(CamrError::InvalidConfig("batch needs >= 1 job".into())),
+        Some(n) => n,
+    };
+    let cap = opts.ccdc_cap.unwrap_or(usize::MAX).min(budget);
+    let t0 = Instant::now();
+    let mut engine =
+        CcdcEngine::new(cfg.servers(), cfg.k, cfg.gamma, cfg.value_bytes, opts.seed)?;
+    let out = engine.run_capped(Some(cap))?;
+    // One ledger pass for the per-job byte split (Bus::job_bytes would
+    // rescan the whole ledger per job).
+    let mut per_job_bytes = vec![0usize; out.jobs];
+    for t in engine.bus.ledger() {
+        per_job_bytes[t.job] += t.bytes;
+    }
+    let units: Vec<UnitRecord> = per_job_bytes
+        .iter()
+        .enumerate()
+        .map(|(j, &bytes)| UnitRecord {
+            unit: j,
+            jobs: 1,
+            bytes,
+            map_invocations: (cfg.k - 1) * cfg.k * cfg.gamma,
+            verified: out.verified,
+            error: None,
+        })
+        .collect();
+    let maps: Vec<Vec<usize>> =
+        (0..out.jobs).map(|j| engine.per_worker_maps_per_job(j)).collect();
+    Ok(BatchOutcome {
+        scheme: BatchScheme::Ccdc,
+        jobs_required: family,
+        jobs_executed: out.jobs,
+        jobs_attempted: out.jobs,
+        units,
+        bus: engine.bus.clone(),
+        maps,
+        normalizer: out.normalizer,
+        pool: None,
+        wall: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::jobs::JobRequirement;
+
+    fn opts() -> BatchOptions {
+        BatchOptions::default()
+    }
+
+    #[test]
+    fn camr_batch_all_executes_the_required_set_once() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let out = run_batch_synthetic(&cfg, BatchScheme::Camr, &opts()).unwrap();
+        assert_eq!(out.jobs_required, 4);
+        assert_eq!(out.jobs_executed, 4);
+        assert_eq!(out.units.len(), 1);
+        assert!(out.all_verified());
+        assert!((out.load() - 1.0).abs() < 1e-12, "Example 1 load is 1");
+        let pool = out.pool.expect("CAMR batches pool");
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn multi_round_batch_reuses_the_pool_and_tags_rounds() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut o = opts();
+        o.jobs = Some(12); // 3 rounds of 4
+        let out = run_batch_synthetic(&cfg, BatchScheme::Camr, &o).unwrap();
+        assert_eq!(out.units.len(), 3);
+        assert_eq!(out.jobs_executed, 12);
+        assert_eq!(out.bus.job_count(), 3);
+        assert_eq!(out.maps.len(), 3);
+        // Every round's bytes are identical (the schedule is fixed).
+        assert!(out.units.iter().all(|u| u.bytes == out.units[0].bytes));
+        assert!((out.load() - 1.0).abs() < 1e-12);
+        let pool = out.pool.unwrap();
+        assert_eq!(pool.outstanding(), 0);
+        assert!(pool.recycled > 0, "rounds must reuse each other's buffers: {pool:?}");
+        // Rounds map *different* data (distinct derived seeds) yet the
+        // ledger stays schedule-determined: uniform per-round bytes.
+        assert_eq!(out.bus.job_bytes(0), out.bus.job_bytes(2));
+    }
+
+    #[test]
+    fn serial_and_parallel_batches_agree_byte_for_byte() {
+        let cfg = SystemConfig::new(3, 2, 1).unwrap();
+        let mut o = opts();
+        o.jobs = Some(8); // 2 rounds
+        let serial = run_batch_synthetic(&cfg, BatchScheme::Camr, &o).unwrap();
+        o.parallel = true;
+        let par = run_batch_synthetic(&cfg, BatchScheme::Camr, &o).unwrap();
+        assert_eq!(serial.total_bytes(), par.total_bytes());
+        assert_eq!(serial.bus.ledger().len(), par.bus.ledger().len());
+        for (a, b) in serial.bus.ledger().iter().zip(par.bus.ledger()) {
+            assert_eq!(a.stage, b.stage);
+            assert_eq!(a.sender, b.sender);
+            assert_eq!(a.recipients, b.recipients);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.job, b.job);
+        }
+    }
+
+    #[test]
+    fn ccdc_batch_executes_the_capped_family() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let all = run_batch_synthetic(&cfg, BatchScheme::Ccdc, &opts()).unwrap();
+        assert_eq!(all.jobs_required, 20);
+        assert_eq!(all.jobs_executed, 20);
+        assert_eq!(all.units.len(), 20);
+        assert_eq!(all.bus.job_count(), 20);
+        let mut o = opts();
+        o.ccdc_cap = Some(6);
+        let capped = run_batch_synthetic(&cfg, BatchScheme::Ccdc, &o).unwrap();
+        assert_eq!(capped.jobs_executed, 6);
+        assert_eq!(capped.jobs_required, 20, "the requirement is cap-independent");
+        // Requirement comparison matches Table III's closed forms.
+        let req = JobRequirement::for_params(3, 2);
+        let camr = run_batch_synthetic(&cfg, BatchScheme::Camr, &opts()).unwrap();
+        assert_eq!(camr.jobs_required, req.camr);
+        assert_eq!(all.jobs_required, req.ccdc);
+        assert!(camr.jobs_required < all.jobs_required);
+    }
+
+    #[test]
+    fn uncoded_batch_moves_more_bytes_than_camr() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let camr = run_batch_synthetic(&cfg, BatchScheme::Camr, &opts()).unwrap();
+        let unc = run_batch_synthetic(&cfg, BatchScheme::Uncoded, &opts()).unwrap();
+        assert_eq!(unc.jobs_executed, 4);
+        assert!(unc.all_verified());
+        assert!(unc.total_bytes() > camr.total_bytes());
+        // Same map work per round, so the simulated gap is pure shuffle.
+        assert_eq!(unc.maps, camr.maps);
+    }
+
+    #[test]
+    fn batch_simulation_pipelined_beats_barriered() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut o = opts();
+        o.jobs = Some(16); // 4 rounds
+        let out = run_batch_synthetic(&cfg, BatchScheme::Camr, &o).unwrap();
+        let mut sc = SimConfig::commodity();
+        sc.link_bytes_per_sec = 1e5; // slow link: shuffle long enough to hide maps
+        let sim = out.simulate(&sc).unwrap();
+        assert_eq!(sim.jobs.len(), 4);
+        assert!(sim.pipelined_secs < sim.serial_secs, "pipelining must help here");
+        assert!(sim.pipelined_secs >= sim.shuffle_secs_total);
+    }
+
+    #[test]
+    fn rejects_zero_job_budget() {
+        let cfg = SystemConfig::new(3, 2, 1).unwrap();
+        let mut o = opts();
+        o.jobs = Some(0);
+        assert!(run_batch_synthetic(&cfg, BatchScheme::Camr, &o).is_err());
+        assert!(run_batch_synthetic(&cfg, BatchScheme::Ccdc, &o).is_err());
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(BatchScheme::parse("camr").unwrap(), BatchScheme::Camr);
+        assert_eq!(BatchScheme::parse("ccdc").unwrap(), BatchScheme::Ccdc);
+        assert_eq!(BatchScheme::parse("uncoded").unwrap(), BatchScheme::Uncoded);
+        assert!(BatchScheme::parse("mapreduce").is_err());
+        assert_eq!(BatchScheme::Ccdc.label(), "ccdc");
+    }
+}

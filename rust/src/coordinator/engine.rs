@@ -111,6 +111,23 @@ impl Engine {
         self.outputs.get(&(job, func))
     }
 
+    /// Swap in the next job's workload, returning the previous one. The
+    /// batch runtime ([`crate::coordinator::batch`]) reuses one engine —
+    /// workers, placement, schedule, buffer pool — across every job of a
+    /// batch and only re-seeds the data through this hook; the returned
+    /// workload lets a pipelined verifier keep checking the finished job
+    /// while the engine starts the next.
+    pub fn replace_workload(&mut self, workload: Box<dyn Workload>) -> Box<dyn Workload> {
+        std::mem::replace(&mut self.workload, workload)
+    }
+
+    /// Move the reduced outputs out of the engine (they are cleared at
+    /// the start of the next `run` anyway). Used by the batch runtime to
+    /// verify job `i` off-thread while job `i+1` executes.
+    pub fn take_outputs(&mut self) -> HashMap<(JobId, FuncId), Value> {
+        std::mem::take(&mut self.outputs)
+    }
+
     /// Run the full protocol and return measured loads.
     pub fn run(&mut self) -> Result<RunOutcome> {
         self.bus.reset();

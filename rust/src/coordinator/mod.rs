@@ -19,6 +19,14 @@
 //!   std thread per server driven lockstep by a leader thread over
 //!   command channels) — the extension point where stragglers, retries
 //!   and backpressure would live.
+//! - [`batch`] — the **multi-job batch runtime**: executes a scheme's
+//!   *entire* job set (all `q^(k-1)` CAMR jobs vs the capped
+//!   `C(K, μK+1)` CCDC family vs uncoded) through one persistent
+//!   engine, swapping only the workload between units so workers,
+//!   schedule and buffer pool are reused; verification of unit `i`
+//!   runs behind unit `i+1`'s execution, and the aggregate job-tagged
+//!   ledger replays through [`crate::sim::simulate_batch`] for a
+//!   barriered-vs-pipelined batch makespan.
 //!
 //! ## Threading model
 //!
@@ -32,6 +40,7 @@
 //! function of the schedule, and the schedule is fixed by the master
 //! before any thread starts.
 
+pub mod batch;
 pub mod cluster;
 pub mod engine;
 pub mod master;
@@ -39,5 +48,6 @@ pub mod parallel;
 pub mod values;
 pub mod worker;
 
+pub use batch::{run_batch, run_batch_synthetic, BatchOptions, BatchOutcome, BatchScheme};
 pub use engine::{Engine, RunOutcome};
 pub use parallel::ParallelEngine;

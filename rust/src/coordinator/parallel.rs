@@ -183,6 +183,21 @@ impl ParallelEngine {
         self.outputs.get(&(job, func))
     }
 
+    /// Swap in the next job's workload, returning the previous one (see
+    /// [`crate::coordinator::engine::Engine::replace_workload`]; the
+    /// batch runtime reuses the engine's threads-per-run setup, schedule
+    /// and shared buffer pool across jobs).
+    pub fn replace_workload(&mut self, workload: Box<dyn Workload>) -> Box<dyn Workload> {
+        std::mem::replace(&mut self.workload, workload)
+    }
+
+    /// Move the reduced outputs out of the engine (cleared at the start
+    /// of the next `run` anyway); lets the batch runtime verify job `i`
+    /// off-thread while job `i+1` executes.
+    pub fn take_outputs(&mut self) -> HashMap<(JobId, FuncId), Value> {
+        std::mem::take(&mut self.outputs)
+    }
+
     /// Run the full protocol with one thread per server and return
     /// measured loads.
     pub fn run(&mut self) -> Result<RunOutcome> {

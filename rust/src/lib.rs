@@ -28,8 +28,10 @@
 //! - [`net`] — shared-link network simulator with byte-exact accounting,
 //!   including the channel-backed recorder the parallel engine uses.
 //! - [`coordinator`] — workers, master, and the end-to-end engines:
-//!   the serial reference [`coordinator::engine::Engine`] and the
-//!   thread-per-worker [`coordinator::parallel::ParallelEngine`].
+//!   the serial reference [`coordinator::engine::Engine`], the
+//!   thread-per-worker [`coordinator::parallel::ParallelEngine`], and
+//!   the multi-job [`coordinator::batch`] runtime that executes a
+//!   scheme's *entire* job set through one persistent engine.
 //! - [`baseline`] — CCDC and uncoded baselines for comparison.
 //! - [`analysis`] — closed-form load formulas (§IV, §V) and job-count
 //!   minimums (Table III).
@@ -138,6 +140,34 @@
 //! let maps = sim::camr_per_worker_maps(&cfg, &engine.master.placement);
 //! let out = sim::simulate(&sc, &maps, engine.bus.ledger()).unwrap();
 //! assert!(out.total_secs > out.map_secs && out.map_secs > 0.0);
+//! ```
+//!
+//! ## Executing the full job set
+//!
+//! The paper's headline claim is a *job-count* claim: CAMR matches
+//! CCDC's load with `q^(k-1)` jobs instead of `C(K, μK+1)` (Table III).
+//! The [`coordinator::batch`] runtime makes that claim executable: it
+//! runs a scheme's entire job set end to end through one persistent
+//! engine — workers, schedule and the pooled data plane are reused and
+//! only the workload is swapped per unit — with oracle verification of
+//! unit `i` pipelined behind unit `i+1`'s execution. Every unit's
+//! byte-exact ledger folds into one job-tagged aggregate transcript
+//! that [`sim::simulate_batch`] replays for a batch makespan, both
+//! barriered and pipelined (unit `i+1` maps while unit `i` shuffles).
+//! `camr batch configs/example1.toml` compares all three schemes; the
+//! CCDC family is capped (`--ccdc-cap`) because its size is exponential
+//! — which is the point.
+//!
+//! ```
+//! use camr::config::SystemConfig;
+//! use camr::coordinator::batch::{run_batch_synthetic, BatchOptions, BatchScheme};
+//!
+//! let cfg = SystemConfig::new(3, 2, 2).unwrap(); // Example 1: K = 6
+//! let camr = run_batch_synthetic(&cfg, BatchScheme::Camr, &BatchOptions::default()).unwrap();
+//! let ccdc = run_batch_synthetic(&cfg, BatchScheme::Ccdc, &BatchOptions::default()).unwrap();
+//! assert_eq!(camr.jobs_executed, 4);   // the whole CAMR job set
+//! assert_eq!(ccdc.jobs_required, 20);  // C(6, 3): five times the floor
+//! assert!(camr.all_verified() && ccdc.all_verified());
 //! ```
 
 pub mod agg;

@@ -5,9 +5,10 @@
 
 use crate::analysis::load;
 use crate::config::SystemConfig;
+use crate::coordinator::batch::BatchOutcome;
 use crate::coordinator::engine::RunOutcome;
 use crate::net::Stage;
-use crate::sim::SimOutcome;
+use crate::sim::{BatchSimOutcome, SimOutcome};
 use crate::util::json::Json;
 
 /// One stage's measured vs expected load.
@@ -243,6 +244,171 @@ impl std::fmt::Display for LoadReport {
     }
 }
 
+/// One scheme's row of a [`BatchReport`]: what the batch runtime
+/// actually executed, plus its simulated batch makespans.
+#[derive(Debug, Clone)]
+pub struct SchemeBatch {
+    /// Scheme label (`camr` | `ccdc` | `uncoded`).
+    pub scheme: String,
+    /// Jobs the scheme requires (Table III closed form).
+    pub jobs_required: u128,
+    /// Paper jobs executed end to end.
+    pub jobs_executed: usize,
+    /// Paper jobs whose traffic the simulated makespans replay (adds
+    /// verification-vetoed units, whose traffic was real).
+    pub jobs_simulated: usize,
+    /// Execution units attempted (CAMR rounds / CCDC jobs).
+    pub units: usize,
+    /// Units that failed (execution or verification).
+    pub failed_units: usize,
+    /// Bytes on the link across all successful units.
+    pub total_bytes: usize,
+    /// Aggregate communication load.
+    pub load: f64,
+    /// Every attempted unit executed and verified.
+    pub verified: bool,
+    /// Simulated barriered makespan (units fully serialized), seconds.
+    pub serial_secs: f64,
+    /// Simulated pipelined makespan (unit `i+1` maps while unit `i`
+    /// shuffles), seconds.
+    pub pipelined_secs: f64,
+    /// Simulated total map time across units.
+    pub map_secs: f64,
+    /// Simulated total shuffle time across units.
+    pub shuffle_secs: f64,
+    /// Real wall-clock of the executed batch, microseconds.
+    pub wall_us: u128,
+}
+
+impl SchemeBatch {
+    /// Package a batch outcome and its simulation into a report row.
+    pub fn from_outcome(out: &BatchOutcome, sim: &BatchSimOutcome) -> Self {
+        SchemeBatch {
+            scheme: out.scheme.label().to_string(),
+            jobs_required: out.jobs_required,
+            jobs_executed: out.jobs_executed,
+            jobs_simulated: out.jobs_simulated(),
+            units: out.units.len(),
+            failed_units: out.units.iter().filter(|u| u.error.is_some()).count(),
+            total_bytes: out.total_bytes(),
+            load: out.load(),
+            verified: out.all_verified(),
+            serial_secs: sim.serial_secs,
+            pipelined_secs: sim.pipelined_secs,
+            map_secs: sim.map_secs_total,
+            shuffle_secs: sim.shuffle_secs_total,
+            wall_us: out.wall.as_micros(),
+        }
+    }
+
+    /// Simulated completion time per paper job (pipelined makespan over
+    /// the jobs the simulation actually replayed).
+    pub fn secs_per_job(&self) -> f64 {
+        self.pipelined_secs / self.jobs_simulated.max(1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("jobs_required", Json::UInt(self.jobs_required)),
+            ("jobs_executed", Json::UInt(self.jobs_executed as u128)),
+            ("jobs_simulated", Json::UInt(self.jobs_simulated as u128)),
+            ("units", Json::UInt(self.units as u128)),
+            ("failed_units", Json::UInt(self.failed_units as u128)),
+            ("total_bytes", Json::UInt(self.total_bytes as u128)),
+            ("load", Json::Num(self.load)),
+            ("verified", Json::Bool(self.verified)),
+            ("serial_secs", Json::Num(self.serial_secs)),
+            ("pipelined_secs", Json::Num(self.pipelined_secs)),
+            ("map_secs", Json::Num(self.map_secs)),
+            ("shuffle_secs", Json::Num(self.shuffle_secs)),
+            ("secs_per_job", Json::Num(self.secs_per_job())),
+            ("wall_us", Json::UInt(self.wall_us)),
+        ])
+    }
+}
+
+/// Full report of a `camr batch` execution: the compared schemes' batch
+/// rows over one system configuration.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    /// Design parameter `k`.
+    pub k: usize,
+    /// Design parameter `q`.
+    pub q: usize,
+    /// Subfiles per batch `γ`.
+    pub gamma: usize,
+    /// Value size `B` in bytes.
+    pub value_bytes: usize,
+    /// Cluster size `K`.
+    pub servers: usize,
+    /// One-line description of the simulated cluster model.
+    pub sim_config: String,
+    /// Per-scheme batch rows.
+    pub schemes: Vec<SchemeBatch>,
+}
+
+impl BatchReport {
+    /// The row of one scheme, if it ran.
+    pub fn scheme(&self, label: &str) -> Option<&SchemeBatch> {
+        self.schemes.iter().find(|s| s.scheme == label)
+    }
+
+    /// Serialize to JSON (stable key order).
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("k", Json::UInt(self.k as u128)),
+            ("q", Json::UInt(self.q as u128)),
+            ("gamma", Json::UInt(self.gamma as u128)),
+            ("value_bytes", Json::UInt(self.value_bytes as u128)),
+            ("servers", Json::UInt(self.servers as u128)),
+            ("sim_config", Json::Str(self.sim_config.clone())),
+            ("schemes", Json::Arr(self.schemes.iter().map(|s| s.to_json()).collect())),
+        ])
+        .render()
+    }
+}
+
+impl std::fmt::Display for BatchReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "batch run  k={} q={} γ={} B={}  (K={} servers)   sim: {}",
+            self.k, self.q, self.gamma, self.value_bytes, self.servers, self.sim_config
+        )?;
+        writeln!(
+            f,
+            "  {:<8} {:>10} {:>9} {:>6} {:>12} {:>8} {:>12} {:>12} {:>12}",
+            "scheme",
+            "required",
+            "executed",
+            "units",
+            "bytes",
+            "load",
+            "serial_s",
+            "pipeline_s",
+            "s/job"
+        )?;
+        for s in &self.schemes {
+            writeln!(
+                f,
+                "  {:<8} {:>10} {:>9} {:>6} {:>12} {:>8.4} {:>12.6} {:>12.6} {:>12.6}{}",
+                s.scheme,
+                s.jobs_required,
+                s.jobs_executed,
+                s.units,
+                s.total_bytes,
+                s.load,
+                s.serial_secs,
+                s.pipelined_secs,
+                s.secs_per_job(),
+                if s.verified { "" } else { "  [FAILED UNITS]" }
+            )?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,5 +457,40 @@ mod tests {
         assert!((s.shuffle_secs - sum).abs() <= 1e-15 * s.shuffle_secs.max(1.0));
         assert!(rep.to_json().contains("\"total_secs\""));
         assert!(rep.to_string().contains("simulated:"));
+    }
+
+    #[test]
+    fn batch_report_renders_scheme_rows() {
+        use crate::coordinator::batch::{run_batch_synthetic, BatchOptions, BatchScheme};
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let sc = crate::sim::SimConfig::commodity();
+        let mut schemes = Vec::new();
+        for scheme in [BatchScheme::Camr, BatchScheme::Ccdc] {
+            let out = run_batch_synthetic(&cfg, scheme, &BatchOptions::default()).unwrap();
+            let sim = out.simulate(&sc).unwrap();
+            schemes.push(SchemeBatch::from_outcome(&out, &sim));
+        }
+        let rep = BatchReport {
+            k: cfg.k,
+            q: cfg.q,
+            gamma: cfg.gamma,
+            value_bytes: cfg.value_bytes,
+            servers: cfg.servers(),
+            sim_config: sc.describe(),
+            schemes,
+        };
+        let camr = rep.scheme("camr").unwrap();
+        let ccdc = rep.scheme("ccdc").unwrap();
+        assert_eq!(camr.jobs_required, 4);
+        assert_eq!(ccdc.jobs_required, 20);
+        assert!(camr.verified && ccdc.verified);
+        assert!(camr.pipelined_secs > 0.0);
+        assert!(camr.pipelined_secs <= camr.serial_secs + 1e-12);
+        let js = rep.to_json();
+        assert!(js.contains("\"scheme\":\"camr\""));
+        assert!(js.contains("\"jobs_required\":20"));
+        let text = rep.to_string();
+        assert!(text.contains("pipeline_s") && text.contains("ccdc"));
+        assert!(rep.scheme("uncoded").is_none());
     }
 }

@@ -63,15 +63,21 @@ impl Stage {
     }
 }
 
-/// Contiguous same-stage runs of a ledger, in order: the
+/// Contiguous same-(job, stage) runs of a ledger, in order: the
 /// barrier-separated *phases* of the recorded protocol (a CAMR ledger
 /// yields `[stage1, stage2, stage3]`; a baseline ledger one `baseline`
-/// run). The simulator replays each run behind a barrier.
+/// run). A change of **job tag** is a barrier too, so the aggregate
+/// ledger of a multi-job batch splits into per-job phase sequences even
+/// where consecutive jobs share a stage tag (e.g. back-to-back
+/// `baseline` runs). The simulator replays each run behind a barrier.
 pub fn stage_runs(ledger: &[Transmission]) -> Vec<(Stage, std::ops::Range<usize>)> {
     let mut runs = Vec::new();
     let mut start = 0usize;
     for i in 1..=ledger.len() {
-        if i == ledger.len() || ledger[i].stage != ledger[start].stage {
+        if i == ledger.len()
+            || ledger[i].stage != ledger[start].stage
+            || ledger[i].job != ledger[start].job
+        {
             runs.push((ledger[start].stage, start..i));
             start = i;
         }
@@ -90,6 +96,11 @@ pub struct Transmission {
     pub recipients: Vec<ServerId>,
     /// Payload size in bytes — counted once on the shared link.
     pub bytes: usize,
+    /// Batch job index this transmission belongs to (`0` for plain
+    /// single-job runs). The batch runtime tags each job's ledger via
+    /// [`Bus::append_ledger`] / [`Bus::set_job`]; [`stage_runs`] treats
+    /// a job change as a phase barrier.
+    pub job: usize,
 }
 
 /// The shared link: a ledger of every transmission.
@@ -100,12 +111,21 @@ pub struct Transmission {
 #[derive(Debug, Default, Clone)]
 pub struct Bus {
     ledger: Vec<Transmission>,
+    /// Job tag applied to subsequently recorded transmissions.
+    job: usize,
 }
 
 impl Bus {
     /// New empty bus.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the job tag applied to transmissions recorded from now on
+    /// (reset to `0` by [`Bus::reset`]). Engines leave this at `0`; the
+    /// CCDC baseline tags each job of its family as it executes.
+    pub fn set_job(&mut self, job: usize) {
+        self.job = job;
     }
 
     /// Record a multicast from `sender` to `recipients` of `bytes` bytes.
@@ -116,7 +136,7 @@ impl Bus {
         recipients: Vec<ServerId>,
         bytes: usize,
     ) {
-        self.ledger.push(Transmission { stage, sender, recipients, bytes });
+        self.ledger.push(Transmission { stage, sender, recipients, bytes, job: self.job });
     }
 
     /// Record a unicast.
@@ -160,9 +180,28 @@ impl Bus {
         stage_runs(&self.ledger).into_iter().map(|(s, r)| (s, &self.ledger[r])).collect()
     }
 
+    /// Append another ledger's transmissions re-tagged with `job` — the
+    /// batch runtime folds each executed job's per-run ledger into one
+    /// aggregate, job-tagged transcript this way. Bytes, order, senders
+    /// and recipients are preserved exactly; only the job tag changes.
+    pub fn append_ledger(&mut self, ledger: &[Transmission], job: usize) {
+        self.ledger.extend(ledger.iter().map(|t| Transmission { job, ..t.clone() }));
+    }
+
+    /// Number of distinct job tags (`max + 1`; `0` for an empty ledger).
+    pub fn job_count(&self) -> usize {
+        self.ledger.iter().map(|t| t.job + 1).max().unwrap_or(0)
+    }
+
+    /// Total bytes carrying one job tag.
+    pub fn job_bytes(&self, job: usize) -> usize {
+        self.ledger.iter().filter(|t| t.job == job).map(|t| t.bytes).sum()
+    }
+
     /// Clear the ledger (reused between runs).
     pub fn reset(&mut self) {
         self.ledger.clear();
+        self.job = 0;
     }
 
     /// Bytes transmitted per server (length `servers`). The SPC design
@@ -211,7 +250,7 @@ impl BusRecorder {
         recipients: Vec<ServerId>,
         bytes: usize,
     ) {
-        let _ = self.tx.send((seq, Transmission { stage, sender, recipients, bytes }));
+        let _ = self.tx.send((seq, Transmission { stage, sender, recipients, bytes, job: 0 }));
     }
 
     /// Record a unicast.
@@ -311,6 +350,47 @@ mod tests {
         let phases = bus.phases();
         assert_eq!(phases[2].1.iter().map(|t| t.bytes).sum::<usize>(), 27);
         assert!(stage_runs(&[]).is_empty());
+    }
+
+    #[test]
+    fn job_tagging_and_append() {
+        let mut single = Bus::new();
+        single.multicast(Stage::Stage1, 0, vec![1], 10);
+        single.unicast(Stage::Stage3, 1, 0, 20);
+        assert!(single.ledger().iter().all(|t| t.job == 0));
+        assert_eq!(single.job_count(), 1);
+
+        // Fold the same per-run ledger in twice, tagged as jobs 0 and 1.
+        let mut batch = Bus::new();
+        batch.append_ledger(single.ledger(), 0);
+        batch.append_ledger(single.ledger(), 1);
+        assert_eq!(batch.job_count(), 2);
+        assert_eq!(batch.total_bytes(), 2 * single.total_bytes());
+        assert_eq!(batch.job_bytes(0), single.total_bytes());
+        assert_eq!(batch.job_bytes(1), single.total_bytes());
+        // Everything but the job tag is preserved exactly.
+        for (a, b) in batch.ledger()[2..].iter().zip(single.ledger()) {
+            assert_eq!(a.stage, b.stage);
+            assert_eq!(a.sender, b.sender);
+            assert_eq!(a.recipients, b.recipients);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.job, 1);
+        }
+        // A job change is a phase barrier even within one stage tag.
+        let runs = stage_runs(batch.ledger());
+        assert_eq!(runs.len(), 4);
+        assert_eq!(runs[1], (Stage::Stage3, 1..2));
+        assert_eq!(runs[2], (Stage::Stage1, 2..3));
+
+        // set_job tags subsequent recordings; reset clears it.
+        let mut tagged = Bus::new();
+        tagged.set_job(7);
+        tagged.unicast(Stage::Baseline, 0, 1, 5);
+        assert_eq!(tagged.ledger()[0].job, 7);
+        assert_eq!(tagged.job_count(), 8);
+        tagged.reset();
+        tagged.unicast(Stage::Baseline, 0, 1, 5);
+        assert_eq!(tagged.ledger()[0].job, 0);
     }
 
     #[test]

@@ -126,7 +126,7 @@ mod tests {
     use crate::net::Stage;
 
     fn tx(sender: usize, bytes: usize) -> Transmission {
-        Transmission { stage: Stage::Stage1, sender, recipients: vec![], bytes }
+        Transmission { stage: Stage::Stage1, sender, recipients: vec![], bytes, job: 0 }
     }
 
     #[test]

@@ -494,12 +494,166 @@ pub fn simulate(sc: &SimConfig, maps: &[usize], ledger: &[Transmission]) -> Resu
     })
 }
 
+/// Simulated times of one job of a batch (see [`simulate_batch`]).
+#[derive(Debug, Clone)]
+pub struct BatchJobTime {
+    /// The job's tag in the aggregate ledger.
+    pub job: usize,
+    /// Map-phase duration (barrier: slowest worker), seconds.
+    pub map_secs: f64,
+    /// Shuffle duration of this job's ledger slice, seconds.
+    pub shuffle_secs: f64,
+    /// Bytes this job put on the link.
+    pub bytes: usize,
+    /// Transmissions in this job's ledger slice.
+    pub transmissions: usize,
+}
+
+/// Result of replaying a multi-job aggregate ledger (see
+/// [`simulate_batch`]).
+#[derive(Debug, Clone)]
+pub struct BatchSimOutcome {
+    /// Per-job simulated times, in job order.
+    pub jobs: Vec<BatchJobTime>,
+    /// Barriered makespan: every job fully finishes (map + shuffle)
+    /// before the next one starts — `Σ (mapᵢ + shuffleᵢ)`.
+    pub serial_secs: f64,
+    /// Pipelined makespan: job `i+1` maps (compute resource) while job
+    /// `i` shuffles (link resource). Two-stage pipeline recurrence:
+    /// `map_endᵢ = map_endᵢ₋₁ + mapᵢ`,
+    /// `shuffle_endᵢ = max(map_endᵢ, shuffle_endᵢ₋₁) + shuffleᵢ`.
+    pub pipelined_secs: f64,
+    /// Total map time across jobs (the compute chain's length).
+    pub map_secs_total: f64,
+    /// Total shuffle time across jobs (the link chain's length).
+    pub shuffle_secs_total: f64,
+    /// Total bytes across all jobs.
+    pub bytes_total: usize,
+}
+
+impl BatchSimOutcome {
+    /// Wall-clock saved by pipelining over the barriered schedule.
+    pub fn saved_secs(&self) -> f64 {
+        self.serial_secs - self.pipelined_secs
+    }
+
+    /// Stable JSON rendering (keys sorted; bit-deterministic for a
+    /// given config + seed).
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                Json::obj(vec![
+                    ("job", Json::UInt(j.job as u128)),
+                    ("map_secs", Json::Num(j.map_secs)),
+                    ("shuffle_secs", Json::Num(j.shuffle_secs)),
+                    ("bytes", Json::UInt(j.bytes as u128)),
+                    ("transmissions", Json::UInt(j.transmissions as u128)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("serial_secs", Json::Num(self.serial_secs)),
+            ("pipelined_secs", Json::Num(self.pipelined_secs)),
+            ("saved_secs", Json::Num(self.saved_secs())),
+            ("map_secs_total", Json::Num(self.map_secs_total)),
+            ("shuffle_secs_total", Json::Num(self.shuffle_secs_total)),
+            ("bytes_total", Json::UInt(self.bytes_total as u128)),
+            ("jobs", Json::Arr(jobs)),
+        ])
+    }
+}
+
+/// Replay a job-tagged aggregate ledger (see [`crate::net::Bus::append_ledger`])
+/// as a batch of `maps.len()` jobs, where `maps[j]` holds job `j`'s
+/// per-worker map-task counts, and report both the barriered and the
+/// pipelined makespan.
+///
+/// Job `j`'s transmissions are the ledger entries tagged `job == j`
+/// (they must be contiguous and in job order; a job may have none, e.g.
+/// a failed round contributes only its tag gap). Each job's straggler
+/// draws use a per-job seed derived from `sc.seed` via
+/// [`crate::util::rng::mix_key`], so repeated jobs of one batch see
+/// fresh (but fully deterministic) randomness.
+pub fn simulate_batch(
+    sc: &SimConfig,
+    maps: &[Vec<usize>],
+    ledger: &[Transmission],
+) -> Result<BatchSimOutcome> {
+    if maps.is_empty() {
+        return Err(CamrError::InvalidConfig("simulate_batch needs at least one job".into()));
+    }
+    // Split the ledger into per-job contiguous slices.
+    let mut slices: Vec<std::ops::Range<usize>> = vec![0..0; maps.len()];
+    let mut seen: Vec<bool> = vec![false; maps.len()];
+    let mut i = 0usize;
+    while i < ledger.len() {
+        let job = ledger[i].job;
+        if job >= maps.len() {
+            return Err(CamrError::InvalidConfig(format!(
+                "ledger job tag {job} out of range for a {}-job batch",
+                maps.len()
+            )));
+        }
+        if seen[job] {
+            return Err(CamrError::InvalidConfig(format!(
+                "ledger entries for job {job} are not contiguous"
+            )));
+        }
+        seen[job] = true;
+        let start = i;
+        while i < ledger.len() && ledger[i].job == job {
+            i += 1;
+        }
+        slices[job] = start..i;
+    }
+
+    let mut jobs: Vec<BatchJobTime> = Vec::with_capacity(maps.len());
+    let mut serial = 0.0f64;
+    let mut map_end = 0.0f64;
+    let mut shuffle_end = 0.0f64;
+    let mut map_total = 0.0f64;
+    let mut shuffle_total = 0.0f64;
+    let mut bytes_total = 0usize;
+    for (j, jmaps) in maps.iter().enumerate() {
+        let mut scj = sc.clone();
+        scj.seed = crate::util::rng::mix_key(sc.seed, &[j as u64]);
+        let slice = &ledger[slices[j].clone()];
+        let out = simulate(&scj, jmaps, slice)?;
+        serial += out.map_secs + out.shuffle_secs;
+        map_end += out.map_secs;
+        shuffle_end = map_end.max(shuffle_end) + out.shuffle_secs;
+        map_total += out.map_secs;
+        shuffle_total += out.shuffle_secs;
+        bytes_total += out.shuffle_bytes;
+        jobs.push(BatchJobTime {
+            job: j,
+            map_secs: out.map_secs,
+            shuffle_secs: out.shuffle_secs,
+            bytes: out.shuffle_bytes,
+            transmissions: slice.len(),
+        });
+    }
+    Ok(BatchSimOutcome {
+        jobs,
+        serial_secs: serial,
+        // The batch ends when both chains drain: the link after the last
+        // shuffle, the compute fabric after the last map (a trailing
+        // shuffle-free job can leave map_end ahead of shuffle_end).
+        pipelined_secs: shuffle_end.max(map_end),
+        map_secs_total: map_total,
+        shuffle_secs_total: shuffle_total,
+        bytes_total,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn tx(stage: Stage, sender: usize, bytes: usize) -> Transmission {
-        Transmission { stage, sender, recipients: vec![], bytes }
+        Transmission { stage, sender, recipients: vec![], bytes, job: 0 }
     }
 
     fn degenerate(bw: f64, spm: f64) -> SimConfig {
@@ -537,6 +691,7 @@ mod tests {
             sender: 0,
             recipients: vec![1, 2, 3, 4, 5],
             bytes: 100,
+            job: 0,
         }];
         let narrow = [tx(Stage::Stage1, 0, 100)];
         let a = simulate(&sc, &[0, 0, 0, 0, 0, 0], &wide).unwrap();
@@ -684,6 +839,76 @@ mod tests {
         assert!(SimConfig::from_cfg(&CfgText::parse(tail_on_exp).unwrap()).is_err());
         let rate_on_tail = "[sim]\nstraggler = \"tail\"\nstraggler_rate = 2.0";
         assert!(SimConfig::from_cfg(&CfgText::parse(rate_on_tail).unwrap()).is_err());
+    }
+
+    fn jtx(stage: Stage, sender: usize, bytes: usize, job: usize) -> Transmission {
+        Transmission { stage, sender, recipients: vec![], bytes, job }
+    }
+
+    #[test]
+    fn batch_pipeline_overlaps_map_with_previous_shuffle() {
+        // Two identical jobs: 1 s map, 1 s shuffle each. Barriered: 4 s.
+        // Pipelined: job 1 maps during job 0's shuffle → 3 s.
+        let sc = degenerate(1e3, 1.0);
+        let maps = vec![vec![1usize], vec![1usize]];
+        let ledger =
+            [jtx(Stage::Stage1, 0, 1000, 0), jtx(Stage::Stage1, 0, 1000, 1)];
+        let out = simulate_batch(&sc, &maps, &ledger).unwrap();
+        assert_eq!(out.serial_secs, 4.0);
+        assert_eq!(out.pipelined_secs, 3.0);
+        assert_eq!(out.saved_secs(), 1.0);
+        assert_eq!(out.jobs.len(), 2);
+        assert_eq!(out.bytes_total, 2000);
+        assert_eq!(out.map_secs_total, 2.0);
+        assert_eq!(out.shuffle_secs_total, 2.0);
+    }
+
+    #[test]
+    fn batch_pipelined_never_beats_resource_chains_and_never_loses_to_serial() {
+        let mut sc = degenerate(1e4, 2e-3);
+        sc.straggler = StragglerModel::ShiftedExp { rate: 3.0 };
+        let maps: Vec<Vec<usize>> = (0..5).map(|_| vec![4usize, 4, 4]).collect();
+        let ledger: Vec<Transmission> = (0..5)
+            .flat_map(|j| {
+                (0..6).map(move |i| jtx(Stage::Stage1, i % 3, 128 * (j + 1), j))
+            })
+            .collect();
+        let out = simulate_batch(&sc, &maps, &ledger).unwrap();
+        assert!(out.pipelined_secs <= out.serial_secs + 1e-12);
+        assert!(out.pipelined_secs + 1e-12 >= out.map_secs_total);
+        assert!(out.pipelined_secs + 1e-12 >= out.shuffle_secs_total);
+        // Per-job seeds differ, so equal map layouts still draw fresh
+        // straggler factors per job.
+        assert_ne!(out.jobs[0].map_secs, out.jobs[1].map_secs);
+        // Deterministic: same inputs, byte-identical JSON.
+        let again = simulate_batch(&sc, &maps, &ledger).unwrap();
+        assert_eq!(out.to_json().render(), again.to_json().render());
+    }
+
+    #[test]
+    fn batch_tolerates_traffic_free_jobs_and_rejects_bad_tags() {
+        let sc = degenerate(1e3, 1.0);
+        // Job 0 failed before its shuffle: no tagged entries for it.
+        let maps = vec![vec![1usize], vec![1usize]];
+        let ledger = [jtx(Stage::Stage1, 0, 500, 1)];
+        let out = simulate_batch(&sc, &maps, &ledger).unwrap();
+        assert_eq!(out.jobs[0].bytes, 0);
+        assert_eq!(out.jobs[0].transmissions, 0);
+        assert_eq!(out.jobs[1].bytes, 500);
+        // A trailing map-only job keeps the compute chain in the makespan.
+        let tail = [jtx(Stage::Stage1, 0, 500, 0)];
+        let t = simulate_batch(&sc, &maps, &tail).unwrap();
+        assert_eq!(t.pipelined_secs, 2.0); // two 1 s maps back to back
+        // Out-of-range and non-contiguous tags are rejected.
+        let bad = [jtx(Stage::Stage1, 0, 1, 9)];
+        assert!(simulate_batch(&sc, &maps, &bad).is_err());
+        let split = [
+            jtx(Stage::Stage1, 0, 1, 0),
+            jtx(Stage::Stage1, 0, 1, 1),
+            jtx(Stage::Stage1, 0, 1, 0),
+        ];
+        assert!(simulate_batch(&sc, &maps, &split).is_err());
+        assert!(simulate_batch(&sc, &[], &[]).is_err());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Minimal JSON writer (objects, arrays, numbers, strings, bools) for
-//! report output. Writing only — nothing in the system parses JSON at
-//! runtime except artifact metadata, which has its own tiny reader here.
+//! report output, plus a small recursive-descent reader ([`Json::parse`])
+//! used by the bench smoke tests to prove every emitted `BENCH_*.json`
+//! is well-formed. Artifact metadata keeps its own tiny flat reader
+//! ([`get_field`]).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -28,6 +30,32 @@ impl Json {
     /// Build an object from pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Parse a JSON document. Covers everything this writer emits
+    /// (objects, arrays, strings with the writer's escape set, numbers,
+    /// booleans, null) plus insignificant whitespace; trailing garbage
+    /// is an error. Non-negative integers without fraction or exponent
+    /// come back as [`Json::UInt`], every other number as [`Json::Num`]
+    /// — mirroring the writer, so `parse(render(x)).render()` equals
+    /// `render(x)`.
+    pub fn parse(text: &str) -> std::result::Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing input at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Index into an object field ([`Json::Obj`] only).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
     }
 
     /// Render compactly.
@@ -94,6 +122,194 @@ impl Json {
     }
 }
 
+/// Recursive-descent state for [`Json::parse`].
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, expected: u8) -> std::result::Result<(), String> {
+        if self.peek() == Some(expected) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected {:?} at byte {} (found {:?})",
+                expected as char,
+                self.pos,
+                self.peek().map(|b| b as char)
+            ))
+        }
+    }
+
+    fn eat_literal(&mut self, lit: &str) -> std::result::Result<(), String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(format!("expected `{lit}` at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> std::result::Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.eat_literal("true").map(|()| Json::Bool(true)),
+            Some(b'f') => self.eat_literal("false").map(|()| Json::Bool(false)),
+            Some(b'n') => self.eat_literal("null").map(|()| Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at byte {}", self.pos)),
+        }
+    }
+
+    fn object(&mut self) -> std::result::Result<Json, String> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                other => return Err(format!("expected , or }} (found {other:?})")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> std::result::Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => return Err(format!("expected , or ] (found {other:?})")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> std::result::Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            while self.pos < self.bytes.len()
+                && self.bytes[self.pos] != b'"'
+                && self.bytes[self.pos] != b'\\'
+            {
+                self.pos += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|e| format!("invalid UTF-8 in string: {e}"))?,
+            );
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or("truncated \\u escape")?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| "non-ASCII \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|e| format!("bad \\u escape {hex}: {e}"))?;
+                            self.pos += 4;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| format!("invalid codepoint {code:#x}"))?,
+                            );
+                        }
+                        other => return Err(format!("unknown escape \\{}", other as char)),
+                    }
+                }
+                _ => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn number(&mut self) -> std::result::Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut integral = true;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    integral = false;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ASCII number");
+        if integral && !text.starts_with('-') {
+            if let Ok(u) = text.parse::<u128>() {
+                return Ok(Json::UInt(u));
+            }
+        }
+        text.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number `{text}`: {e}"))
+    }
+}
+
 /// Extract a flat field from a tiny JSON object like the artifact meta
 /// (`{"m": 128, "cols": 32, "dtype": "f32", "kernel": "pallas_matvec"}`).
 /// Supports string and unsigned-integer values; not a general parser.
@@ -157,5 +373,73 @@ mod tests {
         let meta = r#"{"m":7,"dtype":"f32"}"#;
         assert_eq!(get_field(meta, "m").unwrap(), "7");
         assert_eq!(get_field(meta, "dtype").unwrap(), "f32");
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let j = Json::obj(vec![
+            ("bench", Json::Str("batch_jobs".into())),
+            ("quick", Json::Bool(true)),
+            ("nothing", Json::Null),
+            ("count", Json::UInt(75_287_520)),
+            ("load", Json::Num(1.0)),
+            ("ratio", Json::Num(0.03125)),
+            ("big", Json::Num(1.25e8)),
+            (
+                "rows",
+                Json::Arr(vec![
+                    Json::obj(vec![("secs", Json::Num(0.015625)), ("n", Json::UInt(0))]),
+                    Json::Arr(vec![]),
+                    Json::Obj(BTreeMap::new()),
+                ]),
+            ),
+            ("text", Json::Str("a\"b\\c\nd\ttab".into())),
+        ]);
+        let rendered = j.render();
+        let parsed = Json::parse(&rendered).unwrap();
+        // String-stable round trip (Num(1.0) renders as `1`, re-parses
+        // as UInt(1) — re-rendering restores the identical document).
+        assert_eq!(parsed.render(), rendered);
+        assert_eq!(parsed.get("count"), Some(&Json::UInt(75_287_520)));
+        assert_eq!(parsed.get("text"), Some(&Json::Str("a\"b\\c\nd\ttab".into())));
+        assert!(parsed.get("missing").is_none());
+        assert!(Json::Num(2.0).get("x").is_none());
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_escapes() {
+        let j =
+            Json::parse(" {\n  \"a\" : [ 1 , -2.5 , true , false , null ] ,\n \"u\": \"\\u0041\\u00e9\" }  ")
+                .unwrap();
+        assert_eq!(
+            j.get("a"),
+            Some(&Json::Arr(vec![
+                Json::UInt(1),
+                Json::Num(-2.5),
+                Json::Bool(true),
+                Json::Bool(false),
+                Json::Null,
+            ]))
+        );
+        assert_eq!(j.get("u"), Some(&Json::Str("Aé".into())));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "tru",
+            "\"unterminated",
+            "{\"a\":1} trailing",
+            "{\"a\":1e}",
+            "nul",
+            "\"bad \\x escape\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "parsed: {bad}");
+        }
     }
 }

@@ -1,0 +1,295 @@
+//! End-to-end tests of the multi-job batch runtime
+//! (`coordinator::batch`):
+//!
+//! - **Golden aggregation** — the aggregate ledger of an `N`-unit CAMR
+//!   batch is byte-identical to `N` concatenations of the checked-in
+//!   single-run golden ledger, on both engines, pooled and unpooled:
+//!   batching changes *nothing* about what each job puts on the link.
+//! - **Failure tolerance + pool hygiene** — injected per-unit map and
+//!   verification failures are recorded, the rest of the batch
+//!   completes, and the shared buffer pool comes back with
+//!   `outstanding == 0` / `acquired == released`.
+//! - **Closed forms** — executed job counts equal `analysis::jobs`'
+//!   Table III formulas (`q^(k-1)` vs `C(K, μK+1)`).
+//! - **Batch simulation** — pipelined ≤ barriered makespan, and the
+//!   batch report is bit-deterministic across runs and engines.
+
+use camr::analysis::jobs::JobRequirement;
+use camr::config::{RunConfig, SystemConfig};
+use camr::coordinator::batch::{
+    run_batch, run_batch_synthetic, BatchOptions, BatchOutcome, BatchScheme,
+};
+use camr::error::CamrError;
+use camr::net::Bus;
+use camr::sim::SimConfig;
+use camr::workload::synth::SyntheticWorkload;
+use camr::workload::wordcount::WordCountWorkload;
+use camr::workload::Workload;
+use std::path::PathBuf;
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn example1_system() -> SystemConfig {
+    RunConfig::from_path(&repo_path("configs/example1.toml"))
+        .expect("configs/example1.toml parses")
+        .system
+}
+
+/// Render a ledger in the golden fixture's line format (the job tag is
+/// batch bookkeeping, deliberately not part of the per-run format).
+fn render(bus: &Bus) -> String {
+    let mut out = String::new();
+    for t in bus.ledger() {
+        let recipients: Vec<String> = t.recipients.iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!("{} {} {} {}\n", t.stage, t.sender, t.bytes, recipients.join(",")));
+    }
+    out
+}
+
+/// The golden fixture's data lines (comments stripped).
+fn fixture_contents() -> String {
+    let text = std::fs::read_to_string(repo_path("rust/tests/golden/example1_ledger.txt"))
+        .expect("golden fixture present");
+    let mut out = String::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+fn example1_batch(rounds: usize, parallel: bool, pooling: bool) -> BatchOutcome {
+    let cfg = example1_system();
+    let opts = BatchOptions {
+        jobs: Some(rounds * cfg.jobs()),
+        parallel,
+        pooling,
+        ..BatchOptions::default()
+    };
+    let cfg2 = cfg.clone();
+    run_batch(&cfg, BatchScheme::Camr, &opts, &move |_, _| {
+        Ok(Box::new(WordCountWorkload::example1(&cfg2)) as Box<dyn Workload>)
+    })
+    .expect("batch runs")
+}
+
+#[test]
+fn aggregate_ledger_is_n_copies_of_the_golden_single_run_ledger() {
+    let golden = fixture_contents();
+    assert!(!golden.is_empty());
+    for rounds in [1usize, 3] {
+        let expect = golden.repeat(rounds);
+        for parallel in [false, true] {
+            for pooling in [true, false] {
+                let out = example1_batch(rounds, parallel, pooling);
+                assert!(out.all_verified());
+                assert_eq!(out.units.len(), rounds);
+                assert_eq!(out.bus.job_count(), rounds);
+                assert_eq!(
+                    render(&out.bus),
+                    expect,
+                    "rounds={rounds} parallel={parallel} pooling={pooling}: \
+                     aggregate ledger is not {rounds}x the golden ledger"
+                );
+                // Job tags step 0..rounds in schedule order.
+                let per_run = out.bus.ledger().len() / rounds;
+                for (i, t) in out.bus.ledger().iter().enumerate() {
+                    assert_eq!(t.job, i / per_run, "transmission {i} mis-tagged");
+                }
+            }
+        }
+    }
+}
+
+/// A workload whose map fails everywhere — models a unit whose input
+/// data is gone.
+struct FailingWorkload {
+    inner: SyntheticWorkload,
+}
+
+impl Workload for FailingWorkload {
+    fn name(&self) -> &str {
+        "failing"
+    }
+    fn aggregator(&self) -> &dyn camr::agg::Aggregator {
+        self.inner.aggregator()
+    }
+    fn map_subfile(&self, _job: usize, _subfile: usize) -> camr::error::Result<Vec<Vec<u8>>> {
+        Err(CamrError::Runtime("injected unit failure".into()))
+    }
+}
+
+/// A workload with one corrupted intermediate value — caught only by
+/// oracle verification, i.e. by the batch's pipelined verifier.
+struct CorruptingWorkload {
+    inner: SyntheticWorkload,
+}
+
+impl Workload for CorruptingWorkload {
+    fn name(&self) -> &str {
+        "corrupting"
+    }
+    fn aggregator(&self) -> &dyn camr::agg::Aggregator {
+        self.inner.aggregator()
+    }
+    fn map_subfile(&self, job: usize, subfile: usize) -> camr::error::Result<Vec<Vec<u8>>> {
+        let mut vals = self.inner.map_subfile(job, subfile)?;
+        if job == 0 && subfile == 1 {
+            vals[0][0] ^= 0x01;
+        }
+        Ok(vals)
+    }
+    fn oracle(
+        &self,
+        cfg: &SystemConfig,
+        job: usize,
+        func: usize,
+    ) -> camr::error::Result<Vec<u8>> {
+        self.inner.oracle(cfg, job, func)
+    }
+}
+
+fn batch_with_bad_unit(parallel: bool, corrupt_instead: bool) -> BatchOutcome {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let opts = BatchOptions {
+        jobs: Some(4 * cfg.jobs()),
+        parallel,
+        strict: false,
+        ..BatchOptions::default()
+    };
+    let cfg2 = cfg.clone();
+    run_batch(&cfg, BatchScheme::Camr, &opts, &move |unit, seed| {
+        let inner = SyntheticWorkload::new(&cfg2, seed);
+        Ok(if unit != 1 {
+            Box::new(inner) as Box<dyn Workload>
+        } else if corrupt_instead {
+            Box::new(CorruptingWorkload { inner })
+        } else {
+            Box::new(FailingWorkload { inner })
+        })
+    })
+    .expect("non-strict batch completes")
+}
+
+#[test]
+fn injected_unit_failures_are_recorded_and_pool_comes_back_clean() {
+    for parallel in [false, true] {
+        let out = batch_with_bad_unit(parallel, false);
+        assert_eq!(out.units.len(), 4);
+        assert!(!out.all_verified());
+        let bad = &out.units[1];
+        assert!(bad.error.as_deref().unwrap_or("").contains("injected unit failure"));
+        assert_eq!(bad.bytes, 0, "failed unit contributes no link traffic");
+        for u in [0usize, 2, 3] {
+            assert!(out.units[u].verified, "parallel={parallel} unit {u}");
+            assert!(out.units[u].bytes > 0);
+        }
+        // 3 of 4 units succeeded: 12 of 16 jobs, 3 ledger tags, 3 map
+        // vectors — and the aggregate still simulates.
+        assert_eq!(out.jobs_executed, 12);
+        assert_eq!(out.jobs_attempted, 16);
+        assert_eq!(out.bus.job_count(), 3);
+        assert_eq!(out.maps.len(), 3);
+        let sim = out.simulate(&SimConfig::commodity()).unwrap();
+        assert!(sim.pipelined_secs > 0.0);
+        // Pool hygiene across the failure: nothing leaked, nothing
+        // double-released.
+        let pool = out.pool.expect("CAMR batch reports pool stats");
+        assert_eq!(pool.outstanding(), 0, "parallel={parallel}: {pool:?}");
+        assert_eq!(pool.acquired, pool.released, "parallel={parallel}: {pool:?}");
+        assert!(pool.acquired > 0);
+    }
+}
+
+#[test]
+fn corrupted_unit_is_caught_by_the_pipelined_verifier() {
+    for parallel in [false, true] {
+        let out = batch_with_bad_unit(parallel, true);
+        assert!(!out.all_verified());
+        let bad = &out.units[1];
+        // The corruption executes fine (its traffic counts) but fails
+        // oracle verification on the background thread.
+        assert!(bad.bytes > 0);
+        assert!(!bad.verified);
+        assert!(bad.error.as_deref().unwrap_or("").contains("mismatch"), "{:?}", bad.error);
+        // Its traffic was appended before verification vetoed the unit:
+        // all four tags are present; maps align.
+        assert_eq!(out.bus.job_count(), 4);
+        assert_eq!(out.maps.len(), 4);
+        assert_eq!(out.jobs_executed, 12, "vetoed unit's jobs don't count as executed");
+        let pool = out.pool.unwrap();
+        assert_eq!(pool.outstanding(), 0);
+    }
+}
+
+#[test]
+fn strict_batches_surface_the_first_unit_error() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let opts =
+        BatchOptions { jobs: Some(2 * cfg.jobs()), strict: true, ..BatchOptions::default() };
+    let cfg2 = cfg.clone();
+    let err = run_batch(&cfg, BatchScheme::Camr, &opts, &move |unit, seed| {
+        let inner = SyntheticWorkload::new(&cfg2, seed);
+        Ok(if unit == 1 {
+            Box::new(FailingWorkload { inner }) as Box<dyn Workload>
+        } else {
+            Box::new(inner)
+        })
+    })
+    .expect_err("strict batch must fail");
+    assert!(err.to_string().contains("injected unit failure"), "got: {err}");
+}
+
+#[test]
+fn executed_job_counts_match_table3_closed_forms() {
+    for (k, q) in [(3usize, 2usize), (2, 3)] {
+        let cfg = SystemConfig::new(k, q, 1).unwrap();
+        let req = JobRequirement::for_params(k, q);
+        let camr = run_batch_synthetic(&cfg, BatchScheme::Camr, &BatchOptions::default())
+            .unwrap();
+        assert_eq!(camr.jobs_executed as u128, req.camr, "k={k} q={q}");
+        assert_eq!(camr.jobs_required, req.camr);
+        let ccdc = run_batch_synthetic(&cfg, BatchScheme::Ccdc, &BatchOptions::default())
+            .unwrap();
+        assert_eq!(ccdc.jobs_required, req.ccdc, "k={k} q={q}");
+        assert_eq!(ccdc.jobs_executed as u128, req.ccdc.min(1000), "cap covers these");
+        assert!(camr.jobs_required < ccdc.jobs_required);
+        let unc = run_batch_synthetic(&cfg, BatchScheme::Uncoded, &BatchOptions::default())
+            .unwrap();
+        assert_eq!(unc.jobs_executed as u128, req.camr, "same placement, same job set");
+    }
+}
+
+#[test]
+fn batch_simulation_is_deterministic_and_pipelining_never_hurts() {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let opts = BatchOptions { jobs: Some(3 * cfg.jobs()), ..BatchOptions::default() };
+    let serial = run_batch_synthetic(&cfg, BatchScheme::Camr, &opts).unwrap();
+    let par = run_batch_synthetic(
+        &cfg,
+        BatchScheme::Camr,
+        &BatchOptions { parallel: true, ..opts.clone() },
+    )
+    .unwrap();
+    let mut sc = SimConfig::commodity();
+    sc.link_bytes_per_sec = 2e5;
+    let a = serial.simulate(&sc).unwrap();
+    assert!(a.pipelined_secs <= a.serial_secs + 1e-12);
+    assert!(a.pipelined_secs + 1e-12 >= a.shuffle_secs_total);
+    // Ten replays and the other engine's ledger: bit-identical reports.
+    let reference = a.to_json().render();
+    for i in 0..10 {
+        assert_eq!(serial.simulate(&sc).unwrap().to_json().render(), reference, "run {i}");
+    }
+    assert_eq!(
+        par.simulate(&sc).unwrap().to_json().render(),
+        reference,
+        "parallel-engine aggregate ledger simulated differently"
+    );
+}

@@ -1,0 +1,82 @@
+//! Smoke tests for the machine-readable bench reports: every
+//! `BENCH_*.json` a bench target emits must parse with [`Json::parse`]
+//! and carry its identifying `bench` field.
+//!
+//! Benches are not executed by `cargo test`, so the on-disk checks are
+//! conditional: files written by an earlier `cargo bench … -- --quick`
+//! run (CI runs one right before re-running this test) are validated,
+//! missing ones are skipped. The writer-side shape of each report is
+//! additionally pinned here unconditionally, through the exact
+//! `Json`-building code path the benches use.
+
+use camr::util::json::Json;
+use std::path::PathBuf;
+
+/// Every bench that writes a machine-readable report, with its file.
+const BENCH_FILES: &[(&str, &str)] = &[
+    ("xor_throughput", "BENCH_shuffle.json"),
+    ("sim_sweep", "BENCH_sim.json"),
+    ("batch_jobs", "BENCH_batch.json"),
+];
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+#[test]
+fn emitted_bench_reports_parse_as_json() {
+    let mut checked = 0usize;
+    for (bench, file) in BENCH_FILES {
+        let path = repo_path(file);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            eprintln!("note: {file} absent (run `cargo bench --bench {bench} -- --quick`)");
+            continue;
+        };
+        let parsed = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{file} is not valid JSON: {e}"));
+        assert_eq!(
+            parsed.get("bench"),
+            Some(&Json::Str(bench.to_string())),
+            "{file} must identify its bench"
+        );
+        checked += 1;
+    }
+    eprintln!("validated {checked}/{} bench reports", BENCH_FILES.len());
+}
+
+#[test]
+fn bench_report_shape_parses_before_any_bench_runs() {
+    // The exact structure the benches assemble (nested objects, arrays
+    // of rows, floats, counters) survives a render → parse round trip
+    // byte-for-byte — so a bench emitting through `Json` cannot produce
+    // an unparseable file.
+    let report = Json::obj(vec![
+        ("bench", Json::Str("batch_jobs".into())),
+        ("quick", Json::Bool(true)),
+        (
+            "rows",
+            Json::Arr(
+                (0..3)
+                    .map(|i| {
+                        Json::obj(vec![
+                            ("scheme", Json::Str("camr".into())),
+                            ("rounds", Json::UInt(i as u128 + 1)),
+                            ("wall_ns", Json::Num(1.5e6 * (i + 1) as f64)),
+                            ("serial_secs", Json::Num(0.0234375)),
+                            ("pipelined_secs", Json::Num(0.015625)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let rendered = report.render();
+    let parsed = Json::parse(&rendered).expect("report shape parses");
+    assert_eq!(parsed.render(), rendered);
+    let rows = match parsed.get("rows") {
+        Some(Json::Arr(rows)) => rows,
+        other => panic!("rows missing: {other:?}"),
+    };
+    assert_eq!(rows.len(), 3);
+    assert_eq!(rows[1].get("rounds"), Some(&Json::UInt(2)));
+}

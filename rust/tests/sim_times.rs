@@ -157,7 +157,7 @@ fn fixture_ledger() -> Vec<Transmission> {
             .next()
             .map(|r| r.split(',').map(|x| x.parse().unwrap()).collect())
             .unwrap_or_default();
-        out.push(Transmission { stage, sender, recipients, bytes });
+        out.push(Transmission { stage, sender, recipients, bytes, job: 0 });
     }
     out
 }
