@@ -148,6 +148,18 @@ pub enum WorkloadKind {
 }
 
 impl WorkloadKind {
+    /// Canonical name, re-parseable by [`WorkloadKind::parse`] (used to
+    /// ship the workload selection to socket-transport worker
+    /// processes).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::WordCount => "word_count",
+            WorkloadKind::MatVec => "mat_vec",
+            WorkloadKind::Gradient => "gradient",
+            WorkloadKind::Synthetic => "synthetic",
+        }
+    }
+
     /// Parse a workload name.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
@@ -161,6 +173,123 @@ impl WorkloadKind {
                 )))
             }
         })
+    }
+}
+
+/// Which data plane `camr run` moves packets over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportChoice {
+    /// Single-threaded serial engine (no packet plane at all).
+    #[default]
+    Serial,
+    /// Thread-per-worker engine over in-process channels.
+    Chan,
+    /// Worker subprocesses over loopback TCP.
+    Tcp,
+    /// Worker subprocesses over a Unix-domain socket.
+    Unix,
+}
+
+impl TransportChoice {
+    /// Parse a transport name (CLI `--transport` / `[transport] kind`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "serial" => TransportChoice::Serial,
+            "chan" | "channel" => TransportChoice::Chan,
+            "tcp" => TransportChoice::Tcp,
+            "unix" => TransportChoice::Unix,
+            other => {
+                return Err(CamrError::InvalidConfig(format!(
+                    "unknown transport {other} (serial | chan | tcp | unix)"
+                )))
+            }
+        })
+    }
+}
+
+/// How socket-transport workers are hosted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WorkerModeChoice {
+    /// One `camr worker --connect` subprocess per server (default).
+    #[default]
+    Process,
+    /// One thread per server dialing the same socket (tests / CI).
+    Thread,
+}
+
+impl WorkerModeChoice {
+    /// Parse a worker-mode name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "process" => WorkerModeChoice::Process,
+            "thread" => WorkerModeChoice::Thread,
+            other => {
+                return Err(CamrError::InvalidConfig(format!(
+                    "unknown worker mode {other} (process | thread)"
+                )))
+            }
+        })
+    }
+}
+
+/// The `[transport]` config section: which plane to run on and how the
+/// socket planes behave.
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// Which data plane (`serial | chan | tcp | unix`).
+    pub kind: TransportChoice,
+    /// Listen address override: `host:port` for TCP, a filesystem path
+    /// for Unix sockets. Defaults to an ephemeral loopback port / a
+    /// fresh temp-dir path.
+    pub listen: Option<String>,
+    /// Seconds of hub inactivity after which a socket run fails with a
+    /// typed disconnect error instead of hanging.
+    pub disconnect_timeout_secs: f64,
+    /// Worker hosting (`process | thread`).
+    pub workers: WorkerModeChoice,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            kind: TransportChoice::Serial,
+            listen: None,
+            disconnect_timeout_secs: 30.0,
+            workers: WorkerModeChoice::Process,
+        }
+    }
+}
+
+impl TransportConfig {
+    fn from_cfg(c: &CfgText) -> Result<Option<Self>> {
+        if !c.section_names().iter().any(|s| s == "transport") {
+            return Ok(None);
+        }
+        for key in c.keys("transport") {
+            if !matches!(key.as_str(), "kind" | "listen" | "disconnect_timeout_secs" | "workers")
+            {
+                return Err(CamrError::InvalidConfig(format!("unknown [transport] key {key}")));
+            }
+        }
+        let kind = match c.get("transport", "kind") {
+            Some(s) => TransportChoice::parse(s)?,
+            None => TransportChoice::Serial,
+        };
+        let listen = c.get("transport", "listen").map(|s| s.to_string());
+        let disconnect_timeout_secs = c
+            .get_f64("transport", "disconnect_timeout_secs")
+            .map_err(CamrError::InvalidConfig)?
+            .unwrap_or(30.0);
+        if disconnect_timeout_secs.is_nan() || disconnect_timeout_secs <= 0.0 {
+            return Err(CamrError::InvalidConfig(
+                "disconnect_timeout_secs must be > 0".into(),
+            ));
+        }
+        let workers = match c.get("transport", "workers") {
+            Some(s) => WorkerModeChoice::parse(s)?,
+            None => WorkerModeChoice::Process,
+        };
+        Ok(Some(TransportConfig { kind, listen, disconnect_timeout_secs, workers }))
     }
 }
 
@@ -180,6 +309,9 @@ pub struct RunConfig {
     /// Optional `[sim]` cluster model (`camr simulate`, and `camr run`
     /// attaches simulated phase times to its report when present).
     pub sim: Option<crate::sim::SimConfig>,
+    /// Optional `[transport]` section selecting the data plane for
+    /// `camr run` (overridable by `--transport`).
+    pub transport: Option<TransportConfig>,
 }
 
 impl RunConfig {
@@ -204,6 +336,12 @@ impl RunConfig {
     /// link_bytes_per_sec = 1.25e8
     /// secs_per_map = 0.001
     /// straggler = "none"           # none | shifted_exp | tail
+    ///
+    /// # Optional data-plane selection for `camr run`.
+    /// [transport]
+    /// kind = "serial"              # serial | chan | tcp | unix
+    /// disconnect_timeout_secs = 30.0
+    /// workers = "process"          # process | thread
     /// ```
     pub fn from_text(text: &str) -> Result<Self> {
         let c = CfgText::parse(text).map_err(CamrError::InvalidConfig)?;
@@ -219,7 +357,7 @@ impl RunConfig {
             }
         }
         for s in c.section_names() {
-            if !matches!(s.as_str(), "" | "system" | "sim") {
+            if !matches!(s.as_str(), "" | "system" | "sim" | "transport") {
                 return Err(CamrError::InvalidConfig(format!("unknown section [{s}]")));
             }
         }
@@ -236,7 +374,8 @@ impl RunConfig {
         let artifact = c.get("", "artifact").map(|s| s.to_string());
         let json = c.get_bool("", "json").map_err(CamrError::InvalidConfig)?.unwrap_or(false);
         let sim = crate::sim::SimConfig::from_cfg(&c)?;
-        Ok(RunConfig { system, workload, seed, artifact, json, sim })
+        let transport = TransportConfig::from_cfg(&c)?;
+        Ok(RunConfig { system, workload, seed, artifact, json, sim, transport })
     }
 
     /// Load from a file path.
@@ -352,5 +491,56 @@ mod tests {
     fn workload_kind_parse() {
         assert_eq!(WorkloadKind::parse("matvec").unwrap(), WorkloadKind::MatVec);
         assert!(WorkloadKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn workload_kind_name_reparses() {
+        for kind in [
+            WorkloadKind::WordCount,
+            WorkloadKind::MatVec,
+            WorkloadKind::Gradient,
+            WorkloadKind::Synthetic,
+        ] {
+            assert_eq!(WorkloadKind::parse(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn config_file_parses_transport_section() {
+        let text = r#"
+            [system]
+            k = 3
+            q = 2
+            [transport]
+            kind = "unix"
+            disconnect_timeout_secs = 2.5
+            workers = "thread"
+        "#;
+        let rc = RunConfig::from_text(text).unwrap();
+        let t = rc.transport.expect("[transport] section parsed");
+        assert_eq!(t.kind, TransportChoice::Unix);
+        assert_eq!(t.disconnect_timeout_secs, 2.5);
+        assert_eq!(t.workers, WorkerModeChoice::Thread);
+        assert!(t.listen.is_none());
+        // Absent section → no transport config.
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2").unwrap().transport.is_none());
+        // Unknown keys / values rejected.
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2\n[transport]\nwat = 1").is_err());
+        assert!(
+            RunConfig::from_text("[system]\nk = 3\nq = 2\n[transport]\nkind = \"warp\"").is_err()
+        );
+        assert!(RunConfig::from_text(
+            "[system]\nk = 3\nq = 2\n[transport]\ndisconnect_timeout_secs = 0"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn transport_choice_parse() {
+        assert_eq!(TransportChoice::parse("serial").unwrap(), TransportChoice::Serial);
+        assert_eq!(TransportChoice::parse("chan").unwrap(), TransportChoice::Chan);
+        assert_eq!(TransportChoice::parse("tcp").unwrap(), TransportChoice::Tcp);
+        assert_eq!(TransportChoice::parse("unix").unwrap(), TransportChoice::Unix);
+        assert!(TransportChoice::parse("smoke-signal").is_err());
     }
 }

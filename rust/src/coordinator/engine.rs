@@ -43,6 +43,10 @@ pub struct RunOutcome {
     pub map_time: Duration,
     /// Shuffle wall time (all three stages).
     pub shuffle_time: Duration,
+    /// Measured wall time of each shuffle stage: [stage1, stage2,
+    /// stage3]. Sums to `shuffle_time` (up to clock granularity); lets
+    /// `camr simulate` print sim-vs-real per-stage columns.
+    pub stage_times: [Duration; 3],
     /// Reduce + verify wall time.
     pub reduce_time: Duration,
 }
@@ -143,9 +147,12 @@ impl Engine {
 
         let t1 = Instant::now();
         self.shuffle_stage_coded(&schedule.stage1, Stage::Stage1)?;
+        let m1 = t1.elapsed();
         self.shuffle_stage_coded(&schedule.stage2, Stage::Stage2)?;
+        let m2 = t1.elapsed();
         self.shuffle_stage3(&schedule)?;
         let shuffle_time = t1.elapsed();
+        let stage_times = [m1, m2 - m1, shuffle_time - m2];
 
         let t2 = Instant::now();
         let verified = self.reduce_phase()?;
@@ -163,6 +170,7 @@ impl Engine {
             outputs: self.outputs.len(),
             map_time,
             shuffle_time,
+            stage_times,
             reduce_time,
         })
     }

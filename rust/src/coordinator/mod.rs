@@ -14,7 +14,18 @@
 //!   packets exchanged through per-worker channels, and a channel-backed
 //!   shared-link recorder whose sequence-numbered ledger collapses to
 //!   exactly the serial transcript. Same protocol, same bytes, real
-//!   concurrency.
+//!   concurrency. Generic over [`crate::net::transport::Transport`]:
+//!   the same worker loop ([`proto`]) runs over in-process channels or
+//!   over sockets.
+//! - [`proto`] — the transport-agnostic worker protocol: the per-worker
+//!   round (map → coded stages → stage 3 → reduce) expressed against
+//!   the `Transport` trait, plus the deterministic flattening of the
+//!   schedule into ledger sequence numbers.
+//! - [`remote`] — the socket data plane: the coordinator **hub**
+//!   (listener, handshake, frame routing, barrier release, ledger
+//!   recording) and the `camr worker --connect` subprocess entrypoint.
+//!   Workers run as separate processes; the checked-in golden ledger
+//!   is byte-identical to the serial engine's.
 //! - [`cluster`] — message-passing deployment of the same protocol (one
 //!   std thread per server driven lockstep by a leader thread over
 //!   command channels) — the extension point where stragglers, retries
@@ -45,9 +56,12 @@ pub mod cluster;
 pub mod engine;
 pub mod master;
 pub mod parallel;
+pub mod proto;
+pub mod remote;
 pub mod values;
 pub mod worker;
 
 pub use batch::{run_batch, run_batch_synthetic, BatchOptions, BatchOutcome, BatchScheme};
 pub use engine::{Engine, RunOutcome};
-pub use parallel::ParallelEngine;
+pub use parallel::{ParallelEngine, TransportKind};
+pub use remote::{SocketOptions, WorkerMode, WorkerSpec};

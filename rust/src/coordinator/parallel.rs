@@ -1,29 +1,25 @@
 //! Thread-per-worker execution engine: real concurrency, byte-exact
-//! accounting.
+//! accounting, pluggable transport.
 //!
 //! [`ParallelEngine`] runs the identical CAMR protocol as the serial
-//! [`super::engine::Engine`], but with one OS thread per server (pool
-//! sized to `K`). The phases are separated by [`std::sync::Barrier`]
-//! synchronization, matching the bulk-synchronous structure of the
-//! paper's protocol:
+//! [`super::engine::Engine`], but with one worker per server executing
+//! [`super::proto::run_round`] over a [`crate::net::transport::Transport`].
+//! The phases are separated by barriers, matching the bulk-synchronous
+//! structure of the paper's protocol:
 //!
 //! ```text
 //! map ─barrier─ stage 1 ─barrier─ stage 2 ─barrier─ stage 3 ─barrier─ reduce
 //! ```
 //!
-//! - **Map**: every worker maps its stored batches concurrently — this
-//!   is where the wall-clock speedup over the serial engine comes from.
-//! - **Stages 1–2** (coded multicasts): each worker encodes the `Δ`
-//!   broadcasts for every Lemma-2 group it belongs to and sends them to
-//!   the other group members through per-worker mpsc channels; it then
-//!   decodes each group once all of that group's broadcasts arrived.
-//!   Groups of a stage proceed concurrently — correct because every
-//!   encode reads only map-phase aggregates while every decode writes a
-//!   fresh `(job, func, batch)` key, and each worker's store is touched
-//!   only by its own thread.
-//! - **Stage 3** (unicasts): senders fuse and ship, receivers store.
-//! - **Reduce**: each worker reduces the functions it is responsible
-//!   for; the main thread collects outputs and runs oracle verification.
+//! Two data planes implement that contract:
+//!
+//! - [`TransportKind::Chan`] (default): one OS thread per server, mpsc
+//!   channels, [`std::sync::Barrier`] synchronization — the engine this
+//!   module always was.
+//! - [`TransportKind::Socket`]: workers in separate processes (or
+//!   threads) speaking the length-prefixed wire format of
+//!   [`crate::net::frame`] over loopback TCP or a Unix-domain socket,
+//!   orchestrated by the [`super::remote`] hub.
 //!
 //! ## Why load accounting stays exact under concurrency
 //!
@@ -33,8 +29,10 @@
 //! execution. [`crate::net::SharedBus::collect`] sorts by that tag, so
 //! the ledger (order, senders, recipients, byte counts) is identical to
 //! the serial engine's regardless of thread interleaving; multicasts are
-//! still charged exactly once. The property tests assert ledger equality
-//! byte for byte.
+//! still charged exactly once. On the socket plane the recorder lives in
+//! the coordinator hub and charges each forwarded frame once — same
+//! sequence numbers, same ledger. The property tests assert ledger
+//! equality byte for byte across all planes.
 //!
 //! ## Pooled data plane
 //!
@@ -42,76 +40,49 @@
 //! buffers shared across all worker threads: a sender encodes once into
 //! a pooled buffer and ships the *same* payload to every group member
 //! as a cheap [`crate::shuffle::buf::SharedBuf`] clone (an `Arc` bump,
-//! not a byte copy). Decode scratch packets come from the same pool.
-//! When the last reference drops — normally after decode, or during
-//! unwinding on a failure — the backing store returns to the free list
-//! exactly once. None of this changes what the bus records: the ledger
-//! stays byte-identical to the serial engine's, pooling on or off.
+//! not a byte copy) — or, over sockets, streams it onto the wire
+//! straight from the pooled backing store. When the last reference
+//! drops the backing store returns to the free list exactly once. None
+//! of this changes what the bus records.
 //!
 //! ## Failure handling
 //!
-//! A worker that hits an error (e.g. a failing map kernel) raises a
-//! shared poison flag and keeps meeting every barrier without doing
-//! work; peers waiting on its packets time out, observe the flag, and
-//! abort their phase the same way. The run then surfaces the
-//! lowest-numbered worker's error instead of deadlocking.
+//! A worker that hits an error publishes it through the transport
+//! ([`crate::net::transport::Transport::fail`]) and keeps meeting every
+//! barrier without doing work; peers waiting on its packets observe the
+//! abort and bail out the same way. The run then surfaces the root
+//! cause instead of deadlocking. Over sockets a *vanished* worker
+//! process additionally surfaces as a typed
+//! [`CamrError::Disconnected`] within the configured timeout.
 
 use super::engine::{verify_outputs, RunOutcome};
-use super::master::{Master, Schedule};
+use super::master::Master;
+use super::proto::{self, RoundCtx};
+use super::remote::{self, SocketOptions, WorkerSpec};
 use super::worker::Worker;
 use crate::agg::Value;
 use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
-use crate::net::{Bus, BusRecorder, SharedBus, Stage};
-use crate::placement::Placement;
-use crate::shuffle::buf::{BufferPool, PoolStats, SharedBuf};
-use crate::shuffle::multicast::GroupPlan;
+use crate::net::transport::{InProcTransport, Packet};
+use crate::net::{Bus, SharedBus, Stage};
+use crate::shuffle::buf::{BufferPool, PoolStats};
 use crate::workload::Workload;
 use crate::{FuncId, JobId, ServerId};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::sync::{mpsc, Barrier};
 use std::time::{Duration, Instant};
 
-/// A packet exchanged worker-to-worker through channels.
-enum Packet {
-    /// Coded broadcast `Δ` from member position `from` of the flattened
-    /// stage-1/2 group with global index `group`. The payload is a
-    /// [`SharedBuf`]: one encoded buffer shared by every recipient
-    /// (no per-recipient clone of the bytes).
-    Delta { group: usize, from: usize, delta: SharedBuf },
-    /// Stage-3 fused unicast payload for `schedule.stage3[spec]`.
-    Fused { spec: usize, value: Vec<u8> },
-}
-
-/// One stage-1/2 group, flattened with its ledger sequence base.
-struct StageGroup<'a> {
-    /// Which coded stage the group belongs to.
-    stage: Stage,
-    /// Barrier phase: 0 for stage 1, 1 for stage 2.
-    phase: usize,
-    /// The Lemma-2 plan.
-    plan: &'a GroupPlan,
-    /// Sequence number of this group's first broadcast in a serial run.
-    seq_base: u64,
-}
-
-/// Read-only state shared by every worker thread for one run.
-struct Shared<'a> {
-    cfg: &'a SystemConfig,
-    placement: &'a Placement,
-    workload: &'a dyn Workload,
-    schedule: &'a Schedule,
-    groups: Vec<StageGroup<'a>>,
-    /// Sequence number of the first stage-3 unicast.
-    stage3_base: u64,
-    barrier: &'a Barrier,
-    failed: &'a AtomicBool,
-    /// Shared buffer arena for Δ and scratch packets (all threads
-    /// acquire from and release to the same free list).
-    pool: &'a BufferPool,
-    /// Whether to route buffers through the pool (engine's `pooling`).
-    pooling: bool,
+/// Which data plane the engine moves packets over.
+#[derive(Debug, Clone, Default)]
+pub enum TransportKind {
+    /// In-process mpsc channels, one thread per server (default).
+    #[default]
+    Chan,
+    /// Socket transport (TCP or Unix-domain) via the [`remote`] hub;
+    /// requires [`ParallelEngine::remote_spec`] so worker processes can
+    /// reconstruct the workload deterministically.
+    Socket(SocketOptions),
 }
 
 /// What a worker thread hands back when it finishes.
@@ -122,17 +93,9 @@ struct WorkerDone {
     error: Option<CamrError>,
 }
 
-/// Per-group receive state during a coded phase.
-struct GroupState {
-    /// This worker's member position in the group.
-    pos: usize,
-    /// Broadcast slots, one per member position (shared payloads).
-    deltas: Vec<Option<SharedBuf>>,
-}
-
 /// The thread-per-worker engine. Produces the same [`RunOutcome`] (and
 /// the same [`Bus`] ledger) as the serial engine for the same config and
-/// workload.
+/// workload — on every transport.
 pub struct ParallelEngine {
     /// The master (design, placement, schedule factory).
     pub master: Master,
@@ -146,6 +109,12 @@ pub struct ParallelEngine {
     /// (default). `false` restores the legacy allocate-per-packet data
     /// plane; the ledger is byte-identical either way.
     pub pooling: bool,
+    /// Which packet plane [`ParallelEngine::run`] uses.
+    pub transport: TransportKind,
+    /// Deterministic workload recipe shipped to socket-transport worker
+    /// processes (required for [`TransportKind::Socket`]; ignored on the
+    /// channel plane, where the in-process `workload` is used directly).
+    pub remote_spec: Option<WorkerSpec>,
     pool: BufferPool,
     outputs: HashMap<(JobId, FuncId), Value>,
 }
@@ -163,6 +132,8 @@ impl ParallelEngine {
             bus: Bus::new(),
             verify: true,
             pooling: true,
+            transport: TransportKind::Chan,
+            remote_spec: None,
             pool: BufferPool::new(),
             outputs: HashMap::new(),
         })
@@ -198,30 +169,47 @@ impl ParallelEngine {
         std::mem::take(&mut self.outputs)
     }
 
-    /// Run the full protocol with one thread per server and return
+    /// Run the full protocol over the selected transport and return
     /// measured loads.
     pub fn run(&mut self) -> Result<RunOutcome> {
+        match self.transport.clone() {
+            TransportKind::Chan => self.run_chan(),
+            TransportKind::Socket(opts) => self.run_socket(&opts),
+        }
+    }
+
+    /// Socket plane: hand the run to the [`remote`] hub, which spawns
+    /// worker processes (or threads), records the ledger once per
+    /// forwarded frame, and hands back bus + outputs.
+    fn run_socket(&mut self, opts: &SocketOptions) -> Result<RunOutcome> {
+        let spec = self.remote_spec.clone().ok_or_else(|| {
+            CamrError::InvalidConfig(
+                "socket transport requires remote_spec (the workload recipe shipped to \
+                 worker processes)"
+                    .into(),
+            )
+        })?;
+        self.outputs.clear();
+        let run = remote::run_socket(
+            &self.master,
+            &spec,
+            &*self.workload,
+            &self.pool,
+            self.pooling,
+            self.verify,
+            opts,
+        )?;
+        self.bus = run.bus;
+        self.outputs = run.outputs;
+        Ok(run.outcome)
+    }
+
+    /// Channel plane: one scoped OS thread per server, all executing
+    /// [`proto::run_round`] over [`InProcTransport`].
+    fn run_chan(&mut self) -> Result<RunOutcome> {
         self.outputs.clear();
         let schedule = self.master.schedule()?;
         let servers = self.master.cfg.servers();
-
-        // Flatten the coded groups with ledger sequence numbers matching
-        // the serial engine's emission order: all stage-1 groups in
-        // schedule order (one broadcast per member, in member order),
-        // then all stage-2 groups, then the stage-3 unicasts.
-        let mut groups: Vec<StageGroup<'_>> =
-            Vec::with_capacity(schedule.stage1.len() + schedule.stage2.len());
-        let mut seq = 0u64;
-        for (stage, phase, plans) in [
-            (Stage::Stage1, 0usize, &schedule.stage1),
-            (Stage::Stage2, 1usize, &schedule.stage2),
-        ] {
-            for plan in plans.iter() {
-                groups.push(StageGroup { stage, phase, plan, seq_base: seq });
-                seq += plan.members.len() as u64;
-            }
-        }
-        let stage3_base = seq;
 
         let mut workers: Vec<Worker> = self.workers.drain(..).collect();
         for w in &mut workers {
@@ -229,22 +217,16 @@ impl ParallelEngine {
         }
 
         let cfg = &self.master.cfg;
-        let placement = &self.master.placement;
-        let workload: &dyn Workload = &*self.workload;
+        let ctx = RoundCtx::new(
+            cfg,
+            &self.master.placement,
+            &*self.workload,
+            &schedule,
+            &self.pool,
+            self.pooling,
+        );
         let barrier = Barrier::new(servers + 1);
         let failed = AtomicBool::new(false);
-        let shared = Shared {
-            cfg,
-            placement,
-            workload,
-            schedule: &schedule,
-            groups,
-            stage3_base,
-            barrier: &barrier,
-            failed: &failed,
-            pool: &self.pool,
-            pooling: self.pooling,
-        };
 
         let shared_bus = SharedBus::new();
         let (done_tx, done_rx) = mpsc::channel::<WorkerDone>();
@@ -257,16 +239,26 @@ impl ParallelEngine {
         }
 
         let t0 = Instant::now();
-        let (map_time, shuffle_time, t_reduce) = std::thread::scope(|s| {
-            for (id, (worker, inbox)) in workers.drain(..).zip(receivers).enumerate() {
+        let (map_time, shuffle_time, stage_times, t_reduce) = std::thread::scope(|s| {
+            for (id, (mut worker, inbox)) in workers.drain(..).zip(receivers).enumerate() {
                 let peers = inboxes.clone();
                 let bus = shared_bus.recorder();
                 let done = done_tx.clone();
-                let shared = &shared;
+                let ctx = &ctx;
+                let barrier = &barrier;
+                let failed = &failed;
                 std::thread::Builder::new()
                     .name(format!("camr-worker-{id}"))
                     .spawn_scoped(s, move || {
-                        worker_main(id, worker, shared, &inbox, &peers, &bus, &done)
+                        let mut link =
+                            InProcTransport::new(id, inbox, peers, bus, barrier, failed);
+                        let run = proto::run_round(id, &mut worker, ctx, &mut link);
+                        let _ = done.send(WorkerDone {
+                            worker,
+                            map_invocations: run.map_invocations,
+                            outputs: run.outputs,
+                            error: run.error,
+                        });
                     })
                     .expect("spawn worker thread");
             }
@@ -276,10 +268,13 @@ impl ParallelEngine {
             let map_time = t0.elapsed();
             let t1 = Instant::now();
             barrier.wait(); // stage 1 done
+            let m1 = t1.elapsed();
             barrier.wait(); // stage 2 done
+            let m2 = t1.elapsed();
             barrier.wait(); // stage 3 done
             let shuffle_time = t1.elapsed();
-            (map_time, shuffle_time, Instant::now())
+            let stage_times = [m1, m2 - m1, shuffle_time - m2];
+            (map_time, shuffle_time, stage_times, Instant::now())
         });
         drop(done_tx);
         drop(inboxes);
@@ -316,7 +311,7 @@ impl ParallelEngine {
         }
 
         let verified = if self.verify {
-            verify_outputs(cfg, workload, &outputs)?;
+            verify_outputs(cfg, &*self.workload, &outputs)?;
             true
         } else {
             true
@@ -336,246 +331,10 @@ impl ParallelEngine {
             outputs: self.outputs.len(),
             map_time,
             shuffle_time,
+            stage_times,
             reduce_time,
         })
     }
-}
-
-/// Body of one worker thread: all five phases, with a barrier after the
-/// map phase and after each shuffle stage. On error the worker poisons
-/// the shared flag but keeps meeting every barrier so nobody deadlocks.
-fn worker_main(
-    id: ServerId,
-    mut worker: Worker,
-    sh: &Shared<'_>,
-    inbox: &mpsc::Receiver<Packet>,
-    peers: &[mpsc::Sender<Packet>],
-    bus: &BusRecorder,
-    done: &mpsc::Sender<WorkerDone>,
-) {
-    let mut error: Option<CamrError> = None;
-    let fail = |e: CamrError, slot: &mut Option<CamrError>, flag: &AtomicBool| {
-        flag.store(true, Ordering::SeqCst);
-        if slot.is_none() {
-            *slot = Some(e);
-        }
-    };
-
-    // ---- Map.
-    let mut map_invocations = 0usize;
-    match worker.run_map_phase(sh.cfg, sh.placement, sh.workload) {
-        Ok(n) => map_invocations = n,
-        Err(e) => fail(e, &mut error, sh.failed),
-    }
-    sh.barrier.wait();
-
-    // ---- Coded stages 1 and 2.
-    for phase in 0..2 {
-        if error.is_none() && !sh.failed.load(Ordering::SeqCst) {
-            if let Err(e) = run_coded_phase(id, &mut worker, sh, phase, inbox, peers, bus) {
-                fail(e, &mut error, sh.failed);
-            }
-        }
-        sh.barrier.wait();
-    }
-
-    // ---- Stage 3.
-    if error.is_none() && !sh.failed.load(Ordering::SeqCst) {
-        if let Err(e) = run_stage3(id, &mut worker, sh, inbox, peers, bus) {
-            fail(e, &mut error, sh.failed);
-        }
-    }
-    sh.barrier.wait();
-
-    // ---- Reduce.
-    let mut outputs = Vec::new();
-    if error.is_none() && !sh.failed.load(Ordering::SeqCst) {
-        match run_reduce(id, &worker, sh) {
-            Ok(o) => outputs = o,
-            Err(e) => fail(e, &mut error, sh.failed),
-        }
-    }
-
-    let _ = done.send(WorkerDone { worker, map_invocations, outputs, error });
-}
-
-/// Receive one packet, bailing out (instead of blocking forever) once the
-/// shared failure flag is raised and the inbox has drained.
-fn recv_packet(inbox: &mpsc::Receiver<Packet>, failed: &AtomicBool) -> Option<Packet> {
-    loop {
-        match inbox.recv_timeout(Duration::from_millis(10)) {
-            Ok(p) => return Some(p),
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if failed.load(Ordering::SeqCst) {
-                    // Final non-blocking sweep: packets already in flight
-                    // must not be mistaken for missing ones.
-                    return inbox.try_recv().ok();
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => return None,
-        }
-    }
-}
-
-/// One coded phase (stage 1 or 2) for one worker: encode and broadcast
-/// `Δ` for every owned group, then receive peers' broadcasts, then decode
-/// every group's missing chunk into the local store.
-fn run_coded_phase(
-    id: ServerId,
-    worker: &mut Worker,
-    sh: &Shared<'_>,
-    phase: usize,
-    inbox: &mpsc::Receiver<Packet>,
-    peers: &[mpsc::Sender<Packet>],
-    bus: &BusRecorder,
-) -> Result<()> {
-    // The groups of this phase that this worker belongs to.
-    let mut mine: HashMap<usize, GroupState> = HashMap::new();
-    let mut order: Vec<usize> = Vec::new();
-    let mut expected = 0usize;
-    for (gi, g) in sh.groups.iter().enumerate() {
-        if g.phase != phase {
-            continue;
-        }
-        if let Some(pos) = g.plan.members.iter().position(|&m| m == id) {
-            expected += g.plan.members.len() - 1;
-            mine.insert(gi, GroupState { pos, deltas: vec![None; g.plan.members.len()] });
-            order.push(gi);
-        }
-    }
-
-    // Encode + broadcast in schedule order. Each Δ is encoded once —
-    // into a pooled buffer when pooling is on — and shared with every
-    // recipient through cheap `SharedBuf` clones.
-    for &gi in &order {
-        let g = &sh.groups[gi];
-        let delta = worker.encode_for_group_shared(g.plan, sh.pool, sh.pooling)?;
-        let st = mine.get_mut(&gi).expect("own group");
-        let recipients: Vec<ServerId> =
-            g.plan.members.iter().copied().filter(|&m| m != id).collect();
-        bus.multicast(g.seq_base + st.pos as u64, g.stage, id, recipients, delta.len());
-        for &m in g.plan.members.iter().filter(|&&m| m != id) {
-            let _ = peers[m].send(Packet::Delta {
-                group: gi,
-                from: st.pos,
-                delta: delta.clone(),
-            });
-        }
-        st.deltas[st.pos] = Some(delta);
-    }
-
-    // Receive the other members' broadcasts.
-    let mut received = 0usize;
-    while received < expected {
-        let Some(pkt) = recv_packet(inbox, sh.failed) else {
-            return Err(CamrError::Runtime(format!(
-                "worker {id}: coded stage aborted after peer failure"
-            )));
-        };
-        match pkt {
-            Packet::Delta { group, from, delta } => {
-                let st = mine.get_mut(&group).ok_or_else(|| {
-                    CamrError::Runtime(format!(
-                        "worker {id}: delta for group {group} it is not a member of"
-                    ))
-                })?;
-                if st.deltas[from].replace(delta).is_some() {
-                    return Err(CamrError::Runtime(format!(
-                        "worker {id}: duplicate delta from position {from} of group {group}"
-                    )));
-                }
-                received += 1;
-            }
-            Packet::Fused { .. } => {
-                return Err(CamrError::Runtime(format!(
-                    "worker {id}: stage-3 packet during a coded stage"
-                )))
-            }
-        }
-    }
-
-    // Decode every group (schedule order for determinism of any error).
-    // Deltas are *taken* out of the receive state, so each group's
-    // buffers return to the pool as soon as its decode finishes —
-    // per-group recycling, same as the serial engine.
-    for &gi in &order {
-        let g = &sh.groups[gi];
-        let st = mine.get_mut(&gi).expect("own group");
-        let deltas: Vec<SharedBuf> = st
-            .deltas
-            .iter_mut()
-            .map(|d| d.take().expect("all broadcasts received"))
-            .collect();
-        if sh.pooling {
-            worker.decode_from_group_pooled(g.plan, &deltas, sh.pool)?;
-        } else {
-            worker.decode_from_group(g.plan, &deltas)?;
-        }
-    }
-    Ok(())
-}
-
-/// Stage 3 for one worker: fuse + send every unicast it owns, then
-/// receive and store every fused aggregate addressed to it.
-fn run_stage3(
-    id: ServerId,
-    worker: &mut Worker,
-    sh: &Shared<'_>,
-    inbox: &mpsc::Receiver<Packet>,
-    peers: &[mpsc::Sender<Packet>],
-    bus: &BusRecorder,
-) -> Result<()> {
-    let agg = sh.workload.aggregator();
-    let mut expected = 0usize;
-    for (si, u) in sh.schedule.stage3.iter().enumerate() {
-        if u.receiver == id {
-            expected += 1;
-        }
-        if u.sender == id {
-            let v = worker.fuse_for_unicast(agg, u)?;
-            bus.unicast(sh.stage3_base + si as u64, Stage::Stage3, id, u.receiver, v.len());
-            let _ = peers[u.receiver].send(Packet::Fused { spec: si, value: v });
-        }
-    }
-    let mut received = 0usize;
-    while received < expected {
-        let Some(pkt) = recv_packet(inbox, sh.failed) else {
-            return Err(CamrError::Runtime(format!(
-                "worker {id}: stage 3 aborted after peer failure"
-            )));
-        };
-        match pkt {
-            Packet::Fused { spec, value } => {
-                worker.receive_fused(&sh.schedule.stage3[spec], value)?;
-                received += 1;
-            }
-            Packet::Delta { .. } => {
-                return Err(CamrError::Runtime(format!(
-                    "worker {id}: coded-stage packet during stage 3"
-                )))
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Reduce every (job, func) pair this worker is the reducer of.
-fn run_reduce(
-    id: ServerId,
-    worker: &Worker,
-    sh: &Shared<'_>,
-) -> Result<Vec<((JobId, FuncId), Value)>> {
-    let agg = sh.workload.aggregator();
-    let mut out = Vec::new();
-    for f in 0..sh.cfg.functions() {
-        if sh.cfg.reducer_of(f) != id {
-            continue;
-        }
-        for j in 0..sh.cfg.jobs() {
-            out.push(((j, f), worker.reduce(sh.cfg, sh.placement, agg, j, f)?));
-        }
-    }
-    Ok(out)
 }
 
 #[cfg(test)]
@@ -664,5 +423,24 @@ mod tests {
         let out = e.run().unwrap();
         assert!(out.verified);
         assert!((out.total_load() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_times_cover_the_shuffle() {
+        let (_, out) = run_parallel(3, 2, 2, 5);
+        let sum: Duration = out.stage_times.iter().sum();
+        assert_eq!(sum, out.shuffle_time);
+    }
+
+    #[test]
+    fn socket_transport_without_spec_is_typed_error() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let wl = SyntheticWorkload::new(&cfg, 1);
+        let mut e = ParallelEngine::new(cfg, Box::new(wl)).unwrap();
+        e.transport = TransportKind::Socket(SocketOptions::unix_threads());
+        match e.run() {
+            Err(CamrError::InvalidConfig(m)) => assert!(m.contains("remote_spec")),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 }

@@ -1,0 +1,332 @@
+//! The CAMR round protocol, generic over [`Transport`].
+//!
+//! This is the body every worker executes — map, the two coded
+//! multicast stages, the fused-unicast stage 3, reduce — factored out
+//! of the thread engine so the *identical* code drives in-process
+//! channels ([`crate::net::transport::InProcTransport`]) and sockets
+//! ([`crate::net::socket::SocketTransport`]). The ledger sequence
+//! numbers come from [`flatten`], which reproduces the serial engine's
+//! emission order exactly; transports only carry them.
+//!
+//! Failure semantics are the engine's long-standing ones: a worker that
+//! hits an error publishes it via [`Transport::fail`] and keeps meeting
+//! every barrier without doing work, so nobody deadlocks. On the
+//! channel plane barriers never fail; on the socket plane a failed
+//! barrier means the coordinator is gone and the worker stops early.
+
+use super::master::Schedule;
+use super::worker::Worker;
+use crate::agg::Value;
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::net::transport::{Packet, Transport};
+use crate::net::Stage;
+use crate::placement::Placement;
+use crate::shuffle::buf::{BufferPool, SharedBuf};
+use crate::shuffle::multicast::GroupPlan;
+use crate::workload::Workload;
+use crate::{FuncId, JobId, ServerId};
+use std::collections::HashMap;
+
+/// One stage-1/2 group, flattened with its ledger sequence base.
+pub struct FlatGroup<'a> {
+    /// Which coded stage the group belongs to.
+    pub stage: Stage,
+    /// Barrier phase: 0 for stage 1, 1 for stage 2.
+    pub phase: usize,
+    /// The Lemma-2 plan.
+    pub plan: &'a GroupPlan,
+    /// Sequence number of this group's first broadcast in a serial run.
+    pub seq_base: u64,
+}
+
+/// Flatten the coded groups with ledger sequence numbers matching the
+/// serial engine's emission order: all stage-1 groups in schedule order
+/// (one broadcast per member, in member order), then all stage-2
+/// groups. Returns the groups and the sequence number of the first
+/// stage-3 unicast.
+pub fn flatten(schedule: &Schedule) -> (Vec<FlatGroup<'_>>, u64) {
+    let mut groups: Vec<FlatGroup<'_>> =
+        Vec::with_capacity(schedule.stage1.len() + schedule.stage2.len());
+    let mut seq = 0u64;
+    for (stage, phase, plans) in [
+        (Stage::Stage1, 0usize, &schedule.stage1),
+        (Stage::Stage2, 1usize, &schedule.stage2),
+    ] {
+        for plan in plans.iter() {
+            groups.push(FlatGroup { stage, phase, plan, seq_base: seq });
+            seq += plan.members.len() as u64;
+        }
+    }
+    (groups, seq)
+}
+
+/// Read-only state one worker needs for one round, shared across all
+/// workers on the channel plane and rebuilt per process on the socket
+/// plane (everything here is a pure function of config + seed).
+pub struct RoundCtx<'a> {
+    /// System parameters.
+    pub cfg: &'a SystemConfig,
+    /// File placement.
+    pub placement: &'a Placement,
+    /// The workload being executed.
+    pub workload: &'a dyn Workload,
+    /// The master's shuffle schedule.
+    pub schedule: &'a Schedule,
+    /// Flattened stage-1/2 groups with sequence bases.
+    pub groups: Vec<FlatGroup<'a>>,
+    /// Sequence number of the first stage-3 unicast.
+    pub stage3_base: u64,
+    /// Shared buffer arena for Δ and scratch packets.
+    pub pool: &'a BufferPool,
+    /// Whether to route buffers through the pool.
+    pub pooling: bool,
+}
+
+impl<'a> RoundCtx<'a> {
+    /// Assemble the context (flattens the schedule).
+    pub fn new(
+        cfg: &'a SystemConfig,
+        placement: &'a Placement,
+        workload: &'a dyn Workload,
+        schedule: &'a Schedule,
+        pool: &'a BufferPool,
+        pooling: bool,
+    ) -> Self {
+        let (groups, stage3_base) = flatten(schedule);
+        RoundCtx { cfg, placement, workload, schedule, groups, stage3_base, pool, pooling }
+    }
+}
+
+/// What one worker hands back after a round.
+pub struct WorkerRun {
+    /// Map-function invocations this worker performed.
+    pub map_invocations: usize,
+    /// Reduced `(job, func) → value` outputs this worker owns.
+    pub outputs: Vec<((JobId, FuncId), Value)>,
+    /// First error this worker hit, if any (already published via
+    /// [`Transport::fail`]).
+    pub error: Option<CamrError>,
+}
+
+/// Per-group receive state during a coded phase.
+struct GroupState {
+    /// This worker's member position in the group.
+    pos: usize,
+    /// Broadcast slots, one per member position (shared payloads).
+    deltas: Vec<Option<SharedBuf>>,
+}
+
+/// Execute one full round for worker `id` over transport `link`: all
+/// five phases, with a barrier after the map phase and after each
+/// shuffle stage. On error the worker publishes the failure but keeps
+/// meeting every barrier so nobody deadlocks; a barrier that itself
+/// fails (socket plane: coordinator gone or run aborted) stops the
+/// round early.
+pub fn run_round<T: Transport>(
+    id: ServerId,
+    worker: &mut Worker,
+    ctx: &RoundCtx<'_>,
+    link: &mut T,
+) -> WorkerRun {
+    let mut error: Option<CamrError> = None;
+
+    // ---- Map.
+    let mut map_invocations = 0usize;
+    match worker.run_map_phase(ctx.cfg, ctx.placement, ctx.workload) {
+        Ok(n) => map_invocations = n,
+        Err(e) => {
+            link.fail(&e);
+            error = Some(e);
+        }
+    }
+    let mut stopped = link.barrier().is_err();
+
+    // ---- Coded stages 1 and 2.
+    for phase in 0..2 {
+        if stopped {
+            break;
+        }
+        if error.is_none() && !link.aborted() {
+            if let Err(e) = run_coded_phase(id, worker, ctx, phase, link) {
+                link.fail(&e);
+                error.get_or_insert(e);
+            }
+        }
+        stopped = link.barrier().is_err();
+    }
+
+    // ---- Stage 3.
+    if !stopped {
+        if error.is_none() && !link.aborted() {
+            if let Err(e) = run_stage3(id, worker, ctx, link) {
+                link.fail(&e);
+                error.get_or_insert(e);
+            }
+        }
+        stopped = link.barrier().is_err();
+    }
+
+    // ---- Reduce.
+    let mut outputs = Vec::new();
+    if !stopped && error.is_none() && !link.aborted() {
+        match run_reduce(id, worker, ctx) {
+            Ok(o) => outputs = o,
+            Err(e) => {
+                link.fail(&e);
+                error = Some(e);
+            }
+        }
+    }
+
+    WorkerRun { map_invocations, outputs, error }
+}
+
+/// One coded phase (stage 1 or 2) for one worker: encode and broadcast
+/// `Δ` for every owned group, then receive peers' broadcasts, then decode
+/// every group's missing chunk into the local store.
+fn run_coded_phase<T: Transport>(
+    id: ServerId,
+    worker: &mut Worker,
+    ctx: &RoundCtx<'_>,
+    phase: usize,
+    link: &mut T,
+) -> Result<()> {
+    // The groups of this phase that this worker belongs to.
+    let mut mine: HashMap<usize, GroupState> = HashMap::new();
+    let mut order: Vec<usize> = Vec::new();
+    let mut expected = 0usize;
+    for (gi, g) in ctx.groups.iter().enumerate() {
+        if g.phase != phase {
+            continue;
+        }
+        if let Some(pos) = g.plan.members.iter().position(|&m| m == id) {
+            expected += g.plan.members.len() - 1;
+            mine.insert(gi, GroupState { pos, deltas: vec![None; g.plan.members.len()] });
+            order.push(gi);
+        }
+    }
+
+    // Encode + broadcast in schedule order. Each Δ is encoded once —
+    // into a pooled buffer when pooling is on — and shared with every
+    // recipient (SharedBuf clones in-process, one frame over sockets).
+    for &gi in &order {
+        let g = &ctx.groups[gi];
+        let delta = worker.encode_for_group_shared(g.plan, ctx.pool, ctx.pooling)?;
+        let st = mine.get_mut(&gi).expect("own group");
+        let recipients: Vec<ServerId> =
+            g.plan.members.iter().copied().filter(|&m| m != id).collect();
+        link.send_delta(g.seq_base + st.pos as u64, g.stage, gi, st.pos, &recipients, &delta)?;
+        st.deltas[st.pos] = Some(delta);
+    }
+
+    // Receive the other members' broadcasts.
+    let mut received = 0usize;
+    while received < expected {
+        let Some(pkt) = link.recv() else {
+            return Err(CamrError::Runtime(format!(
+                "worker {id}: coded stage aborted after peer failure"
+            )));
+        };
+        match pkt {
+            Packet::Delta { group, from, delta } => {
+                let st = mine.get_mut(&group).ok_or_else(|| {
+                    CamrError::Runtime(format!(
+                        "worker {id}: delta for group {group} it is not a member of"
+                    ))
+                })?;
+                if st.deltas[from].replace(delta).is_some() {
+                    return Err(CamrError::Runtime(format!(
+                        "worker {id}: duplicate delta from position {from} of group {group}"
+                    )));
+                }
+                received += 1;
+            }
+            Packet::Fused { .. } => {
+                return Err(CamrError::Runtime(format!(
+                    "worker {id}: stage-3 packet during a coded stage"
+                )))
+            }
+        }
+    }
+
+    // Decode every group (schedule order for determinism of any error).
+    // Deltas are *taken* out of the receive state, so each group's
+    // buffers return to the pool as soon as its decode finishes —
+    // per-group recycling, same as the serial engine.
+    for &gi in &order {
+        let g = &ctx.groups[gi];
+        let st = mine.get_mut(&gi).expect("own group");
+        let deltas: Vec<SharedBuf> = st
+            .deltas
+            .iter_mut()
+            .map(|d| d.take().expect("all broadcasts received"))
+            .collect();
+        if ctx.pooling {
+            worker.decode_from_group_pooled(g.plan, &deltas, ctx.pool)?;
+        } else {
+            worker.decode_from_group(g.plan, &deltas)?;
+        }
+    }
+    Ok(())
+}
+
+/// Stage 3 for one worker: fuse + send every unicast it owns, then
+/// receive and store every fused aggregate addressed to it.
+fn run_stage3<T: Transport>(
+    id: ServerId,
+    worker: &mut Worker,
+    ctx: &RoundCtx<'_>,
+    link: &mut T,
+) -> Result<()> {
+    let agg = ctx.workload.aggregator();
+    let mut expected = 0usize;
+    for (si, u) in ctx.schedule.stage3.iter().enumerate() {
+        if u.receiver == id {
+            expected += 1;
+        }
+        if u.sender == id {
+            let v = worker.fuse_for_unicast(agg, u)?;
+            link.send_fused(ctx.stage3_base + si as u64, si, u.receiver, v)?;
+        }
+    }
+    let mut received = 0usize;
+    while received < expected {
+        let Some(pkt) = link.recv() else {
+            return Err(CamrError::Runtime(format!(
+                "worker {id}: stage 3 aborted after peer failure"
+            )));
+        };
+        match pkt {
+            Packet::Fused { spec, value } => {
+                worker.receive_fused(&ctx.schedule.stage3[spec], value)?;
+                received += 1;
+            }
+            Packet::Delta { .. } => {
+                return Err(CamrError::Runtime(format!(
+                    "worker {id}: coded-stage packet during stage 3"
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Reduce every (job, func) pair this worker is the reducer of.
+fn run_reduce(
+    id: ServerId,
+    worker: &Worker,
+    ctx: &RoundCtx<'_>,
+) -> Result<Vec<((JobId, FuncId), Value)>> {
+    let agg = ctx.workload.aggregator();
+    let mut out = Vec::new();
+    for f in 0..ctx.cfg.functions() {
+        if ctx.cfg.reducer_of(f) != id {
+            continue;
+        }
+        for j in 0..ctx.cfg.jobs() {
+            out.push(((j, f), worker.reduce(ctx.cfg, ctx.placement, agg, j, f)?));
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,668 @@
+//! Socket-transport orchestration: the coordinator **hub** and the
+//! `camr worker --connect` entrypoint.
+//!
+//! The hub binds a TCP or Unix-domain listener, spawns one worker per
+//! server (subprocess or thread), assigns worker ids in accept order,
+//! and ships each worker the *recipe* for the run — the config TOML
+//! text of a [`WorkerSpec`] — in the `Welcome` frame. Every process
+//! then reconstructs the identical [`super::master::Master`], schedule
+//! and workload from that text (all deterministic functions of
+//! `(config, seed)`), so the flattened ledger sequence numbers agree
+//! across processes without ever being negotiated.
+//!
+//! During the run the hub is a frame router with the ledger recorder
+//! attached: a worker's multicast arrives as **one** `Delta` frame, is
+//! charged once through the same [`crate::net::BusRecorder`] path the
+//! channel plane uses, and is fanned out to the recipient list. Barrier
+//! frames implement the protocol's four phase barriers; `BarrierGo`
+//! releases a phase only after every worker arrived *and* every data
+//! frame of that phase has already been forwarded (per-connection FIFO
+//! makes that ordering free — see `net::socket`).
+//!
+//! ## Failure containment
+//!
+//! - A worker that hits a typed error sends a `Failed` frame; the hub
+//!   reconstructs the error via [`CamrError::from_wire`], broadcasts
+//!   `Abort`, and tears the fleet down.
+//! - A worker that *vanishes* (killed process, dropped connection)
+//!   surfaces as reader-thread EOF; the hub fails the run with a typed
+//!   [`CamrError::Disconnected`].
+//! - A worker that silently wedges trips the hub's inactivity timeout
+//!   ([`SocketOptions::disconnect_timeout`]) — also `Disconnected`.
+//!
+//! No path hangs: every abort broadcasts `Abort`, shuts the sockets
+//! down, kills subprocess workers and joins every thread before the
+//! error is returned.
+
+use super::engine::{verify_outputs, RunOutcome};
+use super::master::Master;
+use super::proto::{self, RoundCtx};
+use super::worker::Worker;
+use crate::agg::Value;
+use crate::config::{RunConfig, SystemConfig, WorkloadKind};
+use crate::error::{CamrError, Result};
+use crate::net::frame::{write_frame, Frame, FrameDecoder, FrameKind, WIRE_VERSION};
+use crate::net::socket::{
+    decode_outputs, dial, read_frame_blocking, SockListener, SockStream, SocketKind,
+    SocketTransport,
+};
+use crate::net::{Bus, BusRecorder, SharedBus, Stage};
+use crate::shuffle::buf::BufferPool;
+use crate::workload;
+use crate::{FuncId, JobId, ServerId};
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// How socket workers are hosted.
+#[derive(Debug, Clone)]
+pub enum WorkerMode {
+    /// Dial from threads inside the coordinator process (tests / CI:
+    /// exercises the full wire protocol without process management).
+    Thread,
+    /// Spawn `exe worker --connect <url>` subprocesses — the real
+    /// multi-process data plane.
+    Process {
+        /// Path to the `camr` binary to spawn.
+        exe: PathBuf,
+    },
+}
+
+/// Options for a socket-transport run.
+#[derive(Debug, Clone)]
+pub struct SocketOptions {
+    /// TCP or Unix-domain.
+    pub kind: SocketKind,
+    /// Listen address override (`host:port` / socket path); `None`
+    /// picks an ephemeral loopback port or a fresh temp-dir path.
+    pub listen: Option<String>,
+    /// Worker hosting.
+    pub mode: WorkerMode,
+    /// Hub inactivity budget: if no frame (or connection event) arrives
+    /// for this long mid-run, the run fails with a typed
+    /// [`CamrError::Disconnected`] instead of hanging.
+    pub disconnect_timeout: Duration,
+    /// Fault-injection hook: make the worker with assigned id 0 crash
+    /// right after crossing barrier `n` (0 = after map, 1 = after
+    /// stage 1, …). Subprocess workers `exit(101)`; thread workers drop
+    /// the connection.
+    pub die_after_barrier: Option<usize>,
+}
+
+impl SocketOptions {
+    /// Options with defaults (30 s disconnect timeout, no fault hook).
+    pub fn new(kind: SocketKind, mode: WorkerMode) -> Self {
+        SocketOptions {
+            kind,
+            listen: None,
+            mode,
+            disconnect_timeout: Duration::from_secs(30),
+            die_after_barrier: None,
+        }
+    }
+
+    /// TCP with subprocess workers spawned from `exe`.
+    pub fn tcp_processes(exe: PathBuf) -> Self {
+        Self::new(SocketKind::Tcp, WorkerMode::Process { exe })
+    }
+
+    /// Unix-domain with subprocess workers spawned from `exe`.
+    pub fn unix_processes(exe: PathBuf) -> Self {
+        Self::new(SocketKind::Unix, WorkerMode::Process { exe })
+    }
+
+    /// TCP with in-process worker threads.
+    pub fn tcp_threads() -> Self {
+        Self::new(SocketKind::Tcp, WorkerMode::Thread)
+    }
+
+    /// Unix-domain with in-process worker threads.
+    pub fn unix_threads() -> Self {
+        Self::new(SocketKind::Unix, WorkerMode::Thread)
+    }
+}
+
+/// The deterministic workload recipe shipped to every worker process.
+/// Together with the system config this reconstructs bit-identical data
+/// in each process ([`workload::build_native`]).
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// Which native workload to build.
+    pub kind: WorkloadKind,
+    /// RNG seed for the synthetic data.
+    pub seed: u64,
+}
+
+/// Render the run recipe as config TOML text (the `Welcome` payload) —
+/// parsed back by [`RunConfig::from_text`] in the worker.
+fn spec_text(cfg: &SystemConfig, spec: &WorkerSpec) -> String {
+    format!(
+        "workload = \"{}\"\nseed = {}\n\n[system]\nk = {}\nq = {}\ngamma = {}\nrounds = {}\nvalue_bytes = {}\n",
+        spec.kind.name(),
+        spec.seed,
+        cfg.k,
+        cfg.q,
+        cfg.gamma,
+        cfg.rounds,
+        cfg.value_bytes
+    )
+}
+
+/// What the hub hands back to the engine after a socket run.
+pub struct SocketRun {
+    /// The canonical ledger (sorted by schedule sequence numbers).
+    pub bus: Bus,
+    /// Reduced `(job, func) → value` outputs from every worker.
+    pub outputs: HashMap<(JobId, FuncId), Value>,
+    /// Measured loads and phase times.
+    pub outcome: RunOutcome,
+}
+
+/// Subprocess fleet with kill-on-drop semantics: no abort path leaves
+/// orphaned workers behind.
+#[derive(Default)]
+struct Fleet {
+    children: Vec<Child>,
+}
+
+impl Fleet {
+    fn shutdown(&mut self, graceful: bool) {
+        for c in &mut self.children {
+            if !graceful {
+                let _ = c.kill();
+            }
+            let _ = c.wait();
+        }
+        self.children.clear();
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown(false);
+    }
+}
+
+/// One connection's event as seen by the hub loop.
+enum HubEvent {
+    /// A decoded frame from worker `.0`.
+    Frame(usize, Frame),
+    /// Worker `.0`'s connection ended (reason in `.1`).
+    Closed(usize, String),
+}
+
+/// What the hub loop accumulates on success.
+struct HubResult {
+    outputs: HashMap<(JobId, FuncId), Value>,
+    map_invocations: usize,
+    /// Elapsed time from run start to each barrier release (map,
+    /// stage 1, stage 2, stage 3).
+    phase_marks: [Duration; 4],
+    reduce_time: Duration,
+}
+
+/// Read one frame with a deadline (handshake use; read timeouts on the
+/// stream keep the poll loop live).
+fn read_frame_deadline(
+    stream: &mut SockStream,
+    decoder: &mut FrameDecoder,
+    deadline: Instant,
+) -> Result<Frame> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(f) = decoder.next_frame()? {
+            return Ok(f);
+        }
+        if Instant::now() >= deadline {
+            return Err(CamrError::Disconnected("handshake timed out".into()));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return Err(CamrError::Disconnected(
+                    "connection closed during handshake".into(),
+                ))
+            }
+            Ok(n) => decoder.feed(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Run one full round over sockets: bind, spawn, handshake, route,
+/// collect. Returns the canonical bus, the reduced outputs and the
+/// measured outcome; any failure is a typed error after full teardown.
+pub fn run_socket(
+    master: &Master,
+    spec: &WorkerSpec,
+    workload: &dyn crate::workload::Workload,
+    pool: &BufferPool,
+    pooling: bool,
+    verify: bool,
+    opts: &SocketOptions,
+) -> Result<SocketRun> {
+    let cfg = &master.cfg;
+    let servers = cfg.servers();
+    let listener = SockListener::bind(opts.kind, opts.listen.as_deref())?;
+    let url = listener.url().to_string();
+
+    // ---- Spawn the fleet.
+    let mut fleet = Fleet::default();
+    let mut wthreads = Vec::new();
+    match &opts.mode {
+        WorkerMode::Process { exe } => {
+            for _ in 0..servers {
+                fleet.children.push(
+                    Command::new(exe)
+                        .arg("worker")
+                        .arg("--connect")
+                        .arg(&url)
+                        .stdin(Stdio::null())
+                        .stdout(Stdio::null())
+                        .spawn()?,
+                );
+            }
+        }
+        WorkerMode::Thread => {
+            for i in 0..servers {
+                let url = url.clone();
+                let pool = pool.clone();
+                wthreads.push(
+                    std::thread::Builder::new()
+                        .name(format!("camr-sock-worker-{i}"))
+                        .spawn(move || {
+                            // Errors surface hub-side (Failed frame or
+                            // disconnect); nothing to do with them here.
+                            let _ = worker_at(&url, false, Some(pool));
+                        })?,
+                );
+            }
+        }
+    }
+
+    // ---- Accept + handshake, assigning ids in accept order.
+    let handshake_deadline =
+        Instant::now() + opts.disconnect_timeout.max(Duration::from_secs(10));
+    let text = spec_text(cfg, spec);
+    let mut conns: Vec<(SockStream, FrameDecoder)> = Vec::with_capacity(servers);
+    for id in 0..servers {
+        let accept = || -> Result<(SockStream, FrameDecoder)> {
+            let mut s = listener.accept_within(handshake_deadline)?;
+            s.set_read_timeout(Some(Duration::from_millis(25)))?;
+            s.set_write_timeout(Some(opts.disconnect_timeout))?;
+            let mut dec = FrameDecoder::new();
+            let hello = read_frame_deadline(&mut s, &mut dec, handshake_deadline)?;
+            if hello.kind != FrameKind::Hello {
+                return Err(CamrError::Wire(format!(
+                    "expected Hello, got {:?}",
+                    hello.kind
+                )));
+            }
+            if hello.tag != WIRE_VERSION {
+                return Err(CamrError::Wire(format!(
+                    "wire version mismatch: worker speaks {}, hub speaks {WIRE_VERSION}",
+                    hello.tag
+                )));
+            }
+            let mut w = Frame::new(FrameKind::Welcome);
+            w.tag = id as u32;
+            w.job = u32::from(pooling); // flags: bit 0 = pooling
+            w.extra = match opts.die_after_barrier {
+                // The hook targets *assigned* id 0 (spawn order and
+                // accept order need not agree).
+                Some(n) if id == 0 => n as u32 + 1,
+                _ => 0,
+            };
+            write_frame(&mut s, &w, text.as_bytes())?;
+            Ok((s, dec))
+        };
+        conns.push(accept()?);
+        // On error: return propagates, Fleet::drop kills subprocesses,
+        // thread workers die on their handshake deadline / socket error.
+    }
+
+    // ---- Reader threads: frames from every connection into one queue.
+    let (ev_tx, ev_rx) = mpsc::channel::<HubEvent>();
+    let mut writers: Vec<SockStream> = Vec::with_capacity(servers);
+    let mut readers = Vec::with_capacity(servers);
+    for (w, (s, dec)) in conns.into_iter().enumerate() {
+        writers.push(s.try_clone()?);
+        let tx = ev_tx.clone();
+        readers.push(std::thread::Builder::new().name(format!("camr-hub-read-{w}")).spawn(
+            move || {
+                let mut s = s;
+                let mut dec = dec;
+                loop {
+                    match read_frame_blocking(&mut s, &mut dec) {
+                        Ok(Some(f)) => {
+                            if tx.send(HubEvent::Frame(w, f)).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(None) => {
+                            let _ = tx.send(HubEvent::Closed(w, "connection closed".into()));
+                            break;
+                        }
+                        Err(e) => {
+                            let _ = tx.send(HubEvent::Closed(w, e.to_string()));
+                            break;
+                        }
+                    }
+                }
+            },
+        )?);
+    }
+    drop(ev_tx);
+
+    // ---- Route frames + run barriers, recording the ledger once per
+    // forwarded frame.
+    let shared = SharedBus::new();
+    let rec = shared.recorder();
+    let hub_res = hub_loop(servers, &rec, &mut writers, &ev_rx, opts.disconnect_timeout);
+    drop(rec);
+
+    // ---- Teardown (both paths): abort broadcast if needed, close every
+    // socket, reap subprocesses, join every thread.
+    let ok = hub_res.is_ok();
+    if !ok {
+        let abort = Frame::new(FrameKind::Abort);
+        for w in writers.iter_mut() {
+            let _ = write_frame(w, &abort, &[]);
+        }
+    }
+    for w in &writers {
+        w.shutdown();
+    }
+    fleet.shutdown(ok);
+    for t in wthreads {
+        let _ = t.join();
+    }
+    for r in readers {
+        let _ = r.join();
+    }
+    drop(writers);
+    drop(listener);
+
+    let bus = shared.collect();
+    let hub = hub_res?;
+
+    let verified = if verify {
+        verify_outputs(cfg, workload, &hub.outputs)?;
+        true
+    } else {
+        true
+    };
+    let outcome = RunOutcome {
+        stage_bytes: [
+            bus.stage_bytes(Stage::Stage1),
+            bus.stage_bytes(Stage::Stage2),
+            bus.stage_bytes(Stage::Stage3),
+        ],
+        normalizer: cfg.load_normalizer(),
+        map_invocations: hub.map_invocations,
+        verified,
+        outputs: hub.outputs.len(),
+        map_time: hub.phase_marks[0],
+        shuffle_time: hub.phase_marks[3] - hub.phase_marks[0],
+        stage_times: [
+            hub.phase_marks[1] - hub.phase_marks[0],
+            hub.phase_marks[2] - hub.phase_marks[1],
+            hub.phase_marks[3] - hub.phase_marks[2],
+        ],
+        reduce_time: hub.reduce_time,
+    };
+    Ok(SocketRun { bus, outputs: hub.outputs, outcome })
+}
+
+/// The hub's event loop: four barrier phases of routing, then output
+/// collection. Any protocol violation, worker failure, disconnect or
+/// inactivity timeout returns a typed error (the caller tears down).
+fn hub_loop(
+    servers: usize,
+    rec: &BusRecorder,
+    writers: &mut [SockStream],
+    events: &mpsc::Receiver<HubEvent>,
+    timeout: Duration,
+) -> Result<HubResult> {
+    let t0 = Instant::now();
+    let mut phase_marks = [Duration::ZERO; 4];
+
+    for b in 0..4u32 {
+        let mut arrived = vec![false; servers];
+        let mut count = 0usize;
+        while count < servers {
+            match events.recv_timeout(timeout) {
+                Ok(HubEvent::Frame(w, f)) => match f.kind {
+                    FrameKind::Barrier => {
+                        if f.tag != b {
+                            return Err(CamrError::Wire(format!(
+                                "worker {w} at barrier {} while hub runs barrier {b}",
+                                f.tag
+                            )));
+                        }
+                        if arrived[w] {
+                            return Err(CamrError::Wire(format!(
+                                "worker {w} hit barrier {b} twice"
+                            )));
+                        }
+                        arrived[w] = true;
+                        count += 1;
+                    }
+                    FrameKind::Delta => {
+                        if let Some(&bad) = f.recipients.iter().find(|&&m| m >= servers) {
+                            return Err(CamrError::Wire(format!(
+                                "delta frame addressed to worker {bad} of {servers}"
+                            )));
+                        }
+                        // Charge the shared link ONCE at the schedule
+                        // sequence number, then fan out to recipients.
+                        rec.multicast(
+                            f.seq,
+                            f.stage,
+                            f.sender as ServerId,
+                            f.recipients.clone(),
+                            f.payload.len(),
+                        );
+                        for &m in &f.recipients {
+                            write_frame(&mut writers[m], &f, &f.payload).map_err(|e| {
+                                CamrError::Disconnected(format!(
+                                    "forwarding to worker {m}: {e}"
+                                ))
+                            })?;
+                        }
+                    }
+                    FrameKind::Fused => {
+                        let m = f.extra as usize;
+                        if m >= servers {
+                            return Err(CamrError::Wire(format!(
+                                "fused frame addressed to worker {m} of {servers}"
+                            )));
+                        }
+                        rec.unicast(f.seq, Stage::Stage3, f.sender as ServerId, m, f.payload.len());
+                        write_frame(&mut writers[m], &f, &f.payload).map_err(|e| {
+                            CamrError::Disconnected(format!("forwarding to worker {m}: {e}"))
+                        })?;
+                    }
+                    FrameKind::Failed => {
+                        return Err(CamrError::from_wire(
+                            f.tag,
+                            String::from_utf8_lossy(&f.payload).into_owned(),
+                        ));
+                    }
+                    other => {
+                        return Err(CamrError::Wire(format!(
+                            "unexpected {other:?} frame from worker {w} during phase {b}"
+                        )))
+                    }
+                },
+                Ok(HubEvent::Closed(w, why)) => {
+                    return Err(CamrError::Disconnected(format!(
+                        "worker {w} vanished during phase {b}: {why}"
+                    )));
+                }
+                Err(_) => {
+                    return Err(CamrError::Disconnected(format!(
+                        "no progress for {timeout:?} waiting at barrier {b} \
+                         ({count}/{servers} workers arrived)"
+                    )));
+                }
+            }
+        }
+        // Release the phase. Per-connection FIFO guarantees every data
+        // frame forwarded above lands before this go signal.
+        let mut go = Frame::new(FrameKind::BarrierGo);
+        go.tag = b;
+        for (m, w) in writers.iter_mut().enumerate() {
+            write_frame(w, &go, &[]).map_err(|e| {
+                CamrError::Disconnected(format!("releasing barrier {b} to worker {m}: {e}"))
+            })?;
+        }
+        phase_marks[b as usize] = t0.elapsed();
+    }
+
+    // ---- Collect reduced outputs.
+    let mut done = vec![false; servers];
+    let mut ndone = 0usize;
+    let mut map_invocations = 0usize;
+    let mut outputs: HashMap<(JobId, FuncId), Value> = HashMap::new();
+    while ndone < servers {
+        match events.recv_timeout(timeout) {
+            Ok(HubEvent::Frame(w, f)) => match f.kind {
+                FrameKind::Outputs => {
+                    for (key, v) in decode_outputs(&f.payload)? {
+                        outputs.insert(key, v);
+                    }
+                }
+                FrameKind::Done => {
+                    if !done[w] {
+                        done[w] = true;
+                        ndone += 1;
+                        map_invocations += f.seq as usize;
+                    }
+                }
+                FrameKind::Failed => {
+                    return Err(CamrError::from_wire(
+                        f.tag,
+                        String::from_utf8_lossy(&f.payload).into_owned(),
+                    ));
+                }
+                other => {
+                    return Err(CamrError::Wire(format!(
+                        "unexpected {other:?} frame from worker {w} during collection"
+                    )))
+                }
+            },
+            // A finished worker closing its socket is the normal exit.
+            Ok(HubEvent::Closed(w, _)) if done[w] => {}
+            Ok(HubEvent::Closed(w, why)) => {
+                return Err(CamrError::Disconnected(format!(
+                    "worker {w} vanished before finishing: {why}"
+                )));
+            }
+            Err(_) => {
+                return Err(CamrError::Disconnected(format!(
+                    "no progress for {timeout:?} collecting outputs \
+                     ({ndone}/{servers} workers done)"
+                )));
+            }
+        }
+    }
+    let reduce_time = t0.elapsed() - phase_marks[3];
+    Ok(HubResult { outputs, map_invocations, phase_marks, reduce_time })
+}
+
+/// `camr worker --connect <url>`: dial the hub and run one round as a
+/// subprocess worker. The process exits nonzero on error; failures are
+/// also reported to the hub as `Failed` frames where possible.
+pub fn run_worker(url: &str) -> Result<()> {
+    worker_at(url, true, None)
+}
+
+/// Dial + execute one round. `hard_exit` selects the die-after hook's
+/// behavior (process exit vs dropped connection); `pool` lets
+/// thread-mode workers share the engine's buffer pool (hygiene tests).
+fn worker_at(url: &str, hard_exit: bool, pool: Option<BufferPool>) -> Result<()> {
+    let stream = dial(url)?;
+    worker_over_stream(stream, hard_exit, pool)
+}
+
+/// The worker side of the protocol, given a connected stream: handshake,
+/// rebuild the run from the shipped recipe, execute
+/// [`proto::run_round`] over a [`SocketTransport`], ship outputs.
+fn worker_over_stream(
+    mut stream: SockStream,
+    hard_exit: bool,
+    pool: Option<BufferPool>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(25)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut dec = FrameDecoder::new();
+
+    // Handshake: announce the wire version, receive id + recipe.
+    let mut hello = Frame::new(FrameKind::Hello);
+    hello.tag = WIRE_VERSION;
+    write_frame(&mut stream, &hello, &[])?;
+    let welcome =
+        read_frame_deadline(&mut stream, &mut dec, Instant::now() + Duration::from_secs(30))?;
+    if welcome.kind != FrameKind::Welcome {
+        return Err(CamrError::Wire(format!("expected Welcome, got {:?}", welcome.kind)));
+    }
+    let id = welcome.tag as ServerId;
+    let pooling = welcome.job & 1 == 1;
+    let die_after = match welcome.extra {
+        0 => None,
+        n => Some((n - 1) as usize),
+    };
+
+    // Rebuild the run deterministically from the shipped config text.
+    let text = String::from_utf8_lossy(&welcome.payload).into_owned();
+    let rc = RunConfig::from_text(&text)?;
+    let master = Master::new(rc.system.clone())?;
+    let wl = workload::build_native(rc.workload, &master.cfg, rc.seed)?;
+    let schedule = master.schedule()?;
+    let pool = pool.unwrap_or_default();
+    let ctx = RoundCtx::new(&master.cfg, &master.placement, &*wl, &schedule, &pool, pooling);
+    let mut worker = Worker::new(id, &master.cfg);
+
+    let mut link = SocketTransport::new(stream, dec, id, die_after, hard_exit);
+    let run = proto::run_round(id, &mut worker, &ctx, &mut link);
+
+    if link.crashed() {
+        // Thread-mode die-after hook: vanish without reporting.
+        return Ok(());
+    }
+    if let Some(e) = run.error {
+        // The Failed frame already went to the hub via Transport::fail.
+        return Err(e);
+    }
+    if link.aborted() {
+        return Err(CamrError::Runtime(format!("worker {id}: run aborted")));
+    }
+    link.send_outputs(&run.outputs)?;
+    link.send_done(run.map_invocations)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_text_roundtrips_through_runconfig() {
+        let cfg = SystemConfig::with_options(3, 2, 2, 2, 96).unwrap();
+        let spec = WorkerSpec { kind: WorkloadKind::Gradient, seed: 0xFEED };
+        let rc = RunConfig::from_text(&spec_text(&cfg, &spec)).unwrap();
+        assert_eq!(rc.system, cfg);
+        assert_eq!(rc.workload, WorkloadKind::Gradient);
+        assert_eq!(rc.seed, 0xFEED);
+    }
+}

@@ -23,6 +23,12 @@ pub enum CamrError {
     Runtime(String),
     /// I/O error.
     Io(std::io::Error),
+    /// Wire-format violation on the socket transport (bad magic,
+    /// unknown frame kind, oversized lengths, truncated one-shot decode).
+    Wire(String),
+    /// A worker's transport connection died mid-run (process killed,
+    /// socket closed, or no progress within the disconnect timeout).
+    Disconnected(String),
 }
 
 impl fmt::Display for CamrError {
@@ -37,6 +43,48 @@ impl fmt::Display for CamrError {
             CamrError::Verification(m) => write!(f, "verification failed: {m}"),
             CamrError::Runtime(m) => write!(f, "runtime error: {m}"),
             CamrError::Io(e) => write!(f, "io error: {e}"),
+            CamrError::Wire(m) => write!(f, "wire protocol error: {m}"),
+            CamrError::Disconnected(m) => write!(f, "worker disconnected: {m}"),
+        }
+    }
+}
+
+impl CamrError {
+    /// Stable numeric code for shipping the error *variant* across the
+    /// socket transport (a `Failed` frame carries the code in its tag and
+    /// the message in its payload). `0` is reserved for "no error".
+    pub fn wire_code(&self) -> u32 {
+        match self {
+            CamrError::InvalidConfig(_) => 1,
+            CamrError::DesignInvariant(_) => 2,
+            CamrError::Placement(_) => 3,
+            CamrError::ShuffleDecode(_) => 4,
+            CamrError::MissingValue(_) => 5,
+            CamrError::Aggregation(_) => 6,
+            CamrError::Verification(_) => 7,
+            CamrError::Runtime(_) => 8,
+            CamrError::Io(_) => 9,
+            CamrError::Wire(_) => 10,
+            CamrError::Disconnected(_) => 11,
+        }
+    }
+
+    /// Reconstruct a typed error from a wire code + message — the inverse
+    /// of [`CamrError::wire_code`] up to the `Io` payload (which becomes
+    /// an `io::Error::other`). Unknown codes degrade to `Runtime`.
+    pub fn from_wire(code: u32, msg: String) -> CamrError {
+        match code {
+            1 => CamrError::InvalidConfig(msg),
+            2 => CamrError::DesignInvariant(msg),
+            3 => CamrError::Placement(msg),
+            4 => CamrError::ShuffleDecode(msg),
+            5 => CamrError::MissingValue(msg),
+            6 => CamrError::Aggregation(msg),
+            7 => CamrError::Verification(msg),
+            9 => CamrError::Io(std::io::Error::other(msg)),
+            10 => CamrError::Wire(msg),
+            11 => CamrError::Disconnected(msg),
+            _ => CamrError::Runtime(msg),
         }
     }
 }
@@ -69,6 +117,31 @@ mod tests {
         assert_eq!(e.to_string(), "invalid config: k must be >= 2");
         let e = CamrError::ShuffleDecode("chunk 3".into());
         assert!(e.to_string().contains("chunk 3"));
+    }
+
+    #[test]
+    fn wire_code_roundtrips_every_variant() {
+        let all = [
+            CamrError::InvalidConfig("m".into()),
+            CamrError::DesignInvariant("m".into()),
+            CamrError::Placement("m".into()),
+            CamrError::ShuffleDecode("m".into()),
+            CamrError::MissingValue("m".into()),
+            CamrError::Aggregation("m".into()),
+            CamrError::Verification("m".into()),
+            CamrError::Runtime("m".into()),
+            CamrError::Io(std::io::Error::other("m")),
+            CamrError::Wire("m".into()),
+            CamrError::Disconnected("m".into()),
+        ];
+        for e in all {
+            let code = e.wire_code();
+            assert!(code != 0, "0 is reserved");
+            let back = CamrError::from_wire(code, "m".into());
+            assert_eq!(back.wire_code(), code, "{e}");
+        }
+        // Unknown codes degrade to Runtime instead of panicking.
+        assert!(matches!(CamrError::from_wire(999, "m".into()), CamrError::Runtime(_)));
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //!   stages (paper §III-C), on a pooled zero-copy data plane
 //!   ([`shuffle::buf`]: recycled word-aligned buffers + u64-lane XOR).
 //! - [`net`] — shared-link network simulator with byte-exact accounting,
-//!   including the channel-backed recorder the parallel engine uses.
+//!   the channel-backed recorder the parallel engine uses, the
+//!   [`net::transport::Transport`] trait abstracting the packet plane,
+//!   and the socket data plane: a length-prefixed wire format
+//!   ([`net::frame`]) spoken over loopback TCP or Unix-domain sockets
+//!   ([`net::socket`]).
 //! - [`coordinator`] — workers, master, and the end-to-end engines:
 //!   the serial reference [`coordinator::engine::Engine`], the
 //!   thread-per-worker [`coordinator::parallel::ParallelEngine`], and
@@ -73,12 +77,22 @@
 //!   through per-worker channels, and [`std::sync::Barrier`]s separate
 //!   the phases (map ‖ stage 1 ‖ stage 2 ‖ stage 3 ‖ reduce).
 //!
+//! The parallel engine's packet plane is pluggable
+//! ([`coordinator::parallel::TransportKind`]): in-process mpsc channels
+//! (default), or sockets — loopback TCP / Unix-domain, with workers as
+//! in-process threads or real `camr worker --connect` subprocesses
+//! orchestrated by the [`coordinator::remote`] hub.
+//!
 //! Load accounting stays *exact* under concurrency: every transmission
 //! is charged to the shared link through a channel-backed recorder
 //! tagged with its schedule sequence number, so the collected ledger is
 //! byte-for-byte the serial one no matter how the threads interleave —
 //! multicasts are still charged once, and `RunOutcome::total_load()`
 //! is identical between the engines (asserted by the property tests).
+//! On the socket plane the recorder lives in the hub, which charges
+//! each multicast once while fanning the frame out — the golden-ledger
+//! fixture cannot tell the four planes apart
+//! (`rust/tests/socket_transport.rs`).
 //!
 //! ## Performance
 //!

@@ -17,24 +17,28 @@
 use anyhow::{anyhow, bail, Context, Result};
 use camr::analysis::{jobs, load, TimeModel};
 use camr::baseline::{run_ablation, CcdcEngine, CodingChoice, UncodedEngine, UncodedMode};
-use camr::config::{RunConfig, SystemConfig, WorkloadKind};
+use camr::config::{
+    RunConfig, SystemConfig, TransportChoice, TransportConfig, WorkerModeChoice, WorkloadKind,
+};
 use camr::coordinator::batch::{self, BatchOptions, BatchScheme};
 use camr::coordinator::cluster;
-use camr::coordinator::engine::Engine;
-use camr::coordinator::parallel::ParallelEngine;
+use camr::coordinator::engine::{Engine, RunOutcome};
+use camr::coordinator::parallel::{ParallelEngine, TransportKind};
+use camr::coordinator::remote::{self, SocketOptions, WorkerMode, WorkerSpec};
 use camr::metrics::{BatchReport, LoadReport, SchemeBatch, SimTimes};
+use camr::net::socket::SocketKind;
 use camr::net::{Bus, Stage};
 use camr::report::Table;
 use camr::sim::{self, LinkKind, SimConfig, SimOutcome, StragglerModel};
 use camr::util::json::Json;
-use camr::workload::gradient::GradientWorkload;
-use camr::workload::matvec::{MatVecWorkload, NativeShardCompute};
+use camr::workload::matvec::MatVecWorkload;
 use camr::workload::synth::SyntheticWorkload;
 use camr::workload::wordcount::WordCountWorkload;
 use camr::workload::Workload;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Minimal flag parser: `--key value`, `--key=value`, boolean `--key`.
 struct Args {
@@ -103,8 +107,10 @@ impl Args {
 const USAGE: &str = "camr — Coded Aggregated MapReduce (ISIT 2019 reproduction)
 
 USAGE:
-  camr run      [--k N] [--q N] [--gamma N] [--workload KIND] [--seed N]
-                [--artifact PATH] [--json] [--parallel] [--config FILE]
+  camr run      [CONFIG.toml] [--k N] [--q N] [--gamma N] [--workload KIND]
+                [--seed N] [--artifact PATH] [--json] [--parallel]
+                [--config FILE] [--transport serial|chan|tcp|unix]
+  camr worker   --connect URL        (spawned by the socket-transport hub)
   camr simulate [CONFIG.toml] [--config FILE] [--k N] [--q N] [--gamma N]
                 [--workload KIND] [--seed N] [--json] [--parallel]
                 [--link shared|bisection] [--bandwidth BYTES/S]
@@ -134,9 +140,13 @@ replays the aggregate job-tagged ledger through the cluster simulator
 batch makespans. --jobs N executes at least N jobs (CAMR rounds up to
 whole coded rounds of J).
 
---parallel runs the thread-per-worker engine (one OS thread per server);
-the default is the serial reference engine. Both produce byte-identical
-load ledgers.
+--transport picks the data plane: serial (the reference engine), chan
+(thread-per-worker over in-process channels; same as --parallel), or
+tcp / unix (workers as separate `camr worker` processes speaking the
+length-prefixed wire format over loopback sockets, multicasts fanned
+out by the coordinator hub and charged once). All four produce
+byte-identical load ledgers — the golden-fixture tests enforce it.
+The flag beats --parallel beats the config's [transport] section.
 
 simulate replays the byte-exact ledgers of a CAMR run and the
 CCDC/uncoded baselines through the discrete-event cluster simulator
@@ -150,22 +160,16 @@ fn build_workload(
     seed: u64,
     artifact: Option<&PathBuf>,
 ) -> Result<Box<dyn Workload>> {
-    Ok(match kind {
-        WorkloadKind::WordCount => Box::new(WordCountWorkload::synthetic(cfg, seed, 40)),
-        WorkloadKind::Synthetic => Box::new(SyntheticWorkload::new(cfg, seed)),
-        WorkloadKind::Gradient => {
-            let params_per_func = cfg.value_bytes / 4;
-            Box::new(GradientWorkload::synthetic(cfg, seed, params_per_func, 4)?)
-        }
-        WorkloadKind::MatVec => {
-            let rows_per_func = cfg.value_bytes / 4;
-            let compute: Arc<dyn camr::workload::matvec::ShardCompute> = match artifact {
-                Some(path) => Arc::new(camr::runtime::PjrtShardCompute::new(path)?),
-                None => Arc::new(NativeShardCompute),
-            };
-            Box::new(MatVecWorkload::synthetic(cfg, seed, rows_per_func, 8, compute)?)
-        }
-    })
+    // Only the PJRT-backed mapper differs from the deterministic native
+    // constructor (which socket worker processes also use, so a run is
+    // identical data whichever process builds it).
+    if let (WorkloadKind::MatVec, Some(path)) = (kind, artifact) {
+        let rows_per_func = cfg.value_bytes / 4;
+        let compute: Arc<dyn camr::workload::matvec::ShardCompute> =
+            Arc::new(camr::runtime::PjrtShardCompute::new(path)?);
+        return Ok(Box::new(MatVecWorkload::synthetic(cfg, seed, rows_per_func, 8, compute)?));
+    }
+    Ok(camr::workload::build_native(kind, cfg, seed)?)
 }
 
 /// Replay a CAMR run's ledger through the simulator (when the config
@@ -184,39 +188,102 @@ fn attach_sim_times(
     Ok(Some(SimTimes::from_outcome(&out)))
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let (cfg, kind, seed, artifact, json, simcfg) = match args.get_opt("config") {
-        Some(path) => {
-            let rc = RunConfig::from_path(std::path::Path::new(&path))?;
-            (rc.system, rc.workload, rc.seed, rc.artifact.map(PathBuf::from), rc.json, rc.sim)
-        }
-        None => (
-            SystemConfig::new(
-                args.get_usize("k", 3)?,
-                args.get_usize("q", 2)?,
-                args.get_usize("gamma", 2)?,
-            )?,
-            WorkloadKind::parse(&args.get_str("workload", "word_count"))?,
-            args.get_u64("seed", 0xCA3A)?,
-            args.get_opt("artifact").map(PathBuf::from),
-            args.get_bool("json"),
-            None,
-        ),
+/// Build the [`SocketOptions`] for a tcp/unix run from the config's
+/// `[transport]` section (defaults when absent).
+fn socket_options(sock_kind: SocketKind, tcfg: Option<&TransportConfig>) -> Result<SocketOptions> {
+    let t = tcfg.cloned().unwrap_or_default();
+    let mode = match t.workers {
+        WorkerModeChoice::Process => WorkerMode::Process { exe: std::env::current_exe()? },
+        WorkerModeChoice::Thread => WorkerMode::Thread,
+    };
+    let mut opts = SocketOptions::new(sock_kind, mode);
+    opts.listen = t.listen;
+    opts.disconnect_timeout = Duration::from_secs_f64(t.disconnect_timeout_secs);
+    Ok(opts)
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let (path, rest) = split_positional_config(argv);
+    let args = Args::parse(rest, &["json", "parallel"])?;
+    let (cfg, kind, seed, artifact, json, simcfg, tcfg) =
+        match path.or_else(|| args.get_opt("config")) {
+            Some(path) => {
+                let rc = RunConfig::from_path(std::path::Path::new(&path))?;
+                (
+                    rc.system,
+                    rc.workload,
+                    rc.seed,
+                    rc.artifact.map(PathBuf::from),
+                    rc.json,
+                    rc.sim,
+                    rc.transport,
+                )
+            }
+            None => (
+                SystemConfig::new(
+                    args.get_usize("k", 3)?,
+                    args.get_usize("q", 2)?,
+                    args.get_usize("gamma", 2)?,
+                )?,
+                WorkloadKind::parse(&args.get_str("workload", "word_count"))?,
+                args.get_u64("seed", 0xCA3A)?,
+                args.get_opt("artifact").map(PathBuf::from),
+                args.get_bool("json"),
+                None,
+                None,
+            ),
+        };
+    let json = json || args.get_bool("json");
+    // Data-plane resolution: --transport beats --parallel beats the
+    // config's [transport] section beats the serial default.
+    let choice = match args.get_opt("transport") {
+        Some(v) => TransportChoice::parse(&v)?,
+        None if args.get_bool("parallel") => TransportChoice::Chan,
+        None => tcfg.as_ref().map(|t| t.kind).unwrap_or_default(),
     };
     let wl = build_workload(kind, &cfg, seed, artifact.as_ref())?;
     let name = wl.name().to_string();
-    let parallel = args.get_bool("parallel");
     // Keep the engine around: the `[sim]` section replays its ledger.
-    let (out, sim_times) = if parallel {
-        let mut e = ParallelEngine::new(cfg.clone(), wl)?;
-        let out = e.run()?;
-        let st = attach_sim_times(&cfg, simcfg.as_ref(), &e.master.placement, &e.bus)?;
-        (out, st)
-    } else {
-        let mut e = Engine::new(cfg.clone(), wl)?;
-        let out = e.run()?;
-        let st = attach_sim_times(&cfg, simcfg.as_ref(), &e.master.placement, &e.bus)?;
-        (out, st)
+    let (out, sim_times, engine_label): (RunOutcome, _, String) = match choice {
+        TransportChoice::Serial => {
+            let mut e = Engine::new(cfg.clone(), wl)?;
+            let out = e.run()?;
+            let st = attach_sim_times(&cfg, simcfg.as_ref(), &e.master.placement, &e.bus)?;
+            (out, st, "serial".into())
+        }
+        TransportChoice::Chan => {
+            let mut e = ParallelEngine::new(cfg.clone(), wl)?;
+            let out = e.run()?;
+            let st = attach_sim_times(&cfg, simcfg.as_ref(), &e.master.placement, &e.bus)?;
+            (out, st, "parallel (thread-per-worker, channels)".into())
+        }
+        TransportChoice::Tcp | TransportChoice::Unix => {
+            anyhow::ensure!(
+                artifact.is_none(),
+                "--artifact is not supported over socket transports (worker processes \
+                 rebuild the workload from the shipped config text)"
+            );
+            let sock_kind = if choice == TransportChoice::Tcp {
+                SocketKind::Tcp
+            } else {
+                SocketKind::Unix
+            };
+            let opts = socket_options(sock_kind, tcfg.as_ref())?;
+            let label = format!(
+                "{} sockets ({})",
+                if sock_kind == SocketKind::Tcp { "tcp" } else { "unix" },
+                match &opts.mode {
+                    WorkerMode::Process { .. } => "process-per-worker",
+                    WorkerMode::Thread => "thread-per-worker",
+                }
+            );
+            let mut e = ParallelEngine::new(cfg.clone(), wl)?;
+            e.transport = TransportKind::Socket(opts);
+            e.remote_spec = Some(WorkerSpec { kind, seed });
+            let out = e.run()?;
+            let st = attach_sim_times(&cfg, simcfg.as_ref(), &e.master.placement, &e.bus)?;
+            (out, st, label)
+        }
     };
     let mut report = LoadReport::from_outcome(&cfg, &out);
     if let Some(st) = sim_times {
@@ -225,15 +292,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     if json {
         println!("{}", report.to_json());
     } else {
-        println!(
-            "workload: {name}   engine: {}",
-            if parallel { "parallel (thread-per-worker)" } else { "serial" }
-        );
+        println!("workload: {name}   engine: {engine_label}");
         print!("{report}");
         if !report.matches_analysis() {
             bail!("measured load deviates from §IV closed form");
         }
     }
+    Ok(())
+}
+
+/// `camr worker --connect URL`: the subprocess entrypoint spawned by the
+/// socket-transport hub. Never invoked by hand.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let url = args
+        .get_opt("connect")
+        .ok_or_else(|| anyhow!("camr worker requires --connect URL (spawned by the hub)"))?;
+    remote::run_worker(&url)?;
     Ok(())
 }
 
@@ -341,18 +415,19 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     sc.seed = args.get_u64("sim-seed", sc.seed)?;
     sc.validate()?;
 
-    // CAMR: a real engine run produces the byte-exact ledger to replay.
+    // CAMR: a real engine run produces the byte-exact ledger to replay
+    // (and measured per-phase wall times for the sim-vs-real table).
     let wl = build_workload(kind, &cfg, wseed, artifact.as_ref())?;
-    let (camr_bus, camr_maps) = if args.get_bool("parallel") {
+    let (camr_bus, camr_maps, camr_out) = if args.get_bool("parallel") {
         let mut e = ParallelEngine::new(cfg.clone(), wl)?;
         let out = e.run()?;
         anyhow::ensure!(out.verified, "CAMR run failed verification");
-        (e.bus.clone(), sim::camr_per_worker_maps(&cfg, &e.master.placement))
+        (e.bus.clone(), sim::camr_per_worker_maps(&cfg, &e.master.placement), out)
     } else {
         let mut e = Engine::new(cfg.clone(), wl)?;
         let out = e.run()?;
         anyhow::ensure!(out.verified, "CAMR run failed verification");
-        (e.bus.clone(), sim::camr_per_worker_maps(&cfg, &e.master.placement))
+        (e.bus.clone(), sim::camr_per_worker_maps(&cfg, &e.master.placement), out)
     };
     let camr_tasks: usize = camr_maps.iter().sum();
     let mut rows = vec![SchemeSim {
@@ -486,6 +561,36 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         ]);
     }
     print!("{}", s.render());
+
+    // Sim-vs-real: the simulator's CAMR phase times next to the wall
+    // times the in-process engine just measured for the same ledger.
+    // Absolute values differ wildly (the sim models a 1 Gb/s cluster,
+    // the real run is memcpy over channels) — the column worth reading
+    // is each phase's *share*.
+    println!();
+    let mut vr = Table::new(vec!["phase", "sim_s", "real_s"]);
+    let real = [
+        camr_out.map_time.as_secs_f64(),
+        camr_out.stage_times[0].as_secs_f64(),
+        camr_out.stage_times[1].as_secs_f64(),
+        camr_out.stage_times[2].as_secs_f64(),
+    ];
+    let simulated = [
+        rows[0].sim.map_secs,
+        rows[0].sim.stage_secs(Stage::Stage1),
+        rows[0].sim.stage_secs(Stage::Stage2),
+        rows[0].sim.stage_secs(Stage::Stage3),
+    ];
+    for (i, phase) in ["map", "stage1", "stage2", "stage3"].iter().enumerate() {
+        vr.row(vec![
+            phase.to_string(),
+            format!("{:.6}", simulated[i]),
+            format!("{:.6}", real[i]),
+        ]);
+    }
+    print!("{}", vr.render());
+    println!("(camr only; real_s is this machine's in-process engine run)");
+
     if let Some(u) = rows.iter().find(|r| r.label == "uncoded") {
         println!(
             "\nCAMR end-to-end speedup over uncoded (same map work): {:.2}x",
@@ -833,7 +938,8 @@ fn main() -> Result<()> {
     let rest = &argv[1..];
     let bool_flags = ["json", "parallel"];
     match cmd.as_str() {
-        "run" => cmd_run(&Args::parse(rest, &bool_flags)?),
+        "run" => cmd_run(rest),
+        "worker" => cmd_worker(&Args::parse(rest, &bool_flags)?),
         "simulate" => cmd_simulate(rest),
         "batch" => cmd_batch(rest),
         "sweep" => cmd_sweep(&Args::parse(rest, &bool_flags)?),

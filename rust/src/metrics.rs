@@ -88,6 +88,11 @@ pub struct LoadReport {
     pub verified: bool,
     /// Phase wall times in microseconds (map, shuffle, reduce).
     pub phase_us: [u128; 3],
+    /// Measured wall time of each shuffle stage in microseconds
+    /// `[stage1, stage2, stage3]` — the *real* counterpart of
+    /// [`SimTimes::stage_secs`], so sim-vs-real columns can be printed
+    /// from one report.
+    pub stage_us: [u128; 3],
     /// Simulated phase times (when the config has a `[sim]` section).
     pub sim: Option<SimTimes>,
 }
@@ -124,6 +129,11 @@ impl LoadReport {
                 out.map_time.as_micros(),
                 out.shuffle_time.as_micros(),
                 out.reduce_time.as_micros(),
+            ],
+            stage_us: [
+                out.stage_times[0].as_micros(),
+                out.stage_times[1].as_micros(),
+                out.stage_times[2].as_micros(),
             ],
             sim: None,
         }
@@ -187,6 +197,10 @@ impl LoadReport {
                 "phase_us",
                 Json::Arr(self.phase_us.iter().map(|&x| Json::UInt(x)).collect()),
             ),
+            (
+                "stage_us",
+                Json::Arr(self.stage_us.iter().map(|&x| Json::UInt(x)).collect()),
+            ),
             ("sim", sim),
         ])
         .render()
@@ -226,6 +240,11 @@ impl std::fmt::Display for LoadReport {
             "  map invocations: {}   phases: map {}µs shuffle {}µs reduce {}µs   verified: {}",
             self.map_invocations, self.phase_us[0], self.phase_us[1], self.phase_us[2],
             self.verified
+        )?;
+        writeln!(
+            f,
+            "  measured stages: stage1 {}µs stage2 {}µs stage3 {}µs",
+            self.stage_us[0], self.stage_us[1], self.stage_us[2]
         )?;
         if let Some(s) = &self.sim {
             writeln!(
@@ -433,6 +452,12 @@ mod tests {
         // Display renders all stages.
         let text = rep.to_string();
         assert!(text.contains("stage1") && text.contains("stage3"));
+        // Real per-stage times are carried and sum to the shuffle phase
+        // (clock granularity: each readout truncates to whole µs).
+        assert!(js.contains("\"stage_us\""));
+        let sum: u128 = rep.stage_us.iter().sum();
+        assert!(sum <= rep.phase_us[1] + 3, "stage_us {sum} vs shuffle {}", rep.phase_us[1]);
+        assert!(text.contains("measured stages:"));
         // Without a [sim] section the report carries no simulated times.
         assert!(rep.sim.is_none());
         assert!(js.contains("\"sim\":null"));

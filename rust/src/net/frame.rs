@@ -1,0 +1,398 @@
+//! Length-prefixed wire format for the socket transport.
+//!
+//! Every message between a worker and the coordinator hub is one
+//! *frame*: a fixed 40-byte little-endian header, a recipient list, and
+//! a raw payload. The header carries everything the ledger needs
+//! ([`crate::net::Transmission`]: stage, sender, recipients, byte count,
+//! schedule sequence number), so the hub can charge the shared link
+//! without inspecting payloads:
+//!
+//! ```text
+//!  offset  size  field
+//!  ------  ----  -----------------------------------------------
+//!       0     4  magic        0xCA3AF00D
+//!       4     1  kind         FrameKind (Hello, Delta, …)
+//!       5     1  stage        0=stage1 1=stage2 2=stage3 3=baseline
+//!       6     2  reserved     must be 0
+//!       8     8  seq          u64 schedule sequence number
+//!      16     4  job          u32 job tag (kind-specific flags for
+//!                             handshake frames)
+//!      20     4  sender       u32 sending worker id
+//!      24     4  tag          u32 kind-specific (group id, spec id,
+//!                             barrier phase, error code, …)
+//!      28     4  extra        u32 kind-specific (member position,
+//!                             receiver id, die-after hook, …)
+//!      32     4  nrecip       u32 number of recipients
+//!      36     4  payload_len  u32 payload bytes
+//!      40  4·nrecip  recipients, u32 each
+//!       …  payload_len  payload bytes
+//! ```
+//!
+//! Decoding is incremental ([`FrameDecoder`]) so the transport can feed
+//! whatever the socket returns — down to one byte at a time — and
+//! strict: a wrong magic, unknown kind/stage code, nonzero reserved
+//! bytes or an absurd length is a typed [`CamrError::Wire`] error,
+//! never a panic (the property suite in `rust/tests/wire_format.rs`
+//! exercises exactly this).
+
+use crate::error::{CamrError, Result};
+use crate::net::Stage;
+use crate::ServerId;
+use std::io::Write;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: u32 = 0xCA3A_F00D;
+/// Wire protocol version, exchanged in the Hello/Welcome handshake.
+pub const WIRE_VERSION: u32 = 1;
+/// Fixed header length in bytes (before recipients and payload).
+pub const HEADER_LEN: usize = 40;
+/// Upper bound on the recipient list (a sanity cap, far above any `K`).
+pub const MAX_RECIPIENTS: u32 = 1 << 16;
+/// Upper bound on a single payload (sanity cap against corrupt lengths).
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// What a frame means. The comments note the kind-specific use of the
+/// `tag` / `extra` / `job` / `seq` header fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → hub, first frame after connecting. `tag` = wire version.
+    Hello,
+    /// Hub → worker handshake reply. `tag` = assigned worker id, `job` =
+    /// flags (bit 0: pooling), `extra` = die-after-barrier test hook
+    /// (0 = none, n+1 = crash after barrier n), payload = run config
+    /// TOML text.
+    Welcome,
+    /// Coded broadcast Δ. `seq` = schedule sequence, `tag` = flattened
+    /// group index, `extra` = sender's member position, recipients =
+    /// the other group members, payload = the encoded Δ.
+    Delta,
+    /// Stage-3 fused unicast. `seq` = schedule sequence, `tag` =
+    /// stage-3 spec index, `extra` = receiver id, payload = the value.
+    Fused,
+    /// Worker → hub: reached phase barrier `tag` (0 = map … 3 = stage 3).
+    Barrier,
+    /// Hub → worker: every worker reached barrier `tag`; proceed.
+    BarrierGo,
+    /// Worker → hub: reduced outputs. Payload = `u32` entry count, then
+    /// per entry `u32 job`, `u32 func`, `u32 len`, value bytes.
+    Outputs,
+    /// Worker → hub: run finished. `seq` = map invocations.
+    Done,
+    /// Worker → hub: run failed. `tag` = [`CamrError::wire_code`],
+    /// payload = error message (UTF-8).
+    Failed,
+    /// Hub → worker: a peer failed; stop work and exit.
+    Abort,
+}
+
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0,
+            FrameKind::Welcome => 1,
+            FrameKind::Delta => 2,
+            FrameKind::Fused => 3,
+            FrameKind::Barrier => 4,
+            FrameKind::BarrierGo => 5,
+            FrameKind::Outputs => 6,
+            FrameKind::Done => 7,
+            FrameKind::Failed => 8,
+            FrameKind::Abort => 9,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => FrameKind::Hello,
+            1 => FrameKind::Welcome,
+            2 => FrameKind::Delta,
+            3 => FrameKind::Fused,
+            4 => FrameKind::Barrier,
+            5 => FrameKind::BarrierGo,
+            6 => FrameKind::Outputs,
+            7 => FrameKind::Done,
+            8 => FrameKind::Failed,
+            9 => FrameKind::Abort,
+            other => return Err(CamrError::Wire(format!("unknown frame kind {other}"))),
+        })
+    }
+}
+
+fn stage_code(s: Stage) -> u8 {
+    match s {
+        Stage::Stage1 => 0,
+        Stage::Stage2 => 1,
+        Stage::Stage3 => 2,
+        Stage::Baseline => 3,
+    }
+}
+
+fn stage_from_code(c: u8) -> Result<Stage> {
+    Ok(match c {
+        0 => Stage::Stage1,
+        1 => Stage::Stage2,
+        2 => Stage::Stage3,
+        3 => Stage::Baseline,
+        other => return Err(CamrError::Wire(format!("unknown stage code {other}"))),
+    })
+}
+
+/// One decoded wire frame. Field meanings are kind-specific — see
+/// [`FrameKind`].
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// What the frame means.
+    pub kind: FrameKind,
+    /// Protocol stage (ledger tag for Delta/Fused; `Baseline` otherwise).
+    pub stage: Stage,
+    /// Schedule sequence number (Delta/Fused) or kind-specific u64.
+    pub seq: u64,
+    /// Job tag / kind-specific flags.
+    pub job: u32,
+    /// Sending worker id.
+    pub sender: u32,
+    /// Kind-specific (group id, spec id, barrier phase, error code…).
+    pub tag: u32,
+    /// Kind-specific (member position, receiver id, die-after hook…).
+    pub extra: u32,
+    /// Intended recipients (ledger recipients for Delta).
+    pub recipients: Vec<ServerId>,
+    /// Raw payload bytes.
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A frame of `kind` with every other field zeroed/empty.
+    pub fn new(kind: FrameKind) -> Self {
+        Frame {
+            kind,
+            stage: Stage::Baseline,
+            seq: 0,
+            job: 0,
+            sender: 0,
+            tag: 0,
+            extra: 0,
+            recipients: Vec::new(),
+            payload: Vec::new(),
+        }
+    }
+
+    /// Serialize into a fresh byte vector (header, recipients, payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(HEADER_LEN + 4 * self.recipients.len() + self.payload.len());
+        encode_header(&mut out, self, self.payload.len());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Strict one-shot decode of exactly one frame from the front of
+    /// `bytes`; returns the frame and its encoded length. Truncated
+    /// input is a typed [`CamrError::Wire`] error (unlike
+    /// [`FrameDecoder::next_frame`], which waits for more bytes).
+    pub fn decode(bytes: &[u8]) -> Result<(Frame, usize)> {
+        let mut d = FrameDecoder::new();
+        d.feed(bytes);
+        match d.next_frame()? {
+            Some(f) => {
+                let used = bytes.len() - d.buffered();
+                Ok((f, used))
+            }
+            None => Err(CamrError::Wire(format!(
+                "truncated frame: {} bytes is not a whole frame",
+                bytes.len()
+            ))),
+        }
+    }
+}
+
+/// Serialize a frame's header + recipient list into `out`, with
+/// `payload_len` as the advertised payload length. Splitting the header
+/// from the payload lets the transport write a pooled
+/// [`crate::shuffle::buf::SharedBuf`] payload straight from its backing
+/// buffer — see [`write_frame`].
+pub fn encode_header(out: &mut Vec<u8>, f: &Frame, payload_len: usize) {
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(f.kind.code());
+    out.push(stage_code(f.stage));
+    out.extend_from_slice(&[0u8; 2]); // reserved
+    out.extend_from_slice(&f.seq.to_le_bytes());
+    out.extend_from_slice(&f.job.to_le_bytes());
+    out.extend_from_slice(&f.sender.to_le_bytes());
+    out.extend_from_slice(&f.tag.to_le_bytes());
+    out.extend_from_slice(&f.extra.to_le_bytes());
+    out.extend_from_slice(&(f.recipients.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    for &r in &f.recipients {
+        out.extend_from_slice(&(r as u32).to_le_bytes());
+    }
+}
+
+/// Write `f`'s header followed by `payload` — which *replaces*
+/// `f.payload` (normally empty here). This is the zero-copy send path:
+/// an encoded Δ living in a pooled buffer is written to the socket
+/// directly from the pool's backing store, never copied into a frame.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame, payload: &[u8]) -> std::io::Result<()> {
+    let mut head = Vec::with_capacity(HEADER_LEN + 4 * f.recipients.len());
+    encode_header(&mut head, f, payload.len());
+    w.write_all(&head)?;
+    w.write_all(payload)
+}
+
+fn rd_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn rd_u64(b: &[u8], off: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(x)
+}
+
+/// Incremental frame decoder: feed arbitrary byte chunks as the socket
+/// yields them, take whole frames out. Corruption surfaces as a typed
+/// [`CamrError::Wire`] error the moment the header is readable.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameDecoder {
+    /// New empty decoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes from the transport.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // Drop consumed prefix before growing (bounded memory under
+        // long-lived connections).
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos > 64 * 1024) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes fed but not yet consumed by a decoded frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Decode the next whole frame, `Ok(None)` if more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        let b = &self.buf[self.pos..];
+        if b.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let magic = rd_u32(b, 0);
+        if magic != MAGIC {
+            return Err(CamrError::Wire(format!(
+                "bad magic {magic:#010x} (want {MAGIC:#010x})"
+            )));
+        }
+        let kind = FrameKind::from_code(b[4])?;
+        let stage = stage_from_code(b[5])?;
+        if b[6] != 0 || b[7] != 0 {
+            return Err(CamrError::Wire("nonzero reserved header bytes".into()));
+        }
+        let nrecip = rd_u32(b, 32);
+        if nrecip > MAX_RECIPIENTS {
+            return Err(CamrError::Wire(format!(
+                "recipient count {nrecip} exceeds cap {MAX_RECIPIENTS}"
+            )));
+        }
+        let payload_len = rd_u32(b, 36);
+        if payload_len > MAX_PAYLOAD {
+            return Err(CamrError::Wire(format!(
+                "payload length {payload_len} exceeds cap {MAX_PAYLOAD}"
+            )));
+        }
+        let total = HEADER_LEN + 4 * nrecip as usize + payload_len as usize;
+        if b.len() < total {
+            return Ok(None);
+        }
+        let recipients: Vec<ServerId> = (0..nrecip as usize)
+            .map(|i| rd_u32(b, HEADER_LEN + 4 * i) as ServerId)
+            .collect();
+        let pstart = HEADER_LEN + 4 * nrecip as usize;
+        let frame = Frame {
+            kind,
+            stage,
+            seq: rd_u64(b, 8),
+            job: rd_u32(b, 16),
+            sender: rd_u32(b, 20),
+            tag: rd_u32(b, 24),
+            extra: rd_u32(b, 28),
+            recipients,
+            payload: b[pstart..pstart + payload_len as usize].to_vec(),
+        };
+        self.pos += total;
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        let mut f = Frame::new(FrameKind::Delta);
+        f.stage = Stage::Stage2;
+        f.seq = 0xDEAD_BEEF_0102_0304;
+        f.job = 7;
+        f.sender = 3;
+        f.tag = 11;
+        f.extra = 2;
+        f.recipients = vec![0, 1, 4];
+        f.payload = vec![0xAB; 37];
+        f
+    }
+
+    #[test]
+    fn roundtrip_via_incremental_decoder() {
+        let f = sample();
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), HEADER_LEN + 4 * 3 + 37);
+        let (g, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(g.kind, FrameKind::Delta);
+        assert_eq!(g.stage, Stage::Stage2);
+        assert_eq!(g.seq, f.seq);
+        assert_eq!(g.job, 7);
+        assert_eq!(g.sender, 3);
+        assert_eq!(g.tag, 11);
+        assert_eq!(g.extra, 2);
+        assert_eq!(g.recipients, vec![0, 1, 4]);
+        assert_eq!(g.payload, f.payload);
+    }
+
+    #[test]
+    fn write_frame_matches_encode() {
+        let mut f = sample();
+        let owned = f.encode();
+        let payload = std::mem::take(&mut f.payload);
+        let mut wired = Vec::new();
+        write_frame(&mut wired, &f, &payload).unwrap();
+        assert_eq!(wired, owned, "zero-copy path must serialize identically");
+    }
+
+    #[test]
+    fn truncated_one_shot_decode_is_typed_error() {
+        let bytes = sample().encode();
+        for cut in [0, 1, HEADER_LEN - 1, HEADER_LEN, bytes.len() - 1] {
+            let err = Frame::decode(&bytes[..cut]).unwrap_err();
+            assert!(matches!(err, CamrError::Wire(_)), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut bytes = sample().encode();
+        bytes[0] ^= 0xFF;
+        let mut d = FrameDecoder::new();
+        d.feed(&bytes);
+        assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))));
+    }
+}

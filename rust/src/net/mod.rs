@@ -20,6 +20,23 @@
 //! identical to the one the serial engine would have produced — a
 //! multicast is still charged exactly once, and the nondeterministic
 //! arrival order of concurrent sends never leaks into the accounting.
+//!
+//! ## Data planes
+//!
+//! How the packets physically move is pluggable behind the
+//! [`transport::Transport`] trait, and **the ledger cannot tell the
+//! difference** (the golden-fixture tests enforce it):
+//!
+//! - [`transport::InProcTransport`] — the channel plane above: one OS
+//!   thread per worker, `mpsc` channels, `std` barriers.
+//! - [`socket`] — workers as separate processes (or threads) speaking
+//!   the length-prefixed wire format of [`frame`] over TCP or
+//!   Unix-domain sockets, with the coordinator hub fanning multicasts
+//!   out and charging this recorder once per multicast.
+
+pub mod frame;
+pub mod socket;
+pub mod transport;
 
 use crate::ServerId;
 use std::fmt;

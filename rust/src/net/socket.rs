@@ -1,0 +1,557 @@
+//! Socket plumbing for the [`super::transport::Transport`] data plane:
+//! TCP / Unix-domain streams, the listener/dialer pair, and the
+//! worker-side [`SocketTransport`].
+//!
+//! ## Topology and handshake
+//!
+//! The socket plane is hub-and-spoke: the coordinator binds a listener
+//! and every worker dials in (`camr worker --connect <url>`, or an
+//! in-process thread for tests). Worker ids are assigned by the hub in
+//! accept order — safe because a worker's entire behavior is a pure
+//! function of its assigned id and the (deterministic) schedule, and
+//! the ledger is ordered by schedule sequence numbers, not arrival:
+//!
+//! ```text
+//!  worker                hub
+//!    | --- Hello(version) -->|   first frame after connect
+//!    |<-- Welcome(id, flags, |   id = accept order; payload = run
+//!    |    config TOML) ------|   config text; extra = test hooks
+//!    |                       |
+//!    | --- Barrier(0) ------>|   …map phase done
+//!    |<-- BarrierGo(0) ------|   …all K workers arrived
+//!    | --- Delta(seq, …) --->|   hub charges the ledger ONCE and
+//!    |<-- Delta(seq, …) -----|   fans out to the recipient list
+//! ```
+//!
+//! A multicast is **one** frame worker→hub; the hub records it through
+//! the same [`crate::net::BusRecorder`] the channel plane uses and
+//! forwards copies to the recipients. That keeps Definition 3's
+//! "charged once on the shared link" semantics — and the ledger
+//! byte-identical to the in-process planes.
+
+use crate::error::{CamrError, Result};
+use crate::net::frame::{encode_header, write_frame, Frame, FrameDecoder, FrameKind, HEADER_LEN};
+use crate::net::transport::{Packet, Transport};
+use crate::net::Stage;
+use crate::shuffle::buf::SharedBuf;
+use crate::{FuncId, JobId, ServerId};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// A connected stream of either flavor.
+pub enum SockStream {
+    /// TCP (loopback or real network).
+    Tcp(TcpStream),
+    /// Unix-domain.
+    Unix(UnixStream),
+}
+
+impl SockStream {
+    /// Clone the OS handle (reader threads get the clone).
+    pub fn try_clone(&self) -> std::io::Result<SockStream> {
+        Ok(match self {
+            SockStream::Tcp(s) => SockStream::Tcp(s.try_clone()?),
+            SockStream::Unix(s) => SockStream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Set the read timeout (None = block forever).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            SockStream::Tcp(s) => s.set_read_timeout(d),
+            SockStream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Set the write timeout (a stalled peer surfaces as an io error
+    /// instead of wedging the hub).
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            SockStream::Tcp(s) => s.set_write_timeout(d),
+            SockStream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    /// Shut down both directions (ignore "already closed").
+    pub fn shutdown(&self) {
+        let _ = match self {
+            SockStream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            SockStream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for SockStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            SockStream::Tcp(s) => s.read(buf),
+            SockStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for SockStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            SockStream::Tcp(s) => s.write(buf),
+            SockStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            SockStream::Tcp(s) => s.flush(),
+            SockStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Which socket flavor a listener/dialer uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SocketKind {
+    /// TCP (default listen address `127.0.0.1:0`).
+    Tcp,
+    /// Unix-domain (default path under the system temp dir).
+    Unix,
+}
+
+static UNIX_PATH_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// The hub's listening socket, with its dialable URL.
+pub enum SockListener {
+    /// Bound TCP listener + `tcp://addr:port` URL.
+    Tcp(TcpListener, String),
+    /// Bound Unix listener + owned socket path + `unix://path` URL.
+    Unix(UnixListener, PathBuf, String),
+}
+
+impl SockListener {
+    /// Bind a listener. `listen` overrides the default address
+    /// (`127.0.0.1:0` for TCP; a fresh temp-dir path for Unix).
+    pub fn bind(kind: SocketKind, listen: Option<&str>) -> Result<SockListener> {
+        match kind {
+            SocketKind::Tcp => {
+                let addr = listen.unwrap_or("127.0.0.1:0");
+                let l = TcpListener::bind(addr)?;
+                l.set_nonblocking(true)?;
+                let url = format!("tcp://{}", l.local_addr()?);
+                Ok(SockListener::Tcp(l, url))
+            }
+            SocketKind::Unix => {
+                let path = match listen {
+                    Some(p) => PathBuf::from(p),
+                    None => std::env::temp_dir().join(format!(
+                        "camr-{}-{}.sock",
+                        std::process::id(),
+                        UNIX_PATH_COUNTER.fetch_add(1, Ordering::Relaxed)
+                    )),
+                };
+                // A stale socket file from a killed run blocks bind.
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)?;
+                l.set_nonblocking(true)?;
+                let url = format!("unix://{}", path.display());
+                Ok(SockListener::Unix(l, path, url))
+            }
+        }
+    }
+
+    /// The URL workers dial (`tcp://…` / `unix://…`).
+    pub fn url(&self) -> &str {
+        match self {
+            SockListener::Tcp(_, u) => u,
+            SockListener::Unix(_, _, u) => u,
+        }
+    }
+
+    /// Accept one connection before `deadline`, or a typed
+    /// [`CamrError::Disconnected`].
+    pub fn accept_within(&self, deadline: Instant) -> Result<SockStream> {
+        loop {
+            let res = match self {
+                SockListener::Tcp(l, _) => l.accept().map(|(s, _)| SockStream::Tcp(s)),
+                SockListener::Unix(l, _, _) => l.accept().map(|(s, _)| SockStream::Unix(s)),
+            };
+            match res {
+                Ok(s) => {
+                    if let SockStream::Tcp(t) = &s {
+                        let _ = t.set_nodelay(true);
+                    }
+                    return Ok(s);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(CamrError::Disconnected(
+                            "no worker connected within the handshake timeout".into(),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Drop for SockListener {
+    fn drop(&mut self) {
+        if let SockListener::Unix(_, path, _) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Dial a hub URL (`tcp://host:port` or `unix:///path`), with a short
+/// retry loop to ride out spawn/bind races.
+pub fn dial(url: &str) -> Result<SockStream> {
+    let connect = || -> std::io::Result<SockStream> {
+        if let Some(addr) = url.strip_prefix("tcp://") {
+            let s = TcpStream::connect(addr)?;
+            let _ = s.set_nodelay(true);
+            Ok(SockStream::Tcp(s))
+        } else if let Some(path) = url.strip_prefix("unix://") {
+            Ok(SockStream::Unix(UnixStream::connect(path)?))
+        } else {
+            Err(std::io::Error::other(format!(
+                "bad transport url {url} (want tcp://host:port or unix:///path)"
+            )))
+        }
+    };
+    let mut last = None;
+    for _ in 0..50 {
+        match connect() {
+            Ok(s) => return Ok(s),
+            Err(e) if e.kind() == std::io::ErrorKind::Other => {
+                return Err(CamrError::InvalidConfig(e.to_string()))
+            }
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    Err(CamrError::Disconnected(format!(
+        "could not dial {url}: {}",
+        last.map(|e| e.to_string()).unwrap_or_default()
+    )))
+}
+
+/// Read whole frames off a stream: feed the decoder until one frame is
+/// complete. `Ok(None)` = clean EOF. Read timeouts just keep polling;
+/// corrupt bytes surface as typed [`CamrError::Wire`] errors.
+pub fn read_frame_blocking(
+    stream: &mut SockStream,
+    decoder: &mut FrameDecoder,
+) -> Result<Option<Frame>> {
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        if let Some(f) = decoder.next_frame()? {
+            return Ok(Some(f));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                if decoder.buffered() > 0 {
+                    return Err(CamrError::Wire(format!(
+                        "connection closed mid-frame ({} bytes buffered)",
+                        decoder.buffered()
+                    )));
+                }
+                return Ok(None);
+            }
+            Ok(n) => decoder.feed(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Serialize reduced outputs into an `Outputs` frame payload:
+/// `u32 count`, then per entry `u32 job`, `u32 func`, `u32 len`, bytes.
+pub fn encode_outputs(entries: &[((JobId, FuncId), Vec<u8>)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + entries.iter().map(|(_, v)| 16 + v.len()).sum::<usize>());
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for ((job, func), v) in entries {
+        out.extend_from_slice(&(*job as u32).to_le_bytes());
+        out.extend_from_slice(&(*func as u32).to_le_bytes());
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        out.extend_from_slice(v);
+    }
+    out
+}
+
+/// Inverse of [`encode_outputs`]; typed error on truncation.
+pub fn decode_outputs(payload: &[u8]) -> Result<Vec<((JobId, FuncId), Vec<u8>)>> {
+    let err = || CamrError::Wire("truncated Outputs payload".into());
+    let rd = |b: &[u8], off: usize| -> Result<u32> {
+        if off + 4 > b.len() {
+            return Err(err());
+        }
+        Ok(u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]]))
+    };
+    let count = rd(payload, 0)? as usize;
+    let mut off = 4usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let job = rd(payload, off)? as JobId;
+        let func = rd(payload, off + 4)? as FuncId;
+        let len = rd(payload, off + 8)? as usize;
+        off += 12;
+        if off + len > payload.len() {
+            return Err(err());
+        }
+        out.push(((job, func), payload[off..off + len].to_vec()));
+        off += len;
+    }
+    if off != payload.len() {
+        return Err(CamrError::Wire("trailing bytes after Outputs entries".into()));
+    }
+    Ok(out)
+}
+
+/// Worker-side socket endpoint: one stream to the coordinator hub.
+///
+/// `send_delta` ships **one** frame regardless of the recipient count —
+/// the hub charges the ledger once and fans out — so the shared-link
+/// accounting matches the channel plane exactly. Encoded Δ payloads are
+/// written straight from their (pooled) backing buffers via
+/// [`write_frame`]: the zero-copy serialize path.
+pub struct SocketTransport {
+    id: ServerId,
+    stream: SockStream,
+    decoder: FrameDecoder,
+    /// Barriers crossed so far (= the next barrier's phase index).
+    barriers: usize,
+    /// Test hook: crash after crossing barrier `n` (see
+    /// [`FrameKind::Welcome`]).
+    die_after: Option<usize>,
+    /// Whether the die-after hook kills the whole process (subprocess
+    /// workers) or just drops the connection (in-thread workers).
+    hard_exit: bool,
+    crashed: bool,
+    aborted: bool,
+}
+
+impl SocketTransport {
+    /// Wrap a handshaken stream as worker `id`'s transport. The
+    /// `decoder` carries over any bytes buffered during the handshake.
+    pub fn new(
+        stream: SockStream,
+        decoder: FrameDecoder,
+        id: ServerId,
+        die_after: Option<usize>,
+        hard_exit: bool,
+    ) -> Self {
+        SocketTransport {
+            id,
+            stream,
+            decoder,
+            barriers: 0,
+            die_after,
+            hard_exit,
+            crashed: false,
+            aborted: false,
+        }
+    }
+
+    /// Whether the die-after test hook fired (thread mode only; the
+    /// caller should drop the connection without sending results).
+    pub fn crashed(&self) -> bool {
+        self.crashed
+    }
+
+    fn frame(&self, kind: FrameKind) -> Frame {
+        let mut f = Frame::new(kind);
+        f.sender = self.id as u32;
+        f
+    }
+
+    /// Ship the reduced outputs to the hub.
+    pub fn send_outputs(&mut self, entries: &[((JobId, FuncId), Vec<u8>)]) -> Result<()> {
+        let f = self.frame(FrameKind::Outputs);
+        let payload = encode_outputs(entries);
+        write_frame(&mut self.stream, &f, &payload)?;
+        Ok(())
+    }
+
+    /// Tell the hub this worker finished cleanly.
+    pub fn send_done(&mut self, map_invocations: usize) -> Result<()> {
+        let mut f = self.frame(FrameKind::Done);
+        f.seq = map_invocations as u64;
+        write_frame(&mut self.stream, &f, &[])?;
+        Ok(())
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send_delta(
+        &mut self,
+        seq: u64,
+        stage: Stage,
+        group: usize,
+        from: usize,
+        recipients: &[ServerId],
+        delta: &SharedBuf,
+    ) -> Result<()> {
+        let mut f = self.frame(FrameKind::Delta);
+        f.stage = stage;
+        f.seq = seq;
+        f.tag = group as u32;
+        f.extra = from as u32;
+        f.recipients = recipients.to_vec();
+        // One frame to the hub; the payload streams straight from the
+        // (pooled) encode buffer — no intermediate copy.
+        let mut hdr = Vec::with_capacity(HEADER_LEN + 4 * f.recipients.len());
+        encode_header(&mut hdr, &f, delta.len());
+        self.stream.write_all(&hdr)?;
+        delta.write_to(&mut self.stream)?;
+        Ok(())
+    }
+
+    fn send_fused(
+        &mut self,
+        seq: u64,
+        spec: usize,
+        receiver: ServerId,
+        value: Vec<u8>,
+    ) -> Result<()> {
+        let mut f = self.frame(FrameKind::Fused);
+        f.stage = Stage::Stage3;
+        f.seq = seq;
+        f.tag = spec as u32;
+        f.extra = receiver as u32;
+        write_frame(&mut self.stream, &f, &value)?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Option<Packet> {
+        loop {
+            match read_frame_blocking(&mut self.stream, &mut self.decoder) {
+                Ok(Some(f)) => match f.kind {
+                    FrameKind::Delta => {
+                        return Some(Packet::Delta {
+                            group: f.tag as usize,
+                            from: f.extra as usize,
+                            delta: SharedBuf::from(f.payload),
+                        })
+                    }
+                    FrameKind::Fused => {
+                        return Some(Packet::Fused { spec: f.tag as usize, value: f.payload })
+                    }
+                    FrameKind::Abort => {
+                        self.aborted = true;
+                        return None;
+                    }
+                    // Anything else mid-phase means the run is broken;
+                    // surface it as an abort.
+                    _ => {
+                        self.aborted = true;
+                        return None;
+                    }
+                },
+                // EOF or a read/decode error: the hub is gone.
+                Ok(None) | Err(_) => {
+                    self.aborted = true;
+                    return None;
+                }
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        let phase = self.barriers;
+        let mut f = self.frame(FrameKind::Barrier);
+        f.tag = phase as u32;
+        write_frame(&mut self.stream, &f, &[])
+            .map_err(|e| CamrError::Disconnected(format!("barrier {phase} send: {e}")))?;
+        loop {
+            match read_frame_blocking(&mut self.stream, &mut self.decoder) {
+                Ok(Some(g)) if g.kind == FrameKind::BarrierGo && g.tag == phase as u32 => break,
+                Ok(Some(g)) if g.kind == FrameKind::Abort => {
+                    self.aborted = true;
+                    return Err(CamrError::Runtime(format!(
+                        "worker {}: run aborted at barrier {phase}",
+                        self.id
+                    )));
+                }
+                Ok(Some(g)) => {
+                    // Data frames cannot be in flight while the hub holds
+                    // us at a barrier (the hub writes per-connection in
+                    // order and releases after all data is forwarded).
+                    self.aborted = true;
+                    return Err(CamrError::Wire(format!(
+                        "worker {}: unexpected {:?} frame at barrier {phase}",
+                        self.id, g.kind
+                    )));
+                }
+                Ok(None) => {
+                    self.aborted = true;
+                    return Err(CamrError::Disconnected(format!(
+                        "worker {}: hub closed the connection at barrier {phase}",
+                        self.id
+                    )));
+                }
+                Err(e) => {
+                    self.aborted = true;
+                    return Err(e);
+                }
+            }
+        }
+        self.barriers += 1;
+        if self.die_after == Some(phase) {
+            // Fault-injection hook: simulate a worker crash right after
+            // this barrier releases — mid-next-stage from the peers'
+            // point of view.
+            if self.hard_exit {
+                std::process::exit(101);
+            }
+            self.crashed = true;
+            self.stream.shutdown();
+            return Err(CamrError::Runtime(format!(
+                "worker {}: die-after-barrier {phase} test hook",
+                self.id
+            )));
+        }
+        Ok(())
+    }
+
+    fn fail(&mut self, err: &CamrError) {
+        self.aborted = true;
+        let mut f = self.frame(FrameKind::Failed);
+        f.tag = err.wire_code();
+        let msg = err.to_string();
+        // Best effort: the hub may already be gone.
+        let _ = write_frame(&mut self.stream, &f, msg.as_bytes());
+    }
+
+    fn aborted(&self) -> bool {
+        self.aborted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_payload_roundtrip() {
+        let entries = vec![((0usize, 3usize), vec![1u8, 2, 3]), ((7, 11), vec![]), ((2, 5), vec![9; 64])];
+        let payload = encode_outputs(&entries);
+        let back = decode_outputs(&payload).unwrap();
+        assert_eq!(back, entries);
+        // Truncations are typed errors, not panics.
+        for cut in [1, 3, 5, payload.len() - 1] {
+            assert!(matches!(decode_outputs(&payload[..cut]), Err(CamrError::Wire(_))));
+        }
+        assert_eq!(decode_outputs(&encode_outputs(&[])).unwrap(), vec![]);
+    }
+}

@@ -1,0 +1,193 @@
+//! The [`Transport`] trait: how a worker's packets move, factored out of
+//! the engines.
+//!
+//! A transport is one worker's endpoint onto the packet plane. The
+//! engine's protocol body (`coordinator::proto`) is generic over it, so
+//! the *same* code drives mpsc channels ([`InProcTransport`], the
+//! default) and sockets (`net::socket::SocketTransport`, over TCP or
+//! Unix-domain with workers in separate processes).
+//!
+//! ## Why ledger recording is transport-invariant
+//!
+//! The shared-link ledger is written by [`crate::net::BusRecorder`] at
+//! the moment a send is *initiated*, tagged with the deterministic
+//! schedule sequence number — never by observing what arrives where.
+//! In-process, the sender's own recorder charges the link and the
+//! payload fans out as `SharedBuf` clones; over sockets, the worker
+//! ships **one** frame to the coordinator hub, which charges the link
+//! once via the identical `BusRecorder` path and fans the frame out to
+//! the recipients. Either way a multicast is charged exactly once with
+//! the same stage/sender/recipients/bytes at the same sequence number,
+//! so [`crate::net::SharedBus::collect`] produces a byte-identical
+//! ledger on every transport — the golden-fixture tests cannot tell
+//! them apart.
+
+use crate::error::{CamrError, Result};
+use crate::net::{BusRecorder, Stage};
+use crate::shuffle::buf::SharedBuf;
+use crate::ServerId;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Barrier};
+use std::time::Duration;
+
+/// A packet exchanged worker-to-worker (through channels or frames).
+pub enum Packet {
+    /// Coded broadcast `Δ` from member position `from` of the flattened
+    /// stage-1/2 group with global index `group`. The payload is a
+    /// [`SharedBuf`]: in-process, one encoded buffer shared by every
+    /// recipient; over sockets, the received frame payload.
+    Delta {
+        /// Flattened group index (stage-1 groups then stage-2 groups).
+        group: usize,
+        /// Sender's member position within the group.
+        from: usize,
+        /// The encoded broadcast.
+        delta: SharedBuf,
+    },
+    /// Stage-3 fused unicast payload for `schedule.stage3[spec]`.
+    Fused {
+        /// Index into the schedule's stage-3 spec list.
+        spec: usize,
+        /// The fused aggregate.
+        value: Vec<u8>,
+    },
+}
+
+/// One worker's endpoint onto the packet plane.
+///
+/// Contract (what `coordinator::proto::run_round` relies on):
+/// - `send_delta` charges the shared link exactly once (multicast
+///   semantics) and delivers the payload to every listed recipient.
+/// - `recv` returns packets addressed to this worker; `None` means the
+///   run is aborting (peer failure / disconnect) and no further packet
+///   will come.
+/// - `barrier` blocks until every worker reached the same phase
+///   boundary; `Err` means the coordinator is gone and the worker must
+///   stop (in-process barriers never fail).
+/// - `fail` publishes this worker's error to the rest of the run.
+pub trait Transport {
+    /// Broadcast an encoded Δ to the other members of a coded group,
+    /// charging the shared link once at schedule position `seq`.
+    fn send_delta(
+        &mut self,
+        seq: u64,
+        stage: Stage,
+        group: usize,
+        from: usize,
+        recipients: &[ServerId],
+        delta: &SharedBuf,
+    ) -> Result<()>;
+
+    /// Send a stage-3 fused unicast, charging the link at `seq`.
+    fn send_fused(
+        &mut self,
+        seq: u64,
+        spec: usize,
+        receiver: ServerId,
+        value: Vec<u8>,
+    ) -> Result<()>;
+
+    /// Next packet addressed to this worker; `None` = run aborting.
+    fn recv(&mut self) -> Option<Packet>;
+
+    /// Meet the next phase barrier (map, stage 1, stage 2, stage 3).
+    fn barrier(&mut self) -> Result<()>;
+
+    /// Publish this worker's failure to the run.
+    fn fail(&mut self, err: &CamrError);
+
+    /// Whether a failure/abort has been observed (locally or from a peer).
+    fn aborted(&self) -> bool;
+}
+
+/// The default transport: per-worker mpsc channels inside one process,
+/// with [`std::sync::Barrier`] phase synchronization and a shared poison
+/// flag for failure propagation. This is exactly the packet plane the
+/// thread-per-worker engine always had, behind the trait.
+pub struct InProcTransport<'a> {
+    /// This worker's id.
+    id: ServerId,
+    inbox: mpsc::Receiver<Packet>,
+    peers: Vec<mpsc::Sender<Packet>>,
+    bus: BusRecorder,
+    gate: &'a Barrier,
+    failed: &'a AtomicBool,
+}
+
+impl<'a> InProcTransport<'a> {
+    /// Assemble one worker's channel endpoint.
+    pub fn new(
+        id: ServerId,
+        inbox: mpsc::Receiver<Packet>,
+        peers: Vec<mpsc::Sender<Packet>>,
+        bus: BusRecorder,
+        gate: &'a Barrier,
+        failed: &'a AtomicBool,
+    ) -> Self {
+        InProcTransport { id, inbox, peers, bus, gate, failed }
+    }
+}
+
+impl Transport for InProcTransport<'_> {
+    fn send_delta(
+        &mut self,
+        seq: u64,
+        stage: Stage,
+        group: usize,
+        from: usize,
+        recipients: &[ServerId],
+        delta: &SharedBuf,
+    ) -> Result<()> {
+        // Charge the shared link once, then fan out cheap SharedBuf
+        // clones (Arc bumps, not byte copies). A send to a worker that
+        // already exited is ignored — the failure path handles it.
+        self.bus.multicast(seq, stage, self.id, recipients.to_vec(), delta.len());
+        for &m in recipients {
+            let _ = self.peers[m].send(Packet::Delta { group, from, delta: delta.clone() });
+        }
+        Ok(())
+    }
+
+    fn send_fused(
+        &mut self,
+        seq: u64,
+        spec: usize,
+        receiver: ServerId,
+        value: Vec<u8>,
+    ) -> Result<()> {
+        self.bus.unicast(seq, Stage::Stage3, self.id, receiver, value.len());
+        let _ = self.peers[receiver].send(Packet::Fused { spec, value });
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Option<Packet> {
+        // Bail out (instead of blocking forever) once the shared failure
+        // flag is raised and the inbox has drained.
+        loop {
+            match self.inbox.recv_timeout(Duration::from_millis(10)) {
+                Ok(p) => return Some(p),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if self.failed.load(Ordering::SeqCst) {
+                        // Final non-blocking sweep: packets already in
+                        // flight must not be mistaken for missing ones.
+                        return self.inbox.try_recv().ok();
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.gate.wait();
+        Ok(())
+    }
+
+    fn fail(&mut self, _err: &CamrError) {
+        self.failed.store(true, Ordering::SeqCst);
+    }
+
+    fn aborted(&self) -> bool {
+        self.failed.load(Ordering::SeqCst)
+    }
+}

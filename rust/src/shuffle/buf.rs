@@ -263,6 +263,14 @@ impl SharedBuf {
     pub fn is_empty(&self) -> bool {
         self.as_ref().is_empty()
     }
+
+    /// Stream the payload into `w` straight from the (pooled) backing
+    /// store — the socket transport's zero-copy serialize path: an
+    /// encoded `Δ` goes from the pool buffer onto the wire without an
+    /// intermediate `Vec`.
+    pub fn write_to<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(self.as_ref())
+    }
 }
 
 impl AsRef<[u8]> for SharedBuf {
@@ -411,6 +419,22 @@ mod tests {
         let s: SharedBuf = vec![1u8, 2, 3].into();
         assert_eq!(s.as_ref(), &[1, 2, 3]);
         assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn write_to_streams_exact_bytes_from_any_backing() {
+        let pool = BufferPool::new();
+        let mut b = pool.acquire(13);
+        for (i, x) in b.as_mut_slice().iter_mut().enumerate() {
+            *x = i as u8;
+        }
+        let pooled: SharedBuf = b.into();
+        let mut sink = Vec::new();
+        pooled.write_to(&mut sink).unwrap();
+        assert_eq!(sink, (0..13u8).collect::<Vec<_>>());
+        let heap: SharedBuf = vec![9u8, 8, 7].into();
+        heap.write_to(&mut sink).unwrap();
+        assert_eq!(&sink[13..], &[9, 8, 7]);
     }
 
     #[test]

@@ -12,9 +12,35 @@ pub mod synth;
 pub mod wordcount;
 
 use crate::agg::{Aggregator, Value};
-use crate::config::SystemConfig;
+use crate::config::{SystemConfig, WorkloadKind};
 use crate::error::Result;
 use crate::{FuncId, JobId, SubfileId};
+
+/// Build the native (non-PJRT) workload for a [`WorkloadKind`]. This is
+/// the deterministic `(kind, cfg, seed) → workload` constructor both the
+/// CLI and socket-transport worker processes use, so every process of a
+/// distributed run reconstructs bit-identical data from the config text
+/// alone.
+pub fn build_native(
+    kind: WorkloadKind,
+    cfg: &SystemConfig,
+    seed: u64,
+) -> Result<Box<dyn Workload>> {
+    Ok(match kind {
+        WorkloadKind::WordCount => Box::new(wordcount::WordCountWorkload::synthetic(cfg, seed, 40)),
+        WorkloadKind::Synthetic => Box::new(synth::SyntheticWorkload::new(cfg, seed)),
+        WorkloadKind::Gradient => {
+            let params_per_func = cfg.value_bytes / 4;
+            Box::new(gradient::GradientWorkload::synthetic(cfg, seed, params_per_func, 4)?)
+        }
+        WorkloadKind::MatVec => {
+            let rows_per_func = cfg.value_bytes / 4;
+            let compute: std::sync::Arc<dyn matvec::ShardCompute> =
+                std::sync::Arc::new(matvec::NativeShardCompute);
+            Box::new(matvec::MatVecWorkload::synthetic(cfg, seed, rows_per_func, 8, compute)?)
+        }
+    })
+}
 
 /// A distributed computation with aggregatable intermediate values
 /// (paper Definition 1).

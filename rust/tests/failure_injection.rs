@@ -5,17 +5,19 @@
 //! hygiene invariant: after any failed run, every pooled buffer has
 //! been returned exactly once — never leaked, never double-released.
 
-use camr::config::SystemConfig;
+use camr::config::{SystemConfig, WorkloadKind};
 use camr::coordinator::engine::Engine;
 use camr::coordinator::master::Master;
-use camr::coordinator::parallel::ParallelEngine;
+use camr::coordinator::parallel::{ParallelEngine, TransportKind};
+use camr::coordinator::remote::{SocketOptions, WorkerSpec};
 use camr::coordinator::values::ValueKey;
 use camr::coordinator::worker::Worker;
 use camr::error::CamrError;
 use camr::shuffle::multicast::GroupPlan;
 use camr::shuffle::plan::ChunkSpec;
 use camr::workload::synth::SyntheticWorkload;
-use camr::workload::Workload;
+use camr::workload::{build_native, Workload};
+use std::time::{Duration, Instant};
 
 /// A workload whose map fails for one (job, subfile) — models a dead
 /// mapper kernel on one server.
@@ -325,4 +327,78 @@ fn reduce_before_shuffle_fails_cleanly() {
         w.reduce(&cfg, &master.placement, wl.aggregator(), 2, 0),
         Err(CamrError::MissingValue(_))
     ));
+}
+
+/// A socket-plane engine on Example 1's shape, wired for fault
+/// injection: worker 0 crashes right after crossing `die_after` (so
+/// mid-next-stage from its peers' point of view).
+fn socket_engine(opts_base: SocketOptions, die_after: usize, seed: u64) -> ParallelEngine {
+    let cfg = SystemConfig::new(3, 2, 2).unwrap();
+    let wl = build_native(WorkloadKind::Synthetic, &cfg, seed).unwrap();
+    let mut e = ParallelEngine::new(cfg, wl).unwrap();
+    let mut opts = opts_base;
+    opts.die_after_barrier = Some(die_after);
+    opts.disconnect_timeout = Duration::from_secs(5);
+    e.remote_spec = Some(WorkerSpec { kind: WorkloadKind::Synthetic, seed });
+    e.transport = TransportKind::Socket(opts);
+    e
+}
+
+#[test]
+fn socket_worker_vanishing_mid_stage_is_a_typed_disconnect() {
+    // Thread-mode workers over a Unix socket; worker 0 drops its
+    // connection right after the stage-1 barrier. The hub must surface
+    // a typed Disconnected — promptly, never a hang — and every pooled
+    // buffer must be back home when run() returns.
+    let mut e = socket_engine(SocketOptions::unix_threads(), 1, 0xBAD);
+    let t0 = Instant::now();
+    let err = e.run().unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(
+        matches!(err, CamrError::Disconnected(_)),
+        "expected Disconnected, got {err:?}"
+    );
+    // EOF detection is immediate; allow slack far below anything that
+    // would count as a hang but well above CI scheduling jitter.
+    assert!(elapsed < Duration::from_secs(30), "took {elapsed:?}");
+    let stats = e.pool_stats();
+    assert_eq!(stats.outstanding(), 0, "pooled buffers leaked: {stats:?}");
+    assert_eq!(stats.acquired, stats.released);
+}
+
+#[test]
+fn killed_worker_process_surfaces_within_timeout_not_a_hang() {
+    // Real subprocess workers over TCP; worker 0's process exits
+    // mid-run (after the map barrier). The peers are blocked waiting on
+    // its coded packets — the hub must still unblock everyone and
+    // return a typed Disconnected within the configured timeout.
+    let exe = std::path::PathBuf::from(env!("CARGO_BIN_EXE_camr"));
+    let mut e = socket_engine(SocketOptions::tcp_processes(exe), 0, 0xDEAD);
+    let t0 = Instant::now();
+    let err = e.run().unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(
+        matches!(err, CamrError::Disconnected(_)),
+        "expected Disconnected, got {err:?}"
+    );
+    assert!(elapsed < Duration::from_secs(60), "took {elapsed:?}");
+    assert_eq!(e.pool_stats().outstanding(), 0);
+}
+
+#[test]
+fn socket_engine_recovers_after_worker_crash() {
+    // A crashed run must not poison the engine: clearing the fault hook
+    // and rerunning on the same engine verifies cleanly, and the pool
+    // balance still holds across the failure/success pair.
+    let mut e = socket_engine(SocketOptions::unix_threads(), 1, 42);
+    assert!(e.run().is_err());
+    assert_eq!(e.pool_stats().outstanding(), 0);
+    let mut opts = SocketOptions::unix_threads();
+    opts.disconnect_timeout = Duration::from_secs(30);
+    e.transport = TransportKind::Socket(opts);
+    let out = e.run().expect("clean rerun after a crashed run");
+    assert!(out.verified);
+    let stats = e.pool_stats();
+    assert_eq!(stats.outstanding(), 0);
+    assert_eq!(stats.acquired, stats.released);
 }

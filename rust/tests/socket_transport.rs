@@ -1,0 +1,187 @@
+//! Ledger equality across every data plane: the socket transport must
+//! be indistinguishable from the serial engine *to the byte*.
+//!
+//! The checked-in golden fixture `rust/tests/golden/example1_ledger.txt`
+//! pins the serial schedule's shared-link ledger for
+//! `configs/example1.toml` (paper Example 1). This suite runs the same
+//! config over all four planes — serial, in-process channels, loopback
+//! TCP and a Unix-domain socket (the socket planes both with worker
+//! threads and with real `camr worker --connect` subprocesses) — and
+//! asserts every ledger is byte-identical to that fixture, including
+//! transmission *order*. The ledger records only sizes and routing, so
+//! the fixture (captured from `WordCountWorkload::example1`) also pins
+//! the deterministic `build_native` word-count workload the socket
+//! workers rebuild from the shipped config text: same shape, same
+//! schedule, same bytes.
+
+use camr::config::RunConfig;
+use camr::coordinator::engine::{Engine, RunOutcome};
+use camr::coordinator::parallel::{ParallelEngine, TransportKind};
+use camr::coordinator::remote::{SocketOptions, WorkerSpec};
+use camr::net::Bus;
+use camr::workload::build_native;
+use std::path::PathBuf;
+
+fn example1_config() -> RunConfig {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/example1.toml");
+    RunConfig::from_path(&path).expect("configs/example1.toml parses")
+}
+
+/// Render a ledger in the fixture's line format:
+/// `<stage> <sender> <bytes> <recipient,...>`.
+fn render(bus: &Bus) -> String {
+    let mut out = String::new();
+    for t in bus.ledger() {
+        let recipients: Vec<String> = t.recipients.iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!(
+            "{} {} {} {}\n",
+            t.stage,
+            t.sender,
+            t.bytes,
+            recipients.join(",")
+        ));
+    }
+    out
+}
+
+/// The fixture's data lines (comments stripped), newline-terminated.
+fn fixture_contents() -> String {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/example1_ledger.txt");
+    let text = std::fs::read_to_string(path).expect("golden fixture exists");
+    let mut out = String::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+/// Serial reference run on the deterministic `build_native` workload —
+/// the same workload socket workers reconstruct from the shipped config.
+fn run_serial() -> (Engine, RunOutcome) {
+    let rc = example1_config();
+    let wl = build_native(rc.workload, &rc.system, rc.seed).unwrap();
+    let mut e = Engine::new(rc.system, wl).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified, "serial reference failed verification");
+    (e, out)
+}
+
+/// One run over the given transport plane. `build_native` on both sides:
+/// in-process for the hub's verification oracle, and (for socket planes)
+/// rebuilt by each worker from the shipped `remote_spec`.
+fn run_over(transport: TransportKind) -> (ParallelEngine, RunOutcome) {
+    let rc = example1_config();
+    let wl = build_native(rc.workload, &rc.system, rc.seed).unwrap();
+    let mut e = ParallelEngine::new(rc.system, wl).unwrap();
+    e.remote_spec = Some(WorkerSpec {
+        kind: rc.workload,
+        seed: rc.seed,
+    });
+    e.transport = transport;
+    let out = e.run().unwrap();
+    assert!(out.verified, "run failed verification");
+    (e, out)
+}
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_camr"))
+}
+
+/// The four-plane equality matrix, against the fixture and each other.
+#[test]
+fn ledgers_byte_identical_across_all_four_planes() {
+    let fixture = fixture_contents();
+    assert!(!fixture.is_empty(), "fixture has data lines");
+
+    let (serial, sout) = run_serial();
+    assert_eq!(render(&serial.bus), fixture, "serial ledger != fixture");
+
+    let (chan, cout) = run_over(TransportKind::Chan);
+    assert_eq!(render(&chan.bus), fixture, "channel-plane ledger != fixture");
+
+    let (tcp, tout) = run_over(TransportKind::Socket(SocketOptions::tcp_threads()));
+    assert_eq!(render(&tcp.bus), fixture, "TCP ledger != fixture");
+
+    let (unix, uout) = run_over(TransportKind::Socket(SocketOptions::unix_threads()));
+    assert_eq!(render(&unix.bus), fixture, "Unix-socket ledger != fixture");
+
+    // Same measured loads everywhere, pinned to the paper's closed form
+    // for Example 1: stage bytes [6B, 6B, 12B] with B = value_bytes.
+    let b = example1_config().system.value_bytes;
+    for (label, out) in [
+        ("serial", &sout),
+        ("chan", &cout),
+        ("tcp", &tout),
+        ("unix", &uout),
+    ] {
+        assert_eq!(out.stage_bytes, [6 * b, 6 * b, 12 * b], "{label} stage bytes");
+        assert!(out.verified, "{label} unverified");
+    }
+}
+
+/// Reduced outputs (not just their byte counts) agree between the serial
+/// engine and a socket plane that shipped them back over the wire.
+#[test]
+fn socket_outputs_match_serial_outputs_value_for_value() {
+    let (serial, sout) = run_serial();
+    let (unix, uout) = run_over(TransportKind::Socket(SocketOptions::unix_threads()));
+    assert_eq!(sout.outputs, uout.outputs, "output counts differ");
+    let cfg = example1_config().system;
+    for j in 0..cfg.jobs() {
+        for f in 0..cfg.functions() {
+            assert_eq!(
+                serial.output(j, f),
+                unix.output(j, f),
+                "job {j} func {f} diverged over the socket plane"
+            );
+        }
+    }
+    assert_eq!(sout.map_invocations, uout.map_invocations);
+}
+
+/// Real subprocess workers (`camr worker --connect`) over both socket
+/// families still reproduce the fixture byte for byte.
+#[test]
+fn worker_subprocesses_reproduce_the_golden_ledger() {
+    let fixture = fixture_contents();
+    let (tcp, tout) = run_over(TransportKind::Socket(SocketOptions::tcp_processes(worker_exe())));
+    assert_eq!(render(&tcp.bus), fixture, "TCP subprocess ledger != fixture");
+    let (unix, uout) =
+        run_over(TransportKind::Socket(SocketOptions::unix_processes(worker_exe())));
+    assert_eq!(render(&unix.bus), fixture, "Unix subprocess ledger != fixture");
+    let b = example1_config().system.value_bytes;
+    assert_eq!(tout.stage_bytes, [6 * b, 6 * b, 12 * b]);
+    assert_eq!(uout.stage_bytes, [6 * b, 6 * b, 12 * b]);
+    // Subprocess workers really mapped: the Done frame carried the count.
+    assert!(tout.map_invocations > 0);
+    assert_eq!(tout.map_invocations, uout.map_invocations);
+}
+
+/// Socket runs are deterministic: ten consecutive runs over a socket
+/// plane produce the identical ledger despite scheduler and accept-order
+/// nondeterminism (the sequence-number sort restores canonical order).
+#[test]
+fn ten_socket_runs_are_ledger_deterministic() {
+    let reference = fixture_contents();
+    for i in 0..10 {
+        let (e, out) = run_over(TransportKind::Socket(SocketOptions::unix_threads()));
+        assert_eq!(render(&e.bus), reference, "run {i} ledger drifted");
+        assert!(out.verified);
+    }
+}
+
+/// The pooled data plane stays clean over sockets: every hub-side buffer
+/// acquired during the run is back in the pool when the run returns.
+#[test]
+fn socket_run_leaves_buffer_pool_clean() {
+    let (e, _) = run_over(TransportKind::Socket(SocketOptions::unix_threads()));
+    let stats = e.pool_stats();
+    assert_eq!(stats.outstanding(), 0, "pooled buffers leaked: {stats:?}");
+    assert_eq!(stats.acquired, stats.released);
+}

@@ -1,0 +1,270 @@
+//! Wire-format property suite for the socket transport's frame codec
+//! (`camr::net::frame`).
+//!
+//! The contract under test: encoding any frame and feeding the bytes to
+//! the incremental decoder — in chunks of any size, down to one byte at
+//! a time — reproduces the frame exactly; truncated or corrupt input is
+//! a typed [`CamrError::Wire`] error (or a clean "need more bytes"),
+//! **never** a panic and never a silently wrong frame.
+
+use camr::error::CamrError;
+use camr::net::frame::{
+    write_frame, Frame, FrameDecoder, FrameKind, HEADER_LEN, MAX_PAYLOAD, MAX_RECIPIENTS,
+};
+use camr::net::socket::{decode_outputs, encode_outputs};
+use camr::net::Stage;
+
+/// Deterministic pseudo-random byte (no RNG dependency needed).
+fn byte(i: usize, salt: u64) -> u8 {
+    let x = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(salt);
+    (x >> 32) as u8
+}
+
+fn frame_with(payload_len: usize, recipients: usize, salt: u64) -> Frame {
+    let mut f = Frame::new(FrameKind::Delta);
+    f.stage = match salt % 4 {
+        0 => Stage::Stage1,
+        1 => Stage::Stage2,
+        2 => Stage::Stage3,
+        _ => Stage::Baseline,
+    };
+    f.seq = salt.wrapping_mul(0x0101_0101_0101_0101);
+    f.job = (salt as u32).wrapping_mul(3);
+    f.sender = (salt as u32) % 64;
+    f.tag = salt as u32 ^ 0xA5A5;
+    f.extra = (salt as u32) % 7;
+    f.recipients = (0..recipients).map(|r| (r * 3 + salt as usize) % 4096).collect();
+    f.payload = (0..payload_len).map(|i| byte(i, salt)).collect();
+    f
+}
+
+fn assert_same(a: &Frame, b: &Frame) {
+    assert_eq!(a.kind, b.kind);
+    assert_eq!(a.stage, b.stage);
+    assert_eq!(a.seq, b.seq);
+    assert_eq!(a.job, b.job);
+    assert_eq!(a.sender, b.sender);
+    assert_eq!(a.tag, b.tag);
+    assert_eq!(a.extra, b.extra);
+    assert_eq!(a.recipients, b.recipients);
+    assert_eq!(a.payload, b.payload);
+}
+
+/// Payload sizes the transport actually produces: empty control frames,
+/// tiny and word-multiple Δs, page-sized values, and non-word-multiple
+/// odd sizes that catch alignment assumptions.
+const SIZES: [usize; 8] = [0, 1, 7, 8, 63, 1023, 4096, 4097];
+
+#[test]
+fn roundtrip_across_payload_sizes_and_recipient_counts() {
+    for (i, &len) in SIZES.iter().enumerate() {
+        for &nrecip in &[0usize, 1, 5, 17] {
+            let f = frame_with(len, nrecip, (i * 31 + nrecip) as u64 + 1);
+            let bytes = f.encode();
+            assert_eq!(bytes.len(), HEADER_LEN + 4 * nrecip + len);
+            let (g, used) = Frame::decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_same(&f, &g);
+        }
+    }
+}
+
+#[test]
+fn one_byte_at_a_time_feeding_decodes_identically() {
+    for (i, &len) in SIZES.iter().enumerate() {
+        let f = frame_with(len, 3, i as u64 + 101);
+        let bytes = f.encode();
+        let mut d = FrameDecoder::new();
+        for (fed, b) in bytes.iter().enumerate() {
+            // Before the last byte arrives the decoder must keep waiting,
+            // never guess.
+            if fed + 1 < bytes.len() {
+                assert!(d.next_frame().unwrap().is_none(), "frame produced early at {fed}");
+            }
+            d.feed(std::slice::from_ref(b));
+        }
+        let g = d.next_frame().unwrap().expect("whole frame fed");
+        assert_same(&f, &g);
+        assert_eq!(d.buffered(), 0);
+    }
+}
+
+#[test]
+fn arbitrary_chunk_boundaries_decode_identically() {
+    let f = frame_with(1023, 5, 7);
+    let bytes = f.encode();
+    for chunk in [2usize, 3, 13, 39, 40, 41, 1000] {
+        let mut d = FrameDecoder::new();
+        for c in bytes.chunks(chunk) {
+            d.feed(c);
+        }
+        let g = d.next_frame().unwrap().expect("whole frame fed");
+        assert_same(&f, &g);
+    }
+}
+
+#[test]
+fn back_to_back_frames_stream_through_one_decoder() {
+    // A worker connection carries many frames; splice several encodings
+    // together, feed them across an awkward boundary, and drain.
+    let frames: Vec<Frame> =
+        (0..5).map(|i| frame_with(SIZES[i % SIZES.len()], i % 4, i as u64 + 55)).collect();
+    let mut stream = Vec::new();
+    for f in &frames {
+        stream.extend_from_slice(&f.encode());
+    }
+    let mut d = FrameDecoder::new();
+    let (a, b) = stream.split_at(stream.len() / 2 + 1);
+    d.feed(a);
+    let mut got = Vec::new();
+    while let Some(f) = d.next_frame().unwrap() {
+        got.push(f);
+    }
+    d.feed(b);
+    while let Some(f) = d.next_frame().unwrap() {
+        got.push(f);
+    }
+    assert_eq!(got.len(), frames.len());
+    for (f, g) in frames.iter().zip(&got) {
+        assert_same(f, g);
+    }
+    assert_eq!(d.buffered(), 0);
+}
+
+#[test]
+fn truncation_is_wait_for_incremental_and_typed_error_for_one_shot() {
+    let f = frame_with(64, 3, 9);
+    let bytes = f.encode();
+    for cut in 0..bytes.len() {
+        // Incremental: a prefix is "not yet", never an error or a frame.
+        let mut d = FrameDecoder::new();
+        d.feed(&bytes[..cut]);
+        assert!(d.next_frame().unwrap().is_none(), "cut {cut}: produced a frame early");
+        // One-shot: the same prefix is a typed Wire error.
+        let err = Frame::decode(&bytes[..cut]).unwrap_err();
+        assert!(matches!(err, CamrError::Wire(_)), "cut {cut}: {err}");
+    }
+}
+
+#[test]
+fn corrupt_magic_is_a_typed_error_at_every_flip() {
+    let bytes = frame_with(16, 2, 3).encode();
+    for i in 0..4 {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x40;
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        assert!(
+            matches!(d.next_frame(), Err(CamrError::Wire(_))),
+            "magic byte {i} corruption not caught"
+        );
+    }
+}
+
+#[test]
+fn unknown_kind_stage_and_reserved_bytes_are_typed_errors() {
+    let bytes = frame_with(16, 2, 4).encode();
+    // Unknown frame kind (offset 4).
+    for bad_kind in [10u8, 11, 200, 255] {
+        let mut bad = bytes.clone();
+        bad[4] = bad_kind;
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))), "kind {bad_kind}");
+    }
+    // Unknown stage code (offset 5).
+    for bad_stage in [4u8, 9, 255] {
+        let mut bad = bytes.clone();
+        bad[5] = bad_stage;
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))), "stage {bad_stage}");
+    }
+    // Nonzero reserved bytes (offsets 6, 7).
+    for off in [6usize, 7] {
+        let mut bad = bytes.clone();
+        bad[off] = 1;
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))), "reserved {off}");
+    }
+}
+
+#[test]
+fn absurd_lengths_are_rejected_without_allocation() {
+    // A corrupt length field must be rejected from the header alone —
+    // decoding must not wait for (or try to allocate) gigabytes.
+    let bytes = frame_with(8, 1, 5).encode();
+    // Recipient count over the cap (offset 32).
+    let mut bad = bytes.clone();
+    bad[32..36].copy_from_slice(&(MAX_RECIPIENTS + 1).to_le_bytes());
+    let mut d = FrameDecoder::new();
+    d.feed(&bad);
+    assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))));
+    // Payload length over the cap (offset 36).
+    let mut bad = bytes.clone();
+    bad[36..40].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    let mut d = FrameDecoder::new();
+    d.feed(&bad);
+    assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))));
+    // u32::MAX in both: still a clean typed error.
+    let mut bad = bytes;
+    bad[32..36].copy_from_slice(&u32::MAX.to_le_bytes());
+    bad[36..40].copy_from_slice(&u32::MAX.to_le_bytes());
+    let mut d = FrameDecoder::new();
+    d.feed(&bad);
+    assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))));
+}
+
+#[test]
+fn corruption_after_a_good_frame_still_surfaces() {
+    // The decoder must stay strict mid-stream, not just on frame one.
+    let good = frame_with(32, 2, 6).encode();
+    let mut bad = frame_with(32, 2, 7).encode();
+    bad[0] ^= 0xFF;
+    let mut d = FrameDecoder::new();
+    d.feed(&good);
+    d.feed(&bad);
+    assert!(d.next_frame().unwrap().is_some(), "first frame is intact");
+    assert!(matches!(d.next_frame(), Err(CamrError::Wire(_))));
+}
+
+#[test]
+fn zero_copy_write_path_is_byte_identical_to_encode() {
+    // write_frame(header, payload) is the transport's streaming path for
+    // pooled buffers; it must serialize exactly like Frame::encode.
+    for &len in &SIZES {
+        let mut f = frame_with(len, 4, len as u64 + 13);
+        let owned = f.encode();
+        let payload = std::mem::take(&mut f.payload);
+        let mut wired = Vec::new();
+        write_frame(&mut wired, &f, &payload).unwrap();
+        assert_eq!(wired, owned, "payload len {len}");
+    }
+}
+
+#[test]
+fn outputs_payload_roundtrips_and_rejects_corruption() {
+    let entries: Vec<((usize, usize), Vec<u8>)> = vec![
+        ((0, 0), vec![]),
+        ((1, 5), vec![9u8; 64]),
+        ((3, 2), (0..63u8).collect()),
+    ];
+    let payload = encode_outputs(&entries);
+    assert_eq!(decode_outputs(&payload).unwrap(), entries);
+    // Truncation anywhere is a typed Wire error, not a panic.
+    for cut in 0..payload.len() {
+        assert!(
+            matches!(decode_outputs(&payload[..cut]), Err(CamrError::Wire(_))),
+            "cut {cut} accepted"
+        );
+    }
+    // Trailing garbage is rejected too.
+    let mut long = payload.clone();
+    long.push(0);
+    assert!(matches!(decode_outputs(&long), Err(CamrError::Wire(_))));
+    // An inflated entry count over-reads into a typed error.
+    let mut inflated = payload;
+    inflated[0..4].copy_from_slice(&4u32.to_le_bytes());
+    assert!(matches!(decode_outputs(&inflated), Err(CamrError::Wire(_))));
+}
