@@ -544,7 +544,8 @@ mod tests {
 
     #[test]
     fn outputs_payload_roundtrip() {
-        let entries = vec![((0usize, 3usize), vec![1u8, 2, 3]), ((7, 11), vec![]), ((2, 5), vec![9; 64])];
+        let entries =
+            vec![((0usize, 3usize), vec![1u8, 2, 3]), ((7, 11), vec![]), ((2, 5), vec![9; 64])];
         let payload = encode_outputs(&entries);
         let back = decode_outputs(&payload).unwrap();
         assert_eq!(back, entries);
