@@ -110,7 +110,7 @@ fn main() {
     }
 
     let report = Json::obj(vec![
-        ("bench", Json::Str("shuffle_data_plane".to_string())),
+        ("bench", Json::Str("xor_throughput".to_string())),
         ("quick", Json::Bool(quick)),
         ("xor", Json::Arr(xor_rows)),
         (
