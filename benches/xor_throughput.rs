@@ -1,17 +1,24 @@
-//! XOR and buffer-pool throughput: the word-wise hot path vs the naive
-//! per-byte reference, pool acquire/release vs fresh allocation, and a
-//! pooled-vs-unpooled end-to-end shuffle comparison.
+//! Shuffle data-plane throughput in GB/s: every available XOR kernel
+//! tier (bytewise oracle, portable u64, AVX2/NEON when the CPU has
+//! them) × buffer sizes from 4 KiB to 256 MiB × pooled-vs-fresh buffer
+//! checkout, plus the streamed huge-payload digest and a pooled
+//! vs unpooled end-to-end shuffle.
 //!
 //! Besides the human-readable BENCH lines, this bench writes
 //! `BENCH_shuffle.json` (machine-readable) so later PRs can diff the
 //! shuffle data plane's throughput trajectory and catch regressions.
+//! `--quick` (or `CAMR_BENCH_QUICK=1`) caps sizes at 16 MiB and drops
+//! iteration counts — the cap is printed, never silent.
 
 use camr::config::SystemConfig;
 use camr::coordinator::engine::Engine;
-use camr::shuffle::buf::{self, BufferPool};
+use camr::shuffle::buf::{self, BufferPool, XorKernel};
 use camr::util::bench::Bench;
 use camr::util::json::Json;
+use camr::workload::stream::{StreamedWorkload, SyntheticSource};
 use camr::workload::synth::SyntheticWorkload;
+use camr::workload::Workload;
+use std::sync::Arc;
 
 /// Bytes per nanosecond == GB/s.
 fn gbps(bytes: usize, mean_ns: f64) -> f64 {
@@ -27,59 +34,125 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("CAMR_BENCH_QUICK").is_ok();
 
-    println!("== Word-wise vs per-byte XOR (xor_into vs xor_into_bytewise) ==\n");
-    let sizes: &[(usize, &str)] =
-        &[(4 << 10, "4KiB"), (64 << 10, "64KiB"), (1 << 20, "1MiB"), (4 << 20, "4MiB")];
+    let kernels = buf::available_kernels();
+    let active = buf::active_kernel();
+    println!(
+        "== XOR kernel stack: {} available, dispatch -> {} ==\n",
+        kernels.iter().map(|k| k.label()).collect::<Vec<_>>().join(" "),
+        active.label()
+    );
+
+    let all_sizes: &[(usize, &str)] = &[
+        (4 << 10, "4KiB"),
+        (64 << 10, "64KiB"),
+        (1 << 20, "1MiB"),
+        (16 << 20, "16MiB"),
+        (256 << 20, "256MiB"),
+    ];
+    let sizes: &[(usize, &str)] = if quick { &all_sizes[..4] } else { all_sizes };
+    if quick {
+        println!("(--quick: sizes capped at 16MiB; run without --quick for 256MiB rows)\n");
+    }
+
+    // kernel × size XOR rows. Buffers come from the pool (so ≥1MiB rows
+    // exercise the large size class) but checkout stays outside the
+    // timed closure — these rows are pure XOR throughput.
+    let pool = BufferPool::new();
     let mut xor_rows = Vec::new();
     for &(n, label) in sizes {
         let src: Vec<u8> = (0..n).map(|i| (i.wrapping_mul(31) + 7) as u8).collect();
-        let mut dst = vec![0u8; n];
-        let word_ns = b.run(&format!("xor_wordwise_{label}"), || {
-            buf::xor_into(&mut dst, &src).unwrap();
-            dst[0]
+        let mut dst = pool.acquire_unzeroed(n);
+        let mut byte_ns = f64::NAN;
+        let mut per_kernel = Vec::new();
+        for &kernel in &kernels {
+            let d = dst.as_mut_slice();
+            let mean_ns = b.run(&format!("xor_{}_{label}", kernel.label()), || {
+                buf::xor_into_with(kernel, d, &src).unwrap();
+                d[0]
+            });
+            if kernel == XorKernel::Bytewise {
+                byte_ns = mean_ns;
+            }
+            per_kernel.push((kernel, mean_ns));
+        }
+        println!();
+        for (kernel, mean_ns) in per_kernel {
+            let speedup = if mean_ns > 0.0 { byte_ns / mean_ns } else { 0.0 };
+            println!(
+                "  {label} {:>12}: {:7.2} GB/s ({speedup:.1}x per-byte){}",
+                kernel.label(),
+                gbps(n, mean_ns),
+                if kernel == active { "  <- dispatched" } else { "" }
+            );
+            xor_rows.push(Json::obj(vec![
+                ("kernel", Json::Str(kernel.label().to_string())),
+                ("label", Json::Str(label.to_string())),
+                ("bytes", Json::UInt(n as u128)),
+                ("mean_ns", Json::Num(mean_ns)),
+                ("gbps", Json::Num(gbps(n, mean_ns))),
+                ("speedup_vs_bytewise", Json::Num(speedup)),
+                ("dispatched", Json::Bool(kernel == active)),
+            ]));
+        }
+        println!();
+    }
+
+    // Pool checkout vs fresh allocation, small class and large class.
+    println!("== Buffer checkout: pool vs fresh allocation ==\n");
+    let mut pool_rows = Vec::new();
+    let large = sizes.last().unwrap().0;
+    for &(n, label) in &[(1usize << 20, "1MiB"), (large, sizes.last().unwrap().1)] {
+        let pool = BufferPool::new();
+        drop(pool.acquire_unzeroed(n)); // warm the free list
+        // The engines' hot paths use acquire_unzeroed (encode fill(0)s
+        // and decode copy_from_slices before reading), so that is the
+        // production number; the zeroing acquire is reported alongside.
+        let pool_ns = b.run(&format!("pool_acquire_unzeroed_{label}"), || {
+            let mut buf = pool.acquire_unzeroed(n);
+            buf.as_mut_slice()[0] = 1;
+            buf.len()
         });
-        let byte_ns = b.run(&format!("xor_bytewise_{label}"), || {
-            buf::xor_into_bytewise(&mut dst, &src).unwrap();
-            dst[0]
+        let pool_zeroed_ns = b.run(&format!("pool_acquire_zeroed_{label}"), || {
+            let buf = pool.acquire(n);
+            buf.len()
         });
-        let speedup = if word_ns > 0.0 { byte_ns / word_ns } else { 0.0 };
-        println!(
-            "  {label}: word-wise {:.2} GB/s, per-byte {:.2} GB/s -> {speedup:.1}x\n",
-            gbps(n, word_ns),
-            gbps(n, byte_ns)
-        );
-        xor_rows.push(Json::obj(vec![
+        let alloc_ns = b.run(&format!("fresh_vec_alloc_{label}"), || {
+            let mut v = vec![0u8; n];
+            v[0] = 1;
+            v.len()
+        });
+        println!();
+        pool_rows.push(Json::obj(vec![
             ("label", Json::Str(label.to_string())),
             ("bytes", Json::UInt(n as u128)),
-            ("wordwise_mean_ns", Json::Num(word_ns)),
-            ("bytewise_mean_ns", Json::Num(byte_ns)),
-            ("wordwise_gbps", Json::Num(gbps(n, word_ns))),
-            ("speedup", Json::Num(speedup)),
+            ("acquire_unzeroed_mean_ns", Json::Num(pool_ns)),
+            ("acquire_zeroed_mean_ns", Json::Num(pool_zeroed_ns)),
+            ("fresh_alloc_mean_ns", Json::Num(alloc_ns)),
         ]));
     }
 
-    println!("== Buffer pool vs fresh allocation (1 MiB buffers) ==\n");
-    let pool = BufferPool::new();
-    drop(pool.acquire(1 << 20)); // warm the free list
-    // The engines' hot paths use acquire_unzeroed (encode fill(0)s and
-    // decode copy_from_slices before reading), so that is the
-    // production number; the zeroing acquire is reported alongside.
-    let pool_ns = b.run("pool_acquire_unzeroed_1MiB", || {
-        let mut buf = pool.acquire_unzeroed(1 << 20);
-        // Touch the buffer like the encoder does (first word write).
-        buf.as_mut_slice()[0] = 1;
-        buf.len()
+    // Streamed huge-payload digest: GB/s through one pooled chunk.
+    println!("== Streamed map digest (subfile folded chunk-at-a-time) ==\n");
+    let sub_bytes: u64 = if quick { 4 << 20 } else { 64 << 20 };
+    let chunk_bytes: usize = 1 << 20;
+    let cfg = SystemConfig::with_options(3, 2, 1, 1, 64).unwrap();
+    let src = Arc::new(SyntheticSource::new(7, sub_bytes * cfg.subfiles() as u64));
+    let wl = StreamedWorkload::new(&cfg, src, sub_bytes, chunk_bytes, 7).unwrap();
+    let stream_ns = b.run("streamed_map_subfile", || {
+        wl.map_subfile(0, 0).unwrap().len()
     });
-    let pool_zeroed_ns = b.run("pool_acquire_zeroed_1MiB", || {
-        let buf = pool.acquire(1 << 20);
-        buf.len()
-    });
-    let alloc_ns = b.run("fresh_vec_alloc_1MiB", || {
-        let mut v = vec![0u8; 1 << 20];
-        v[0] = 1;
-        v.len()
-    });
-    println!();
+    println!(
+        "  {} MiB subfile, {} MiB chunks: {:.2} GB/s\n",
+        sub_bytes >> 20,
+        chunk_bytes >> 20,
+        gbps(sub_bytes as usize, stream_ns)
+    );
+    let stream_row = Json::obj(vec![
+        ("subfile_bytes", Json::UInt(sub_bytes as u128)),
+        ("chunk_bytes", Json::UInt(chunk_bytes as u128)),
+        ("mean_ns", Json::Num(stream_ns)),
+        ("gbps", Json::Num(gbps(sub_bytes as usize, stream_ns))),
+    ]);
 
     println!("== End-to-end shuffle: pooled vs unpooled data plane ==\n");
     let mut e2e_rows = Vec::new();
@@ -112,15 +185,14 @@ fn main() {
     let report = Json::obj(vec![
         ("bench", Json::Str("xor_throughput".to_string())),
         ("quick", Json::Bool(quick)),
-        ("xor", Json::Arr(xor_rows)),
+        ("dispatched_kernel", Json::Str(active.label().to_string())),
         (
-            "pool",
-            Json::obj(vec![
-                ("acquire_unzeroed_1MiB_mean_ns", Json::Num(pool_ns)),
-                ("acquire_zeroed_1MiB_mean_ns", Json::Num(pool_zeroed_ns)),
-                ("fresh_alloc_1MiB_mean_ns", Json::Num(alloc_ns)),
-            ]),
+            "available_kernels",
+            Json::Arr(kernels.iter().map(|k| Json::Str(k.label().to_string())).collect()),
         ),
+        ("xor", Json::Arr(xor_rows)),
+        ("pool", Json::Arr(pool_rows)),
+        ("stream", stream_row),
         ("e2e", Json::Arr(e2e_rows)),
     ]);
     let path = "BENCH_shuffle.json";

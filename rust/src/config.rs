@@ -145,6 +145,9 @@ pub enum WorkloadKind {
     Gradient,
     /// Random opaque byte values (load/stress testing).
     Synthetic,
+    /// Chunk-streamed huge subfiles: maps fold over pooled chunks
+    /// instead of materializing whole subfiles (hundreds-of-MB regime).
+    Streamed,
 }
 
 impl WorkloadKind {
@@ -157,6 +160,7 @@ impl WorkloadKind {
             WorkloadKind::MatVec => "mat_vec",
             WorkloadKind::Gradient => "gradient",
             WorkloadKind::Synthetic => "synthetic",
+            WorkloadKind::Streamed => "streamed",
         }
     }
 
@@ -167,9 +171,11 @@ impl WorkloadKind {
             "mat_vec" | "matvec" => WorkloadKind::MatVec,
             "gradient" => WorkloadKind::Gradient,
             "synthetic" => WorkloadKind::Synthetic,
+            "streamed" => WorkloadKind::Streamed,
             other => {
                 return Err(CamrError::InvalidConfig(format!(
-                    "unknown workload {other} (word_count | mat_vec | gradient | synthetic)"
+                    "unknown workload {other} \
+                     (word_count | mat_vec | gradient | synthetic | streamed)"
                 )))
             }
         })
@@ -500,6 +506,7 @@ mod tests {
             WorkloadKind::MatVec,
             WorkloadKind::Gradient,
             WorkloadKind::Synthetic,
+            WorkloadKind::Streamed,
         ] {
             assert_eq!(WorkloadKind::parse(kind.name()).unwrap(), kind);
         }

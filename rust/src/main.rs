@@ -129,7 +129,9 @@ USAGE:
   camr ccdc     [--servers N] [--k N]
   camr timemodel [--k N] [--q N] [--gamma N] [--value-bytes N]
 
-KIND: word_count | mat_vec | gradient | synthetic
+KIND: word_count | mat_vec | gradient | synthetic | streamed
+      (streamed reads CAMR_STREAM_SUBFILE_BYTES / CAMR_STREAM_CHUNK_BYTES
+       / CAMR_STREAM_FILE for its huge-payload geometry)
 
 batch executes each scheme's *entire* job set end to end through the
 multi-job batch runtime (persistent engine, pooled buffers, pipelined

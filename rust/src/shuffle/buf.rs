@@ -1,5 +1,32 @@
-//! Reusable buffer arena and word-wise XOR — the shuffle data plane's
-//! allocation-free hot path (§Perf).
+//! Reusable buffer arena and the runtime-dispatched XOR kernel stack —
+//! the shuffle data plane's allocation-free hot path (§Perf).
+//!
+//! ## The kernel stack
+//!
+//! Every coded `Δ` in Algorithm 2 is built and cancelled with XOR, so
+//! the per-byte XOR cost is the constant factor that decides whether
+//! the paper's load gains survive at scale. [`xor_into`] therefore
+//! dispatches, once per process, to the widest kernel the hardware
+//! offers:
+//!
+//! | tier | kernel | where |
+//! |------|--------|-------|
+//! | [`XorKernel::Avx2`] | `_mm256_xor_si256`, 4×32 B unrolled | x86/x86_64, runtime-detected |
+//! | [`XorKernel::Neon`] | `veorq_u8`, 4×16 B unrolled | aarch64, runtime-detected |
+//! | [`XorKernel::PortableU64`] | safe `u64` words + byte tail | everywhere (the forced tier) |
+//! | [`XorKernel::Bytewise`] | one byte at a time | correctness oracle only |
+//!
+//! Detection runs exactly once (cached in an atomic); every
+//! [`xor_into`]/[`xor_fold`] call after that is a load + indirect
+//! branch. The SIMD tiers use unaligned loads, because the encode path
+//! XORs packets sliced at arbitrary `idx·plen` offsets out of chunk
+//! buffers — alignment is never assumed, only [`BufferPool`]'s 8-byte
+//! backing guarantee. [`xor_into_bytewise`] is kept verbatim as the
+//! oracle the differential tests check every tier against bit-for-bit,
+//! and [`xor_into_with`] lets tests and benches target one tier
+//! explicitly. Setting `CAMR_FORCE_PORTABLE=1` before the first XOR
+//! pins the dispatch to the portable tier (CI runs the whole suite that
+//! way so runners without AVX2 stay covered).
 //!
 //! ## Why a pool
 //!
@@ -17,7 +44,7 @@
 //!
 //! ```text
 //! acquire (zeroed, word-aligned)
-//!    → encode Δ in place (xor_into on u64 lanes)
+//!    → encode Δ in place (dispatched XOR kernel)
 //!    → charge bus with Δ.len()          (ledger bytes are unchanged)
 //!    → share with decoders (SharedBuf: one payload, N readers)
 //!    → decode cancels known packets (pooled scratch)
@@ -29,19 +56,127 @@
 //! failure-injection tests use to prove it (released never exceeds
 //! acquired, and everything outstanding returns even on error paths).
 //!
+//! ## Size classes: small Δs vs streamed chunks
+//!
+//! The streaming workloads (`workload::stream`) checkout chunks in the
+//! hundreds-of-MB regime through the same pool that recycles 64-byte Δ
+//! packets. One undifferentiated free list would let a 256 MiB backing
+//! get pinned under a 64 B checkout forever (or shrink-grow-thrash).
+//! Buffers at or above [`LARGE_CLASS_BYTES`] therefore recycle through
+//! a separate large-class list: acquired first-fit by capacity, and
+//! retained at most [`LARGE_RETAIN`] deep — releases beyond that free
+//! their memory immediately (counted in [`PoolStats::dropped`]), so a
+//! streaming run's high-water mark is bounded by its concurrency, not
+//! its history.
+//!
 //! ## Alignment
 //!
-//! Backing stores are `Vec<u64>`, so every buffer starts on an 8-byte
-//! boundary and [`xor_into`] streams whole `u64` lanes with a byte tail.
-//! The byte-wise reference implementation ([`xor_into_bytewise`]) is
-//! kept for the property tests and the `xor_throughput` bench.
+//! Backing stores are `Vec<u64>`, so every pooled buffer starts on an
+//! 8-byte boundary. The kernels do not require it (unaligned loads),
+//! but word-aligned starts keep the portable tier on its fast path.
 
 use crate::error::{CamrError, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// XOR `src` into `dst` in place on `u64` lanes with a byte tail.
-/// Lengths must match. This is the shuffle hot path.
-pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
+// ---------------------------------------------------------------------------
+// XOR kernel stack
+// ---------------------------------------------------------------------------
+
+/// One tier of the XOR kernel stack (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XorKernel {
+    /// Per-byte reference — the correctness oracle.
+    Bytewise,
+    /// Safe portable `u64`-lane path with a byte tail.
+    PortableU64,
+    /// 256-bit AVX2 path (x86/x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON path (aarch64, runtime-detected).
+    Neon,
+}
+
+impl XorKernel {
+    /// Stable label used in bench reports and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            XorKernel::Bytewise => "bytewise",
+            XorKernel::PortableU64 => "portable_u64",
+            XorKernel::Avx2 => "avx2",
+            XorKernel::Neon => "neon",
+        }
+    }
+}
+
+/// Cached dispatch decision: 0 = undecided, else `kernel_code`.
+static ACTIVE_KERNEL: AtomicU8 = AtomicU8::new(0);
+
+fn kernel_code(k: XorKernel) -> u8 {
+    match k {
+        XorKernel::Bytewise => 1,
+        XorKernel::PortableU64 => 2,
+        XorKernel::Avx2 => 3,
+        XorKernel::Neon => 4,
+    }
+}
+
+/// Pick the widest kernel the hardware offers (or the portable tier
+/// when forced). Pure function of the CPU + the flag, so tests can
+/// exercise the override without touching process environment.
+fn choose_kernel(force_portable: bool) -> XorKernel {
+    if force_portable {
+        return XorKernel::PortableU64;
+    }
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    if is_x86_feature_detected!("avx2") {
+        return XorKernel::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return XorKernel::Neon;
+    }
+    XorKernel::PortableU64
+}
+
+/// The kernel [`xor_into`] dispatches to, deciding (and caching) it on
+/// first use. Honors `CAMR_FORCE_PORTABLE=1` (any value other than
+/// empty or `0`) read at decision time.
+pub fn active_kernel() -> XorKernel {
+    match ACTIVE_KERNEL.load(Ordering::Relaxed) {
+        1 => XorKernel::Bytewise,
+        2 => XorKernel::PortableU64,
+        3 => XorKernel::Avx2,
+        4 => XorKernel::Neon,
+        _ => {
+            let force = match std::env::var_os("CAMR_FORCE_PORTABLE") {
+                Some(v) => !v.is_empty() && v != "0",
+                None => false,
+            };
+            let k = choose_kernel(force);
+            ACTIVE_KERNEL.store(kernel_code(k), Ordering::Relaxed);
+            k
+        }
+    }
+}
+
+/// Every kernel the current CPU can execute, oracle first. Benches
+/// iterate this to produce one throughput row per tier.
+pub fn available_kernels() -> Vec<XorKernel> {
+    let mut ks = Vec::with_capacity(4);
+    ks.push(XorKernel::Bytewise);
+    ks.push(XorKernel::PortableU64);
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    if is_x86_feature_detected!("avx2") {
+        ks.push(XorKernel::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        ks.push(XorKernel::Neon);
+    }
+    ks
+}
+
+fn check_len(dst: &[u8], src: &[u8]) -> Result<()> {
     if dst.len() != src.len() {
         return Err(CamrError::ShuffleDecode(format!(
             "xor length mismatch: {} vs {}",
@@ -49,22 +184,63 @@ pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
             src.len()
         )));
     }
-    let n = dst.len();
-    let words = n / 8;
-    for i in 0..words {
-        let o = i * 8;
-        let a = u64::from_ne_bytes(dst[o..o + 8].try_into().unwrap());
-        let b = u64::from_ne_bytes(src[o..o + 8].try_into().unwrap());
-        dst[o..o + 8].copy_from_slice(&(a ^ b).to_ne_bytes());
-    }
-    for i in words * 8..n {
-        dst[i] ^= src[i];
+    Ok(())
+}
+
+/// XOR `src` into `dst` in place through the dispatched kernel.
+/// Lengths must match. This is the shuffle hot path: every Δ encode and
+/// decode in the serial, channel, and socket planes lands here.
+pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
+    check_len(dst, src)?;
+    match active_kernel() {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        // SAFETY: active_kernel returns Avx2 only after runtime detection.
+        XorKernel::Avx2 => unsafe { avx2::xor_into(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_kernel returns Neon only after runtime detection.
+        XorKernel::Neon => unsafe { neon::xor_into(dst, src) },
+        XorKernel::Bytewise => xor_bytes(dst, src),
+        _ => xor_u64_lanes(dst, src),
     }
     Ok(())
 }
 
-/// XOR every slice of `srcs` into `acc` in place (word-wise). All
-/// lengths must equal `acc.len()`.
+/// XOR `src` into `dst` through one explicit kernel tier — the handle
+/// the differential tests and the throughput bench use to pin a tier.
+/// Errors if the tier is not available on this CPU.
+pub fn xor_into_with(kernel: XorKernel, dst: &mut [u8], src: &[u8]) -> Result<()> {
+    check_len(dst, src)?;
+    match kernel {
+        XorKernel::Bytewise => xor_bytes(dst, src),
+        XorKernel::PortableU64 => xor_u64_lanes(dst, src),
+        XorKernel::Avx2 => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            if is_x86_feature_detected!("avx2") {
+                // SAFETY: detection just confirmed AVX2 support.
+                unsafe { avx2::xor_into(dst, src) };
+                return Ok(());
+            }
+            return Err(CamrError::InvalidConfig(
+                "avx2 XOR kernel is not available on this CPU".into(),
+            ));
+        }
+        XorKernel::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                // SAFETY: detection just confirmed NEON support.
+                unsafe { neon::xor_into(dst, src) };
+                return Ok(());
+            }
+            return Err(CamrError::InvalidConfig(
+                "neon XOR kernel is not available on this CPU".into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// XOR every slice of `srcs` into `acc` in place (dispatched kernel).
+/// All lengths must equal `acc.len()`.
 pub fn xor_fold(acc: &mut [u8], srcs: &[&[u8]]) -> Result<()> {
     for s in srcs {
         xor_into(acc, s)?;
@@ -72,34 +248,146 @@ pub fn xor_fold(acc: &mut [u8], srcs: &[&[u8]]) -> Result<()> {
     Ok(())
 }
 
-/// Naive per-byte XOR — the reference the property tests check
-/// [`xor_into`] against bit-for-bit, and the baseline the
+/// Naive per-byte XOR — the reference the property tests check every
+/// dispatched tier against bit-for-bit, and the baseline the
 /// `xor_throughput` bench beats.
 pub fn xor_into_bytewise(dst: &mut [u8], src: &[u8]) -> Result<()> {
-    if dst.len() != src.len() {
-        return Err(CamrError::ShuffleDecode(format!(
-            "xor length mismatch: {} vs {}",
-            dst.len(),
-            src.len()
-        )));
-    }
+    check_len(dst, src)?;
+    xor_bytes(dst, src);
+    Ok(())
+}
+
+#[inline]
+fn xor_bytes(dst: &mut [u8], src: &[u8]) {
     for (d, s) in dst.iter_mut().zip(src) {
         *d ^= s;
     }
-    Ok(())
 }
+
+/// Portable tier: whole `u64` lanes with a byte tail. Also the
+/// sub-vector tail of both SIMD tiers.
+#[inline]
+fn xor_u64_lanes(dst: &mut [u8], src: &[u8]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let split = dst.len() / 8 * 8;
+    let (d_words, d_tail) = dst.split_at_mut(split);
+    let (s_words, s_tail) = src.split_at(split);
+    for (d, s) in d_words.chunks_exact_mut(8).zip(s_words.chunks_exact(8)) {
+        let a = u64::from_ne_bytes((&*d).try_into().unwrap());
+        let b = u64::from_ne_bytes(s.try_into().unwrap());
+        d.copy_from_slice(&(a ^ b).to_ne_bytes());
+    }
+    for (d, s) in d_tail.iter_mut().zip(s_tail) {
+        *d ^= s;
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86")]
+    use core::arch::x86::{__m256i, _mm256_loadu_si256, _mm256_storeu_si256, _mm256_xor_si256};
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::{__m256i, _mm256_loadu_si256, _mm256_storeu_si256, _mm256_xor_si256};
+
+    /// XOR `src` into `dst` on 32-byte AVX2 lanes, 4× unrolled (128 B
+    /// per main-loop iteration), unaligned loads/stores throughout; the
+    /// sub-vector tail goes through the portable `u64` path.
+    ///
+    /// # Safety
+    ///
+    /// The CPU must support AVX2 (runtime-detect before calling) and
+    /// `dst.len() == src.len()` (checked by every public caller).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xor_into(dst: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let d = dst.as_mut_ptr();
+        let s = src.as_ptr();
+        let mut o = 0usize;
+        while o + 128 <= n {
+            for k in 0..4usize {
+                let p = o + 32 * k;
+                let a = _mm256_loadu_si256(d.add(p).cast::<__m256i>());
+                let b = _mm256_loadu_si256(s.add(p).cast::<__m256i>());
+                _mm256_storeu_si256(d.add(p).cast::<__m256i>(), _mm256_xor_si256(a, b));
+            }
+            o += 128;
+        }
+        while o + 32 <= n {
+            let a = _mm256_loadu_si256(d.add(o).cast::<__m256i>());
+            let b = _mm256_loadu_si256(s.add(o).cast::<__m256i>());
+            _mm256_storeu_si256(d.add(o).cast::<__m256i>(), _mm256_xor_si256(a, b));
+            o += 32;
+        }
+        super::xor_u64_lanes(&mut dst[o..], &src[o..]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::{veorq_u8, vld1q_u8, vst1q_u8};
+
+    /// XOR `src` into `dst` on 16-byte NEON lanes, 4× unrolled (64 B per
+    /// main-loop iteration); the sub-vector tail goes through the
+    /// portable `u64` path.
+    ///
+    /// # Safety
+    ///
+    /// NEON must be available (runtime-detect before calling; it is
+    /// baseline on aarch64) and `dst.len() == src.len()`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn xor_into(dst: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let d = dst.as_mut_ptr();
+        let s = src.as_ptr();
+        let mut o = 0usize;
+        while o + 64 <= n {
+            for k in 0..4usize {
+                let p = o + 16 * k;
+                vst1q_u8(d.add(p), veorq_u8(vld1q_u8(d.add(p)), vld1q_u8(s.add(p))));
+            }
+            o += 64;
+        }
+        while o + 16 <= n {
+            vst1q_u8(d.add(o), veorq_u8(vld1q_u8(d.add(o)), vld1q_u8(s.add(o))));
+            o += 16;
+        }
+        super::xor_u64_lanes(&mut dst[o..], &src[o..]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Buffer pool
+// ---------------------------------------------------------------------------
+
+/// Buffers of at least this many bytes recycle through the large-class
+/// free list (capacity first-fit, bounded retention) instead of the
+/// small free list. 1 MiB: comfortably above every Δ/scratch size the
+/// coded shuffle produces, comfortably below streamed chunk sizes.
+pub const LARGE_CLASS_BYTES: usize = 1 << 20;
+
+const LARGE_CLASS_WORDS: usize = LARGE_CLASS_BYTES / 8;
+
+/// At most this many large backings are kept on the free list; releases
+/// beyond it free their memory immediately (see [`PoolStats::dropped`])
+/// so streaming runs cannot pin unbounded hundreds-of-MB chunks.
+pub const LARGE_RETAIN: usize = 4;
 
 /// Counters describing a pool's traffic (see [`BufferPool::stats`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Buffers handed out by [`BufferPool::acquire`].
     pub acquired: u64,
-    /// Buffers returned to the free list (on drop — at most once each).
+    /// Buffers returned on drop — at most once each.
     pub released: u64,
     /// Acquisitions that had to allocate a fresh backing store.
     pub allocated: u64,
-    /// Acquisitions served from the free list (allocation avoided).
+    /// Acquisitions served from a free list (allocation avoided).
     pub recycled: u64,
+    /// Large-class releases whose backing was freed instead of retained
+    /// (the free list already held [`LARGE_RETAIN`] large buffers).
+    pub dropped: u64,
 }
 
 impl PoolStats {
@@ -111,13 +399,18 @@ impl PoolStats {
 
 #[derive(Debug, Default)]
 struct PoolInner {
+    /// Small-class free list (below [`LARGE_CLASS_BYTES`]): LIFO, any
+    /// backing serves any small request (resize-on-checkout).
     free: Vec<Vec<u64>>,
+    /// Large-class free list: first-fit by capacity, at most
+    /// [`LARGE_RETAIN`] entries.
+    large: Vec<Vec<u64>>,
     stats: PoolStats,
 }
 
 /// A thread-safe arena of recycled, 8-byte-aligned chunk buffers.
 ///
-/// Clones share the same free list (cheap `Arc` clone), so the serial
+/// Clones share the same free lists (cheap `Arc` clone), so the serial
 /// engine, the parallel engine's worker threads, and tests can all
 /// return buffers to one place. Buffers come back zeroed on acquire.
 #[derive(Debug, Clone, Default)]
@@ -139,8 +432,9 @@ impl BufferPool {
     /// Acquire a buffer of `len` bytes whose contents are *unspecified*
     /// (recycled bytes from an earlier checkout). For paths that fully
     /// overwrite the buffer before reading it — encode starts with
-    /// `fill(0)`, decode scratch starts with `copy_from_slice` — this
-    /// skips the redundant zeroing memset on the hot path.
+    /// `fill(0)`, decode scratch starts with `copy_from_slice`, chunk
+    /// readers fill from the source — this skips the redundant zeroing
+    /// memset on the hot path (a full writeback pass at 256 MiB).
     pub fn acquire_unzeroed(&self, len: usize) -> PooledBuf {
         self.acquire_inner(len, false)
     }
@@ -150,7 +444,16 @@ impl BufferPool {
         let mut words = {
             let mut inner = self.inner.lock().expect("buffer pool poisoned");
             inner.stats.acquired += 1;
-            match inner.free.pop() {
+            let hit = if nwords >= LARGE_CLASS_WORDS {
+                // First fit: a retained large backing that already has
+                // the capacity. A miss allocates fresh rather than
+                // growing a smaller backing (realloc of a huge buffer).
+                let pos = inner.large.iter().position(|w| w.capacity() >= nwords);
+                pos.map(|i| inner.large.swap_remove(i))
+            } else {
+                inner.free.pop()
+            };
+            match hit {
                 Some(w) => {
                     inner.stats.recycled += 1;
                     w
@@ -180,9 +483,10 @@ impl BufferPool {
         self.inner.lock().expect("buffer pool poisoned").stats
     }
 
-    /// Buffers currently sitting on the free list.
+    /// Buffers currently sitting on the free lists (both classes).
     pub fn free_buffers(&self) -> usize {
-        self.inner.lock().expect("buffer pool poisoned").free.len()
+        let inner = self.inner.lock().expect("buffer pool poisoned");
+        inner.free.len() + inner.large.len()
     }
 }
 
@@ -231,9 +535,19 @@ impl AsRef<[u8]> for PooledBuf {
 impl Drop for PooledBuf {
     fn drop(&mut self) {
         let words = std::mem::take(&mut self.words);
+        let large = words.capacity() >= LARGE_CLASS_WORDS;
         let mut inner = self.pool.lock().expect("buffer pool poisoned");
         inner.stats.released += 1;
-        inner.free.push(words);
+        if large && inner.large.len() >= LARGE_RETAIN {
+            inner.stats.dropped += 1;
+            drop(inner);
+            // Free the huge backing outside the lock.
+            drop(words);
+        } else if large {
+            inner.large.push(words);
+        } else {
+            inner.free.push(words);
+        }
     }
 }
 
@@ -298,16 +612,106 @@ impl From<Vec<u8>> for SharedBuf {
 mod tests {
     use super::*;
 
+    /// Lengths straddling every kernel's lane width, unroll stride, and
+    /// page-ish boundaries — the differential-fuzz grid.
+    const FUZZ_LENS: &[usize] = &[
+        0, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 255, 256, 257, 1023,
+        4095, 4096, 4097, 65537,
+    ];
+
+    fn pattern(len: usize, mul: usize, add: usize) -> Vec<u8> {
+        (0..len).map(|i| (i.wrapping_mul(mul).wrapping_add(add)) as u8).collect()
+    }
+
     #[test]
-    fn xor_wordwise_matches_bytewise() {
-        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 255] {
-            let a: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
-            let b: Vec<u8> = (0..len).map(|i| (i * 101 + 5) as u8).collect();
-            let mut word = a.clone();
-            let mut byte = a.clone();
-            xor_into(&mut word, &b).unwrap();
-            xor_into_bytewise(&mut byte, &b).unwrap();
+    fn every_available_kernel_matches_the_bytewise_oracle() {
+        for kernel in available_kernels() {
+            for &len in FUZZ_LENS {
+                let src = pattern(len, 101, 5);
+                let mut got = pattern(len, 37, 11);
+                let mut want = got.clone();
+                xor_into_with(kernel, &mut got, &src).unwrap();
+                xor_into_bytewise(&mut want, &src).unwrap();
+                assert_eq!(got, want, "kernel={} len={len}", kernel.label());
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_handle_misaligned_slices() {
+        // Slice both operands at every sub-word offset out of larger
+        // buffers: the encode path XORs packets at arbitrary idx·plen
+        // offsets, so no kernel may assume alignment.
+        for kernel in available_kernels() {
+            for off in 0..9usize {
+                for &len in &[1usize, 31, 64, 257, 4096] {
+                    let src_back = pattern(len + 16, 211, 3);
+                    let dst_back = pattern(len + 16, 53, 9);
+                    let mut got = dst_back.clone();
+                    let mut want = dst_back.clone();
+                    xor_into_with(kernel, &mut got[off..off + len], &src_back[off..off + len])
+                        .unwrap();
+                    xor_into_bytewise(&mut want[off..off + len], &src_back[off..off + len])
+                        .unwrap();
+                    assert_eq!(got, want, "kernel={} off={off} len={len}", kernel.label());
+                    // Bytes outside the slice are untouched.
+                    assert_eq!(&got[..off], &dst_back[..off]);
+                    assert_eq!(&got[off + len..], &dst_back[off + len..]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_xor_matches_oracle_and_is_stable() {
+        let first = active_kernel();
+        assert!(available_kernels().contains(&first), "dispatch picked an unavailable kernel");
+        assert_eq!(active_kernel(), first, "dispatch must be cached");
+        for &len in FUZZ_LENS {
+            let src = pattern(len, 31, 7);
+            let mut word = pattern(len, 37, 11);
+            let mut byte = word.clone();
+            xor_into(&mut word, &src).unwrap();
+            xor_into_bytewise(&mut byte, &src).unwrap();
             assert_eq!(word, byte, "len={len}");
+        }
+    }
+
+    #[test]
+    fn forced_portable_override_selects_the_portable_tier() {
+        // The decision function itself (the env flag feeds it once, at
+        // first dispatch — process-global, so tested directly here).
+        assert_eq!(choose_kernel(true), XorKernel::PortableU64);
+        let free = choose_kernel(false);
+        assert!(available_kernels().contains(&free));
+        // XOR is an involution under every tier: applying a forced
+        // portable pass after a free-choice pass restores the input.
+        let src = pattern(1000, 19, 2);
+        let orig = pattern(1000, 7, 1);
+        let mut buf = orig.clone();
+        xor_into_with(free, &mut buf, &src).unwrap();
+        xor_into_with(XorKernel::PortableU64, &mut buf, &src).unwrap();
+        assert_eq!(buf, orig);
+    }
+
+    #[test]
+    fn unavailable_kernels_error_instead_of_faulting() {
+        let mut d = vec![0u8; 64];
+        let s = vec![1u8; 64];
+        for kernel in [XorKernel::Avx2, XorKernel::Neon] {
+            let available = available_kernels().contains(&kernel);
+            let res = xor_into_with(kernel, &mut d, &s);
+            assert_eq!(res.is_ok(), available, "kernel={}", kernel.label());
+        }
+    }
+
+    #[test]
+    fn kernel_labels_are_distinct() {
+        let ks = [XorKernel::Bytewise, XorKernel::PortableU64, XorKernel::Avx2, XorKernel::Neon];
+        for a in ks {
+            for b in ks {
+                assert_eq!(a == b, a.label() == b.label());
+            }
         }
     }
 
@@ -331,6 +735,9 @@ mod tests {
         assert!(xor_into(&mut d, &[0u8; 5]).is_err());
         assert!(xor_into_bytewise(&mut d, &[0u8; 5]).is_err());
         assert!(xor_fold(&mut d, &[&[0u8; 4], &[0u8; 3]]).is_err());
+        for kernel in available_kernels() {
+            assert!(xor_into_with(kernel, &mut d, &[0u8; 5]).is_err());
+        }
     }
 
     #[test]
@@ -394,6 +801,58 @@ mod tests {
             b.as_mut_slice().fill(0xFF);
         }
         assert_eq!(pool.stats().released, 4);
+    }
+
+    #[test]
+    fn large_buffers_recycle_through_their_own_class() {
+        let pool = BufferPool::new();
+        drop(pool.acquire_unzeroed(LARGE_CLASS_BYTES));
+        // A small request must NOT be served by the retained large
+        // backing — it allocates fresh.
+        drop(pool.acquire(64));
+        assert_eq!(pool.stats().allocated, 2);
+        // A large request first-fits the retained large backing.
+        drop(pool.acquire_unzeroed(LARGE_CLASS_BYTES));
+        let stats = pool.stats();
+        assert_eq!(stats.recycled, 1);
+        assert_eq!(stats.allocated, 2);
+        assert_eq!(pool.free_buffers(), 2);
+    }
+
+    #[test]
+    fn large_class_retention_is_bounded() {
+        let pool = BufferPool::new();
+        // Check out LARGE_RETAIN + 2 large buffers simultaneously, then
+        // release them all: only LARGE_RETAIN backings are retained.
+        let held: Vec<PooledBuf> =
+            (0..LARGE_RETAIN + 2).map(|_| pool.acquire_unzeroed(LARGE_CLASS_BYTES)).collect();
+        drop(held);
+        let stats = pool.stats();
+        assert_eq!(stats.released, (LARGE_RETAIN + 2) as u64);
+        assert_eq!(stats.dropped, 2);
+        assert_eq!(pool.free_buffers(), LARGE_RETAIN);
+        // Small-class releases are never dropped.
+        for _ in 0..3 * LARGE_RETAIN {
+            drop(pool.acquire(64));
+        }
+        assert_eq!(pool.stats().dropped, 2);
+    }
+
+    #[test]
+    fn large_class_first_fit_skips_too_small_backings() {
+        let pool = BufferPool::new();
+        drop(pool.acquire_unzeroed(LARGE_CLASS_BYTES));
+        // 4× larger than the retained backing: first-fit misses, a
+        // fresh backing is allocated, and both are retained afterwards.
+        drop(pool.acquire_unzeroed(4 * LARGE_CLASS_BYTES));
+        let stats = pool.stats();
+        assert_eq!(stats.allocated, 2);
+        assert_eq!(stats.recycled, 0);
+        assert_eq!(pool.free_buffers(), 2);
+        // The big request now recycles the big backing; the small large
+        // request fits either.
+        drop(pool.acquire_unzeroed(4 * LARGE_CLASS_BYTES));
+        assert_eq!(pool.stats().recycled, 1);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! The CAMR shuffle (paper §III-C): Algorithm 2 coded multicast plus the
 //! three stage planners, running on a pooled, zero-copy data plane.
 //!
-//! - [`buf`] — the reusable buffer arena ([`buf::BufferPool`]) and the
-//!   word-wise XOR primitives ([`buf::xor_into`], [`buf::xor_fold`])
-//!   that make encode/decode allocation-free.
+//! - [`buf`] — the reusable buffer arena ([`buf::BufferPool`], with a
+//!   large size class for streamed chunks) and the runtime-dispatched
+//!   XOR kernel stack ([`buf::xor_into`], [`buf::xor_fold`]; AVX2/NEON
+//!   when the CPU has them, portable u64 lanes everywhere) that make
+//!   encode/decode allocation-free and SIMD-wide.
 //! - [`packet`] — chunk ↔ packet splitting and XOR primitives.
 //! - [`multicast`] — Algorithm 2: within a group of `g` machines where
 //!   each misses exactly one chunk jointly stored by the others, `g`
@@ -24,7 +26,8 @@
 //! 1. **acquire** — the encoder checks a zeroed, word-aligned packet
 //!    buffer out of the engine's [`buf::BufferPool`];
 //! 2. **encode** — [`multicast::GroupPlan::encode_ref_into`] XORs the
-//!    sender's locally stored chunks into it in place (u64 lanes);
+//!    sender's locally stored chunks into it in place through the
+//!    dispatched kernel ([`buf::active_kernel`]);
 //! 3. **bus** — the shared link is charged with `Δ.len()` bytes exactly
 //!    as before: pooling changes *where bytes live*, never how many are
 //!    accounted, so the ledger stays byte-identical to the unpooled
@@ -45,6 +48,6 @@ pub mod stage1;
 pub mod stage2;
 pub mod stage3;
 
-pub use buf::{BufferPool, SharedBuf};
+pub use buf::{BufferPool, SharedBuf, XorKernel};
 pub use multicast::GroupPlan;
 pub use plan::{ChunkSpec, UnicastSpec};

@@ -8,6 +8,7 @@
 
 pub mod gradient;
 pub mod matvec;
+pub mod stream;
 pub mod synth;
 pub mod wordcount;
 
@@ -39,6 +40,10 @@ pub fn build_native(
                 std::sync::Arc::new(matvec::NativeShardCompute);
             Box::new(matvec::MatVecWorkload::synthetic(cfg, seed, rows_per_func, 8, compute)?)
         }
+        // Stream geometry comes from CAMR_STREAM_* env vars; worker
+        // subprocesses inherit the environment, so every process of a
+        // socket-transport run reconstructs the identical stream.
+        WorkloadKind::Streamed => Box::new(stream::StreamedWorkload::from_env(cfg, seed)?),
     })
 }
 

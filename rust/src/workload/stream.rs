@@ -1,0 +1,484 @@
+//! Streamed huge-payload workload: map phases fold over pooled chunks
+//! of a byte stream instead of materializing whole subfiles.
+//!
+//! The paper's regime of interest has subfiles in the hundreds of MB
+//! (§V sizes shuffles by `B` per value, but the *inputs* each mapper
+//! reads dwarf the intermediate values). Materializing a 256 MB subfile
+//! per map call would make the runtime's memory high-water mark
+//! `O(subfile)` per in-flight map and the allocator — not the shuffle —
+//! the bottleneck. This module streams instead: a [`StreamSource`]
+//! yields the subfile's byte range chunk by chunk through **one**
+//! recycled [`BufferPool`] buffer (the pool's large size class, see
+//! `shuffle::buf`), and the map folds each chunk into its `Q`
+//! intermediate values as it goes. Peak memory is one chunk, not one
+//! subfile, and the chunk buffer is shared across every map call on the
+//! pool.
+//!
+//! The digest is **chunk-size independent**: values are a function of
+//! the subfile's absolute word stream only, so any `chunk_bytes` (and
+//! any mix of short reads from the source) reduces to bit-identical
+//! outputs. Tests pin that invariant, and the socket plane relies on it
+//! — worker processes inherit the stream geometry via environment
+//! variables and must reconstruct the same values from config text
+//! alone.
+
+use super::Workload;
+use crate::agg::{Aggregator, SumU64, Value};
+use crate::config::SystemConfig;
+use crate::error::{CamrError, Result};
+use crate::shuffle::buf::BufferPool;
+use crate::{JobId, SubfileId};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Default subfile extent for env-configured streamed runs (1 MiB —
+/// small enough for tests, overridable up to the 256 MB regime).
+pub const DEFAULT_SUBFILE_BYTES: u64 = 1 << 20;
+
+/// Default chunk checkout size for env-configured streamed runs.
+pub const DEFAULT_CHUNK_BYTES: usize = 256 << 10;
+
+/// A random-access byte stream the streamed workload reads from.
+///
+/// `read_at` is positional (no cursor shared between callers), so one
+/// source serves concurrent map calls from the parallel engine.
+pub trait StreamSource: Send + Sync {
+    /// Total stream length in bytes.
+    fn len(&self) -> u64;
+
+    /// True when the stream holds zero bytes.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read up to `buf.len()` bytes at absolute `offset`, returning the
+    /// count read. Returns `Ok(0)` only at end of stream. Short reads
+    /// mid-stream are allowed; callers loop.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize>;
+}
+
+/// A real file as a [`StreamSource`] (set `CAMR_STREAM_FILE` to use one
+/// as the streamed workload's input). Positional reads go through one
+/// mutex-guarded seek+read handle — correctness over parallel read
+/// throughput; swap in `pread` per-thread handles if a profile ever
+/// says the lock is hot.
+pub struct FileSource {
+    file: Mutex<File>,
+    len: u64,
+}
+
+impl FileSource {
+    /// Open `path` and capture its current length.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(FileSource { file: Mutex::new(file), len })
+    }
+}
+
+impl StreamSource for FileSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        if offset >= self.len || buf.is_empty() {
+            return Ok(0);
+        }
+        let mut f = self.file.lock().expect("file source poisoned");
+        f.seek(SeekFrom::Start(offset))?;
+        let n = f.read(buf)?;
+        Ok(n)
+    }
+}
+
+/// splitmix64 — the same tiny deterministic mixer the synthetic
+/// workload uses.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A deterministic pseudo-random stream generated on the fly — no disk,
+/// no materialization, any length. Byte `p` is byte `p % 8` of
+/// `mix(seed ^ (p / 8))`, so reads are position-pure: every process
+/// that knows `(seed, len)` sees the identical stream.
+pub struct SyntheticSource {
+    seed: u64,
+    len: u64,
+}
+
+impl SyntheticSource {
+    /// A stream of `len` bytes derived from `seed`.
+    pub fn new(seed: u64, len: u64) -> Self {
+        SyntheticSource { seed, len }
+    }
+}
+
+impl StreamSource for SyntheticSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        if offset >= self.len {
+            return Ok(0);
+        }
+        let n = buf.len().min((self.len - offset) as usize);
+        let out = &mut buf[..n];
+        let mut pos = offset;
+        let end = offset + n as u64;
+        let mut i = 0usize;
+        // Partial word at the head, whole words, partial word at the
+        // tail — word-at-a-time in the middle keeps synthetic streaming
+        // benches from being bound by the generator.
+        while pos < end && pos % 8 != 0 {
+            out[i] = mix(self.seed ^ (pos / 8)).to_le_bytes()[(pos % 8) as usize];
+            pos += 1;
+            i += 1;
+        }
+        while pos + 8 <= end {
+            out[i..i + 8].copy_from_slice(&mix(self.seed ^ (pos / 8)).to_le_bytes());
+            pos += 8;
+            i += 8;
+        }
+        while pos < end {
+            out[i] = mix(self.seed ^ (pos / 8)).to_le_bytes()[(pos % 8) as usize];
+            pos += 1;
+            i += 1;
+        }
+        Ok(n)
+    }
+}
+
+/// Fold `f` over `range` of `src` in `chunk_bytes` pieces, reusing one
+/// pooled buffer for every chunk. `f` receives the chunk's absolute
+/// start offset and its (full-or-final-partial) bytes. The range is
+/// clamped to the source length.
+pub fn fold_chunks<T>(
+    src: &dyn StreamSource,
+    range: Range<u64>,
+    chunk_bytes: usize,
+    pool: &BufferPool,
+    mut acc: T,
+    mut f: impl FnMut(u64, &[u8], &mut T) -> Result<()>,
+) -> Result<T> {
+    if chunk_bytes == 0 {
+        return Err(CamrError::InvalidConfig("stream chunk_bytes must be > 0".into()));
+    }
+    let end = range.end.min(src.len());
+    let mut offset = range.start;
+    // One checkout serves the whole fold; contents are fully
+    // overwritten before each use, so the unzeroed acquire is safe.
+    let mut chunk = pool.acquire_unzeroed(chunk_bytes);
+    while offset < end {
+        let want = chunk_bytes.min((end - offset) as usize);
+        let buf = &mut chunk.as_mut_slice()[..want];
+        // Loop short reads so `f` only ever sees full chunks (except
+        // the final partial one) — chunk boundaries must be stable for
+        // chunk-size-independent digests.
+        let mut filled = 0usize;
+        while filled < want {
+            let n = src.read_at(offset + filled as u64, &mut buf[filled..])?;
+            if n == 0 {
+                return Err(CamrError::Runtime(format!(
+                    "stream source ended early at byte {} (len {} claimed)",
+                    offset + filled as u64,
+                    src.len()
+                )));
+            }
+            filled += n;
+        }
+        f(offset, &buf[..want], &mut acc)?;
+        offset += want as u64;
+    }
+    Ok(acc)
+}
+
+/// Huge-payload workload: subfile `n` is the byte range
+/// `[n·subfile_bytes, (n+1)·subfile_bytes)` of a [`StreamSource`],
+/// digested chunk-at-a-time into `Q` u64-lane values.
+///
+/// For subfile word `w` at word-index `i` (absolute within the
+/// subfile), lane `i % lanes` of function `f`'s value accumulates
+/// `mix(w ^ salt(job)) ^ salt(job, f)` — one mix per word, one xor+add
+/// per function. The digest never sees chunk boundaries, so it is
+/// invariant to `chunk_bytes` (pinned by tests).
+pub struct StreamedWorkload {
+    source: Arc<dyn StreamSource>,
+    subfile_bytes: u64,
+    chunk_bytes: usize,
+    funcs: usize,
+    value_bytes: usize,
+    seed: u64,
+    agg: SumU64,
+    pool: BufferPool,
+}
+
+impl StreamedWorkload {
+    /// Build over an explicit source and geometry. `value_bytes`,
+    /// `subfile_bytes`, and `chunk_bytes` must all be multiples of 8 so
+    /// no u64 word straddles a chunk or subfile boundary.
+    pub fn new(
+        cfg: &SystemConfig,
+        source: Arc<dyn StreamSource>,
+        subfile_bytes: u64,
+        chunk_bytes: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        if cfg.value_bytes % 8 != 0 {
+            return Err(CamrError::InvalidConfig(
+                "streamed workload needs value_bytes % 8 == 0 (u64 lanes)".into(),
+            ));
+        }
+        if subfile_bytes == 0 || subfile_bytes % 8 != 0 {
+            return Err(CamrError::InvalidConfig(format!(
+                "stream subfile_bytes must be a positive multiple of 8, got {subfile_bytes}"
+            )));
+        }
+        if chunk_bytes == 0 || chunk_bytes % 8 != 0 {
+            return Err(CamrError::InvalidConfig(format!(
+                "stream chunk_bytes must be a positive multiple of 8, got {chunk_bytes}"
+            )));
+        }
+        Ok(StreamedWorkload {
+            source,
+            subfile_bytes,
+            chunk_bytes,
+            funcs: cfg.functions(),
+            value_bytes: cfg.value_bytes,
+            seed,
+            agg: SumU64,
+            pool: BufferPool::new(),
+        })
+    }
+
+    /// Build from environment geometry — the constructor
+    /// `workload::build_native` uses, so socket-transport worker
+    /// processes (which inherit the coordinator's environment)
+    /// reconstruct the identical stream from config text + env alone.
+    ///
+    /// * `CAMR_STREAM_SUBFILE_BYTES` — bytes per subfile (default 1 MiB;
+    ///   set to the 256 MiB regime for huge-payload runs).
+    /// * `CAMR_STREAM_CHUNK_BYTES` — checkout size (default 256 KiB).
+    /// * `CAMR_STREAM_FILE` — optional real file input; without it a
+    ///   [`SyntheticSource`] spanning every subfile is generated.
+    pub fn from_env(cfg: &SystemConfig, seed: u64) -> Result<Self> {
+        let subfile_bytes = env_bytes("CAMR_STREAM_SUBFILE_BYTES", DEFAULT_SUBFILE_BYTES)?;
+        let chunk_bytes = env_bytes("CAMR_STREAM_CHUNK_BYTES", DEFAULT_CHUNK_BYTES as u64)?;
+        let source: Arc<dyn StreamSource> = match std::env::var_os("CAMR_STREAM_FILE") {
+            Some(path) => Arc::new(FileSource::open(path)?),
+            None => {
+                let total = subfile_bytes * cfg.subfiles() as u64;
+                Arc::new(SyntheticSource::new(seed, total))
+            }
+        };
+        Self::new(cfg, source, subfile_bytes, chunk_bytes as usize, seed)
+    }
+
+    /// The pool the chunk checkouts recycle through (stats inspection).
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
+    }
+}
+
+fn env_bytes(key: &str, default: u64) -> Result<u64> {
+    match std::env::var(key) {
+        Ok(s) => s.trim().parse::<u64>().map_err(|_| {
+            CamrError::InvalidConfig(format!("{key} must be an integer byte count, got {s:?}"))
+        }),
+        Err(_) => Ok(default),
+    }
+}
+
+impl Workload for StreamedWorkload {
+    fn name(&self) -> &str {
+        "streamed"
+    }
+
+    fn aggregator(&self) -> &dyn Aggregator {
+        &self.agg
+    }
+
+    fn map_subfile(&self, job: JobId, subfile: SubfileId) -> Result<Vec<Value>> {
+        let lanes = self.value_bytes / 8;
+        let job_salt = mix(self.seed ^ 0xCA3A_0001 ^ ((job as u64) << 32));
+        let func_salts: Vec<u64> = (0..self.funcs).map(|f| mix(job_salt ^ f as u64)).collect();
+        let start = subfile as u64 * self.subfile_bytes;
+        let range = start..start + self.subfile_bytes;
+        let acc = vec![vec![0u64; lanes]; self.funcs];
+        let acc = fold_chunks(
+            self.source.as_ref(),
+            range,
+            self.chunk_bytes,
+            &self.pool,
+            acc,
+            |chunk_start, bytes, acc| {
+                // Word index is absolute within the subfile, so the
+                // digest cannot depend on where chunks were cut.
+                let mut widx = ((chunk_start - start) / 8) as usize;
+                for word in bytes.chunks(8) {
+                    let mut w = [0u8; 8];
+                    w[..word.len()].copy_from_slice(word);
+                    let m = mix(u64::from_le_bytes(w) ^ job_salt);
+                    let lane = widx % lanes;
+                    for (a, salt) in acc.iter_mut().zip(&func_salts) {
+                        a[lane] = a[lane].wrapping_add(m ^ salt);
+                    }
+                    widx += 1;
+                }
+                Ok(())
+            },
+        )?;
+        Ok(acc
+            .into_iter()
+            .map(|words| {
+                let mut v = Vec::with_capacity(self.value_bytes);
+                for x in words {
+                    v.extend_from_slice(&x.to_le_bytes());
+                }
+                v
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::with_options(3, 2, 1, 1, 64).unwrap()
+    }
+
+    fn streamed(subfile_bytes: u64, chunk_bytes: usize, seed: u64) -> StreamedWorkload {
+        let c = cfg();
+        let total = subfile_bytes * c.subfiles() as u64;
+        let src = Arc::new(SyntheticSource::new(seed, total));
+        StreamedWorkload::new(&c, src, subfile_bytes, chunk_bytes, seed).unwrap()
+    }
+
+    #[test]
+    fn synthetic_source_reads_are_position_pure() {
+        let src = SyntheticSource::new(9, 1024);
+        let mut whole = vec![0u8; 1024];
+        assert_eq!(src.read_at(0, &mut whole).unwrap(), 1024);
+        // Any offset/length window sees the same bytes, including
+        // misaligned windows that split words.
+        for (off, len) in [(0usize, 64usize), (3, 61), (8, 8), (13, 100), (1000, 24)] {
+            let mut win = vec![0u8; len];
+            assert_eq!(src.read_at(off as u64, &mut win).unwrap(), len);
+            assert_eq!(win, &whole[off..off + len], "off={off} len={len}");
+        }
+        // Reads past the end clamp; reads at the end return 0.
+        let mut tail = vec![0u8; 64];
+        assert_eq!(src.read_at(1000, &mut tail).unwrap(), 24);
+        assert_eq!(src.read_at(1024, &mut tail).unwrap(), 0);
+    }
+
+    #[test]
+    fn digest_is_chunk_size_independent() {
+        let base = streamed(4096, 4096, 7);
+        let want: Vec<_> = (0..3).map(|n| base.map_subfile(1, n).unwrap()).collect();
+        for chunk in [8usize, 24, 256, 1000, 8192] {
+            let wl = streamed(4096, chunk, 7);
+            for (n, w) in want.iter().enumerate() {
+                assert_eq!(&wl.map_subfile(1, n).unwrap(), w, "chunk={chunk} subfile={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn values_have_config_shape_and_vary_by_inputs() {
+        let wl = streamed(1024, 256, 3);
+        let c = cfg();
+        let vals = wl.map_subfile(0, 0).unwrap();
+        assert_eq!(vals.len(), c.functions());
+        assert!(vals.iter().all(|v| v.len() == c.value_bytes));
+        assert_ne!(vals[0], vals[1], "funcs must differ");
+        assert_ne!(vals[0], wl.map_subfile(0, 1).unwrap()[0], "subfiles must differ");
+        assert_ne!(vals[0], wl.map_subfile(1, 0).unwrap()[0], "jobs must differ");
+        assert_eq!(vals, wl.map_subfile(0, 0).unwrap(), "maps are deterministic");
+    }
+
+    #[test]
+    fn file_source_matches_synthetic_bytes() {
+        let seed = 11;
+        let total = 4096u64 * 6;
+        let synth = SyntheticSource::new(seed, total);
+        let mut bytes = vec![0u8; total as usize];
+        assert_eq!(synth.read_at(0, &mut bytes).unwrap(), total as usize);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("camr_stream_test_{seed}_{total}.bin"));
+        std::fs::write(&path, &bytes).unwrap();
+        let file = FileSource::open(&path).unwrap();
+        assert_eq!(file.len(), total);
+        let c = cfg();
+        let from_file = StreamedWorkload::new(&c, Arc::new(file), 4096, 512, seed).unwrap();
+        let from_synth = streamed(4096, 512, seed);
+        for n in 0..3 {
+            assert_eq!(from_file.map_subfile(0, n).unwrap(), from_synth.map_subfile(0, n).unwrap());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fold_reuses_one_pooled_chunk_buffer() {
+        let wl = streamed(8192, 512, 5);
+        wl.map_subfile(0, 0).unwrap();
+        let stats = wl.pool().stats();
+        // 8192 / 512 = 16 chunks, one checkout.
+        assert_eq!(stats.acquired, 1);
+        assert_eq!(stats.outstanding(), 0);
+        wl.map_subfile(0, 1).unwrap();
+        let stats = wl.pool().stats();
+        assert_eq!(stats.acquired, 2);
+        assert_eq!(stats.recycled, 1, "second map must recycle the first map's chunk");
+    }
+
+    #[test]
+    fn truncated_source_errors_instead_of_digesting_garbage() {
+        let c = cfg();
+        // Source claims less than the subfile range needs.
+        let src = Arc::new(SyntheticSource::new(1, 1024));
+        let wl = StreamedWorkload::new(&c, src, 4096, 256, 1).unwrap();
+        // Subfile 0 wants [0, 4096) but the source ends at 1024: the
+        // range clamps, digesting only what exists (no error) —
+        let v = wl.map_subfile(0, 0);
+        assert!(v.is_ok());
+        // — while a source that lies about its length errors.
+        struct Liar;
+        impl StreamSource for Liar {
+            fn len(&self) -> u64 {
+                4096
+            }
+            fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<usize> {
+                if offset >= 100 {
+                    return Ok(0);
+                }
+                let n = buf.len().min((100 - offset) as usize);
+                buf[..n].fill(7);
+                Ok(n)
+            }
+        }
+        let wl = StreamedWorkload::new(&c, Arc::new(Liar), 4096, 256, 1).unwrap();
+        assert!(wl.map_subfile(0, 0).is_err());
+    }
+
+    #[test]
+    fn geometry_is_validated() {
+        let c = cfg();
+        let src: Arc<dyn StreamSource> = Arc::new(SyntheticSource::new(0, 1024));
+        assert!(StreamedWorkload::new(&c, Arc::clone(&src), 0, 256, 0).is_err());
+        assert!(StreamedWorkload::new(&c, Arc::clone(&src), 100, 256, 0).is_err());
+        assert!(StreamedWorkload::new(&c, Arc::clone(&src), 1024, 0, 0).is_err());
+        assert!(StreamedWorkload::new(&c, Arc::clone(&src), 1024, 12, 0).is_err());
+        assert!(StreamedWorkload::new(&c, src, 1024, 256, 0).is_ok());
+    }
+}

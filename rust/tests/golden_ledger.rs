@@ -9,6 +9,13 @@
 //! ledger is payload-independent (it records only sizes and routing),
 //! so the fixture is stable across workloads of the same shape.
 //!
+//! These runs go through whatever XOR kernel tier `shuffle::buf`
+//! dispatched (AVX2/NEON/portable), so passing here proves the ledger
+//! is byte-identical under the SIMD kernel stack too; CI re-runs the
+//! suite with `CAMR_FORCE_PORTABLE=1` to pin the portable tier as well
+//! (socket_transport.rs extends the same equality to the tcp and unix
+//! planes).
+//!
 //! Re-bless after an *intentional* schedule change with:
 //! `CAMR_BLESS=1 cargo test --test golden_ledger`.
 

@@ -190,6 +190,57 @@ fn prop_xor_wordwise_agrees_with_bytewise_reference() {
     }
 }
 
+/// Every kernel tier the CPU offers (portable u64, AVX2, NEON — see
+/// `buf::available_kernels`) agrees bit-for-bit with the bytewise
+/// oracle on random data, including misaligned slices carved out of
+/// larger buffers at every sub-word offset — the shape the encode path
+/// produces when it XORs packets at arbitrary `idx·plen` offsets.
+#[test]
+fn prop_every_kernel_tier_agrees_on_random_misaligned_slices() {
+    let mut rng = SplitMix64::new(0x51AD);
+    let kernels = buf::available_kernels();
+    for case in 0..150 {
+        let len = match case % 4 {
+            0 => rng.range(0, 9),            // tail-only
+            1 => rng.range(0, 33) * 8,       // whole words
+            2 => rng.range(0, 5) * 128 + 96, // SIMD unroll strides
+            _ => rng.range(0, 5000),         // anything
+        };
+        let off = rng.range(0, 9); // sub-word misalignment
+        let a: Vec<u8> = (0..len + off + 8).map(|_| rng.next_u64() as u8).collect();
+        let b: Vec<u8> = (0..len + off + 8).map(|_| rng.next_u64() as u8).collect();
+        let mut want = a.clone();
+        buf::xor_into_bytewise(&mut want[off..off + len], &b[off..off + len]).unwrap();
+        for &kernel in &kernels {
+            let mut got = a.clone();
+            buf::xor_into_with(kernel, &mut got[off..off + len], &b[off..off + len]).unwrap();
+            assert_eq!(got, want, "case {case}: kernel={} len={len} off={off}", kernel.label());
+        }
+    }
+}
+
+/// The dispatched `xor_into` uses a kernel the CPU actually has, the
+/// decision is stable across calls, and Δ round-trips built through the
+/// dispatched path cancel exactly (encode-then-decode is the identity)
+/// — so ledger bytes cannot depend on which tier dispatch picked.
+#[test]
+fn prop_dispatch_is_stable_and_roundtrips() {
+    let kernels = buf::available_kernels();
+    let active = buf::active_kernel();
+    assert!(kernels.contains(&active), "dispatched kernel {:?} unavailable", active);
+    assert_eq!(buf::active_kernel(), active, "dispatch decision must be cached");
+    let mut rng = SplitMix64::new(0xDE1A);
+    for case in 0..50 {
+        let len = rng.range(1, 4096);
+        let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mask: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mut delta = payload.clone();
+        buf::xor_into(&mut delta, &mask).unwrap(); // encode
+        buf::xor_into(&mut delta, &mask).unwrap(); // decode cancels
+        assert_eq!(delta, payload, "case {case}: len={len}");
+    }
+}
+
 /// Baseline ordering on the (q, k) grid (Table III / §V): the closed
 /// forms must satisfy L_CAMR == L_CCDC < L_uncoded, and CAMR's job
 /// requirement q^(k-1) must not exceed CCDC's C(K, μK+1) — guarding
