@@ -299,6 +299,43 @@ impl TransportConfig {
     }
 }
 
+/// The `[obs]` config section: observability defaults for `camr run`
+/// (CLI `--trace` and the `CAMR_TRACE` env var override it).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Enable tracing even without a `trace` path (the trace then goes
+    /// to `trace.json` in the working directory).
+    pub enabled: bool,
+    /// Where to write the Chrome `trace_event` JSON.
+    pub trace: Option<String>,
+}
+
+impl ObsConfig {
+    fn from_cfg(c: &CfgText) -> Result<Option<Self>> {
+        if !c.section_names().iter().any(|s| s == "obs") {
+            return Ok(None);
+        }
+        for key in c.keys("obs") {
+            if !matches!(key.as_str(), "enabled" | "trace") {
+                return Err(CamrError::InvalidConfig(format!("unknown [obs] key {key}")));
+            }
+        }
+        let enabled =
+            c.get_bool("obs", "enabled").map_err(CamrError::InvalidConfig)?.unwrap_or(false);
+        let trace = c.get("obs", "trace").map(|s| s.to_string());
+        Ok(Some(ObsConfig { enabled, trace }))
+    }
+
+    /// The trace output path this section asks for, if it asks for one.
+    pub fn destination(&self) -> Option<String> {
+        match (&self.trace, self.enabled) {
+            (Some(path), _) => Some(path.clone()),
+            (None, true) => Some("trace.json".into()),
+            (None, false) => None,
+        }
+    }
+}
+
 /// Top-level run configuration, loadable from a TOML-subset file.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -318,6 +355,9 @@ pub struct RunConfig {
     /// Optional `[transport]` section selecting the data plane for
     /// `camr run` (overridable by `--transport`).
     pub transport: Option<TransportConfig>,
+    /// Optional `[obs]` section enabling tracing by default
+    /// (overridable by `--trace` / `CAMR_TRACE`).
+    pub obs: Option<ObsConfig>,
 }
 
 impl RunConfig {
@@ -348,6 +388,11 @@ impl RunConfig {
     /// kind = "serial"              # serial | chan | tcp | unix
     /// disconnect_timeout_secs = 30.0
     /// workers = "process"          # process | thread
+    ///
+    /// # Optional tracing defaults for `camr run`.
+    /// [obs]
+    /// enabled = false              # true -> trace even without --trace
+    /// trace = "trace.json"         # Chrome trace_event output path
     /// ```
     pub fn from_text(text: &str) -> Result<Self> {
         let c = CfgText::parse(text).map_err(CamrError::InvalidConfig)?;
@@ -363,7 +408,7 @@ impl RunConfig {
             }
         }
         for s in c.section_names() {
-            if !matches!(s.as_str(), "" | "system" | "sim" | "transport") {
+            if !matches!(s.as_str(), "" | "system" | "sim" | "transport" | "obs") {
                 return Err(CamrError::InvalidConfig(format!("unknown section [{s}]")));
             }
         }
@@ -381,7 +426,8 @@ impl RunConfig {
         let json = c.get_bool("", "json").map_err(CamrError::InvalidConfig)?.unwrap_or(false);
         let sim = crate::sim::SimConfig::from_cfg(&c)?;
         let transport = TransportConfig::from_cfg(&c)?;
-        Ok(RunConfig { system, workload, seed, artifact, json, sim, transport })
+        let obs = ObsConfig::from_cfg(&c)?;
+        Ok(RunConfig { system, workload, seed, artifact, json, sim, transport, obs })
     }
 
     /// Load from a file path.
@@ -540,6 +586,35 @@ mod tests {
             "[system]\nk = 3\nq = 2\n[transport]\ndisconnect_timeout_secs = 0"
         )
         .is_err());
+    }
+
+    #[test]
+    fn config_file_parses_obs_section() {
+        let text = r#"
+            [system]
+            k = 3
+            q = 2
+            [obs]
+            enabled = true
+            trace = "out/run.trace.json"
+        "#;
+        let rc = RunConfig::from_text(text).unwrap();
+        let o = rc.obs.expect("[obs] section parsed");
+        assert!(o.enabled);
+        assert_eq!(o.destination().as_deref(), Some("out/run.trace.json"));
+        // enabled without a path falls back to trace.json; disabled
+        // without a path asks for nothing.
+        let on = RunConfig::from_text("[system]\nk = 3\nq = 2\n[obs]\nenabled = true").unwrap();
+        assert_eq!(on.obs.unwrap().destination().as_deref(), Some("trace.json"));
+        let off = RunConfig::from_text("[system]\nk = 3\nq = 2\n[obs]\nenabled = false").unwrap();
+        assert_eq!(off.obs.unwrap().destination(), None);
+        // A bare path implies tracing on.
+        let path =
+            RunConfig::from_text("[system]\nk = 3\nq = 2\n[obs]\ntrace = \"t.json\"").unwrap();
+        assert_eq!(path.obs.unwrap().destination().as_deref(), Some("t.json"));
+        // Absent section → no obs config; unknown keys rejected.
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2").unwrap().obs.is_none());
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2\n[obs]\nwat = 1").is_err());
     }
 
     #[test]

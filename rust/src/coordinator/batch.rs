@@ -53,6 +53,7 @@ use crate::baseline::uncoded::{UncodedEngine, UncodedMode};
 use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
 use crate::net::Bus;
+use crate::obs::{self, PhaseRollup, Tracer};
 use crate::shuffle::buf::PoolStats;
 use crate::sim::{self, BatchSimOutcome, SimConfig};
 use crate::util::rng::mix_key;
@@ -129,6 +130,11 @@ pub struct BatchOptions {
     /// Base seed; unit `u` draws its workload from
     /// `mix_key(seed, [u])`, so every unit maps fresh data.
     pub seed: u64,
+    /// Span collector threaded into the CAMR engines ([`Tracer::Off`]
+    /// by default). When enabled, every executed unit's spans are rolled
+    /// up into its [`UnitRecord::phases`] and the full span set stays in
+    /// the tracer for export after the batch.
+    pub tracer: Tracer,
 }
 
 impl Default for BatchOptions {
@@ -142,6 +148,7 @@ impl Default for BatchOptions {
             strict: true,
             ccdc_cap: Some(DEFAULT_CCDC_CAP),
             seed: 0xCA3A,
+            tracer: Tracer::Off,
         }
     }
 }
@@ -162,6 +169,9 @@ pub struct UnitRecord {
     pub verified: bool,
     /// The unit's failure, if any (execution or verification).
     pub error: Option<String>,
+    /// Per-phase wall windows of this unit's spans (empty unless the
+    /// batch ran with [`BatchOptions::tracer`] enabled; CAMR units only).
+    pub phases: Vec<PhaseRollup>,
 }
 
 /// Result of one batch execution.
@@ -350,11 +360,13 @@ fn run_camr_batch(
         let mut e = ParallelEngine::new(cfg.clone(), factory(0, mix_key(opts.seed, &[0]))?)?;
         e.pooling = opts.pooling;
         e.verify = false; // the batch loop owns verification
+        e.tracer = opts.tracer.clone();
         Box::new(e)
     } else {
         let mut e = Engine::new(cfg.clone(), factory(0, mix_key(opts.seed, &[0]))?)?;
         e.pooling = opts.pooling;
         e.verify = false;
+        e.tracer = opts.tracer.clone();
         Box::new(e)
     };
 
@@ -362,6 +374,9 @@ fn run_camr_batch(
     let mut bus = Bus::new();
     let mut maps: Vec<Vec<usize>> = Vec::new();
     let mut normalizer = 0.0f64;
+    // Traced batches: each unit's spans are drained for its roll-up and
+    // re-ingested afterwards, so the tracer still holds the whole batch.
+    let mut all_spans: Vec<obs::Span> = Vec::new();
 
     // Verification results flow back over a channel: (unit, error?).
     let (vtx, vrx) = mpsc::channel::<(usize, Option<String>)>();
@@ -399,6 +414,14 @@ fn run_camr_batch(
                     bus.append_ledger(engine.ledger_bus().ledger(), tag);
                     maps.push(engine.worker_maps());
                     normalizer += cfg.load_normalizer();
+                    let phases = if opts.tracer.enabled() {
+                        let spans = opts.tracer.take_spans();
+                        let rollup = obs::phase_rollup(&spans);
+                        all_spans.extend(spans);
+                        rollup
+                    } else {
+                        Vec::new()
+                    };
                     units.push(UnitRecord {
                         unit: r,
                         jobs: per_round,
@@ -406,6 +429,7 @@ fn run_camr_batch(
                         map_invocations: out.map_invocations,
                         verified: true, // provisional; vrx may veto below
                         error: None,
+                        phases,
                     });
                     if opts.verify {
                         pending = Some((r, engine.grab_outputs()));
@@ -416,6 +440,9 @@ fn run_camr_batch(
                         return Err(e);
                     }
                     engine.grab_outputs(); // discard partial state
+                    if opts.tracer.enabled() {
+                        all_spans.extend(opts.tracer.take_spans());
+                    }
                     units.push(UnitRecord {
                         unit: r,
                         jobs: per_round,
@@ -423,6 +450,7 @@ fn run_camr_batch(
                         map_invocations: 0,
                         verified: false,
                         error: Some(e.to_string()),
+                        phases: Vec::new(),
                     });
                 }
             }
@@ -449,6 +477,12 @@ fn run_camr_batch(
         if let Some((unit, msg)) = failures.first() {
             return Err(CamrError::Verification(format!("batch unit {unit}: {msg}")));
         }
+    }
+
+    // Hand the whole batch's spans back so callers can still export one
+    // continuous trace (unit roll-ups above consumed them per unit).
+    if !all_spans.is_empty() {
+        opts.tracer.ingest(all_spans);
     }
 
     let jobs_executed: usize =
@@ -525,6 +559,7 @@ fn run_uncoded_batch(
                     map_invocations: (cfg.k - 1) * per_round * cfg.subfiles(),
                     verified: out.verified,
                     error: None,
+                    phases: Vec::new(),
                 });
             }
             Err(e) => {
@@ -538,6 +573,7 @@ fn run_uncoded_batch(
                     map_invocations: 0,
                     verified: false,
                     error: Some(e.to_string()),
+                    phases: Vec::new(),
                 });
             }
         }
@@ -593,6 +629,7 @@ fn run_ccdc_batch(cfg: &SystemConfig, opts: &BatchOptions) -> Result<BatchOutcom
             map_invocations: (cfg.k - 1) * cfg.k * cfg.gamma,
             verified: out.verified,
             error: None,
+            phases: Vec::new(),
         })
         .collect();
     let maps: Vec<Vec<usize>> =
@@ -652,6 +689,32 @@ mod tests {
         // Rounds map *different* data (distinct derived seeds) yet the
         // ledger stays schedule-determined: uniform per-round bytes.
         assert_eq!(out.bus.job_bytes(0), out.bus.job_bytes(2));
+    }
+
+    #[test]
+    fn traced_batch_rolls_up_phases_per_unit() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut o = opts();
+        o.jobs = Some(8); // 2 rounds
+        o.tracer = Tracer::on();
+        let out = run_batch_synthetic(&cfg, BatchScheme::Camr, &o).unwrap();
+        assert_eq!(out.units.len(), 2);
+        for u in &out.units {
+            assert!(!u.phases.is_empty(), "traced unit has a roll-up");
+            assert!(u.phases.iter().any(|p| p.phase == "map"));
+            assert!(u.phases.iter().any(|p| p.phase == "stage1" && p.bytes > 0));
+        }
+        // The tracer still holds the whole batch's spans for export,
+        // and the byte-exact ledger is invariant under tracing.
+        assert!(!o.tracer.take_spans().is_empty());
+        assert!((out.load() - 1.0).abs() < 1e-12);
+        let untraced = run_batch_synthetic(&cfg, BatchScheme::Camr, &{
+            let mut u = opts();
+            u.jobs = Some(8);
+            u
+        })
+        .unwrap();
+        assert_eq!(out.total_bytes(), untraced.total_bytes());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::agg::Value;
 use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
 use crate::net::{Bus, Stage};
+use crate::obs::{SpanKind, SpanSink, Tracer, COORD};
 use crate::shuffle::buf::{BufferPool, PoolStats, SharedBuf};
 use crate::workload::{check_output, Workload};
 use crate::{FuncId, JobId};
@@ -78,6 +79,10 @@ pub struct Engine {
     /// to `false` to run the legacy allocate-per-packet data plane —
     /// the ledger must be byte-identical either way (golden test).
     pub pooling: bool,
+    /// Span collector ([`Tracer::Off`] by default — the no-op branch).
+    /// Enable with [`Tracer::on`] before `run` to record typed spans for
+    /// every protocol step; drain with [`Tracer::take_spans`] after.
+    pub tracer: Tracer,
     pool: BufferPool,
     outputs: HashMap<(JobId, FuncId), Value>,
 }
@@ -95,6 +100,7 @@ impl Engine {
             bus: Bus::new(),
             verify: true,
             pooling: true,
+            tracer: Tracer::Off,
             pool: BufferPool::new(),
             outputs: HashMap::new(),
         })
@@ -140,22 +146,25 @@ impl Engine {
             w.store.clear();
         }
         let schedule = self.master.schedule()?;
+        // All workers share the calling thread, so one span buffer covers
+        // the whole round; it drains into the tracer when `run` returns.
+        let mut sink = self.tracer.sink();
 
         let t0 = Instant::now();
-        let map_invocations = self.map_phase()?;
+        let map_invocations = self.map_phase(&mut sink)?;
         let map_time = t0.elapsed();
 
         let t1 = Instant::now();
-        self.shuffle_stage_coded(&schedule.stage1, Stage::Stage1)?;
+        self.shuffle_stage_coded(&schedule.stage1, Stage::Stage1, &mut sink)?;
         let m1 = t1.elapsed();
-        self.shuffle_stage_coded(&schedule.stage2, Stage::Stage2)?;
+        self.shuffle_stage_coded(&schedule.stage2, Stage::Stage2, &mut sink)?;
         let m2 = t1.elapsed();
-        self.shuffle_stage3(&schedule)?;
+        self.shuffle_stage3(&schedule, &mut sink)?;
         let shuffle_time = t1.elapsed();
         let stage_times = [m1, m2 - m1, shuffle_time - m2];
 
         let t2 = Instant::now();
-        let verified = self.reduce_phase()?;
+        let verified = self.reduce_phase(&mut sink)?;
         let reduce_time = t2.elapsed();
 
         Ok(RunOutcome {
@@ -179,13 +188,16 @@ impl Engine {
     /// and aggregates per batch (§III-B). Workers run strictly one after
     /// another on this thread — the serial baseline the parallel engine's
     /// map-phase speedup is measured against.
-    fn map_phase(&mut self) -> Result<usize> {
+    fn map_phase(&mut self, sink: &mut SpanSink) -> Result<usize> {
         let cfg = &self.master.cfg;
         let placement = &self.master.placement;
         let workload = &*self.workload;
         let mut total = 0usize;
-        for w in &mut self.workers {
-            total += w.run_map_phase(cfg, placement, workload)?;
+        for (id, w) in self.workers.iter_mut().enumerate() {
+            let t = sink.begin();
+            let n = w.run_map_phase(cfg, placement, workload)?;
+            sink.record(t, SpanKind::Map, id, 0, None, n as u64, 0);
+            total += n;
         }
         Ok(total)
     }
@@ -202,58 +214,81 @@ impl Engine {
         &mut self,
         groups: &[crate::shuffle::multicast::GroupPlan],
         stage: Stage,
+        sink: &mut SpanSink,
     ) -> Result<()> {
         let pool = self.pool.clone();
+        let mut seq = 0u64;
         for plan in groups {
             // Encode: one broadcast per member, from local state only.
             let mut deltas: Vec<SharedBuf> = Vec::with_capacity(plan.members.len());
             for &m in plan.members.iter() {
+                let t = sink.begin();
                 let delta =
                     self.workers[m].encode_for_group_shared(plan, &pool, self.pooling)?;
+                sink.record(t, SpanKind::Encode, m, 0, Some(stage), seq, delta.len() as u64);
+                seq += 1;
                 let recipients: Vec<usize> =
                     plan.members.iter().copied().filter(|&x| x != m).collect();
                 self.bus.multicast(stage, m, recipients, delta.len());
                 deltas.push(delta);
             }
             // Decode: each member reconstructs its chunk and stores it.
+            let bytes: u64 = deltas.iter().map(|d| d.len() as u64).sum();
             for &m in &plan.members {
+                let t = sink.begin();
                 if self.pooling {
                     self.workers[m].decode_from_group_pooled(plan, &deltas, &pool)?;
                 } else {
                     self.workers[m].decode_from_group(plan, &deltas)?;
                 }
+                sink.record(t, SpanKind::Decode, m, 0, Some(stage), 0, bytes);
             }
         }
         Ok(())
     }
 
     /// Stage 3: fused unicasts within parallel classes (Eq. (5)).
-    fn shuffle_stage3(&mut self, schedule: &Schedule) -> Result<()> {
+    fn shuffle_stage3(&mut self, schedule: &Schedule, sink: &mut SpanSink) -> Result<()> {
         let agg = self.workload.aggregator();
-        for u in &schedule.stage3 {
+        for (si, u) in schedule.stage3.iter().enumerate() {
+            let t = sink.begin();
             let v = self.workers[u.sender].fuse_for_unicast(agg, u)?;
+            let bytes = v.len() as u64;
             self.bus.unicast(Stage::Stage3, u.sender, u.receiver, v.len());
             self.workers[u.receiver].receive_fused(u, v)?;
+            sink.record(
+                t,
+                SpanKind::Exchange,
+                u.sender,
+                u.job,
+                Some(Stage::Stage3),
+                si as u64,
+                bytes,
+            );
         }
         Ok(())
     }
 
     /// Reduce phase (§III-D) + oracle verification.
-    fn reduce_phase(&mut self) -> Result<bool> {
+    fn reduce_phase(&mut self, sink: &mut SpanSink) -> Result<bool> {
         let cfg = self.master.cfg.clone();
         let agg = self.workload.aggregator();
         for f in 0..cfg.functions() {
             let reducer = cfg.reducer_of(f);
             for j in 0..cfg.jobs() {
+                let t = sink.begin();
                 let out =
                     self.workers[reducer].reduce(&cfg, &self.master.placement, agg, j, f)?;
+                sink.record(t, SpanKind::Reduce, reducer, j, None, f as u64, out.len() as u64);
                 self.outputs.insert((j, f), out);
             }
         }
         if !self.verify {
             return Ok(true);
         }
+        let t = sink.begin();
         verify_outputs(&cfg, &*self.workload, &self.outputs)?;
+        sink.record(t, SpanKind::Verify, COORD, 0, None, 0, self.outputs.len() as u64);
         Ok(true)
     }
 }

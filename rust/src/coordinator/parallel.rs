@@ -65,6 +65,7 @@ use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
 use crate::net::transport::{InProcTransport, Packet};
 use crate::net::{Bus, SharedBus, Stage};
+use crate::obs::{SpanKind, Tracer, COORD};
 use crate::shuffle::buf::{BufferPool, PoolStats};
 use crate::workload::Workload;
 use crate::{FuncId, JobId, ServerId};
@@ -115,6 +116,12 @@ pub struct ParallelEngine {
     /// processes (required for [`TransportKind::Socket`]; ignored on the
     /// channel plane, where the in-process `workload` is used directly).
     pub remote_spec: Option<WorkerSpec>,
+    /// Span collector ([`Tracer::Off`] by default — the no-op branch).
+    /// On the channel plane every worker thread buffers spans locally and
+    /// drains them here at round end; on the socket plane workers ship
+    /// their spans to the hub in a [`crate::net::frame::FrameKind::Spans`]
+    /// frame and the hub ingests them into this same tracer.
+    pub tracer: Tracer,
     pool: BufferPool,
     outputs: HashMap<(JobId, FuncId), Value>,
 }
@@ -134,6 +141,7 @@ impl ParallelEngine {
             pooling: true,
             transport: TransportKind::Chan,
             remote_spec: None,
+            tracer: Tracer::Off,
             pool: BufferPool::new(),
             outputs: HashMap::new(),
         })
@@ -197,6 +205,7 @@ impl ParallelEngine {
             &self.pool,
             self.pooling,
             self.verify,
+            &self.tracer,
             opts,
         )?;
         self.bus = run.bus;
@@ -217,7 +226,7 @@ impl ParallelEngine {
         }
 
         let cfg = &self.master.cfg;
-        let ctx = RoundCtx::new(
+        let mut ctx = RoundCtx::new(
             cfg,
             &self.master.placement,
             &*self.workload,
@@ -225,6 +234,8 @@ impl ParallelEngine {
             &self.pool,
             self.pooling,
         );
+        ctx.tracer = self.tracer.clone();
+        let ctx = ctx;
         let barrier = Barrier::new(servers + 1);
         let failed = AtomicBool::new(false);
 
@@ -311,7 +322,10 @@ impl ParallelEngine {
         }
 
         let verified = if self.verify {
+            let mut sink = self.tracer.sink();
+            let t = sink.begin();
             verify_outputs(cfg, &*self.workload, &outputs)?;
+            sink.record(t, SpanKind::Verify, COORD, 0, None, 0, outputs.len() as u64);
             true
         } else {
             true

@@ -21,6 +21,7 @@ use crate::config::SystemConfig;
 use crate::error::{CamrError, Result};
 use crate::net::transport::{Packet, Transport};
 use crate::net::Stage;
+use crate::obs::{SpanKind, SpanSink, Tracer};
 use crate::placement::Placement;
 use crate::shuffle::buf::{BufferPool, SharedBuf};
 use crate::shuffle::multicast::GroupPlan;
@@ -81,6 +82,9 @@ pub struct RoundCtx<'a> {
     pub pool: &'a BufferPool,
     /// Whether to route buffers through the pool.
     pub pooling: bool,
+    /// Span collector ([`Tracer::Off`] by default — the no-op branch).
+    /// Every worker thread draws its own [`SpanSink`] from this.
+    pub tracer: Tracer,
 }
 
 impl<'a> RoundCtx<'a> {
@@ -94,7 +98,17 @@ impl<'a> RoundCtx<'a> {
         pooling: bool,
     ) -> Self {
         let (groups, stage3_base) = flatten(schedule);
-        RoundCtx { cfg, placement, workload, schedule, groups, stage3_base, pool, pooling }
+        RoundCtx {
+            cfg,
+            placement,
+            workload,
+            schedule,
+            groups,
+            stage3_base,
+            pool,
+            pooling,
+            tracer: Tracer::Off,
+        }
     }
 }
 
@@ -130,9 +144,13 @@ pub fn run_round<T: Transport>(
     link: &mut T,
 ) -> WorkerRun {
     let mut error: Option<CamrError> = None;
+    // Thread-private span buffer; drains into the tracer when this
+    // function returns (sink drop). No-op when tracing is off.
+    let mut sink = ctx.tracer.sink();
 
     // ---- Map.
     let mut map_invocations = 0usize;
+    let t = sink.begin();
     match worker.run_map_phase(ctx.cfg, ctx.placement, ctx.workload) {
         Ok(n) => map_invocations = n,
         Err(e) => {
@@ -140,6 +158,7 @@ pub fn run_round<T: Transport>(
             error = Some(e);
         }
     }
+    sink.record(t, SpanKind::Map, id, 0, None, map_invocations as u64, 0);
     let mut stopped = link.barrier().is_err();
 
     // ---- Coded stages 1 and 2.
@@ -148,7 +167,7 @@ pub fn run_round<T: Transport>(
             break;
         }
         if error.is_none() && !link.aborted() {
-            if let Err(e) = run_coded_phase(id, worker, ctx, phase, link) {
+            if let Err(e) = run_coded_phase(id, worker, ctx, phase, link, &mut sink) {
                 link.fail(&e);
                 error.get_or_insert(e);
             }
@@ -159,7 +178,7 @@ pub fn run_round<T: Transport>(
     // ---- Stage 3.
     if !stopped {
         if error.is_none() && !link.aborted() {
-            if let Err(e) = run_stage3(id, worker, ctx, link) {
+            if let Err(e) = run_stage3(id, worker, ctx, link, &mut sink) {
                 link.fail(&e);
                 error.get_or_insert(e);
             }
@@ -170,7 +189,7 @@ pub fn run_round<T: Transport>(
     // ---- Reduce.
     let mut outputs = Vec::new();
     if !stopped && error.is_none() && !link.aborted() {
-        match run_reduce(id, worker, ctx) {
+        match run_reduce(id, worker, ctx, &mut sink) {
             Ok(o) => outputs = o,
             Err(e) => {
                 link.fail(&e);
@@ -191,7 +210,9 @@ fn run_coded_phase<T: Transport>(
     ctx: &RoundCtx<'_>,
     phase: usize,
     link: &mut T,
+    sink: &mut SpanSink,
 ) -> Result<()> {
+    let stage = if phase == 0 { Stage::Stage1 } else { Stage::Stage2 };
     // The groups of this phase that this worker belongs to.
     let mut mine: HashMap<usize, GroupState> = HashMap::new();
     let mut order: Vec<usize> = Vec::new();
@@ -212,15 +233,20 @@ fn run_coded_phase<T: Transport>(
     // recipient (SharedBuf clones in-process, one frame over sockets).
     for &gi in &order {
         let g = &ctx.groups[gi];
+        let t = sink.begin();
         let delta = worker.encode_for_group_shared(g.plan, ctx.pool, ctx.pooling)?;
         let st = mine.get_mut(&gi).expect("own group");
+        let seq = g.seq_base + st.pos as u64;
+        sink.record(t, SpanKind::Encode, id, 0, Some(g.stage), seq, delta.len() as u64);
         let recipients: Vec<ServerId> =
             g.plan.members.iter().copied().filter(|&m| m != id).collect();
-        link.send_delta(g.seq_base + st.pos as u64, g.stage, gi, st.pos, &recipients, &delta)?;
+        link.send_delta(seq, g.stage, gi, st.pos, &recipients, &delta)?;
         st.deltas[st.pos] = Some(delta);
     }
 
     // Receive the other members' broadcasts.
+    let t_recv = sink.begin();
+    let mut recv_bytes = 0u64;
     let mut received = 0usize;
     while received < expected {
         let Some(pkt) = link.recv() else {
@@ -235,6 +261,7 @@ fn run_coded_phase<T: Transport>(
                         "worker {id}: delta for group {group} it is not a member of"
                     ))
                 })?;
+                recv_bytes += delta.len() as u64;
                 if st.deltas[from].replace(delta).is_some() {
                     return Err(CamrError::Runtime(format!(
                         "worker {id}: duplicate delta from position {from} of group {group}"
@@ -250,6 +277,9 @@ fn run_coded_phase<T: Transport>(
         }
     }
 
+    // The receive window: send loop end → last peer broadcast in hand.
+    sink.record(t_recv, SpanKind::Exchange, id, 0, Some(stage), 0, recv_bytes);
+
     // Decode every group (schedule order for determinism of any error).
     // Deltas are *taken* out of the receive state, so each group's
     // buffers return to the pool as soon as its decode finishes —
@@ -262,11 +292,14 @@ fn run_coded_phase<T: Transport>(
             .iter_mut()
             .map(|d| d.take().expect("all broadcasts received"))
             .collect();
+        let bytes: u64 = deltas.iter().map(|d| d.len() as u64).sum();
+        let t = sink.begin();
         if ctx.pooling {
             worker.decode_from_group_pooled(g.plan, &deltas, ctx.pool)?;
         } else {
             worker.decode_from_group(g.plan, &deltas)?;
         }
+        sink.record(t, SpanKind::Decode, id, 0, Some(g.stage), g.seq_base, bytes);
     }
     Ok(())
 }
@@ -278,6 +311,7 @@ fn run_stage3<T: Transport>(
     worker: &mut Worker,
     ctx: &RoundCtx<'_>,
     link: &mut T,
+    sink: &mut SpanSink,
 ) -> Result<()> {
     let agg = ctx.workload.aggregator();
     let mut expected = 0usize;
@@ -286,10 +320,16 @@ fn run_stage3<T: Transport>(
             expected += 1;
         }
         if u.sender == id {
+            let t = sink.begin();
             let v = worker.fuse_for_unicast(agg, u)?;
-            link.send_fused(ctx.stage3_base + si as u64, si, u.receiver, v)?;
+            let bytes = v.len() as u64;
+            let seq = ctx.stage3_base + si as u64;
+            link.send_fused(seq, si, u.receiver, v)?;
+            sink.record(t, SpanKind::Exchange, id, u.job, Some(Stage::Stage3), seq, bytes);
         }
     }
+    let t_recv = sink.begin();
+    let mut recv_bytes = 0u64;
     let mut received = 0usize;
     while received < expected {
         let Some(pkt) = link.recv() else {
@@ -299,6 +339,7 @@ fn run_stage3<T: Transport>(
         };
         match pkt {
             Packet::Fused { spec, value } => {
+                recv_bytes += value.len() as u64;
                 worker.receive_fused(&ctx.schedule.stage3[spec], value)?;
                 received += 1;
             }
@@ -309,6 +350,8 @@ fn run_stage3<T: Transport>(
             }
         }
     }
+    // The stage-3 receive window.
+    sink.record(t_recv, SpanKind::Exchange, id, 0, Some(Stage::Stage3), 0, recv_bytes);
     Ok(())
 }
 
@@ -317,6 +360,7 @@ fn run_reduce(
     id: ServerId,
     worker: &Worker,
     ctx: &RoundCtx<'_>,
+    sink: &mut SpanSink,
 ) -> Result<Vec<((JobId, FuncId), Value)>> {
     let agg = ctx.workload.aggregator();
     let mut out = Vec::new();
@@ -325,7 +369,10 @@ fn run_reduce(
             continue;
         }
         for j in 0..ctx.cfg.jobs() {
-            out.push(((j, f), worker.reduce(ctx.cfg, ctx.placement, agg, j, f)?));
+            let t = sink.begin();
+            let value = worker.reduce(ctx.cfg, ctx.placement, agg, j, f)?;
+            sink.record(t, SpanKind::Reduce, id, j, None, f as u64, value.len() as u64);
+            out.push(((j, f), value));
         }
     }
     Ok(out)

@@ -47,6 +47,7 @@ use crate::net::socket::{
     SocketTransport,
 };
 use crate::net::{Bus, BusRecorder, SharedBus, Stage};
+use crate::obs::{self, SpanKind, Tracer, COORD};
 use crate::shuffle::buf::BufferPool;
 use crate::workload;
 use crate::{FuncId, JobId, ServerId};
@@ -241,6 +242,7 @@ fn read_frame_deadline(
 /// Run one full round over sockets: bind, spawn, handshake, route,
 /// collect. Returns the canonical bus, the reduced outputs and the
 /// measured outcome; any failure is a typed error after full teardown.
+#[allow(clippy::too_many_arguments)]
 pub fn run_socket(
     master: &Master,
     spec: &WorkerSpec,
@@ -248,6 +250,7 @@ pub fn run_socket(
     pool: &BufferPool,
     pooling: bool,
     verify: bool,
+    tracer: &Tracer,
     opts: &SocketOptions,
 ) -> Result<SocketRun> {
     let cfg = &master.cfg;
@@ -315,7 +318,8 @@ pub fn run_socket(
             }
             let mut w = Frame::new(FrameKind::Welcome);
             w.tag = id as u32;
-            w.job = u32::from(pooling); // flags: bit 0 = pooling
+            // Flags: bit 0 = pooling, bit 1 = tracing.
+            w.job = u32::from(pooling) | (u32::from(tracer.enabled()) << 1);
             w.extra = match opts.die_after_barrier {
                 // The hook targets *assigned* id 0 (spawn order and
                 // accept order need not agree).
@@ -326,6 +330,9 @@ pub fn run_socket(
             Ok((s, dec))
         };
         conns.push(accept()?);
+        if obs::metrics_enabled() {
+            obs::metrics().workers_connected.add(1);
+        }
         // On error: return propagates, Fleet::drop kills subprocesses,
         // thread workers die on their handshake deadline / socket error.
     }
@@ -367,7 +374,8 @@ pub fn run_socket(
     // forwarded frame.
     let shared = SharedBus::new();
     let rec = shared.recorder();
-    let hub_res = hub_loop(servers, &rec, &mut writers, &ev_rx, opts.disconnect_timeout);
+    let hub_res =
+        hub_loop(servers, &rec, &mut writers, &ev_rx, opts.disconnect_timeout, tracer);
     drop(rec);
 
     // ---- Teardown (both paths): abort broadcast if needed, close every
@@ -391,12 +399,18 @@ pub fn run_socket(
     }
     drop(writers);
     drop(listener);
+    if obs::metrics_enabled() {
+        obs::metrics().workers_connected.add(-(servers as i64));
+    }
 
     let bus = shared.collect();
     let hub = hub_res?;
 
     let verified = if verify {
+        let mut sink = tracer.sink();
+        let t = sink.begin();
         verify_outputs(cfg, workload, &hub.outputs)?;
+        sink.record(t, SpanKind::Verify, COORD, 0, None, 0, hub.outputs.len() as u64);
         true
     } else {
         true
@@ -432,6 +446,7 @@ fn hub_loop(
     writers: &mut [SockStream],
     events: &mpsc::Receiver<HubEvent>,
     timeout: Duration,
+    tracer: &Tracer,
 ) -> Result<HubResult> {
     let t0 = Instant::now();
     let mut phase_marks = [Duration::ZERO; 4];
@@ -510,6 +525,9 @@ fn hub_loop(
                     )));
                 }
                 Err(_) => {
+                    if obs::metrics_enabled() {
+                        obs::metrics().disconnect_timeouts.inc();
+                    }
                     return Err(CamrError::Disconnected(format!(
                         "no progress for {timeout:?} waiting at barrier {b} \
                          ({count}/{servers} workers arrived)"
@@ -549,6 +567,11 @@ fn hub_loop(
                         map_invocations += f.seq as usize;
                     }
                 }
+                // The worker's span batch for the round (sent between
+                // Outputs and Done when the Welcome enabled tracing).
+                FrameKind::Spans => {
+                    tracer.ingest(obs::decode_spans(&f.payload)?);
+                }
                 FrameKind::Failed => {
                     return Err(CamrError::from_wire(
                         f.tag,
@@ -569,6 +592,9 @@ fn hub_loop(
                 )));
             }
             Err(_) => {
+                if obs::metrics_enabled() {
+                    obs::metrics().disconnect_timeouts.inc();
+                }
                 return Err(CamrError::Disconnected(format!(
                     "no progress for {timeout:?} collecting outputs \
                      ({ndone}/{servers} workers done)"
@@ -618,6 +644,7 @@ fn worker_over_stream(
     }
     let id = welcome.tag as ServerId;
     let pooling = welcome.job & 1 == 1;
+    let tracing = welcome.job & 2 == 2;
     let die_after = match welcome.extra {
         0 => None,
         n => Some((n - 1) as usize),
@@ -630,10 +657,16 @@ fn worker_over_stream(
     let wl = workload::build_native(rc.workload, &master.cfg, rc.seed)?;
     let schedule = master.schedule()?;
     let pool = pool.unwrap_or_default();
-    let ctx = RoundCtx::new(&master.cfg, &master.placement, &*wl, &schedule, &pool, pooling);
+    // Worker-local tracer: spans use this process's own epoch (per-tid
+    // timelines stay coherent; cross-process skew is handshake-level and
+    // documented in `obs`). The batch ships to the hub before `Done`.
+    let tracer = if tracing { Tracer::on() } else { Tracer::Off };
+    let mut ctx = RoundCtx::new(&master.cfg, &master.placement, &*wl, &schedule, &pool, pooling);
+    ctx.tracer = tracer.clone();
     let mut worker = Worker::new(id, &master.cfg);
 
     let mut link = SocketTransport::new(stream, dec, id, die_after, hard_exit);
+    link.set_span_sink(tracer.sink());
     let run = proto::run_round(id, &mut worker, &ctx, &mut link);
 
     if link.crashed() {
@@ -648,6 +681,13 @@ fn worker_over_stream(
         return Err(CamrError::Runtime(format!("worker {id}: run aborted")));
     }
     link.send_outputs(&run.outputs)?;
+    if tracer.enabled() {
+        link.flush_spans();
+        let spans = tracer.take_spans();
+        if !spans.is_empty() {
+            link.send_spans(&spans)?;
+        }
+    }
     link.send_done(run.map_invocations)?;
     Ok(())
 }

@@ -47,6 +47,10 @@
 //! - [`runtime`] — PJRT client wrapper executing AOT-compiled JAX/Pallas
 //!   artifacts on the map path.
 //! - [`metrics`] — load ledger and reports.
+//! - [`obs`] — structured tracing + metrics: typed spans on every
+//!   plane (serial, channel, TCP, Unix-domain), a Chrome `trace_event`
+//!   exporter for Perfetto, per-worker phase statistics, and a
+//!   sim-vs-measured comparison. Off by default, no-op when disabled.
 //!
 //! ## Quickstart
 //!
@@ -193,6 +197,7 @@ pub mod design;
 pub mod error;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod placement;
 pub mod report;
 pub mod runtime;

@@ -28,6 +28,7 @@ use camr::coordinator::remote::{self, SocketOptions, WorkerMode, WorkerSpec};
 use camr::metrics::{BatchReport, LoadReport, SchemeBatch, SimTimes};
 use camr::net::socket::SocketKind;
 use camr::net::{Bus, Stage};
+use camr::obs::{self, Tracer};
 use camr::report::Table;
 use camr::sim::{self, LinkKind, SimConfig, SimOutcome, StragglerModel};
 use camr::util::json::Json;
@@ -110,7 +111,11 @@ USAGE:
   camr run      [CONFIG.toml] [--k N] [--q N] [--gamma N] [--workload KIND]
                 [--seed N] [--artifact PATH] [--json] [--parallel]
                 [--config FILE] [--transport serial|chan|tcp|unix]
+                [--trace OUT.json]
   camr worker   --connect URL        (spawned by the socket-transport hub)
+  camr trace    [CONFIG.toml] [--config FILE] [--k N] [--q N] [--gamma N]
+                [--workload KIND] [--seed N] [--json] [--parallel]
+                [--transport serial|chan|tcp|unix] [--out TRACE.json]
   camr simulate [CONFIG.toml] [--config FILE] [--k N] [--q N] [--gamma N]
                 [--workload KIND] [--seed N] [--json] [--parallel]
                 [--link shared|bisection] [--bandwidth BYTES/S]
@@ -153,7 +158,16 @@ The flag beats --parallel beats the config's [transport] section.
 simulate replays the byte-exact ledgers of a CAMR run and the
 CCDC/uncoded baselines through the discrete-event cluster simulator
 ([sim] section of CONFIG.toml, flags override) and prints per-stage
-simulated times.
+simulated times, then lines them up against the traced phase windows
+of the real run (sim_vs_real).
+
+trace runs one round with the observability layer forced on and
+prints per-worker × per-phase span percentiles, per-phase wall
+windows, and the metric counters the run moved; --out writes the
+Chrome trace_event JSON (open in Perfetto or chrome://tracing).
+`camr run --trace OUT.json` exports the same trace without the
+tables. Tracing is otherwise off: a disabled tracer never reads the
+clock and adds no work to the data path.
 ";
 
 fn build_workload(
@@ -207,7 +221,7 @@ fn socket_options(sock_kind: SocketKind, tcfg: Option<&TransportConfig>) -> Resu
 fn cmd_run(argv: &[String]) -> Result<()> {
     let (path, rest) = split_positional_config(argv);
     let args = Args::parse(rest, &["json", "parallel"])?;
-    let (cfg, kind, seed, artifact, json, simcfg, tcfg) =
+    let (cfg, kind, seed, artifact, json, simcfg, tcfg, ocfg) =
         match path.or_else(|| args.get_opt("config")) {
             Some(path) => {
                 let rc = RunConfig::from_path(std::path::Path::new(&path))?;
@@ -219,6 +233,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
                     rc.json,
                     rc.sim,
                     rc.transport,
+                    rc.obs,
                 )
             }
             None => (
@@ -233,9 +248,23 @@ fn cmd_run(argv: &[String]) -> Result<()> {
                 args.get_bool("json"),
                 None,
                 None,
+                None,
             ),
         };
     let json = json || args.get_bool("json");
+    // Trace destination: --trace OUT.json beats the config's [obs]
+    // section beats the CAMR_TRACE env convention. Absent all three the
+    // tracer stays on its no-op branch.
+    let trace_dest = args
+        .get_opt("trace")
+        .or_else(|| ocfg.as_ref().and_then(|o| o.destination()))
+        .or_else(obs::env_trace_destination);
+    let tracer = if trace_dest.is_some() {
+        obs::set_metrics_enabled(true);
+        Tracer::on()
+    } else {
+        Tracer::Off
+    };
     // Data-plane resolution: --transport beats --parallel beats the
     // config's [transport] section beats the serial default.
     let choice = match args.get_opt("transport") {
@@ -249,12 +278,14 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let (out, sim_times, engine_label): (RunOutcome, _, String) = match choice {
         TransportChoice::Serial => {
             let mut e = Engine::new(cfg.clone(), wl)?;
+            e.tracer = tracer.clone();
             let out = e.run()?;
             let st = attach_sim_times(&cfg, simcfg.as_ref(), &e.master.placement, &e.bus)?;
             (out, st, "serial".into())
         }
         TransportChoice::Chan => {
             let mut e = ParallelEngine::new(cfg.clone(), wl)?;
+            e.tracer = tracer.clone();
             let out = e.run()?;
             let st = attach_sim_times(&cfg, simcfg.as_ref(), &e.master.placement, &e.bus)?;
             (out, st, "parallel (thread-per-worker, channels)".into())
@@ -280,6 +311,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
                 }
             );
             let mut e = ParallelEngine::new(cfg.clone(), wl)?;
+            e.tracer = tracer.clone();
             e.transport = TransportKind::Socket(opts);
             e.remote_spec = Some(WorkerSpec { kind, seed });
             let out = e.run()?;
@@ -287,6 +319,12 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             (out, st, label)
         }
     };
+    if let Some(dest) = &trace_dest {
+        let spans = tracer.take_spans();
+        obs::write_chrome_trace(std::path::Path::new(dest), &spans)?;
+        // stderr so --json stdout stays machine-parseable.
+        eprintln!("trace: {} spans -> {dest}", spans.len());
+    }
     let mut report = LoadReport::from_outcome(&cfg, &out);
     if let Some(st) = sim_times {
         report.attach_sim(st);
@@ -310,6 +348,214 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .get_opt("connect")
         .ok_or_else(|| anyhow!("camr worker requires --connect URL (spawned by the hub)"))?;
     remote::run_worker(&url)?;
+    Ok(())
+}
+
+/// `camr trace`: run the configured round with the tracer forced on and
+/// print per-worker × per-phase span statistics plus the metric
+/// counters the run incremented. `--out PATH` additionally writes the
+/// Chrome `trace_event` JSON (load it in Perfetto / chrome://tracing).
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let (path, rest) = split_positional_config(argv);
+    let args = Args::parse(rest, &["json", "parallel"])?;
+    let (cfg, kind, seed, artifact, json, tcfg) = match path.or_else(|| args.get_opt("config")) {
+        Some(p) => {
+            let rc = RunConfig::from_path(std::path::Path::new(&p))?;
+            (
+                rc.system,
+                rc.workload,
+                rc.seed,
+                rc.artifact.map(PathBuf::from),
+                rc.json,
+                rc.transport,
+            )
+        }
+        None => (
+            SystemConfig::new(
+                args.get_usize("k", 3)?,
+                args.get_usize("q", 2)?,
+                args.get_usize("gamma", 2)?,
+            )?,
+            WorkloadKind::parse(&args.get_str("workload", "word_count"))?,
+            args.get_u64("seed", 0xCA3A)?,
+            args.get_opt("artifact").map(PathBuf::from),
+            args.get_bool("json"),
+            None,
+        ),
+    };
+    let json = json || args.get_bool("json");
+    obs::set_metrics_enabled(true);
+    let tracer = Tracer::on();
+    let choice = match args.get_opt("transport") {
+        Some(v) => TransportChoice::parse(&v)?,
+        None if args.get_bool("parallel") => TransportChoice::Chan,
+        None => tcfg.as_ref().map(|t| t.kind).unwrap_or_default(),
+    };
+    let wl = build_workload(kind, &cfg, seed, artifact.as_ref())?;
+    let (out, engine_label): (RunOutcome, &str) = match choice {
+        TransportChoice::Serial => {
+            let mut e = Engine::new(cfg.clone(), wl)?;
+            e.tracer = tracer.clone();
+            (e.run()?, "serial")
+        }
+        TransportChoice::Chan => {
+            let mut e = ParallelEngine::new(cfg.clone(), wl)?;
+            e.tracer = tracer.clone();
+            (e.run()?, "chan")
+        }
+        TransportChoice::Tcp | TransportChoice::Unix => {
+            anyhow::ensure!(
+                artifact.is_none(),
+                "--artifact is not supported over socket transports"
+            );
+            let sock_kind = if choice == TransportChoice::Tcp {
+                SocketKind::Tcp
+            } else {
+                SocketKind::Unix
+            };
+            let opts = socket_options(sock_kind, tcfg.as_ref())?;
+            let mut e = ParallelEngine::new(cfg.clone(), wl)?;
+            e.tracer = tracer.clone();
+            e.transport = TransportKind::Socket(opts);
+            e.remote_spec = Some(WorkerSpec { kind, seed });
+            (e.run()?, if sock_kind == SocketKind::Tcp { "tcp" } else { "unix" })
+        }
+    };
+    anyhow::ensure!(out.verified, "traced run failed verification");
+    let spans = tracer.take_spans();
+    anyhow::ensure!(!spans.is_empty(), "tracer captured no spans");
+
+    // Sanity: each protocol phase's measured *window* (earliest span
+    // start to latest span end across all workers) must stay inside the
+    // engine's own stage wall time plus slack. The slack absorbs
+    // scheduling jitter and — on socket planes — the handshake-level
+    // epoch skew between worker-process clocks (see `obs` docs). Summed
+    // span durations are deliberately NOT compared against wall time:
+    // concurrent workers make sums exceed it by design.
+    let rollup = obs::phase_rollup(&spans);
+    let walls = [
+        ("map", out.map_time.as_secs_f64()),
+        ("stage1", out.stage_times[0].as_secs_f64()),
+        ("stage2", out.stage_times[1].as_secs_f64()),
+        ("stage3", out.stage_times[2].as_secs_f64()),
+    ];
+    for (phase, wall) in walls {
+        if let Some(r) = rollup.iter().find(|r| r.phase == phase) {
+            let allowed = wall * 1.5 + 0.25;
+            anyhow::ensure!(
+                r.secs <= allowed,
+                "phase {phase}: traced window {:.6}s exceeds engine wall {wall:.6}s + slack",
+                r.secs,
+            );
+        }
+    }
+
+    if let Some(dest) = args.get_opt("out") {
+        obs::write_chrome_trace(std::path::Path::new(&dest), &spans)?;
+        eprintln!("trace: {} spans -> {dest}", spans.len());
+    }
+
+    let stats = obs::summarize(&spans);
+    let counters = obs::metrics().snapshot();
+    let wname = |w: usize| if w == obs::COORD { "coord".to_string() } else { w.to_string() };
+
+    if json {
+        let stat_rows: Vec<Json> = stats
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("worker", Json::Str(wname(s.worker))),
+                    ("phase", Json::Str(s.phase.to_string())),
+                    ("count", Json::UInt(s.count as u128)),
+                    ("total_ns", Json::UInt(s.total_ns as u128)),
+                    ("p50_ns", Json::UInt(s.p50_ns as u128)),
+                    ("p99_ns", Json::UInt(s.p99_ns as u128)),
+                    ("max_ns", Json::UInt(s.max_ns as u128)),
+                    ("bytes", Json::UInt(s.bytes as u128)),
+                ])
+            })
+            .collect();
+        let phase_rows: Vec<Json> = rollup
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("phase", Json::Str(r.phase.to_string())),
+                    ("secs", Json::Num(r.secs)),
+                    ("spans", Json::UInt(r.spans as u128)),
+                    ("bytes", Json::UInt(r.bytes as u128)),
+                ])
+            })
+            .collect();
+        let metric_rows: Vec<Json> = counters
+            .iter()
+            .map(|(name, v)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("value", Json::UInt(*v as u128)),
+                ])
+            })
+            .collect();
+        let obj = Json::obj(vec![
+            ("engine", Json::Str(engine_label.to_string())),
+            ("spans", Json::UInt(spans.len() as u128)),
+            ("stats", Json::Arr(stat_rows)),
+            ("phases", Json::Arr(phase_rows)),
+            ("metrics", Json::Arr(metric_rows)),
+        ]);
+        println!("{}", obj.render());
+        return Ok(());
+    }
+
+    println!(
+        "traced round — K={} (k={} q={}) γ={} engine={engine_label} spans={}",
+        cfg.servers(),
+        cfg.k,
+        cfg.q,
+        cfg.gamma,
+        spans.len()
+    );
+    println!();
+    let us = |ns: u64| format!("{:.1}", ns as f64 / 1e3);
+    let mut t = Table::new(vec![
+        "worker", "phase", "count", "total_us", "p50_us", "p99_us", "max_us", "bytes",
+    ]);
+    for s in &stats {
+        t.row(vec![
+            wname(s.worker),
+            s.phase.to_string(),
+            s.count.to_string(),
+            us(s.total_ns),
+            us(s.p50_ns),
+            us(s.p99_ns),
+            us(s.max_ns),
+            s.bytes.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!();
+    let mut p = Table::new(vec!["phase", "window_s", "spans", "bytes"]);
+    for r in &rollup {
+        p.row(vec![
+            r.phase.to_string(),
+            format!("{:.6}", r.secs),
+            r.spans.to_string(),
+            r.bytes.to_string(),
+        ]);
+    }
+    print!("{}", p.render());
+
+    // Counters stay zero for code paths the run never touched — only
+    // print the ones that moved.
+    let moved: Vec<_> = counters.iter().filter(|(_, v)| *v != 0).collect();
+    if !moved.is_empty() {
+        println!();
+        let mut m = Table::new(vec!["metric", "value"]);
+        for (name, v) in moved {
+            m.row(vec![name.clone(), v.to_string()]);
+        }
+        print!("{}", m.render());
+    }
     Ok(())
 }
 
@@ -417,20 +663,26 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     sc.seed = args.get_u64("sim-seed", sc.seed)?;
     sc.validate()?;
 
-    // CAMR: a real engine run produces the byte-exact ledger to replay
-    // (and measured per-phase wall times for the sim-vs-real table).
+    // CAMR: a real engine run produces the byte-exact ledger to replay,
+    // traced so the sim-vs-real table compares the simulator's phases
+    // against measured phase *windows* with the same boundaries
+    // (`net::stage_runs` barriers), not whole-engine wall times.
+    let tracer = Tracer::on();
     let wl = build_workload(kind, &cfg, wseed, artifact.as_ref())?;
-    let (camr_bus, camr_maps, camr_out) = if args.get_bool("parallel") {
+    let (camr_bus, camr_maps, _camr_out) = if args.get_bool("parallel") {
         let mut e = ParallelEngine::new(cfg.clone(), wl)?;
+        e.tracer = tracer.clone();
         let out = e.run()?;
         anyhow::ensure!(out.verified, "CAMR run failed verification");
         (e.bus.clone(), sim::camr_per_worker_maps(&cfg, &e.master.placement), out)
     } else {
         let mut e = Engine::new(cfg.clone(), wl)?;
+        e.tracer = tracer.clone();
         let out = e.run()?;
         anyhow::ensure!(out.verified, "CAMR run failed verification");
         (e.bus.clone(), sim::camr_per_worker_maps(&cfg, &e.master.placement), out)
     };
+    let measured_rollup = obs::phase_rollup(&tracer.take_spans());
     let camr_tasks: usize = camr_maps.iter().sum();
     let mut rows = vec![SchemeSim {
         label: "camr",
@@ -467,6 +719,10 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         sim: sim::simulate(&sc, &camr_maps, ue.bus.ledger())?,
     });
 
+    // Measured-vs-simulated CAMR phases, paired on the same stage
+    // boundaries the engines barrier on (`net::stage_runs`).
+    let sim_cmp = obs::compare_with_sim(&measured_rollup, &rows[0].sim);
+
     if json {
         let schemes: Vec<Json> = rows
             .iter()
@@ -479,6 +735,17 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
                 ])
             })
             .collect();
+        let sim_vs_real: Vec<Json> = sim_cmp
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("phase", Json::Str(c.phase.to_string())),
+                    ("sim_secs", Json::Num(c.sim_secs)),
+                    ("measured_secs", Json::Num(c.measured_secs)),
+                    ("rel_err", Json::Num(c.rel_err)),
+                ])
+            })
+            .collect();
         let obj = Json::obj(vec![
             ("k", Json::UInt(cfg.k as u128)),
             ("q", Json::UInt(cfg.q as u128)),
@@ -487,6 +754,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             ("servers", Json::UInt(cfg.servers() as u128)),
             ("sim_config", Json::Str(sc.describe())),
             ("schemes", Json::Arr(schemes)),
+            ("sim_vs_real", Json::Arr(sim_vs_real)),
         ]);
         println!("{}", obj.render());
         return Ok(());
@@ -564,34 +832,25 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     print!("{}", s.render());
 
-    // Sim-vs-real: the simulator's CAMR phase times next to the wall
-    // times the in-process engine just measured for the same ledger.
-    // Absolute values differ wildly (the sim models a 1 Gb/s cluster,
-    // the real run is memcpy over channels) — the column worth reading
-    // is each phase's *share*.
+    // Sim-vs-real: the simulator's CAMR phase times next to the
+    // *measured phase windows* the traced engine run just recorded —
+    // the same stage boundaries the sim models, not whole-engine wall
+    // times. Absolute values differ wildly (the sim models a 1 Gb/s
+    // cluster, the real run is memcpy over channels) — the column
+    // worth reading is each phase's share, and rel_err tracks how the
+    // shares drift.
     println!();
-    let mut vr = Table::new(vec!["phase", "sim_s", "real_s"]);
-    let real = [
-        camr_out.map_time.as_secs_f64(),
-        camr_out.stage_times[0].as_secs_f64(),
-        camr_out.stage_times[1].as_secs_f64(),
-        camr_out.stage_times[2].as_secs_f64(),
-    ];
-    let simulated = [
-        rows[0].sim.map_secs,
-        rows[0].sim.stage_secs(Stage::Stage1),
-        rows[0].sim.stage_secs(Stage::Stage2),
-        rows[0].sim.stage_secs(Stage::Stage3),
-    ];
-    for (i, phase) in ["map", "stage1", "stage2", "stage3"].iter().enumerate() {
+    let mut vr = Table::new(vec!["phase", "sim_s", "real_s", "rel_err"]);
+    for c in &sim_cmp {
         vr.row(vec![
-            phase.to_string(),
-            format!("{:.6}", simulated[i]),
-            format!("{:.6}", real[i]),
+            c.phase.to_string(),
+            format!("{:.6}", c.sim_secs),
+            format!("{:.6}", c.measured_secs),
+            format!("{:+.2}", c.rel_err),
         ]);
     }
     print!("{}", vr.render());
-    println!("(camr only; real_s is this machine's in-process engine run)");
+    println!("(camr only; real_s is the traced phase window of this machine's run)");
 
     if let Some(u) = rows.iter().find(|r| r.label == "uncoded") {
         println!(
@@ -943,6 +1202,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(rest),
         "worker" => cmd_worker(&Args::parse(rest, &bool_flags)?),
         "simulate" => cmd_simulate(rest),
+        "trace" => cmd_trace(rest),
         "batch" => cmd_batch(rest),
         "sweep" => cmd_sweep(&Args::parse(rest, &bool_flags)?),
         "table3" => cmd_table3(),

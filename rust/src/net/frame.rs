@@ -83,6 +83,10 @@ pub enum FrameKind {
     Failed,
     /// Hub → worker: a peer failed; stop work and exit.
     Abort,
+    /// Worker → hub: the round's trace spans, sent between `Outputs`
+    /// and `Done` when the Welcome enabled tracing (job flags bit 1).
+    /// Payload = [`crate::obs::encode_spans`].
+    Spans,
 }
 
 impl FrameKind {
@@ -98,6 +102,7 @@ impl FrameKind {
             FrameKind::Done => 7,
             FrameKind::Failed => 8,
             FrameKind::Abort => 9,
+            FrameKind::Spans => 10,
         }
     }
 
@@ -113,6 +118,7 @@ impl FrameKind {
             7 => FrameKind::Done,
             8 => FrameKind::Failed,
             9 => FrameKind::Abort,
+            10 => FrameKind::Spans,
             other => return Err(CamrError::Wire(format!("unknown frame kind {other}"))),
         })
     }
@@ -212,6 +218,9 @@ impl Frame {
 /// [`crate::shuffle::buf::SharedBuf`] payload straight from its backing
 /// buffer — see [`write_frame`].
 pub fn encode_header(out: &mut Vec<u8>, f: &Frame, payload_len: usize) {
+    if crate::obs::metrics_enabled() {
+        crate::obs::metrics().frames_encoded.inc();
+    }
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(f.kind.code());
     out.push(stage_code(f.stage));
@@ -329,6 +338,9 @@ impl FrameDecoder {
             payload: b[pstart..pstart + payload_len as usize].to_vec(),
         };
         self.pos += total;
+        if crate::obs::metrics_enabled() {
+            crate::obs::metrics().frames_decoded.inc();
+        }
         Ok(Some(frame))
     }
 }

@@ -153,6 +153,9 @@ impl Bus {
         recipients: Vec<ServerId>,
         bytes: usize,
     ) {
+        if crate::obs::metrics_enabled() {
+            crate::obs::metrics().multicast_bytes.observe(bytes as u64);
+        }
         self.ledger.push(Transmission { stage, sender, recipients, bytes, job: self.job });
     }
 
@@ -267,6 +270,9 @@ impl BusRecorder {
         recipients: Vec<ServerId>,
         bytes: usize,
     ) {
+        if crate::obs::metrics_enabled() {
+            crate::obs::metrics().multicast_bytes.observe(bytes as u64);
+        }
         let _ = self.tx.send((seq, Transmission { stage, sender, recipients, bytes, job: 0 }));
     }
 

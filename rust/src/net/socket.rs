@@ -33,6 +33,7 @@ use crate::error::{CamrError, Result};
 use crate::net::frame::{encode_header, write_frame, Frame, FrameDecoder, FrameKind, HEADER_LEN};
 use crate::net::transport::{Packet, Transport};
 use crate::net::Stage;
+use crate::obs::{self, Span, SpanKind, SpanSink};
 use crate::shuffle::buf::SharedBuf;
 use crate::{FuncId, JobId, ServerId};
 use std::io::{Read, Write};
@@ -229,6 +230,9 @@ pub fn dial(url: &str) -> Result<SockStream> {
                 return Err(CamrError::InvalidConfig(e.to_string()))
             }
             Err(e) => {
+                if obs::metrics_enabled() {
+                    obs::metrics().dial_retries.inc();
+                }
                 last = Some(e);
                 std::thread::sleep(Duration::from_millis(20));
             }
@@ -339,6 +343,9 @@ pub struct SocketTransport {
     hard_exit: bool,
     crashed: bool,
     aborted: bool,
+    /// Frame-I/O span buffer (no-op unless [`SocketTransport::set_span_sink`]
+    /// installed a live sink).
+    sink: SpanSink,
 }
 
 impl SocketTransport {
@@ -360,7 +367,20 @@ impl SocketTransport {
             hard_exit,
             crashed: false,
             aborted: false,
+            sink: SpanSink::disabled(),
         }
+    }
+
+    /// Install a span buffer so outbound data frames record `frame_io`
+    /// spans (the wire-serialization cost, tagged with payload bytes).
+    pub fn set_span_sink(&mut self, sink: SpanSink) {
+        self.sink = sink;
+    }
+
+    /// Drain buffered spans into their tracer (so a subsequent
+    /// [`Tracer::take_spans`](crate::obs::Tracer::take_spans) sees them).
+    pub fn flush_spans(&mut self) {
+        self.sink.flush();
     }
 
     /// Whether the die-after test hook fired (thread mode only; the
@@ -390,6 +410,15 @@ impl SocketTransport {
         write_frame(&mut self.stream, &f, &[])?;
         Ok(())
     }
+
+    /// Ship this round's trace spans to the hub (between `Outputs` and
+    /// `Done`; only sent when the `Welcome` enabled tracing).
+    pub fn send_spans(&mut self, spans: &[Span]) -> Result<()> {
+        let f = self.frame(FrameKind::Spans);
+        let payload = obs::encode_spans(spans);
+        write_frame(&mut self.stream, &f, &payload)?;
+        Ok(())
+    }
 }
 
 impl Transport for SocketTransport {
@@ -410,10 +439,12 @@ impl Transport for SocketTransport {
         f.recipients = recipients.to_vec();
         // One frame to the hub; the payload streams straight from the
         // (pooled) encode buffer — no intermediate copy.
+        let t = self.sink.begin();
         let mut hdr = Vec::with_capacity(HEADER_LEN + 4 * f.recipients.len());
         encode_header(&mut hdr, &f, delta.len());
         self.stream.write_all(&hdr)?;
         delta.write_to(&mut self.stream)?;
+        self.sink.record(t, SpanKind::FrameIo, self.id, 0, Some(stage), seq, delta.len() as u64);
         Ok(())
     }
 
@@ -429,7 +460,10 @@ impl Transport for SocketTransport {
         f.seq = seq;
         f.tag = spec as u32;
         f.extra = receiver as u32;
+        let t = self.sink.begin();
+        let bytes = value.len() as u64;
         write_frame(&mut self.stream, &f, &value)?;
+        self.sink.record(t, SpanKind::FrameIo, self.id, 0, Some(Stage::Stage3), seq, bytes);
         Ok(())
     }
 

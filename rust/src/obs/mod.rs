@@ -1,0 +1,1153 @@
+//! **Observability substrate**: structured tracing + a metrics registry
+//! for every execution plane, with zero external dependencies.
+//!
+//! The repo runs CAMR rounds on four planes (serial [`Engine`],
+//! thread-per-worker [`ParallelEngine`], loopback TCP, Unix-domain
+//! sockets) and predicts their timing with [`crate::sim`]; this module
+//! is how you see where the microseconds and bytes actually land.
+//!
+//! ## Span taxonomy
+//!
+//! A [`Span`] is one timed slice of protocol work, tagged with worker
+//! id, job id, [`Stage`], schedule sequence number, and a byte count:
+//!
+//! | kind                 | covers                                             |
+//! |----------------------|----------------------------------------------------|
+//! | [`SpanKind::Map`]    | one worker's whole map phase                       |
+//! | [`SpanKind::Encode`] | XOR-encoding one coded Δ for a delivery group      |
+//! | [`SpanKind::Exchange`] | stage 1/2 recv window, or a stage-3 fuse/unicast |
+//! | [`SpanKind::Decode`] | XOR-decoding the Δs of one delivery group          |
+//! | [`SpanKind::Reduce`] | reducing one `(job, function)` output              |
+//! | [`SpanKind::Verify`] | the coordinator's oracle verification pass         |
+//! | [`SpanKind::FrameIo`]| writing one wire frame on the socket plane         |
+//!
+//! Spans of one worker never overlap (the protocol is phase-sequential
+//! per worker), so the Chrome export below is a flat, well-nested
+//! timeline per thread.
+//!
+//! ## Overhead model
+//!
+//! Tracing is **off by default** and the disabled path is a no-op enum
+//! branch: [`Tracer::Off`] hands out a [`SpanSink`] whose `begin` never
+//! reads the clock and whose `record` returns before touching any
+//! state, so an untraced run pays one `Option` check per would-be span.
+//! When tracing is on, each worker thread appends to its own private
+//! buffer ([`SpanSink`] — no shared state on the hot path) and the
+//! buffers drain under a single mutex at flush (end of round / sink
+//! drop). The ledger, schedule sequence numbers, and buffer-pool
+//! traffic are byte-identical with tracing on or off — pinned by
+//! `rust/tests/obs_trace.rs` against the golden fixture.
+//!
+//! Metrics counters (pool traffic, XOR kernel dispatch, frame codec,
+//! dial retries…) are process-global atomics behind one relaxed
+//! [`metrics_enabled`] load, so the default-off cost is a single
+//! predictable branch per hook.
+//!
+//! ## Viewing a trace
+//!
+//! `camr run CONFIG --trace trace.json` (or `CAMR_TRACE=1`, or an
+//! `[obs]` section with `trace = "out.json"`) writes Chrome
+//! `trace_event` JSON. Open <https://ui.perfetto.dev> and drag the file
+//! in (the legacy `chrome://tracing` viewer also loads it): one row per
+//! worker (`tid` = worker id + 1; `tid 0` is the coordinator), one
+//! slice per span, byte counts and schedule seqs in the slice args.
+//! Subprocess socket workers ship their span batches back to the hub in
+//! a [`crate::net::frame::FrameKind::Spans`] frame at round end, so
+//! they appear on the same timeline (timebases are aligned at handshake
+//! time, good to well under a millisecond on loopback).
+//!
+//! `camr trace CONFIG` runs a traced round and prints the per-worker ×
+//! per-phase p50/p99/max table instead; `camr simulate` aligns the
+//! measured phase roll-up against [`crate::sim::simulate`] predictions
+//! ([`compare_with_sim`]).
+//!
+//! [`Engine`]: crate::coordinator::engine::Engine
+//! [`ParallelEngine`]: crate::coordinator::parallel::ParallelEngine
+//! [`Stage`]: crate::net::Stage
+
+use crate::error::{CamrError, Result};
+use crate::net::Stage;
+use crate::sim::SimOutcome;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Pseudo worker id for coordinator-side spans (verification, hub
+/// work). Exported to the trace as `tid 0`; real workers are `id + 1`.
+pub const COORD: usize = usize::MAX;
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// The type of protocol work a [`Span`] timed. See the module docs for
+/// the taxonomy table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One worker's map phase.
+    Map,
+    /// Encoding one coded Δ (XOR of the group's chunks).
+    Encode,
+    /// A shuffle exchange slice: the stage-1/2 receive window, or one
+    /// stage-3 fuse + unicast. The [`Span::stage`] tag says which.
+    Exchange,
+    /// Decoding the received Δs of one delivery group.
+    Decode,
+    /// Reducing one `(job, function)` output.
+    Reduce,
+    /// Oracle verification of the round's outputs (coordinator side).
+    Verify,
+    /// Writing one frame on the socket wire.
+    FrameIo,
+}
+
+/// Every kind, in taxonomy order (stable codes = indices).
+pub const SPAN_KINDS: [SpanKind; 7] = [
+    SpanKind::Map,
+    SpanKind::Encode,
+    SpanKind::Exchange,
+    SpanKind::Decode,
+    SpanKind::Reduce,
+    SpanKind::Verify,
+    SpanKind::FrameIo,
+];
+
+impl SpanKind {
+    /// Stable wire/bucket code (index into [`SPAN_KINDS`]).
+    pub fn code(self) -> u8 {
+        match self {
+            SpanKind::Map => 0,
+            SpanKind::Encode => 1,
+            SpanKind::Exchange => 2,
+            SpanKind::Decode => 3,
+            SpanKind::Reduce => 4,
+            SpanKind::Verify => 5,
+            SpanKind::FrameIo => 6,
+        }
+    }
+
+    /// Inverse of [`Self::code`].
+    pub fn from_code(code: u8) -> Result<Self> {
+        SPAN_KINDS
+            .get(code as usize)
+            .copied()
+            .ok_or_else(|| CamrError::Wire(format!("unknown span kind {code}")))
+    }
+
+    /// Event name in trace exports and tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Map => "map",
+            SpanKind::Encode => "encode",
+            SpanKind::Exchange => "exchange",
+            SpanKind::Decode => "decode",
+            SpanKind::Reduce => "reduce",
+            SpanKind::Verify => "verify",
+            SpanKind::FrameIo => "frame_io",
+        }
+    }
+}
+
+/// One timed slice of protocol work. Timestamps are nanoseconds since
+/// the owning [`Tracer`]'s epoch (a monotonic [`Instant`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// What was timed.
+    pub kind: SpanKind,
+    /// Executing worker ([`COORD`] for coordinator-side spans).
+    pub worker: usize,
+    /// Paper job the work belonged to (0 when the slice spans jobs).
+    pub job: usize,
+    /// Shuffle stage, when the work is stage-scoped.
+    pub stage: Option<Stage>,
+    /// Schedule sequence number (0 when not schedule-driven).
+    pub seq: u64,
+    /// Bytes the slice moved/produced (0 when not byte-denominated).
+    pub bytes: u64,
+    /// Start, ns since the tracer epoch.
+    pub start_ns: u64,
+    /// Duration in ns.
+    pub dur_ns: u64,
+}
+
+impl Span {
+    /// The phase bucket this span rolls up into: `map`, `stage1..3`,
+    /// `reduce`, `verify`, or `io` (stage-scoped kinds bucket by their
+    /// stage tag).
+    pub fn phase(&self) -> &'static str {
+        match self.kind {
+            SpanKind::Map => "map",
+            SpanKind::Reduce => "reduce",
+            SpanKind::Verify => "verify",
+            SpanKind::FrameIo => "io",
+            SpanKind::Encode | SpanKind::Exchange | SpanKind::Decode => match self.stage {
+                Some(Stage::Stage1) => "stage1",
+                Some(Stage::Stage2) => "stage2",
+                Some(Stage::Stage3) => "stage3",
+                Some(Stage::Baseline) => "baseline",
+                None => "shuffle",
+            },
+        }
+    }
+
+    /// End timestamp, ns since the tracer epoch.
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns + self.dur_ns
+    }
+}
+
+/// Phase buckets in report order.
+pub const PHASE_ORDER: [&str; 9] =
+    ["map", "stage1", "stage2", "stage3", "baseline", "shuffle", "reduce", "verify", "io"];
+
+fn phase_rank(phase: &str) -> usize {
+    PHASE_ORDER.iter().position(|p| *p == phase).unwrap_or(PHASE_ORDER.len())
+}
+
+fn stage_code(stage: Option<Stage>) -> u8 {
+    match stage {
+        Some(Stage::Stage1) => 0,
+        Some(Stage::Stage2) => 1,
+        Some(Stage::Stage3) => 2,
+        Some(Stage::Baseline) => 3,
+        None => u8::MAX,
+    }
+}
+
+fn stage_from_code(code: u8) -> Result<Option<Stage>> {
+    Ok(match code {
+        0 => Some(Stage::Stage1),
+        1 => Some(Stage::Stage2),
+        2 => Some(Stage::Stage3),
+        3 => Some(Stage::Baseline),
+        u8::MAX => None,
+        other => return Err(CamrError::Wire(format!("unknown span stage code {other}"))),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tracer + sinks
+// ---------------------------------------------------------------------------
+
+/// Shared state of an enabled tracer: the epoch every span timestamp is
+/// relative to, and the drained span buffers.
+#[derive(Debug)]
+pub struct TraceInner {
+    epoch: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+/// Span collector for one run. [`Tracer::Off`] (the default) is the
+/// no-op branch: sinks it hands out never read the clock or take a
+/// lock. [`Tracer::On`] collects spans from every [`SpanSink`] clone —
+/// worker threads buffer privately and drain under the one mutex at
+/// flush. Cloning shares the collector.
+#[derive(Debug, Clone, Default)]
+pub enum Tracer {
+    /// Tracing disabled — every operation is a no-op.
+    #[default]
+    Off,
+    /// Tracing enabled; spans accumulate in the shared inner state.
+    On(Arc<TraceInner>),
+}
+
+impl Tracer {
+    /// A fresh enabled tracer whose epoch is now.
+    pub fn on() -> Self {
+        Tracer::On(Arc::new(TraceInner { epoch: Instant::now(), spans: Mutex::new(Vec::new()) }))
+    }
+
+    /// True on the [`Tracer::On`] branch.
+    pub fn enabled(&self) -> bool {
+        matches!(self, Tracer::On(_))
+    }
+
+    /// A per-thread span buffer feeding this tracer (no-op when off).
+    pub fn sink(&self) -> SpanSink {
+        SpanSink {
+            inner: match self {
+                Tracer::Off => None,
+                Tracer::On(inner) => Some(Arc::clone(inner)),
+            },
+            buf: Vec::new(),
+        }
+    }
+
+    /// Absorb already-timestamped spans (a remote worker's batch).
+    /// Dropped when tracing is off.
+    pub fn ingest(&self, mut spans: Vec<Span>) {
+        if let Tracer::On(inner) = self {
+            inner.spans.lock().expect("tracer poisoned").append(&mut spans);
+        }
+    }
+
+    /// Drain every collected span, sorted by start time. Empty when off.
+    pub fn take_spans(&self) -> Vec<Span> {
+        match self {
+            Tracer::Off => Vec::new(),
+            Tracer::On(inner) => {
+                let mut spans =
+                    std::mem::take(&mut *inner.spans.lock().expect("tracer poisoned"));
+                spans.sort_by_key(|s| (s.start_ns, s.worker, s.kind.code()));
+                spans
+            }
+        }
+    }
+}
+
+/// Capture of a span's start instant. Produced by [`SpanSink::begin`];
+/// holds nothing on the disabled branch.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanStart(Option<Instant>);
+
+/// A thread-private span buffer. `begin`/`record` touch no shared
+/// state; the buffer drains into the tracer under its mutex on
+/// [`SpanSink::flush`] (called automatically on drop).
+#[derive(Debug)]
+pub struct SpanSink {
+    inner: Option<Arc<TraceInner>>,
+    buf: Vec<Span>,
+}
+
+impl SpanSink {
+    /// A sink wired to nothing — every call is the no-op branch.
+    /// Equivalent to `Tracer::Off.sink()`; handy as a field default.
+    pub fn disabled() -> SpanSink {
+        SpanSink { inner: None, buf: Vec::new() }
+    }
+
+    /// True when spans recorded here reach a live tracer.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Mark a span's start (reads the clock only when enabled).
+    pub fn begin(&self) -> SpanStart {
+        SpanStart(self.inner.as_ref().map(|_| Instant::now()))
+    }
+
+    /// Close a span opened by [`Self::begin`] and buffer it. The
+    /// disabled branch returns immediately.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        start: SpanStart,
+        kind: SpanKind,
+        worker: usize,
+        job: usize,
+        stage: Option<Stage>,
+        seq: u64,
+        bytes: u64,
+    ) {
+        let (Some(inner), Some(t0)) = (self.inner.as_ref(), start.0) else {
+            return; // Tracer::Off — the no-op branch.
+        };
+        let start_ns = t0.duration_since(inner.epoch).as_nanos() as u64;
+        let dur_ns = t0.elapsed().as_nanos() as u64;
+        if metrics_enabled() {
+            metrics().span_duration_ns[kind.code() as usize].observe(dur_ns);
+        }
+        self.buf.push(Span { kind, worker, job, stage, seq, bytes, start_ns, dur_ns });
+    }
+
+    /// Drain the private buffer into the tracer (one mutex acquisition).
+    pub fn flush(&mut self) {
+        match &self.inner {
+            Some(inner) if !self.buf.is_empty() => {
+                inner.spans.lock().expect("tracer poisoned").append(&mut self.buf);
+            }
+            _ => self.buf.clear(),
+        }
+    }
+}
+
+impl Drop for SpanSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// A monotonically increasing named count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A signed instantaneous level (e.g. connected workers).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Move the level by `delta` (may be negative).
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Set the level outright.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Buckets in a [`Histogram`]: bucket `i` counts values in
+/// `[2^i, 2^(i+1))` (bucket 0 also takes 0), enough for any u64.
+pub const HIST_BUCKETS: usize = 64;
+
+/// A fixed-bucket log2 histogram over `u64` observations — span
+/// durations in ns, multicast payload bytes. Lock-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The log2 bucket index a value lands in.
+pub fn log2_bucket(v: u64) -> usize {
+    match v {
+        0 => 0,
+        v => 63 - v.leading_zeros() as usize,
+    }
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        self.buckets[log2_bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Observations so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound (`2^(i+1) - 1`) of the bucket holding quantile `q`
+    /// of the recorded observations; 0 when empty. Bucket-granular by
+    /// construction — exact percentiles come from raw span lists
+    /// ([`summarize`]), this is the cheap always-on estimate.
+    pub fn quantile_upper_bound(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+            }
+        }
+        u64::MAX
+    }
+
+    /// Non-empty buckets as `(bucket_index, count)` pairs.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then_some((i, c))
+            })
+            .collect()
+    }
+}
+
+/// The process-global registry of named counters/gauges/histograms.
+/// Hooks on hot paths (pool, XOR kernels, frame codec) consult
+/// [`metrics_enabled`] first, so the default-off cost is one relaxed
+/// atomic load.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Buffer-pool checkouts ([`crate::shuffle::buf::BufferPool`]).
+    pub pool_acquired: Counter,
+    /// Buffer-pool returns.
+    pub pool_released: Counter,
+    /// Large-class returns whose backing was freed, not retained.
+    pub pool_dropped: Counter,
+    /// `xor_into` dispatches per kernel tier, indexed like
+    /// [`crate::shuffle::buf::XorKernel`] labels: bytewise,
+    /// portable_u64, avx2, neon.
+    pub xor_calls: [Counter; 4],
+    /// Bytes XORed through the dispatched kernel.
+    pub xor_bytes: Counter,
+    /// Frames serialized by the wire codec.
+    pub frames_encoded: Counter,
+    /// Frames successfully parsed by the wire codec.
+    pub frames_decoded: Counter,
+    /// Payload bytes per coded multicast (log2 buckets).
+    pub multicast_bytes: Histogram,
+    /// Socket dial attempts that had to retry.
+    pub dial_retries: Counter,
+    /// Hub waits that hit the disconnect timeout.
+    pub disconnect_timeouts: Counter,
+    /// Workers currently connected to a hub.
+    pub workers_connected: Gauge,
+    /// Span durations in ns, one histogram per [`SpanKind`] code.
+    pub span_duration_ns: [Histogram; 7],
+}
+
+impl Metrics {
+    /// The XOR dispatch counter for a kernel label (see
+    /// [`crate::shuffle::buf::XorKernel::label`]).
+    pub fn xor_calls_for(&self, label: &str) -> &Counter {
+        match label {
+            "bytewise" => &self.xor_calls[0],
+            "portable_u64" => &self.xor_calls[1],
+            "avx2" => &self.xor_calls[2],
+            _ => &self.xor_calls[3],
+        }
+    }
+
+    /// Every scalar metric as stable `(name, value)` pairs (histograms
+    /// export count/sum/p50/p99 upper bounds).
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = vec![
+            ("pool.acquired".into(), self.pool_acquired.get()),
+            ("pool.released".into(), self.pool_released.get()),
+            ("pool.dropped".into(), self.pool_dropped.get()),
+            ("xor.calls.bytewise".into(), self.xor_calls[0].get()),
+            ("xor.calls.portable_u64".into(), self.xor_calls[1].get()),
+            ("xor.calls.avx2".into(), self.xor_calls[2].get()),
+            ("xor.calls.neon".into(), self.xor_calls[3].get()),
+            ("xor.bytes".into(), self.xor_bytes.get()),
+            ("frame.encoded".into(), self.frames_encoded.get()),
+            ("frame.decoded".into(), self.frames_decoded.get()),
+            ("multicast.bytes.count".into(), self.multicast_bytes.count()),
+            ("multicast.bytes.sum".into(), self.multicast_bytes.sum()),
+            ("net.dial_retries".into(), self.dial_retries.get()),
+            ("net.disconnect_timeouts".into(), self.disconnect_timeouts.get()),
+            ("net.workers_connected".into(), self.workers_connected.get().max(0) as u64),
+        ];
+        for (kind, h) in SPAN_KINDS.iter().zip(&self.span_duration_ns) {
+            let base = format!("span.{}.ns", kind.name());
+            out.push((format!("{base}.count"), h.count()));
+            out.push((format!("{base}.sum"), h.sum()));
+            out.push((format!("{base}.p50_le"), h.quantile_upper_bound(0.50)));
+            out.push((format!("{base}.p99_le"), h.quantile_upper_bound(0.99)));
+        }
+        out
+    }
+}
+
+static METRICS: OnceLock<Metrics> = OnceLock::new();
+static METRICS_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The process-global metrics registry.
+pub fn metrics() -> &'static Metrics {
+    METRICS.get_or_init(Metrics::default)
+}
+
+/// Whether hot-path hooks should record into the registry. Off by
+/// default; one relaxed load per hook when off.
+pub fn metrics_enabled() -> bool {
+    METRICS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn hot-path metric hooks on or off (process-wide).
+pub fn set_metrics_enabled(on: bool) {
+    METRICS_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The trace destination requested via `CAMR_TRACE`: unset/`0`/empty →
+/// none, `1`/`true` → `trace.json`, anything else → that path.
+pub fn env_trace_destination() -> Option<String> {
+    match std::env::var("CAMR_TRACE") {
+        Ok(v) if v.is_empty() || v == "0" => None,
+        Ok(v) if v == "1" || v == "true" => Some("trace.json".into()),
+        Ok(v) => Some(v),
+        Err(_) => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span batch wire format (FrameKind::Spans payloads)
+// ---------------------------------------------------------------------------
+
+/// Bytes per encoded span record.
+const SPAN_RECORD_BYTES: usize = 48;
+
+/// Hard cap on spans per batch (matches the frame payload cap at any
+/// plausible record size and bounds hub-side allocation).
+const MAX_SPANS_PER_BATCH: usize = 1 << 22;
+
+/// Serialize a span batch for a [`crate::net::frame::FrameKind::Spans`]
+/// payload: a LE `u32` count, then 48-byte records.
+pub fn encode_spans(spans: &[Span]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + spans.len() * SPAN_RECORD_BYTES);
+    out.extend_from_slice(&(spans.len() as u32).to_le_bytes());
+    for s in spans {
+        let worker = if s.worker == COORD { u32::MAX } else { s.worker as u32 };
+        out.push(s.kind.code());
+        out.push(stage_code(s.stage));
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&worker.to_le_bytes());
+        out.extend_from_slice(&(s.job as u64).to_le_bytes());
+        out.extend_from_slice(&s.seq.to_le_bytes());
+        out.extend_from_slice(&s.bytes.to_le_bytes());
+        out.extend_from_slice(&s.start_ns.to_le_bytes());
+        out.extend_from_slice(&s.dur_ns.to_le_bytes());
+    }
+    out
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().expect("4 bytes"))
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().expect("8 bytes"))
+}
+
+/// Parse a span batch produced by [`encode_spans`]. Typed wire errors
+/// on truncation, trailing bytes, or unknown codes.
+pub fn decode_spans(payload: &[u8]) -> Result<Vec<Span>> {
+    if payload.len() < 4 {
+        return Err(CamrError::Wire(format!("span batch truncated: {} bytes", payload.len())));
+    }
+    let count = le_u32(payload) as usize;
+    if count > MAX_SPANS_PER_BATCH {
+        return Err(CamrError::Wire(format!("span batch of {count} spans exceeds the cap")));
+    }
+    let body = &payload[4..];
+    if body.len() != count * SPAN_RECORD_BYTES {
+        return Err(CamrError::Wire(format!(
+            "span batch length {} != {count} records of {SPAN_RECORD_BYTES} bytes",
+            body.len()
+        )));
+    }
+    let mut spans = Vec::with_capacity(count);
+    for rec in body.chunks_exact(SPAN_RECORD_BYTES) {
+        let worker = le_u32(&rec[4..]);
+        spans.push(Span {
+            kind: SpanKind::from_code(rec[0])?,
+            stage: stage_from_code(rec[1])?,
+            worker: if worker == u32::MAX { COORD } else { worker as usize },
+            job: le_u64(&rec[8..]) as usize,
+            seq: le_u64(&rec[16..]),
+            bytes: le_u64(&rec[24..]),
+            start_ns: le_u64(&rec[32..]),
+            dur_ns: le_u64(&rec[40..]),
+        });
+    }
+    Ok(spans)
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+fn tid_of(worker: usize) -> u128 {
+    if worker == COORD {
+        0
+    } else {
+        worker as u128 + 1
+    }
+}
+
+/// Render spans as a Chrome `trace_event` document (the "JSON Object
+/// Format": `{"traceEvents": [...]}`), viewable in Perfetto. Every
+/// event carries the required `ph`/`ts`/`pid`/`tid`/`name` keys; spans
+/// become `B`/`E` pairs emitted per-thread in start order, so the
+/// per-tid begin/end nesting is well-formed by construction.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    let mut sorted: Vec<&Span> = spans.iter().collect();
+    sorted.sort_by_key(|s| (tid_of(s.worker), s.start_ns, s.dur_ns, s.kind.code()));
+    let mut events = Vec::with_capacity(sorted.len() * 2);
+    for s in sorted {
+        let tid = Json::UInt(tid_of(s.worker));
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("B".into())),
+            ("ts", Json::Num(s.start_ns as f64 / 1000.0)),
+            ("pid", Json::UInt(1)),
+            ("tid", tid.clone()),
+            ("name", Json::Str(s.kind.name().into())),
+            ("cat", Json::Str(s.phase().into())),
+            (
+                "args",
+                Json::obj(vec![
+                    ("job", Json::UInt(s.job as u128)),
+                    ("seq", Json::UInt(s.seq as u128)),
+                    ("bytes", Json::UInt(s.bytes as u128)),
+                ]),
+            ),
+        ]));
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("E".into())),
+            ("ts", Json::Num(s.end_ns() as f64 / 1000.0)),
+            ("pid", Json::UInt(1)),
+            ("tid", tid),
+            ("name", Json::Str(s.kind.name().into())),
+        ]));
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Write [`chrome_trace`] to `path`.
+pub fn write_chrome_trace(path: &Path, spans: &[Span]) -> Result<()> {
+    std::fs::write(path, chrome_trace(spans).render())?;
+    Ok(())
+}
+
+/// One row of the per-worker × per-phase summary: exact percentiles
+/// over that bucket's span durations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseStat {
+    /// Worker id ([`COORD`] for coordinator rows).
+    pub worker: usize,
+    /// Phase bucket ([`Span::phase`]).
+    pub phase: &'static str,
+    /// Spans in the bucket.
+    pub count: usize,
+    /// Summed span duration, ns.
+    pub total_ns: u64,
+    /// Median span duration, ns.
+    pub p50_ns: u64,
+    /// 99th-percentile span duration, ns.
+    pub p99_ns: u64,
+    /// Longest span, ns.
+    pub max_ns: u64,
+    /// Summed byte tags.
+    pub bytes: u64,
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Roll spans up into per-worker × per-phase duration statistics,
+/// ordered by worker then [`PHASE_ORDER`] (coordinator rows last).
+pub fn summarize(spans: &[Span]) -> Vec<PhaseStat> {
+    let mut groups: BTreeMap<(usize, usize), (Vec<u64>, u64)> = BTreeMap::new();
+    for s in spans {
+        let g = groups.entry((s.worker, phase_rank(s.phase()))).or_default();
+        g.0.push(s.dur_ns);
+        g.1 += s.bytes;
+    }
+    groups
+        .into_iter()
+        .map(|((worker, rank), (mut durs, bytes))| {
+            durs.sort_unstable();
+            PhaseStat {
+                worker,
+                phase: PHASE_ORDER.get(rank).copied().unwrap_or("other"),
+                count: durs.len(),
+                total_ns: durs.iter().sum(),
+                p50_ns: percentile(&durs, 0.50),
+                p99_ns: percentile(&durs, 0.99),
+                max_ns: *durs.last().unwrap_or(&0),
+                bytes,
+            }
+        })
+        .collect()
+}
+
+/// Wall-clock window of one phase across all workers: earliest span
+/// start to latest span end. These are the measured counterparts of the
+/// simulator's barrier-separated phases (both derive their boundaries
+/// from the same schedule structure — [`crate::net::stage_runs`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseRollup {
+    /// Phase bucket ([`Span::phase`]).
+    pub phase: &'static str,
+    /// Window length in seconds.
+    pub secs: f64,
+    /// Spans inside the window.
+    pub spans: usize,
+    /// Summed byte tags.
+    pub bytes: u64,
+}
+
+/// Per-phase wall windows over a span set, in [`PHASE_ORDER`]. The `io`
+/// and `verify` buckets are excluded (they overlap protocol phases).
+pub fn phase_rollup(spans: &[Span]) -> Vec<PhaseRollup> {
+    let mut windows: BTreeMap<usize, (u64, u64, usize, u64)> = BTreeMap::new();
+    for s in spans {
+        let phase = s.phase();
+        if phase == "io" || phase == "verify" {
+            continue;
+        }
+        let w = windows
+            .entry(phase_rank(phase))
+            .or_insert((u64::MAX, 0, 0, 0));
+        w.0 = w.0.min(s.start_ns);
+        w.1 = w.1.max(s.end_ns());
+        w.2 += 1;
+        w.3 += s.bytes;
+    }
+    windows
+        .into_iter()
+        .map(|(rank, (start, end, spans, bytes))| PhaseRollup {
+            phase: PHASE_ORDER.get(rank).copied().unwrap_or("other"),
+            secs: end.saturating_sub(start) as f64 / 1e9,
+            spans,
+            bytes,
+        })
+        .collect()
+}
+
+/// One phase of the sim-vs-measured comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimComparison {
+    /// Phase bucket (`map`, `stage1..3`).
+    pub phase: &'static str,
+    /// The simulator's predicted phase time, seconds.
+    pub sim_secs: f64,
+    /// The measured phase window, seconds.
+    pub measured_secs: f64,
+    /// `(measured - sim) / sim`; 0 when the prediction is 0.
+    pub rel_err: f64,
+}
+
+/// Align a measured [`phase_rollup`] against a [`SimOutcome`]'s
+/// predicted phase times. Both sides bucket by the same barriers
+/// (`map`, then one bucket per [`crate::net::stage_runs`] stage), so
+/// the relative error is phase-for-phase meaningful.
+pub fn compare_with_sim(rollup: &[PhaseRollup], sim: &SimOutcome) -> Vec<SimComparison> {
+    let measured = |phase: &str| -> f64 {
+        rollup.iter().find(|r| r.phase == phase).map_or(0.0, |r| r.secs)
+    };
+    let pairs = [
+        ("map", sim.map_secs),
+        ("stage1", sim.stage_secs(Stage::Stage1)),
+        ("stage2", sim.stage_secs(Stage::Stage2)),
+        ("stage3", sim.stage_secs(Stage::Stage3)),
+    ];
+    pairs
+        .into_iter()
+        .map(|(phase, sim_secs)| {
+            let m = measured(phase);
+            SimComparison {
+                phase,
+                sim_secs,
+                measured_secs: m,
+                rel_err: if sim_secs > 0.0 { (m - sim_secs) / sim_secs } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(
+        kind: SpanKind,
+        worker: usize,
+        stage: Option<Stage>,
+        start_ns: u64,
+        dur_ns: u64,
+    ) -> Span {
+        Span { kind, worker, job: 0, stage, seq: 0, bytes: 64, start_ns, dur_ns }
+    }
+
+    #[test]
+    fn off_tracer_is_a_noop_branch() {
+        let t = Tracer::Off;
+        assert!(!t.enabled());
+        let mut sink = t.sink();
+        assert!(!sink.enabled());
+        let s = sink.begin();
+        assert!(s.0.is_none(), "Off tracer must not read the clock");
+        sink.record(s, SpanKind::Map, 0, 0, None, 0, 0);
+        sink.flush();
+        assert!(t.take_spans().is_empty());
+        // Default is the Off branch.
+        assert!(!Tracer::default().enabled());
+    }
+
+    #[test]
+    fn enabled_tracer_collects_across_sinks_and_threads() {
+        let t = Tracer::on();
+        assert!(t.enabled());
+        std::thread::scope(|scope| {
+            for w in 0..3usize {
+                let t = t.clone();
+                scope.spawn(move || {
+                    let mut sink = t.sink();
+                    let s = sink.begin();
+                    sink.record(s, SpanKind::Map, w, 0, None, 0, 10);
+                    // flush happens on sink drop
+                });
+            }
+        });
+        let spans = t.take_spans();
+        assert_eq!(spans.len(), 3);
+        let mut workers: Vec<usize> = spans.iter().map(|s| s.worker).collect();
+        workers.sort_unstable();
+        assert_eq!(workers, vec![0, 1, 2]);
+        assert!(t.take_spans().is_empty(), "take_spans drains");
+    }
+
+    #[test]
+    fn span_batch_roundtrips_on_the_wire() {
+        let spans = vec![
+            Span {
+                kind: SpanKind::Encode,
+                worker: 3,
+                job: 2,
+                stage: Some(Stage::Stage2),
+                seq: 17,
+                bytes: 4096,
+                start_ns: 1_000,
+                dur_ns: 250,
+            },
+            Span {
+                kind: SpanKind::Verify,
+                worker: COORD,
+                job: 0,
+                stage: None,
+                seq: 0,
+                bytes: 0,
+                start_ns: 9_999,
+                dur_ns: 1,
+            },
+        ];
+        let enc = encode_spans(&spans);
+        assert_eq!(enc.len(), 4 + 2 * 48);
+        assert_eq!(decode_spans(&enc).unwrap(), spans);
+        // Ingest path.
+        let t = Tracer::on();
+        t.ingest(decode_spans(&enc).unwrap());
+        assert_eq!(t.take_spans().len(), 2);
+    }
+
+    #[test]
+    fn span_batch_decode_rejects_malformed_payloads() {
+        assert!(decode_spans(&[1, 2]).is_err(), "short header");
+        let mut enc = encode_spans(&[span(SpanKind::Map, 0, None, 0, 1)]);
+        enc.push(0);
+        assert!(decode_spans(&enc).is_err(), "trailing byte");
+        let mut bad_kind = encode_spans(&[span(SpanKind::Map, 0, None, 0, 1)]);
+        bad_kind[4] = 99;
+        assert!(decode_spans(&bad_kind).is_err(), "unknown kind code");
+        let mut bad_stage = encode_spans(&[span(SpanKind::Map, 0, None, 0, 1)]);
+        bad_stage[5] = 7;
+        assert!(decode_spans(&bad_stage).is_err(), "unknown stage code");
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_spans(&huge).is_err(), "count over cap");
+    }
+
+    #[test]
+    fn chrome_trace_events_carry_required_keys_and_pair_up() {
+        let spans = vec![
+            span(SpanKind::Map, 1, None, 0, 100),
+            span(SpanKind::Encode, 1, Some(Stage::Stage1), 100, 50),
+            span(SpanKind::Verify, COORD, None, 200, 10),
+        ];
+        let doc = chrome_trace(&spans);
+        let Some(Json::Arr(events)) = doc.get("traceEvents") else {
+            panic!("traceEvents array missing");
+        };
+        assert_eq!(events.len(), 6);
+        let mut open: BTreeMap<String, u64> = BTreeMap::new();
+        for ev in events {
+            for key in ["ph", "ts", "pid", "tid", "name"] {
+                assert!(ev.get(key).is_some(), "event missing {key}: {}", ev.render());
+            }
+            let tid = ev.get("tid").unwrap().render();
+            match ev.get("ph") {
+                Some(Json::Str(ph)) if ph == "B" => *open.entry(tid).or_default() += 1,
+                Some(Json::Str(ph)) if ph == "E" => {
+                    let depth = open.entry(tid).or_default();
+                    assert!(*depth > 0, "E without open B");
+                    *depth -= 1;
+                }
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+        assert!(open.values().all(|d| *d == 0), "unclosed spans: {open:?}");
+        // Coordinator spans ride tid 0.
+        assert!(events.iter().any(|e| e.get("tid") == Some(&Json::UInt(0))));
+    }
+
+    #[test]
+    fn summarize_buckets_by_worker_and_phase() {
+        let spans = vec![
+            span(SpanKind::Encode, 0, Some(Stage::Stage1), 0, 10),
+            span(SpanKind::Decode, 0, Some(Stage::Stage1), 10, 30),
+            span(SpanKind::Encode, 1, Some(Stage::Stage2), 0, 7),
+            span(SpanKind::Map, 0, None, 0, 5),
+        ];
+        let stats = summarize(&spans);
+        assert_eq!(stats.len(), 3);
+        // Worker 0 rows first, map before stage1 (PHASE_ORDER).
+        assert_eq!((stats[0].worker, stats[0].phase), (0, "map"));
+        assert_eq!((stats[1].worker, stats[1].phase), (0, "stage1"));
+        assert_eq!((stats[2].worker, stats[2].phase), (1, "stage2"));
+        assert_eq!(stats[1].count, 2);
+        assert_eq!(stats[1].total_ns, 40);
+        assert_eq!(stats[1].max_ns, 30);
+        assert_eq!(stats[1].bytes, 128);
+    }
+
+    #[test]
+    fn percentiles_are_exact_over_the_bucket() {
+        let durs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&durs, 0.50), 51, "round half up over 100 samples");
+        assert_eq!(percentile(&durs, 0.99), 99);
+        assert_eq!(percentile(&durs, 1.0), 100);
+        assert_eq!(percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn phase_rollup_windows_span_workers() {
+        let spans = vec![
+            span(SpanKind::Encode, 0, Some(Stage::Stage1), 100, 50),
+            span(SpanKind::Decode, 1, Some(Stage::Stage1), 200, 300),
+            span(SpanKind::Map, 0, None, 0, 80),
+            span(SpanKind::Verify, COORD, None, 0, 1_000_000), // excluded
+        ];
+        let roll = phase_rollup(&spans);
+        assert_eq!(roll.len(), 2);
+        assert_eq!(roll[0].phase, "map");
+        assert!((roll[0].secs - 80e-9).abs() < 1e-15);
+        assert_eq!(roll[1].phase, "stage1");
+        // Window = min start 100 → max end 500.
+        assert!((roll[1].secs - 400e-9).abs() < 1e-15);
+        assert_eq!(roll[1].spans, 2);
+    }
+
+    #[test]
+    fn log2_histogram_buckets_and_quantiles() {
+        assert_eq!(log2_bucket(0), 0);
+        assert_eq!(log2_bucket(1), 0);
+        assert_eq!(log2_bucket(2), 1);
+        assert_eq!(log2_bucket(3), 1);
+        assert_eq!(log2_bucket(4), 2);
+        assert_eq!(log2_bucket(u64::MAX), 63);
+        let h = Histogram::default();
+        assert_eq!(h.quantile_upper_bound(0.5), 0);
+        for v in [1u64, 1, 1, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1003);
+        assert_eq!(h.quantile_upper_bound(0.5), 1, "bucket 0 upper bound");
+        assert_eq!(h.quantile_upper_bound(0.99), 1023, "bucket [512,1024)");
+        assert_eq!(h.nonzero_buckets(), vec![(0, 3), (9, 1)]);
+    }
+
+    #[test]
+    fn metrics_registry_counts_and_snapshots() {
+        let m = Metrics::default();
+        m.pool_acquired.add(3);
+        m.pool_released.inc();
+        m.xor_calls_for("avx2").inc();
+        m.xor_calls_for("portable_u64").add(2);
+        m.workers_connected.add(2);
+        m.workers_connected.add(-1);
+        m.multicast_bytes.observe(64);
+        let snap: BTreeMap<String, u64> = m.snapshot().into_iter().collect();
+        assert_eq!(snap["pool.acquired"], 3);
+        assert_eq!(snap["pool.released"], 1);
+        assert_eq!(snap["xor.calls.avx2"], 1);
+        assert_eq!(snap["xor.calls.portable_u64"], 2);
+        assert_eq!(snap["net.workers_connected"], 1);
+        assert_eq!(snap["multicast.bytes.count"], 1);
+        assert_eq!(snap["multicast.bytes.sum"], 64);
+    }
+
+    #[test]
+    fn global_toggle_defaults_off() {
+        // Other tests may flip it; assert the API works, then restore.
+        let was = metrics_enabled();
+        set_metrics_enabled(true);
+        assert!(metrics_enabled());
+        metrics().frames_encoded.inc();
+        set_metrics_enabled(was);
+    }
+
+    #[test]
+    fn env_trace_destination_parses_the_convention() {
+        // Can't mutate process env safely under the parallel test
+        // runner; exercise the mapping through a run with the var unset.
+        if std::env::var_os("CAMR_TRACE").is_none() {
+            assert_eq!(env_trace_destination(), None);
+        }
+    }
+
+    #[test]
+    fn sim_comparison_reports_relative_error() {
+        let roll = vec![
+            PhaseRollup { phase: "map", secs: 2.0, spans: 1, bytes: 0 },
+            PhaseRollup { phase: "stage1", secs: 1.5, spans: 2, bytes: 128 },
+        ];
+        // A hand-built SimOutcome: map 1 s, stage1 1 s, stage2 absent.
+        let sim = SimOutcome {
+            map_secs: 1.0,
+            phases: vec![crate::sim::PhaseTime {
+                stage: Stage::Stage1,
+                transmissions: 2,
+                bytes: 128,
+                secs: 1.0,
+            }],
+            shuffle_secs: 1.0,
+            total_secs: 2.0,
+            map_tasks: 4,
+            transmissions: 2,
+            shuffle_bytes: 128,
+            events: 4,
+        };
+        let cmp = compare_with_sim(&roll, &sim);
+        assert_eq!(cmp.len(), 4);
+        assert_eq!(cmp[0].phase, "map");
+        assert!((cmp[0].rel_err - 1.0).abs() < 1e-12, "measured 2s vs sim 1s");
+        assert!((cmp[1].rel_err - 0.5).abs() < 1e-12);
+        assert_eq!(cmp[2].measured_secs, 0.0);
+        assert_eq!(cmp[2].rel_err, 0.0, "zero prediction pins rel_err to 0");
+    }
+}

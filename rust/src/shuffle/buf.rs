@@ -192,7 +192,13 @@ fn check_len(dst: &[u8], src: &[u8]) -> Result<()> {
 /// decode in the serial, channel, and socket planes lands here.
 pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
     check_len(dst, src)?;
-    match active_kernel() {
+    let kernel = active_kernel();
+    if crate::obs::metrics_enabled() {
+        let m = crate::obs::metrics();
+        m.xor_bytes.add(dst.len() as u64);
+        m.xor_calls_for(kernel.label()).inc();
+    }
+    match kernel {
         #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
         // SAFETY: active_kernel returns Avx2 only after runtime detection.
         XorKernel::Avx2 => unsafe { avx2::xor_into(dst, src) },
@@ -440,6 +446,9 @@ impl BufferPool {
     }
 
     fn acquire_inner(&self, len: usize, zero: bool) -> PooledBuf {
+        if crate::obs::metrics_enabled() {
+            crate::obs::metrics().pool_acquired.inc();
+        }
         let nwords = len.div_ceil(8);
         let mut words = {
             let mut inner = self.inner.lock().expect("buffer pool poisoned");
@@ -536,10 +545,16 @@ impl Drop for PooledBuf {
     fn drop(&mut self) {
         let words = std::mem::take(&mut self.words);
         let large = words.capacity() >= LARGE_CLASS_WORDS;
+        if crate::obs::metrics_enabled() {
+            crate::obs::metrics().pool_released.inc();
+        }
         let mut inner = self.pool.lock().expect("buffer pool poisoned");
         inner.stats.released += 1;
         if large && inner.large.len() >= LARGE_RETAIN {
             inner.stats.dropped += 1;
+            if crate::obs::metrics_enabled() {
+                crate::obs::metrics().pool_dropped.inc();
+            }
             drop(inner);
             // Free the huge backing outside the lock.
             drop(words);

@@ -9,7 +9,12 @@
 //! additionally pinned here unconditionally, through the exact
 //! `Json`-building code path the benches use.
 
+use camr::config::RunConfig;
+use camr::coordinator::parallel::ParallelEngine;
+use camr::obs::{self, Tracer};
 use camr::util::json::Json;
+use camr::workload::build_native;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 /// Every bench that writes a machine-readable report, with its file.
@@ -79,4 +84,56 @@ fn bench_report_shape_parses_before_any_bench_runs() {
     };
     assert_eq!(rows.len(), 3);
     assert_eq!(rows[1].get("rounds"), Some(&Json::UInt(2)));
+}
+
+/// A trace written by `obs::write_chrome_trace` must be a valid Chrome
+/// `trace_event` document: parseable by [`Json::parse`], every event
+/// carrying `ph`/`ts`/`pid`/`tid`/`name`, and B/E events paired per
+/// thread lane — the schema Perfetto and chrome://tracing load.
+#[test]
+fn chrome_trace_export_is_schema_valid() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/example1.toml");
+    let rc = RunConfig::from_path(&path).expect("configs/example1.toml parses");
+    let wl = build_native(rc.workload, &rc.system, rc.seed).unwrap();
+    let mut e = ParallelEngine::new(rc.system, wl).unwrap();
+    e.tracer = Tracer::on();
+    let out = e.run().unwrap();
+    assert!(out.verified);
+    let spans = e.tracer.take_spans();
+    assert!(!spans.is_empty(), "traced run produced no spans");
+
+    let dest = std::env::temp_dir().join(format!("camr_trace_test_{}.json", std::process::id()));
+    obs::write_chrome_trace(&dest, &spans).unwrap();
+    let text = std::fs::read_to_string(&dest).unwrap();
+    let _ = std::fs::remove_file(&dest);
+
+    let parsed = Json::parse(&text).expect("trace.json parses");
+    let events = match parsed.get("traceEvents") {
+        Some(Json::Arr(events)) => events,
+        other => panic!("traceEvents missing: {other:?}"),
+    };
+    assert_eq!(events.len(), spans.len() * 2, "one B and one E per span");
+
+    // Per-lane B/E pairing: the begin/end counts must match on every
+    // tid, and a lane's nesting depth can never go negative when events
+    // are scanned in file order (chrome_trace emits them sorted).
+    let mut depth: BTreeMap<String, i64> = BTreeMap::new();
+    for ev in events {
+        for field in ["ph", "ts", "pid", "tid", "name"] {
+            assert!(ev.get(field).is_some(), "event missing `{field}`: {ev:?}");
+        }
+        let tid = ev.get("tid").unwrap().render();
+        let d = depth.entry(tid.clone()).or_insert(0);
+        match ev.get("ph") {
+            Some(Json::Str(ph)) if ph == "B" => *d += 1,
+            Some(Json::Str(ph)) if ph == "E" => {
+                *d -= 1;
+                assert!(*d >= 0, "lane {tid}: E without a matching B");
+            }
+            other => panic!("unexpected ph: {other:?}"),
+        }
+    }
+    for (tid, d) in depth {
+        assert_eq!(d, 0, "lane {tid}: unbalanced B/E events");
+    }
 }

@@ -1,0 +1,211 @@
+//! Observability must be a pure observer: running with the tracer on
+//! cannot change a single byte of protocol behaviour.
+//!
+//! The golden fixture `rust/tests/golden/example1_ledger.txt` pins the
+//! shared-link ledger of `configs/example1.toml` (paper Example 1).
+//! This suite re-runs that config on the serial engine, the channel
+//! plane and a Unix-domain socket plane with `Tracer::on()` and asserts
+//! each traced ledger is byte-identical to the fixture — and that pool
+//! hygiene counters match an untraced run exactly, so tracing adds no
+//! buffer traffic either. It also pins the span *coverage* contract:
+//! every worker (and the coordinator) shows up in the trace on every
+//! plane, including socket workers whose spans travel back to the hub
+//! in `Spans` frames with a worker-local epoch.
+//!
+//! The disabled path gets its own test: a `Tracer::Off` sink must
+//! record nothing and hand back nothing.
+
+use camr::config::RunConfig;
+use camr::coordinator::engine::Engine;
+use camr::coordinator::parallel::{ParallelEngine, TransportKind};
+use camr::coordinator::remote::{SocketOptions, WorkerSpec};
+use camr::net::Bus;
+use camr::obs::{Span, SpanKind, Tracer, COORD};
+use camr::shuffle::buf::PoolStats;
+use camr::workload::build_native;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+fn example1_config() -> RunConfig {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/example1.toml");
+    RunConfig::from_path(&path).expect("configs/example1.toml parses")
+}
+
+/// Render a ledger in the fixture's line format:
+/// `<stage> <sender> <bytes> <recipient,...>`.
+fn render(bus: &Bus) -> String {
+    let mut out = String::new();
+    for t in bus.ledger() {
+        let recipients: Vec<String> = t.recipients.iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!(
+            "{} {} {} {}\n",
+            t.stage,
+            t.sender,
+            t.bytes,
+            recipients.join(",")
+        ));
+    }
+    out
+}
+
+/// The fixture's data lines (comments stripped), newline-terminated.
+fn fixture_contents() -> String {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/example1_ledger.txt");
+    let text = std::fs::read_to_string(path).expect("golden fixture exists");
+    let mut out = String::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+/// One serial run; the tracer is drained so each call stands alone.
+fn run_serial(tracer: &Tracer) -> (String, PoolStats, Vec<Span>) {
+    let rc = example1_config();
+    let wl = build_native(rc.workload, &rc.system, rc.seed).unwrap();
+    let mut e = Engine::new(rc.system, wl).unwrap();
+    e.tracer = tracer.clone();
+    let out = e.run().unwrap();
+    assert!(out.verified, "serial run failed verification");
+    (render(&e.bus), e.pool_stats(), tracer.take_spans())
+}
+
+/// One run over the given parallel-plane transport.
+fn run_over(transport: TransportKind, tracer: &Tracer) -> (String, PoolStats, Vec<Span>) {
+    let rc = example1_config();
+    let wl = build_native(rc.workload, &rc.system, rc.seed).unwrap();
+    let mut e = ParallelEngine::new(rc.system, wl).unwrap();
+    e.remote_spec = Some(WorkerSpec {
+        kind: rc.workload,
+        seed: rc.seed,
+    });
+    e.transport = transport;
+    e.tracer = tracer.clone();
+    let out = e.run().unwrap();
+    assert!(out.verified, "run failed verification");
+    (render(&e.bus), e.pool_stats(), tracer.take_spans())
+}
+
+/// Worker ids present in a span set, with [`COORD`] kept separate.
+fn coverage(spans: &[Span]) -> (BTreeSet<usize>, bool) {
+    let mut workers = BTreeSet::new();
+    let mut coord = false;
+    for s in spans {
+        if s.worker == COORD {
+            coord = true;
+        } else {
+            workers.insert(s.worker);
+        }
+    }
+    (workers, coord)
+}
+
+fn assert_full_coverage(label: &str, spans: &[Span], servers: usize) {
+    let (workers, coord) = coverage(spans);
+    assert_eq!(
+        workers,
+        (0..servers).collect::<BTreeSet<_>>(),
+        "{label}: spans missing from some workers"
+    );
+    assert!(coord, "{label}: no coordinator span (verify)");
+    let kinds: BTreeSet<u8> = spans.iter().map(|s| s.kind.code()).collect();
+    for kind in [
+        SpanKind::Map,
+        SpanKind::Encode,
+        SpanKind::Exchange,
+        SpanKind::Decode,
+        SpanKind::Reduce,
+        SpanKind::Verify,
+    ] {
+        assert!(
+            kinds.contains(&kind.code()),
+            "{label}: no {kind:?} span recorded"
+        );
+    }
+}
+
+#[test]
+fn traced_serial_ledger_and_pool_match_untraced() {
+    let fixture = fixture_contents();
+    let (plain_ledger, plain_pool, no_spans) = run_serial(&Tracer::Off);
+    assert!(no_spans.is_empty(), "Tracer::Off produced spans");
+    assert_eq!(plain_ledger, fixture, "untraced serial ledger != fixture");
+
+    let tracer = Tracer::on();
+    let (ledger, pool, spans) = run_serial(&tracer);
+    assert_eq!(ledger, fixture, "traced serial ledger != fixture");
+    assert_eq!(pool, plain_pool, "tracing changed pool traffic");
+    assert_full_coverage("serial", &spans, example1_config().system.servers());
+}
+
+#[test]
+fn traced_chan_ledger_and_pool_match_untraced() {
+    let fixture = fixture_contents();
+    let (plain_ledger, plain_pool, _) = run_over(TransportKind::Chan, &Tracer::Off);
+    assert_eq!(plain_ledger, fixture, "untraced chan ledger != fixture");
+
+    let tracer = Tracer::on();
+    let (ledger, pool, spans) = run_over(TransportKind::Chan, &tracer);
+    assert_eq!(ledger, fixture, "traced chan ledger != fixture");
+    assert_eq!(pool, plain_pool, "tracing changed pool traffic");
+    assert_full_coverage("chan", &spans, example1_config().system.servers());
+}
+
+#[test]
+fn traced_socket_ledger_matches_fixture_with_worker_spans() {
+    let fixture = fixture_contents();
+    let tracer = Tracer::on();
+    let (ledger, _, spans) = run_over(
+        TransportKind::Socket(SocketOptions::unix_threads()),
+        &tracer,
+    );
+    assert_eq!(ledger, fixture, "traced unix-socket ledger != fixture");
+    // Socket-plane spans arrive at the hub in Spans frames sent by each
+    // worker between its Outputs and Done frames; full coverage here
+    // proves that round trip — the hub never records Map/Reduce itself.
+    assert_full_coverage("unix", &spans, example1_config().system.servers());
+    assert!(
+        spans.iter().any(|s| s.kind.code() == SpanKind::FrameIo.code()),
+        "socket plane recorded no frame_io spans"
+    );
+}
+
+#[test]
+fn disabled_tracer_records_nothing() {
+    let tracer = Tracer::Off;
+    assert!(!tracer.enabled());
+    let mut sink = tracer.sink();
+    // The Off branch hands back a timestamp-free token; record() must
+    // be a no-op rather than an allocation or a clock read.
+    let t = sink.begin();
+    sink.record(t, SpanKind::Map, 0, 0, None, 0, 0);
+    drop(sink);
+    assert!(tracer.take_spans().is_empty());
+
+    // Ingesting into a disabled tracer also discards.
+    tracer.ingest(vec![]);
+    assert!(tracer.take_spans().is_empty());
+}
+
+#[test]
+fn traced_spans_carry_byte_accounting() {
+    let tracer = Tracer::on();
+    let (_, _, spans) = run_serial(&tracer);
+    // Every encode span ships one coded delta; the byte tags must sum
+    // to something positive and every span must close after it opened.
+    let encode_bytes: u64 = spans
+        .iter()
+        .filter(|s| s.kind.code() == SpanKind::Encode.code())
+        .map(|s| s.bytes)
+        .sum();
+    assert!(encode_bytes > 0, "encode spans carry no byte accounting");
+    for s in &spans {
+        assert!(s.end_ns() >= s.start_ns, "span closed before it opened");
+    }
+}

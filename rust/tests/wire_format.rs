@@ -164,8 +164,8 @@ fn corrupt_magic_is_a_typed_error_at_every_flip() {
 #[test]
 fn unknown_kind_stage_and_reserved_bytes_are_typed_errors() {
     let bytes = frame_with(16, 2, 4).encode();
-    // Unknown frame kind (offset 4).
-    for bad_kind in [10u8, 11, 200, 255] {
+    // Unknown frame kind (offset 4; 10 is Spans, the highest assigned).
+    for bad_kind in [11u8, 12, 200, 255] {
         let mut bad = bytes.clone();
         bad[4] = bad_kind;
         let mut d = FrameDecoder::new();
