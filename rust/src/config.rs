@@ -336,6 +336,112 @@ impl ObsConfig {
     }
 }
 
+/// The `[service]` config section: continuous job-service knobs for
+/// `camr serve` (CLI flags override it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Dispatcher pool size (engines / coded rounds in flight).
+    pub engines: usize,
+    /// Per-tenant admission-queue bound.
+    pub queue_capacity: usize,
+    /// Number of tenant lanes.
+    pub tenants: usize,
+    /// Deficit round-robin quantum.
+    pub quantum: u64,
+    /// Per-tenant weights (`weights = "1,2,4"`); `None` means all 1.
+    /// When present, must list exactly `tenants` entries.
+    pub weights: Option<Vec<u64>>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            engines: 2,
+            queue_capacity: 64,
+            tenants: 4,
+            quantum: 1,
+            weights: None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    fn from_cfg(c: &CfgText) -> Result<Option<Self>> {
+        if !c.section_names().iter().any(|s| s == "service") {
+            return Ok(None);
+        }
+        for key in c.keys("service") {
+            if !matches!(
+                key.as_str(),
+                "engines" | "queue_capacity" | "tenants" | "quantum" | "weights"
+            ) {
+                return Err(CamrError::InvalidConfig(format!("unknown [service] key {key}")));
+            }
+        }
+        let gu = |k: &str| c.get_usize("service", k).map_err(CamrError::InvalidConfig);
+        let d = ServiceConfig::default();
+        let sc = ServiceConfig {
+            engines: gu("engines")?.unwrap_or(d.engines),
+            queue_capacity: gu("queue_capacity")?.unwrap_or(d.queue_capacity),
+            tenants: gu("tenants")?.unwrap_or(d.tenants),
+            quantum: c
+                .get_u64("service", "quantum")
+                .map_err(CamrError::InvalidConfig)?
+                .unwrap_or(d.quantum),
+            weights: match c.get("service", "weights") {
+                None => None,
+                Some(s) => Some(
+                    s.split(',')
+                        .map(|w| {
+                            w.trim().parse::<u64>().map_err(|_| {
+                                CamrError::InvalidConfig(format!(
+                                    "bad [service] weight entry {w:?}"
+                                ))
+                            })
+                        })
+                        .collect::<Result<Vec<u64>>>()?,
+                ),
+            },
+        };
+        sc.validate()?;
+        Ok(Some(sc))
+    }
+
+    /// Reject degenerate or inconsistent knobs.
+    pub fn validate(&self) -> Result<()> {
+        if self.engines == 0 {
+            return Err(CamrError::InvalidConfig("[service] engines must be >= 1".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(CamrError::InvalidConfig("[service] queue_capacity must be >= 1".into()));
+        }
+        if self.tenants == 0 {
+            return Err(CamrError::InvalidConfig("[service] tenants must be >= 1".into()));
+        }
+        if self.quantum == 0 {
+            return Err(CamrError::InvalidConfig("[service] quantum must be >= 1".into()));
+        }
+        if let Some(w) = &self.weights {
+            if w.len() != self.tenants {
+                return Err(CamrError::InvalidConfig(format!(
+                    "[service] weights lists {} entries for {} tenants",
+                    w.len(),
+                    self.tenants
+                )));
+            }
+            if w.contains(&0) {
+                return Err(CamrError::InvalidConfig("[service] weights must be >= 1".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// The effective weight vector: the explicit list, or all-ones.
+    pub fn weight_vector(&self) -> Vec<u64> {
+        self.weights.clone().unwrap_or_else(|| vec![1; self.tenants])
+    }
+}
+
 /// Top-level run configuration, loadable from a TOML-subset file.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -358,6 +464,9 @@ pub struct RunConfig {
     /// Optional `[obs]` section enabling tracing by default
     /// (overridable by `--trace` / `CAMR_TRACE`).
     pub obs: Option<ObsConfig>,
+    /// Optional `[service]` section configuring the continuous job
+    /// service for `camr serve` (overridable by CLI flags).
+    pub service: Option<ServiceConfig>,
 }
 
 impl RunConfig {
@@ -393,6 +502,14 @@ impl RunConfig {
     /// [obs]
     /// enabled = false              # true -> trace even without --trace
     /// trace = "trace.json"         # Chrome trace_event output path
+    ///
+    /// # Optional job-service knobs for `camr serve`.
+    /// [service]
+    /// engines = 2                  # dispatcher pool size
+    /// queue_capacity = 64          # per-tenant admission bound
+    /// tenants = 4
+    /// quantum = 1                  # deficit round-robin quantum
+    /// weights = "1,1,2,4"          # per-tenant weights (len = tenants)
     /// ```
     pub fn from_text(text: &str) -> Result<Self> {
         let c = CfgText::parse(text).map_err(CamrError::InvalidConfig)?;
@@ -408,7 +525,7 @@ impl RunConfig {
             }
         }
         for s in c.section_names() {
-            if !matches!(s.as_str(), "" | "system" | "sim" | "transport" | "obs") {
+            if !matches!(s.as_str(), "" | "system" | "sim" | "transport" | "obs" | "service") {
                 return Err(CamrError::InvalidConfig(format!("unknown section [{s}]")));
             }
         }
@@ -427,7 +544,8 @@ impl RunConfig {
         let sim = crate::sim::SimConfig::from_cfg(&c)?;
         let transport = TransportConfig::from_cfg(&c)?;
         let obs = ObsConfig::from_cfg(&c)?;
-        Ok(RunConfig { system, workload, seed, artifact, json, sim, transport, obs })
+        let service = ServiceConfig::from_cfg(&c)?;
+        Ok(RunConfig { system, workload, seed, artifact, json, sim, transport, obs, service })
     }
 
     /// Load from a file path.
@@ -615,6 +733,47 @@ mod tests {
         // Absent section → no obs config; unknown keys rejected.
         assert!(RunConfig::from_text("[system]\nk = 3\nq = 2").unwrap().obs.is_none());
         assert!(RunConfig::from_text("[system]\nk = 3\nq = 2\n[obs]\nwat = 1").is_err());
+    }
+
+    #[test]
+    fn config_file_parses_service_section() {
+        let text = r#"
+            [system]
+            k = 3
+            q = 2
+            [service]
+            engines = 3
+            queue_capacity = 16
+            tenants = 3
+            quantum = 2
+            weights = "1, 2, 4"
+        "#;
+        let rc = RunConfig::from_text(text).unwrap();
+        let s = rc.service.expect("[service] section parsed");
+        assert_eq!(s.engines, 3);
+        assert_eq!(s.queue_capacity, 16);
+        assert_eq!(s.quantum, 2);
+        assert_eq!(s.weight_vector(), vec![1, 2, 4]);
+        // Absent section → no service config; defaults are all-ones.
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2").unwrap().service.is_none());
+        assert_eq!(ServiceConfig::default().weight_vector(), vec![1; 4]);
+        // Unknown keys and inconsistent knobs rejected.
+        assert!(RunConfig::from_text("[system]\nk = 3\nq = 2\n[service]\nwat = 1").is_err());
+        assert!(
+            RunConfig::from_text("[system]\nk = 3\nq = 2\n[service]\nengines = 0").is_err()
+        );
+        assert!(RunConfig::from_text(
+            "[system]\nk = 3\nq = 2\n[service]\ntenants = 2\nweights = \"1\""
+        )
+        .is_err());
+        assert!(RunConfig::from_text(
+            "[system]\nk = 3\nq = 2\n[service]\ntenants = 2\nweights = \"1,zero\""
+        )
+        .is_err());
+        assert!(RunConfig::from_text(
+            "[system]\nk = 3\nq = 2\n[service]\ntenants = 2\nweights = \"1,0\""
+        )
+        .is_err());
     }
 
     #[test]

@@ -245,8 +245,11 @@ impl BatchOutcome {
 pub type WorkloadFactory<'a> = dyn Fn(usize, u64) -> Result<Box<dyn Workload>> + 'a;
 
 /// The engine face the batch loop drives — implemented by both CAMR
-/// engines so the loop is written once.
-trait RoundEngine {
+/// engines so the loop is written once. Also the persistent-engine face
+/// each [`crate::service`] dispatcher owns: one boxed `RoundEngine` per
+/// dispatcher thread, workload swapped per job, buffers reused across
+/// the whole job stream.
+pub(crate) trait RoundEngine {
     fn run_once(&mut self) -> Result<RunOutcome>;
     fn swap_workload(&mut self, wl: Box<dyn Workload>) -> Box<dyn Workload>;
     fn grab_outputs(&mut self) -> HashMap<(JobId, FuncId), Value>;

@@ -29,6 +29,9 @@ pub enum CamrError {
     /// A worker's transport connection died mid-run (process killed,
     /// socket closed, or no progress within the disconnect timeout).
     Disconnected(String),
+    /// Job-service admission queue at capacity: the typed backpressure
+    /// rejection. Retry later or use the blocking submit.
+    QueueFull(String),
 }
 
 impl fmt::Display for CamrError {
@@ -45,6 +48,7 @@ impl fmt::Display for CamrError {
             CamrError::Io(e) => write!(f, "io error: {e}"),
             CamrError::Wire(m) => write!(f, "wire protocol error: {m}"),
             CamrError::Disconnected(m) => write!(f, "worker disconnected: {m}"),
+            CamrError::QueueFull(m) => write!(f, "queue full: {m}"),
         }
     }
 }
@@ -66,6 +70,7 @@ impl CamrError {
             CamrError::Io(_) => 9,
             CamrError::Wire(_) => 10,
             CamrError::Disconnected(_) => 11,
+            CamrError::QueueFull(_) => 12,
         }
     }
 
@@ -84,6 +89,7 @@ impl CamrError {
             9 => CamrError::Io(std::io::Error::other(msg)),
             10 => CamrError::Wire(msg),
             11 => CamrError::Disconnected(msg),
+            12 => CamrError::QueueFull(msg),
             _ => CamrError::Runtime(msg),
         }
     }
@@ -133,6 +139,7 @@ mod tests {
             CamrError::Io(std::io::Error::other("m")),
             CamrError::Wire("m".into()),
             CamrError::Disconnected("m".into()),
+            CamrError::QueueFull("m".into()),
         ];
         for e in all {
             let code = e.wire_code();

@@ -46,6 +46,13 @@
 //!   gradient aggregation.
 //! - [`runtime`] — PJRT client wrapper executing AOT-compiled JAX/Pallas
 //!   artifacts on the map path.
+//! - [`service`] — continuous job service on the batch runtime:
+//!   bounded per-tenant admission (deficit round-robin fairness, typed
+//!   backpressure), a dispatcher pool of persistent engines running
+//!   coded rounds in flight, and queue-wait/execution latency
+//!   decomposition; `camr serve --bench` drives it with mixed
+//!   million-job traffic, and [`sim::arrival`] replays the same seeded
+//!   Poisson arrival trace for sim-vs-real comparison.
 //! - [`metrics`] — load ledger and reports.
 //! - [`obs`] — structured tracing + metrics: typed spans on every
 //!   plane (serial, channel, TCP, Unix-domain), a Chrome `trace_event`
@@ -201,6 +208,7 @@ pub mod obs;
 pub mod placement;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod shuffle;
 pub mod sim;
 pub mod util;

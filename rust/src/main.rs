@@ -7,7 +7,8 @@
 //! camr sweep    [--max-k 4] [--max-q 4]
 //! camr table3
 //! camr example1
-//! camr serve    [--k 3] [--q 2] [--gamma 2]
+//! camr serve    [--bench] [--engines 2] [--tenants 4] [--weights 1,2,4]
+//! camr cluster  [--k 3] [--q 2] [--gamma 2]
 //! camr speedup  [--k 4] [--q 2] [--gamma 8] [--value-bytes 256]
 //! ```
 //!
@@ -25,13 +26,18 @@ use camr::coordinator::cluster;
 use camr::coordinator::engine::{Engine, RunOutcome};
 use camr::coordinator::parallel::{ParallelEngine, TransportKind};
 use camr::coordinator::remote::{self, SocketOptions, WorkerMode, WorkerSpec};
-use camr::metrics::{BatchReport, LoadReport, SchemeBatch, SimTimes};
+use camr::metrics::{BatchReport, LoadReport, SchemeBatch, ServeReport, SimTimes, TenantServe};
 use camr::net::socket::SocketKind;
 use camr::net::{Bus, Stage};
 use camr::obs::{self, Tracer};
 use camr::report::Table;
-use camr::sim::{self, LinkKind, SimConfig, SimOutcome, StragglerModel};
+use camr::service::{JobService, JobSpec, ServiceOptions};
+use camr::sim::{
+    self, poisson_trace, simulate_open_arrivals, ArrivalConfig, LinkKind, SimConfig, SimOutcome,
+    StragglerModel,
+};
 use camr::util::json::Json;
+use camr::util::rng::mix_key;
 use camr::workload::matvec::MatVecWorkload;
 use camr::workload::synth::SyntheticWorkload;
 use camr::workload::wordcount::WordCountWorkload;
@@ -39,7 +45,7 @@ use camr::workload::Workload;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Minimal flag parser: `--key value`, `--key=value`, boolean `--key`.
 struct Args {
@@ -128,7 +134,12 @@ USAGE:
   camr sweep    [--max-k N] [--max-q N]
   camr table3
   camr example1
-  camr serve    [--k N] [--q N] [--gamma N]
+  camr serve    [CONFIG.toml] [--config FILE] [--k N] [--q N] [--gamma N]
+                [--value-bytes N] [--seed N] [--engines N] [--queue-cap N]
+                [--tenants N] [--quantum N] [--weights 1,2,4] [--parallel]
+                [--bench [--quick] [--jobs N] [--out FILE] [--json]]
+                [--rate JOBS/S] [--arrivals N]
+  camr cluster  [--k N] [--q N] [--gamma N]
   camr speedup  [--k N] [--q N] [--gamma N] [--value-bytes N]
   camr ablation [--k N] [--q N]
   camr ccdc     [--servers N] [--k N]
@@ -168,6 +179,17 @@ Chrome trace_event JSON (open in Perfetto or chrome://tracing).
 `camr run --trace OUT.json` exports the same trace without the
 tables. Tracing is otherwise off: a disabled tracer never reads the
 clock and adds no work to the data path.
+
+serve runs the continuous job service: mixed-workload jobs stream
+into bounded per-tenant queues (deficit round-robin fairness, typed
+QueueFull backpressure) drained by a pool of persistent engines with
+multiple coded rounds in flight. --bench is the closed-loop traffic
+driver — 10^5 jobs quick / 10^6 full, every round oracle-verified,
+jobs/sec + p50/p99 sojourn + per-tenant counts into BENCH_serve.json.
+Without --bench, submissions are paced by a seeded Poisson arrival
+trace and the run is compared against the simulator's FCFS replay of
+the identical trace (sim-vs-real on the same offered load). The old
+one-shot Arc-shared round lives on as `camr cluster`.
 ";
 
 fn build_workload(
@@ -1102,7 +1124,9 @@ fn cmd_example1() -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// `camr cluster`: the legacy one-shot Arc-shared cluster round (what
+/// `camr serve` meant before the continuous job service existed).
+fn cmd_cluster(args: &Args) -> Result<()> {
     let k = args.get_usize("k", 3)?;
     let q = args.get_usize("q", 2)?;
     let gamma = args.get_usize("gamma", 2)?;
@@ -1117,6 +1141,255 @@ fn cmd_serve(args: &Args) -> Result<()> {
         load::camr_total(k, q),
         out.outputs,
         out.map_invocations
+    );
+    Ok(())
+}
+
+/// Tenant → workload family for `camr serve` traffic: the mixed-load
+/// rotation the bench submits.
+const SERVE_KINDS: [WorkloadKind; 4] = [
+    WorkloadKind::WordCount,
+    WorkloadKind::MatVec,
+    WorkloadKind::Gradient,
+    WorkloadKind::Synthetic,
+];
+
+/// Resolve `camr serve`'s system + service knobs: positional/`--config`
+/// file first (its `[service]` section), then flag overrides.
+fn resolve_serve_setup(
+    args: &Args,
+    path: Option<String>,
+) -> Result<(SystemConfig, u64, camr::config::ServiceConfig)> {
+    let (cfg, seed, svc) = match path.or_else(|| args.get_opt("config")) {
+        Some(p) => {
+            let rc = RunConfig::from_path(std::path::Path::new(&p))?;
+            (rc.system, rc.seed, rc.service.unwrap_or_default())
+        }
+        None => (
+            // Small rounds by default: serve throughput comes from many
+            // coded rounds in flight, not from one big round.
+            SystemConfig::with_options(
+                args.get_usize("k", 2)?,
+                args.get_usize("q", 2)?,
+                args.get_usize("gamma", 1)?,
+                1,
+                args.get_usize("value-bytes", 16)?,
+            )?,
+            args.get_u64("seed", 0xCA3A)?,
+            camr::config::ServiceConfig::default(),
+        ),
+    };
+    let svc = camr::config::ServiceConfig {
+        engines: args.get_usize("engines", svc.engines)?,
+        queue_capacity: args.get_usize("queue-cap", svc.queue_capacity)?,
+        tenants: args.get_usize("tenants", svc.tenants)?,
+        quantum: args.get_u64("quantum", svc.quantum)?,
+        weights: match args.get_opt("weights") {
+            Some(s) => Some(
+                s.split(',')
+                    .map(|w| w.trim().parse::<u64>().with_context(|| format!("--weights {s}")))
+                    .collect::<Result<Vec<u64>>>()?,
+            ),
+            None => svc.weights,
+        },
+    };
+    svc.validate()?;
+    Ok((cfg, seed, svc))
+}
+
+/// Start a [`JobService`] from resolved knobs.
+fn start_service(
+    cfg: &SystemConfig,
+    svc: &camr::config::ServiceConfig,
+    parallel: bool,
+) -> Result<JobService> {
+    let service = JobService::start(
+        cfg.clone(),
+        ServiceOptions {
+            engines: svc.engines,
+            parallel,
+            weights: svc.weight_vector(),
+            queue_capacity: svc.queue_capacity,
+            quantum: svc.quantum,
+            ..ServiceOptions::default()
+        },
+    )?;
+    Ok(service)
+}
+
+/// Package a drained service into the `BENCH_serve.json` report.
+fn serve_report(
+    cfg: &SystemConfig,
+    svc: &camr::config::ServiceConfig,
+    parallel: bool,
+    quick: bool,
+    out: &camr::service::ServiceOutcome,
+) -> ServeReport {
+    let ns_to_us = |ns: u64| ns / 1_000;
+    let sojourn = out.latency_ns(|r| r.sojourn_ns());
+    let queue = out.latency_ns(|r| r.queue_ns);
+    let exec = out.latency_ns(|r| r.exec_ns);
+    let mut tenants: Vec<TenantServe> = out
+        .per_tenant()
+        .into_iter()
+        .map(|t| TenantServe {
+            tenant: t.tenant,
+            weight: t.weight,
+            submitted: 0,
+            completed: t.completed,
+            rejected: t.rejected,
+        })
+        .collect();
+    for r in &out.results {
+        tenants[r.tenant].submitted += 1; // closed-loop: all admitted jobs complete
+    }
+    ServeReport {
+        k: cfg.k,
+        q: cfg.q,
+        gamma: cfg.gamma,
+        value_bytes: cfg.value_bytes,
+        servers: cfg.servers(),
+        engines: svc.engines,
+        parallel,
+        quick,
+        queue_capacity: svc.queue_capacity,
+        jobs_submitted: out.submitted,
+        jobs_completed: out.completed() as u64,
+        jobs_rejected: out.rejected,
+        paper_jobs: out.completed() as u128 * cfg.jobs() as u128,
+        verified: out.all_verified(),
+        wall_secs: out.wall.as_secs_f64(),
+        jobs_per_sec: out.jobs_per_sec(),
+        sojourn_us: [ns_to_us(sojourn.0), ns_to_us(sojourn.1)],
+        sojourn_mean_us: sojourn.2 / 1e3,
+        queue_us: [ns_to_us(queue.0), ns_to_us(queue.1)],
+        exec_us: [ns_to_us(exec.0), ns_to_us(exec.1)],
+        tenants,
+    }
+}
+
+/// `camr serve`: the continuous job service. `--bench` runs the
+/// closed-loop traffic driver (10^5–10^6 mixed-workload jobs, report
+/// into `BENCH_serve.json`); without it, a seeded Poisson open-arrival
+/// run is paced in real time and compared against the simulator's
+/// replay of the *same* arrival trace.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let (path, rest) = split_positional_config(argv);
+    let args = Args::parse(rest, &["json", "parallel", "bench", "quick"])?;
+    let (cfg, seed, svc) = resolve_serve_setup(&args, path)?;
+    let parallel = args.get_bool("parallel");
+    if args.get_bool("bench") {
+        return serve_bench(&args, &cfg, seed, &svc, parallel);
+    }
+    serve_open_arrivals(&args, &cfg, seed, &svc, parallel)
+}
+
+/// The closed-loop traffic driver behind `camr serve --bench`.
+fn serve_bench(
+    args: &Args,
+    cfg: &SystemConfig,
+    seed: u64,
+    svc: &camr::config::ServiceConfig,
+    parallel: bool,
+) -> Result<()> {
+    let quick = args.get_bool("quick")
+        || std::env::var("CAMR_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let jobs = args.get_u64("jobs", if quick { 100_000 } else { 1_000_000 })?;
+    let tenants = svc.weight_vector().len() as u64;
+    let service = start_service(cfg, svc, parallel)?;
+    for j in 0..jobs {
+        let tenant = (mix_key(seed, &[j, 1]) % tenants) as usize;
+        let spec = JobSpec {
+            tenant,
+            kind: SERVE_KINDS[tenant % SERVE_KINDS.len()],
+            seed: mix_key(seed, &[j, 0]),
+        };
+        // Blocking submit: the closed loop applies backpressure instead
+        // of dropping — first full-lane encounter still counts as a
+        // rejection, so the report shows how often the queue pushed back.
+        service.submit_blocking(spec)?;
+    }
+    let out = service.drain()?;
+    anyhow::ensure!(
+        out.completed() as u64 == jobs,
+        "service completed {} of {jobs} submitted jobs",
+        out.completed()
+    );
+    anyhow::ensure!(out.all_verified(), "a served job failed oracle verification");
+    let report = serve_report(cfg, svc, parallel, quick, &out);
+    let rendered = report.to_json();
+    if args.get_bool("json") {
+        println!("{rendered}");
+    } else {
+        print!("{report}");
+    }
+    let dest = args.get_str("out", "BENCH_serve.json");
+    std::fs::write(&dest, format!("{rendered}\n"))?;
+    eprintln!("report -> {dest}");
+    Ok(())
+}
+
+/// The open-arrival mode: pace real submissions by a seeded Poisson
+/// trace, then replay the identical trace through the FCFS simulator
+/// with the measured mean round time and line the two up.
+fn serve_open_arrivals(
+    args: &Args,
+    cfg: &SystemConfig,
+    seed: u64,
+    svc: &camr::config::ServiceConfig,
+    parallel: bool,
+) -> Result<()> {
+    let trace_cfg = ArrivalConfig {
+        rate_per_sec: args.get_f64("rate", 500.0)?,
+        jobs: args.get_usize("arrivals", 200)?,
+        tenants: svc.weight_vector().len(),
+        seed,
+    };
+    let trace = poisson_trace(&trace_cfg)?;
+    let service = start_service(cfg, svc, parallel)?;
+    let t0 = Instant::now();
+    for (j, a) in trace.iter().enumerate() {
+        if let Some(wait) = Duration::from_secs_f64(a.at_secs).checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        service.submit_blocking(JobSpec {
+            tenant: a.tenant,
+            kind: SERVE_KINDS[a.tenant % SERVE_KINDS.len()],
+            seed: mix_key(seed, &[j as u64, 0]),
+        })?;
+    }
+    let out = service.drain()?;
+    anyhow::ensure!(out.all_verified(), "a served job failed oracle verification");
+    let (_, _, exec_mean_ns) = out.latency_ns(|r| r.exec_ns);
+    let sim = simulate_open_arrivals(&trace, exec_mean_ns / 1e9, svc.engines, trace_cfg.tenants)?;
+    let (p50, p99, _) = out.latency_ns(|r| r.sojourn_ns());
+    println!(
+        "open arrivals: {} jobs @ {:.0}/s over {} tenant(s), {} engine(s)  (seed {seed})",
+        trace.len(),
+        trace_cfg.rate_per_sec,
+        trace_cfg.tenants,
+        svc.engines
+    );
+    println!("  {:<12} {:>12} {:>14} {:>14}", "", "jobs/s", "sojourn_p50_s", "sojourn_p99_s");
+    println!(
+        "  {:<12} {:>12.1} {:>14.6} {:>14.6}",
+        "real",
+        out.jobs_per_sec(),
+        p50 as f64 / 1e9,
+        p99 as f64 / 1e9
+    );
+    println!(
+        "  {:<12} {:>12.1} {:>14.6} {:>14.6}",
+        "sim",
+        sim.throughput,
+        sim.sojourn_p50_secs,
+        sim.sojourn_p99_secs
+    );
+    println!(
+        "  (sim replays the identical seeded trace against {} FCFS engine(s) at the \
+         measured {:.1} µs mean round time)",
+        svc.engines,
+        exec_mean_ns / 1e3
     );
     Ok(())
 }
@@ -1207,7 +1480,8 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&Args::parse(rest, &bool_flags)?),
         "table3" => cmd_table3(),
         "example1" => cmd_example1(),
-        "serve" => cmd_serve(&Args::parse(rest, &bool_flags)?),
+        "serve" => cmd_serve(rest),
+        "cluster" => cmd_cluster(&Args::parse(rest, &bool_flags)?),
         "speedup" => cmd_speedup(&Args::parse(rest, &bool_flags)?),
         "ablation" => cmd_ablation(&Args::parse(rest, &bool_flags)?),
         "ccdc" => cmd_ccdc(&Args::parse(rest, &bool_flags)?),

@@ -428,6 +428,175 @@ impl std::fmt::Display for BatchReport {
     }
 }
 
+/// One tenant's row of a [`ServeReport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantServe {
+    /// Tenant index.
+    pub tenant: usize,
+    /// Deficit round-robin weight.
+    pub weight: u64,
+    /// Jobs admitted for this tenant.
+    pub submitted: u64,
+    /// Jobs completed for this tenant.
+    pub completed: u64,
+    /// Typed `QueueFull` rejections returned to this tenant.
+    pub rejected: u64,
+}
+
+/// Full report of a `camr serve --bench` traffic run: what the
+/// continuous job service sustained, with sojourn latency decomposed
+/// into queue-wait and execution. Serialized into `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Design parameter `k`.
+    pub k: usize,
+    /// Design parameter `q`.
+    pub q: usize,
+    /// Subfiles per batch `γ`.
+    pub gamma: usize,
+    /// Value size `B` in bytes.
+    pub value_bytes: usize,
+    /// Cluster size `K`.
+    pub servers: usize,
+    /// Dispatcher pool size (coded rounds in flight).
+    pub engines: usize,
+    /// Thread-per-worker engines (vs serial).
+    pub parallel: bool,
+    /// Quick configuration (CI smoke) vs the full traffic run.
+    pub quick: bool,
+    /// Per-tenant admission-queue bound.
+    pub queue_capacity: usize,
+    /// Jobs admitted across all tenants.
+    pub jobs_submitted: u64,
+    /// Jobs run to completion.
+    pub jobs_completed: u64,
+    /// Typed `QueueFull` rejections (blocking submits count once).
+    pub jobs_rejected: u64,
+    /// Paper jobs covered (`completed × J`, `J = q^(k-1)` per round).
+    pub paper_jobs: u128,
+    /// Every completed job's outputs passed oracle verification.
+    pub verified: bool,
+    /// Wall clock of the whole run, seconds.
+    pub wall_secs: f64,
+    /// Completed jobs per second.
+    pub jobs_per_sec: f64,
+    /// Sojourn (submit → complete) `[p50, p99]`, microseconds.
+    pub sojourn_us: [u64; 2],
+    /// Mean sojourn, microseconds.
+    pub sojourn_mean_us: f64,
+    /// Queue-wait `[p50, p99]`, microseconds.
+    pub queue_us: [u64; 2],
+    /// Execution `[p50, p99]`, microseconds.
+    pub exec_us: [u64; 2],
+    /// Per-tenant throughput rows.
+    pub tenants: Vec<TenantServe>,
+}
+
+impl ServeReport {
+    /// Serialize to JSON (stable key order), identified as the `serve`
+    /// bench for `BENCH_serve.json`.
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("quick", Json::Bool(self.quick)),
+            ("k", Json::UInt(self.k as u128)),
+            ("q", Json::UInt(self.q as u128)),
+            ("gamma", Json::UInt(self.gamma as u128)),
+            ("value_bytes", Json::UInt(self.value_bytes as u128)),
+            ("servers", Json::UInt(self.servers as u128)),
+            ("engines", Json::UInt(self.engines as u128)),
+            ("parallel", Json::Bool(self.parallel)),
+            ("queue_capacity", Json::UInt(self.queue_capacity as u128)),
+            ("jobs_submitted", Json::UInt(self.jobs_submitted as u128)),
+            ("jobs_completed", Json::UInt(self.jobs_completed as u128)),
+            ("jobs_rejected", Json::UInt(self.jobs_rejected as u128)),
+            ("paper_jobs", Json::UInt(self.paper_jobs)),
+            ("verified", Json::Bool(self.verified)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("jobs_per_sec", Json::Num(self.jobs_per_sec)),
+            ("sojourn_p50_us", Json::UInt(self.sojourn_us[0] as u128)),
+            ("sojourn_p99_us", Json::UInt(self.sojourn_us[1] as u128)),
+            ("sojourn_mean_us", Json::Num(self.sojourn_mean_us)),
+            ("queue_p50_us", Json::UInt(self.queue_us[0] as u128)),
+            ("queue_p99_us", Json::UInt(self.queue_us[1] as u128)),
+            ("exec_p50_us", Json::UInt(self.exec_us[0] as u128)),
+            ("exec_p99_us", Json::UInt(self.exec_us[1] as u128)),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("tenant", Json::UInt(t.tenant as u128)),
+                                ("weight", Json::UInt(t.weight as u128)),
+                                ("submitted", Json::UInt(t.submitted as u128)),
+                                ("completed", Json::UInt(t.completed as u128)),
+                                ("rejected", Json::UInt(t.rejected as u128)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .render()
+    }
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "serve  k={} q={} γ={} B={}  (K={} servers, {} engine{}{})",
+            self.k,
+            self.q,
+            self.gamma,
+            self.value_bytes,
+            self.servers,
+            self.engines,
+            if self.engines == 1 { "" } else { "s" },
+            if self.parallel { ", parallel" } else { "" }
+        )?;
+        writeln!(
+            f,
+            "  jobs: {} submitted, {} completed ({} paper jobs), {} rejected{}",
+            self.jobs_submitted,
+            self.jobs_completed,
+            self.paper_jobs,
+            self.jobs_rejected,
+            if self.verified { ", all verified" } else { "  [UNVERIFIED]" }
+        )?;
+        writeln!(
+            f,
+            "  throughput: {:.1} jobs/s over {:.3}s",
+            self.jobs_per_sec, self.wall_secs
+        )?;
+        writeln!(
+            f,
+            "  sojourn p50/p99: {}/{} µs  (queue {}/{} µs + exec {}/{} µs)",
+            self.sojourn_us[0],
+            self.sojourn_us[1],
+            self.queue_us[0],
+            self.queue_us[1],
+            self.exec_us[0],
+            self.exec_us[1]
+        )?;
+        writeln!(
+            f,
+            "  {:<8} {:>7} {:>10} {:>10} {:>9}",
+            "tenant", "weight", "submitted", "completed", "rejected"
+        )?;
+        for t in &self.tenants {
+            writeln!(
+                f,
+                "  {:<8} {:>7} {:>10} {:>10} {:>9}",
+                t.tenant, t.weight, t.submitted, t.completed, t.rejected
+            )?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -517,5 +686,47 @@ mod tests {
         let text = rep.to_string();
         assert!(text.contains("pipeline_s") && text.contains("ccdc"));
         assert!(rep.scheme("uncoded").is_none());
+    }
+
+    #[test]
+    fn serve_report_renders_json_and_table() {
+        let rep = ServeReport {
+            k: 2,
+            q: 2,
+            gamma: 1,
+            value_bytes: 64,
+            servers: 4,
+            engines: 2,
+            parallel: false,
+            quick: true,
+            queue_capacity: 64,
+            jobs_submitted: 1000,
+            jobs_completed: 1000,
+            jobs_rejected: 3,
+            paper_jobs: 2000,
+            verified: true,
+            wall_secs: 1.25,
+            jobs_per_sec: 800.0,
+            sojourn_us: [120, 900],
+            sojourn_mean_us: 150.5,
+            queue_us: [40, 700],
+            exec_us: [80, 200],
+            tenants: vec![
+                TenantServe { tenant: 0, weight: 1, submitted: 400, completed: 400, rejected: 3 },
+                TenantServe { tenant: 1, weight: 2, submitted: 600, completed: 600, rejected: 0 },
+            ],
+        };
+        let js = rep.to_json();
+        assert!(js.contains("\"bench\":\"serve\""));
+        assert!(js.contains("\"jobs_completed\":1000"));
+        assert!(js.contains("\"sojourn_p99_us\":900"));
+        assert!(js.contains("\"paper_jobs\":2000"));
+        // Render → parse round trip through the same Json codec the
+        // bench writer uses.
+        let parsed = Json::parse(&js).unwrap();
+        assert_eq!(parsed.render(), js);
+        let text = rep.to_string();
+        assert!(text.contains("all verified") && text.contains("tenant"));
+        assert!(text.contains("800.0 jobs/s"));
     }
 }

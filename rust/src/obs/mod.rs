@@ -20,6 +20,7 @@
 //! | [`SpanKind::Reduce`] | reducing one `(job, function)` output              |
 //! | [`SpanKind::Verify`] | the coordinator's oracle verification pass         |
 //! | [`SpanKind::FrameIo`]| writing one wire frame on the socket plane         |
+//! | [`SpanKind::Queue`]  | a job's admission-queue wait in [`crate::service`] |
 //!
 //! Spans of one worker never overlap (the protocol is phase-sequential
 //! per worker), so the Chrome export below is a flat, well-nested
@@ -102,10 +103,13 @@ pub enum SpanKind {
     Verify,
     /// Writing one frame on the socket wire.
     FrameIo,
+    /// A job's admission-queue wait (submit → dequeue) in the
+    /// continuous job service.
+    Queue,
 }
 
 /// Every kind, in taxonomy order (stable codes = indices).
-pub const SPAN_KINDS: [SpanKind; 7] = [
+pub const SPAN_KINDS: [SpanKind; 8] = [
     SpanKind::Map,
     SpanKind::Encode,
     SpanKind::Exchange,
@@ -113,6 +117,7 @@ pub const SPAN_KINDS: [SpanKind; 7] = [
     SpanKind::Reduce,
     SpanKind::Verify,
     SpanKind::FrameIo,
+    SpanKind::Queue,
 ];
 
 impl SpanKind {
@@ -126,6 +131,7 @@ impl SpanKind {
             SpanKind::Reduce => 4,
             SpanKind::Verify => 5,
             SpanKind::FrameIo => 6,
+            SpanKind::Queue => 7,
         }
     }
 
@@ -147,6 +153,7 @@ impl SpanKind {
             SpanKind::Reduce => "reduce",
             SpanKind::Verify => "verify",
             SpanKind::FrameIo => "frame_io",
+            SpanKind::Queue => "queue",
         }
     }
 }
@@ -183,6 +190,7 @@ impl Span {
             SpanKind::Reduce => "reduce",
             SpanKind::Verify => "verify",
             SpanKind::FrameIo => "io",
+            SpanKind::Queue => "queue",
             SpanKind::Encode | SpanKind::Exchange | SpanKind::Decode => match self.stage {
                 Some(Stage::Stage1) => "stage1",
                 Some(Stage::Stage2) => "stage2",
@@ -200,8 +208,9 @@ impl Span {
 }
 
 /// Phase buckets in report order.
-pub const PHASE_ORDER: [&str; 9] =
-    ["map", "stage1", "stage2", "stage3", "baseline", "shuffle", "reduce", "verify", "io"];
+pub const PHASE_ORDER: [&str; 10] = [
+    "queue", "map", "stage1", "stage2", "stage3", "baseline", "shuffle", "reduce", "verify", "io",
+];
 
 fn phase_rank(phase: &str) -> usize {
     PHASE_ORDER.iter().position(|p| *p == phase).unwrap_or(PHASE_ORDER.len())
@@ -528,8 +537,14 @@ pub struct Metrics {
     pub disconnect_timeouts: Counter,
     /// Workers currently connected to a hub.
     pub workers_connected: Gauge,
+    /// Jobs admitted by the continuous job service.
+    pub jobs_submitted: Counter,
+    /// Typed `QueueFull` rejections returned by the service.
+    pub jobs_rejected: Counter,
+    /// Jobs the service ran to completion (including failed rounds).
+    pub jobs_completed: Counter,
     /// Span durations in ns, one histogram per [`SpanKind`] code.
-    pub span_duration_ns: [Histogram; 7],
+    pub span_duration_ns: [Histogram; 8],
 }
 
 impl Metrics {
@@ -563,6 +578,9 @@ impl Metrics {
             ("net.dial_retries".into(), self.dial_retries.get()),
             ("net.disconnect_timeouts".into(), self.disconnect_timeouts.get()),
             ("net.workers_connected".into(), self.workers_connected.get().max(0) as u64),
+            ("service.jobs_submitted".into(), self.jobs_submitted.get()),
+            ("service.jobs_rejected".into(), self.jobs_rejected.get()),
+            ("service.jobs_completed".into(), self.jobs_completed.get()),
         ];
         for (kind, h) in SPAN_KINDS.iter().zip(&self.span_duration_ns) {
             let base = format!("span.{}.ns", kind.name());
@@ -759,7 +777,9 @@ pub struct PhaseStat {
     pub bytes: u64,
 }
 
-fn percentile(sorted: &[u64], q: f64) -> u64 {
+/// Nearest-rank percentile of an already-sorted sample; 0 when empty.
+/// Shared by the trace tables and the service's sojourn reports.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
@@ -810,13 +830,14 @@ pub struct PhaseRollup {
     pub bytes: u64,
 }
 
-/// Per-phase wall windows over a span set, in [`PHASE_ORDER`]. The `io`
-/// and `verify` buckets are excluded (they overlap protocol phases).
+/// Per-phase wall windows over a span set, in [`PHASE_ORDER`]. The
+/// `io`, `verify`, and `queue` buckets are excluded (they overlap
+/// protocol phases — queue waits span whole rounds of other jobs).
 pub fn phase_rollup(spans: &[Span]) -> Vec<PhaseRollup> {
     let mut windows: BTreeMap<usize, (u64, u64, usize, u64)> = BTreeMap::new();
     for s in spans {
         let phase = s.phase();
-        if phase == "io" || phase == "verify" {
+        if phase == "io" || phase == "verify" || phase == "queue" {
             continue;
         }
         let w = windows

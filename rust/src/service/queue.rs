@@ -1,0 +1,212 @@
+//! Bounded per-tenant admission queues drained by deficit round-robin.
+//!
+//! Every tenant owns one FIFO lane with a hard capacity bound —
+//! [`DrrQueue::try_push`] to a full lane is a typed
+//! [`CamrError::QueueFull`] rejection, never a silent drop and never an
+//! unbounded buffer. The dispatcher side pops through classic deficit
+//! round-robin (Shreedhar–Varghese): visiting a backlogged lane grants
+//! it `quantum × weight` job credits, each pop spends one credit, and a
+//! lane that empties forfeits its residual credit. With every lane
+//! backlogged the served shares converge to the weight vector exactly —
+//! `rust/tests/service.rs` pins the resulting pop pattern.
+//!
+//! The queue is a plain data structure (no locks, no clocks): the
+//! service wraps it in its own mutex, so the fairness policy stays
+//! deterministic and unit-testable in isolation.
+
+use crate::error::{CamrError, Result};
+use std::collections::VecDeque;
+
+/// One tenant's FIFO lane.
+#[derive(Debug)]
+struct Lane<T> {
+    weight: u64,
+    items: VecDeque<T>,
+}
+
+/// Bounded multi-tenant queue with deficit round-robin draining.
+#[derive(Debug)]
+pub struct DrrQueue<T> {
+    lanes: Vec<Lane<T>>,
+    capacity: usize,
+    quantum: u64,
+    /// Lane the scheduler is currently serving.
+    cursor: usize,
+    /// Unspent credits of the cursor lane.
+    budget: u64,
+    len: usize,
+}
+
+impl<T> DrrQueue<T> {
+    /// A queue with one lane per weight entry, each bounded to
+    /// `capacity` items. `quantum` scales every lane's per-visit grant
+    /// (`quantum × weight` pops before the cursor moves on).
+    pub fn new(weights: &[u64], capacity: usize, quantum: u64) -> Result<Self> {
+        if weights.is_empty() {
+            return Err(CamrError::InvalidConfig("service needs >= 1 tenant".into()));
+        }
+        if weights.contains(&0) {
+            return Err(CamrError::InvalidConfig("tenant weights must be >= 1".into()));
+        }
+        if capacity == 0 {
+            return Err(CamrError::InvalidConfig("queue capacity must be >= 1".into()));
+        }
+        if quantum == 0 {
+            return Err(CamrError::InvalidConfig("drr quantum must be >= 1".into()));
+        }
+        let lanes = weights
+            .iter()
+            .map(|&weight| Lane { weight, items: VecDeque::new() })
+            .collect::<Vec<_>>();
+        let budget = quantum * lanes[0].weight;
+        Ok(DrrQueue { lanes, capacity, quantum, cursor: 0, budget, len: 0 })
+    }
+
+    /// Number of tenant lanes.
+    pub fn tenants(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Per-lane capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Queued items across all lanes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no lane holds an item.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Items currently queued for `tenant`.
+    pub fn lane_len(&self, tenant: usize) -> usize {
+        self.lanes.get(tenant).map_or(0, |l| l.items.len())
+    }
+
+    /// Admit an item to `tenant`'s lane, or reject it with the typed
+    /// backpressure error when the lane is at capacity.
+    pub fn try_push(&mut self, tenant: usize, item: T) -> Result<()> {
+        let lanes = self.lanes.len();
+        let lane = self.lanes.get_mut(tenant).ok_or_else(|| {
+            CamrError::InvalidConfig(format!("tenant {tenant} out of range (have {lanes})"))
+        })?;
+        if lane.items.len() >= self.capacity {
+            return Err(CamrError::QueueFull(format!(
+                "tenant {tenant} queue at capacity {}",
+                self.capacity
+            )));
+        }
+        lane.items.push_back(item);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Pop the next item under deficit round-robin, with the owning
+    /// tenant. `None` when the queue is empty.
+    pub fn pop(&mut self) -> Option<(usize, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let lane = &mut self.lanes[self.cursor];
+            if !lane.items.is_empty() && self.budget >= 1 {
+                self.budget -= 1;
+                self.len -= 1;
+                let item = lane.items.pop_front().expect("non-empty lane");
+                return Some((self.cursor, item));
+            }
+            // Lane exhausted (or out of credit): forfeit the residual
+            // deficit and grant the next lane a fresh visit.
+            self.cursor = (self.cursor + 1) % self.lanes.len();
+            self.budget = self.quantum * self.lanes[self.cursor].weight;
+        }
+    }
+
+    /// Drain every lane in round-robin order without spending credits
+    /// (shutdown path: ordering fairness no longer matters, loss does).
+    pub fn drain_all(&mut self) -> Vec<(usize, T)> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(x) = self.pop() {
+            out.push(x);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_degenerate_parameters() {
+        assert!(DrrQueue::<u32>::new(&[], 4, 1).is_err());
+        assert!(DrrQueue::<u32>::new(&[1, 0], 4, 1).is_err());
+        assert!(DrrQueue::<u32>::new(&[1], 0, 1).is_err());
+        assert!(DrrQueue::<u32>::new(&[1], 4, 0).is_err());
+    }
+
+    #[test]
+    fn capacity_bound_is_typed_and_per_lane() {
+        let mut q = DrrQueue::new(&[1, 1], 2, 1).unwrap();
+        q.try_push(0, 'a').unwrap();
+        q.try_push(0, 'b').unwrap();
+        let err = q.try_push(0, 'c').unwrap_err();
+        assert!(matches!(err, CamrError::QueueFull(_)), "{err}");
+        // The other lane still has room, and popping frees space.
+        q.try_push(1, 'x').unwrap();
+        assert_eq!(q.len(), 3);
+        let _ = q.pop().unwrap();
+        q.try_push(0, 'c').unwrap();
+        assert!(matches!(q.try_push(9, 'z').unwrap_err(), CamrError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn backlogged_lanes_share_by_weight() {
+        // Weights 1:2, both lanes saturated: the pop pattern must be
+        // t0, t1, t1 repeating — shares exactly 1/3 vs 2/3.
+        let mut q = DrrQueue::new(&[1, 2], 64, 1).unwrap();
+        for i in 0..12u32 {
+            q.try_push(0, i).unwrap();
+            q.try_push(1, i).unwrap();
+        }
+        let order: Vec<usize> = (0..9).map(|_| q.pop().unwrap().0).collect();
+        assert_eq!(order, vec![0, 1, 1, 0, 1, 1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn empty_lane_forfeits_deficit() {
+        // Lane 1 has nothing queued: lane 0 must be served back to back
+        // without accumulating credit for lane 1's later burst.
+        let mut q = DrrQueue::new(&[1, 4], 64, 1).unwrap();
+        for i in 0..3u32 {
+            q.try_push(0, i).unwrap();
+        }
+        assert_eq!(q.pop().unwrap(), (0, 0));
+        assert_eq!(q.pop().unwrap(), (0, 1));
+        q.try_push(1, 10).unwrap();
+        q.try_push(1, 11).unwrap();
+        // Lane 1 gets its fresh grant (4), not 4 + hoarded visits.
+        assert_eq!(q.pop().unwrap(), (1, 10));
+        assert_eq!(q.pop().unwrap(), (1, 11));
+        assert_eq!(q.pop().unwrap(), (0, 2));
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_all_loses_nothing() {
+        let mut q = DrrQueue::new(&[1, 1, 1], 8, 1).unwrap();
+        for i in 0..8u32 {
+            q.try_push((i % 3) as usize, i).unwrap();
+        }
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), 8);
+        let mut vals: Vec<u32> = drained.iter().map(|(_, v)| *v).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, (0..8).collect::<Vec<_>>());
+    }
+}

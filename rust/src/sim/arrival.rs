@@ -1,0 +1,227 @@
+//! Seeded **open-arrival traffic**: Poisson arrival traces and an
+//! FCFS multi-engine replay model.
+//!
+//! The continuous job service ([`crate::service`]) executes an open
+//! stream of jobs against wall clocks; this module produces the same
+//! stream for the simulator. [`poisson_trace`] draws a deterministic
+//! arrival trace — exponential interarrivals at a configured rate, a
+//! uniformly-mixed tenant tag per arrival — from the crate's counter
+//! RNG, so the *same seed yields bit-identical arrivals* in the driver
+//! (which paces real submissions by it) and in
+//! [`simulate_open_arrivals`] (which replays it against a c-server FCFS
+//! model). That shared trace is what makes the `camr serve` sim-vs-real
+//! throughput/latency comparison apples-to-apples: both sides see the
+//! exact same offered load, and only the service-time model differs.
+
+use crate::error::{CamrError, Result};
+use crate::util::rng::mix_key;
+
+/// One arrival of the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Arrival time, seconds since the trace epoch.
+    pub at_secs: f64,
+    /// Tenant the job bills to.
+    pub tenant: usize,
+}
+
+/// Parameters of a Poisson arrival trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalConfig {
+    /// Mean arrival rate λ, jobs per second.
+    pub rate_per_sec: f64,
+    /// Number of arrivals to draw.
+    pub jobs: usize,
+    /// Tenant tags are drawn uniformly from `0..tenants`.
+    pub tenants: usize,
+    /// Seed addressing every draw (same seed ⇒ identical trace).
+    pub seed: u64,
+}
+
+impl ArrivalConfig {
+    /// Reject degenerate parameters.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.rate_per_sec.is_finite() && self.rate_per_sec > 0.0) {
+            return Err(CamrError::InvalidConfig("arrival rate must be > 0".into()));
+        }
+        if self.jobs == 0 {
+            return Err(CamrError::InvalidConfig("arrival trace needs >= 1 job".into()));
+        }
+        if self.tenants == 0 {
+            return Err(CamrError::InvalidConfig("arrival trace needs >= 1 tenant".into()));
+        }
+        Ok(())
+    }
+}
+
+/// A uniform draw in the open interval (0, 1) addressed by
+/// `(seed, parts)` — the straggler module's ln-safe idiom.
+fn uniform_open(seed: u64, parts: &[u64]) -> f64 {
+    let r = mix_key(seed, parts);
+    ((r >> 11) as f64 + 0.5) / (1u64 << 53) as f64
+}
+
+/// Draw a deterministic Poisson arrival trace: interarrival `i` is
+/// `-ln(u_i)/λ` with `u_i` addressed by `(seed, i)`, and the tenant tag
+/// by an independent draw at the same index. Arrival times are strictly
+/// increasing (the open-interval uniform never yields a zero gap).
+pub fn poisson_trace(cfg: &ArrivalConfig) -> Result<Vec<Arrival>> {
+    cfg.validate()?;
+    let mut at = 0.0f64;
+    Ok((0..cfg.jobs)
+        .map(|i| {
+            at += -uniform_open(cfg.seed, &[i as u64, 0]).ln() / cfg.rate_per_sec;
+            let tenant = (mix_key(cfg.seed, &[i as u64, 1]) % cfg.tenants as u64) as usize;
+            Arrival { at_secs: at, tenant }
+        })
+        .collect())
+}
+
+/// What the FCFS replay of a trace predicts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenArrivalOutcome {
+    /// Jobs completed (always the full trace — the model never drops).
+    pub completed: usize,
+    /// First arrival to last completion, seconds.
+    pub makespan_secs: f64,
+    /// `completed / makespan`, jobs per second.
+    pub throughput: f64,
+    /// Median sojourn (arrival → completion), seconds.
+    pub sojourn_p50_secs: f64,
+    /// 99th-percentile sojourn, seconds.
+    pub sojourn_p99_secs: f64,
+    /// Mean sojourn, seconds.
+    pub sojourn_mean_secs: f64,
+    /// Completed jobs per tenant tag.
+    pub per_tenant_completed: Vec<u64>,
+}
+
+/// Replay `trace` against `engines` identical servers under FCFS in
+/// arrival order, each job costing `secs_per_job`: a job starts at
+/// `max(arrival, earliest engine free time)`. This is the simulated
+/// counterpart of the service's dispatcher pool — feed it the measured
+/// mean round time and compare throughput and sojourn against the real
+/// run on the *same* trace.
+pub fn simulate_open_arrivals(
+    trace: &[Arrival],
+    secs_per_job: f64,
+    engines: usize,
+    tenants: usize,
+) -> Result<OpenArrivalOutcome> {
+    if trace.is_empty() {
+        return Err(CamrError::InvalidConfig("open-arrival replay needs >= 1 job".into()));
+    }
+    if !(secs_per_job.is_finite() && secs_per_job >= 0.0) {
+        return Err(CamrError::InvalidConfig("secs per job must be >= 0".into()));
+    }
+    if engines == 0 {
+        return Err(CamrError::InvalidConfig("open-arrival replay needs >= 1 engine".into()));
+    }
+    let mut free = vec![0.0f64; engines];
+    let mut per_tenant = vec![0u64; tenants];
+    let mut sojourns: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut last_done = 0.0f64;
+    for a in trace {
+        // Earliest-free engine; ties go to the lowest index, so the
+        // replay is deterministic regardless of float equality quirks.
+        let (idx, _) = free
+            .iter()
+            .enumerate()
+            .min_by(|(_, x), (_, y)| x.partial_cmp(y).expect("finite free times"))
+            .expect("engines >= 1");
+        let start = free[idx].max(a.at_secs);
+        let done = start + secs_per_job;
+        free[idx] = done;
+        last_done = last_done.max(done);
+        sojourns.push(done - a.at_secs);
+        if let Some(n) = per_tenant.get_mut(a.tenant) {
+            *n += 1;
+        }
+    }
+    sojourns.sort_by(|x, y| x.partial_cmp(y).expect("finite sojourns"));
+    let pct = |q: f64| -> f64 {
+        let idx = ((sojourns.len() - 1) as f64 * q).round() as usize;
+        sojourns[idx.min(sojourns.len() - 1)]
+    };
+    let makespan = last_done - trace[0].at_secs;
+    Ok(OpenArrivalOutcome {
+        completed: trace.len(),
+        makespan_secs: makespan,
+        throughput: trace.len() as f64 / makespan.max(1e-12),
+        sojourn_p50_secs: pct(0.50),
+        sojourn_p99_secs: pct(0.99),
+        sojourn_mean_secs: sojourns.iter().sum::<f64>() / sojourns.len() as f64,
+        per_tenant_completed: per_tenant,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> ArrivalConfig {
+        ArrivalConfig { rate_per_sec: 100.0, jobs: 2000, tenants: 4, seed }
+    }
+
+    #[test]
+    fn degenerate_parameters_are_rejected() {
+        assert!(ArrivalConfig { rate_per_sec: 0.0, ..cfg(1) }.validate().is_err());
+        assert!(ArrivalConfig { jobs: 0, ..cfg(1) }.validate().is_err());
+        assert!(ArrivalConfig { tenants: 0, ..cfg(1) }.validate().is_err());
+        assert!(simulate_open_arrivals(&[], 1.0, 1, 1).is_err());
+        let t = [Arrival { at_secs: 0.0, tenant: 0 }];
+        assert!(simulate_open_arrivals(&t, 1.0, 0, 1).is_err());
+        assert!(simulate_open_arrivals(&t, f64::NAN, 1, 1).is_err());
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_trace_bit_exactly() {
+        let a = poisson_trace(&cfg(42)).unwrap();
+        let b = poisson_trace(&cfg(42)).unwrap();
+        assert_eq!(a, b);
+        let c = poisson_trace(&cfg(43)).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn trace_is_strictly_increasing_and_mixes_tenants() {
+        let t = poisson_trace(&cfg(7)).unwrap();
+        assert!(t.windows(2).all(|w| w[1].at_secs > w[0].at_secs));
+        let mut seen = vec![false; 4];
+        for a in &t {
+            assert!(a.tenant < 4);
+            seen[a.tenant] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "2000 draws must hit all 4 tenants");
+    }
+
+    #[test]
+    fn mean_interarrival_tracks_the_rate() {
+        let t = poisson_trace(&cfg(11)).unwrap();
+        let mean_gap = t.last().unwrap().at_secs / t.len() as f64;
+        let expect = 1.0 / 100.0;
+        assert!(
+            (mean_gap - expect).abs() < 0.1 * expect,
+            "mean gap {mean_gap} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn fcfs_replay_matches_hand_computation() {
+        // Two engines, unit service: arrivals at 0.0, 0.1, 0.2.
+        let t = [
+            Arrival { at_secs: 0.0, tenant: 0 },
+            Arrival { at_secs: 0.1, tenant: 1 },
+            Arrival { at_secs: 0.2, tenant: 0 },
+        ];
+        let out = simulate_open_arrivals(&t, 1.0, 2, 2).unwrap();
+        // Job 2 waits for engine 0 (free at 1.0): done 2.0, sojourn 1.8.
+        assert_eq!(out.completed, 3);
+        assert!((out.makespan_secs - 2.0).abs() < 1e-12);
+        assert!((out.sojourn_p99_secs - 1.8).abs() < 1e-12);
+        assert_eq!(out.per_tenant_completed, vec![2, 1]);
+        // More engines can only shorten sojourns.
+        let wide = simulate_open_arrivals(&t, 1.0, 3, 2).unwrap();
+        assert!(wide.sojourn_p99_secs <= out.sojourn_p99_secs);
+    }
+}

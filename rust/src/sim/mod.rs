@@ -47,11 +47,13 @@
 //! performs the same single rounding as the closed form. The two
 //! models cannot silently diverge.
 
+pub mod arrival;
 pub mod event;
 pub mod link;
 pub mod model;
 pub mod straggler;
 
+pub use arrival::{poisson_trace, simulate_open_arrivals, Arrival, ArrivalConfig};
 pub use event::{Event, EventQueue};
 pub use link::LinkKind;
 pub use model::TimeModel;

@@ -11,6 +11,7 @@
 
 use camr::config::RunConfig;
 use camr::coordinator::parallel::ParallelEngine;
+use camr::metrics::{ServeReport, TenantServe};
 use camr::obs::{self, Tracer};
 use camr::util::json::Json;
 use camr::workload::build_native;
@@ -84,6 +85,80 @@ fn bench_report_shape_parses_before_any_bench_runs() {
     };
     assert_eq!(rows.len(), 3);
     assert_eq!(rows[1].get("rounds"), Some(&Json::UInt(2)));
+}
+
+/// `BENCH_serve.json` is written by the `camr serve --bench` CLI driver
+/// rather than a `cargo bench` target, so it gets its own conditional
+/// on-disk check (CI runs the quick traffic run right before this).
+#[test]
+fn emitted_serve_report_parses_as_json() {
+    let path = repo_path("BENCH_serve.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("note: BENCH_serve.json absent (run `camr serve --bench --quick`)");
+        return;
+    };
+    let parsed = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("BENCH_serve.json is not valid JSON: {e}"));
+    assert_eq!(
+        parsed.get("bench"),
+        Some(&Json::Str("serve".to_string())),
+        "BENCH_serve.json must identify its driver"
+    );
+    for field in ["jobs_submitted", "jobs_completed", "paper_jobs", "sojourn_p99_us", "tenants"] {
+        assert!(parsed.get(field).is_some(), "BENCH_serve.json missing `{field}`");
+    }
+    let Some(Json::Arr(tenants)) = parsed.get("tenants") else {
+        panic!("tenants must be an array");
+    };
+    assert!(!tenants.is_empty(), "serve report must cover >= 1 tenant");
+}
+
+/// The serve report's writer-side shape, pinned unconditionally through
+/// the exact `Json`-building path the CLI driver uses.
+#[test]
+fn serve_report_shape_parses_before_any_traffic_runs() {
+    let report = ServeReport {
+        k: 2,
+        q: 2,
+        gamma: 1,
+        value_bytes: 16,
+        servers: 4,
+        engines: 2,
+        parallel: false,
+        quick: true,
+        queue_capacity: 64,
+        jobs_submitted: 100_000,
+        jobs_completed: 100_000,
+        jobs_rejected: 17,
+        paper_jobs: 200_000,
+        verified: true,
+        wall_secs: 12.5,
+        jobs_per_sec: 8000.0,
+        sojourn_us: [400, 900],
+        sojourn_mean_us: 450.25,
+        queue_us: [350, 800],
+        exec_us: [50, 120],
+        tenants: (0..4)
+            .map(|tenant| TenantServe {
+                tenant,
+                weight: tenant as u64 + 1,
+                submitted: 25_000,
+                completed: 25_000,
+                rejected: 4,
+            })
+            .collect(),
+    };
+    let rendered = report.to_json();
+    let parsed = Json::parse(&rendered).expect("serve report shape parses");
+    assert_eq!(parsed.render(), rendered);
+    assert_eq!(parsed.get("bench"), Some(&Json::Str("serve".into())));
+    assert_eq!(parsed.get("paper_jobs"), Some(&Json::UInt(200_000)));
+    assert_eq!(parsed.get("sojourn_p99_us"), Some(&Json::UInt(900)));
+    let Some(Json::Arr(tenants)) = parsed.get("tenants") else {
+        panic!("tenants must be an array");
+    };
+    assert_eq!(tenants.len(), 4);
+    assert_eq!(tenants[3].get("weight"), Some(&Json::UInt(4)));
 }
 
 /// A trace written by `obs::write_chrome_trace` must be a valid Chrome
