@@ -57,6 +57,7 @@ fn main() {
         });
     }
     println!(
-        "\nThe XOR encode/decode adds CPU work but removes a factor k-1 from stages 1–2 on the wire."
+        "\nThe XOR encode/decode adds CPU work but removes a factor k-1 \
+         from stages 1–2 on the wire."
     );
 }

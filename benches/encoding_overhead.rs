@@ -67,6 +67,7 @@ fn main() {
         );
     }
     println!(
-        "\nCAMR's smaller job count keeps encode overhead bounded as the cluster scales (Table III / [7])."
+        "\nCAMR's smaller job count keeps encode overhead bounded as the \
+         cluster scales (Table III / [7])."
     );
 }

@@ -45,7 +45,8 @@ fn main() {
     b.run("ccdc_jobs_k3_K30 (J=4060)", || k_subsets(30, 3).len());
     b.run("ccdc_jobs_k4_K25 (J=12650)", || k_subsets(25, 4).len());
     println!(
-        "\nCCDC at K=100, k=4 would need {} jobs and k=5 {} jobs — not instantiable in a bench; CAMR needs {} and {}.",
+        "\nCCDC at K=100, k=4 would need {} jobs and k=5 {} jobs — not \
+         instantiable in a bench; CAMR needs {} and {}.",
         JobRequirement::for_params(4, 25).ccdc,
         JobRequirement::for_params(5, 20).ccdc,
         JobRequirement::for_params(4, 25).camr,

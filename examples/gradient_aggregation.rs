@@ -76,7 +76,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!(
-        "\ngradient_aggregation OK — every model's loss decreased across {steps} coded-shuffle SGD steps"
+        "\ngradient_aggregation OK — every model's loss decreased across \
+         {steps} coded-shuffle SGD steps"
     );
     Ok(())
 }

@@ -57,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t3.render());
     println!(
-        "\nload_sweep OK (L_CAMR == L_CCDC at equal μ in every row; CCDC needs exponentially more jobs)"
+        "\nload_sweep OK (L_CAMR == L_CCDC at equal μ in every row; \
+         CCDC needs exponentially more jobs)"
     );
     Ok(())
 }

@@ -91,7 +91,8 @@ fn main() -> anyhow::Result<()> {
     // ---- The headline: same load as CCDC, exponentially fewer jobs.
     let req = jobs::JobRequirement::for_params(cfg.k, cfg.q);
     println!(
-        "\nSame load as CCDC (L = {:.3} both), but CAMR ran {} jobs where CCDC needs {} (paper §III-C).",
+        "\nSame load as CCDC (L = {:.3} both), but CAMR ran {} jobs \
+         where CCDC needs {} (paper §III-C).",
         load::ccdc_total(cfg.k - 1, cfg.servers()),
         req.camr,
         req.ccdc

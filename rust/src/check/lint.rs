@@ -1,0 +1,330 @@
+//! Layer 2: the repo-invariant linter (`camr lint`). Walks a source
+//! tree and enforces the defect classes this repo has actually
+//! shipped — each rule is anchored to a real past regression:
+//!
+//! - **L201** an unregistered `rust/tests/*.rs` (PR 9: `obs_trace.rs`
+//!   silently excluded from `cargo test` because `autotests = false`
+//!   makes registration manual).
+//! - **L202** a bench emitting a `"bench":` name the `bench_json`
+//!   suite never asserts (PR 7: `xor_throughput` writing
+//!   `"shuffle_data_plane"` — a guaranteed CI failure on any executed
+//!   bench run).
+//! - **L203** an over-width line `cargo fmt --check` rejects (PR 7:
+//!   `net::socket` tests).
+//! - **L204/L205** colliding `FrameKind` discriminants / `CamrError`
+//!   wire codes: the wire protocol silently misroutes if two variants
+//!   share a code. The declared truth lives in the const tables
+//!   (`net::frame::FRAME_KIND_CODES`, `error::WIRE_CODES`); the
+//!   linter independently re-parses the `match` arms from source so a
+//!   table/code drift is also caught.
+//! - **L206** wall-clock or ambient-RNG calls inside `sim/` — the
+//!   simulator is deterministic by contract (seeded
+//!   [`crate::util::rng`] only; the virtual clock never reads time).
+//!
+//! Rules are path-relative to the given root so the fixture tests in
+//! `rust/tests/lint_rules.rs` can run the identical linter over
+//! known-bad miniature trees under `rust/tests/lint_fixtures/`.
+
+use super::{CheckReport, Diagnostic};
+use crate::error::Result;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Maximum allowed line width (characters), matching the rustfmt
+/// configuration the tree is formatted to.
+pub const MAX_WIDTH: usize = 100;
+
+/// Directories the source walk never descends into: build output,
+/// vendored deps, VCS state, and the intentionally-defective lint
+/// fixtures themselves.
+const SKIP_DIRS: &[&str] = &["target", "vendor", ".git", "lint_fixtures", "golden"];
+
+/// Run every lint over the repo rooted at `root`, returning all
+/// findings. Missing optional inputs (no benches, no `sim/`, …) skip
+/// their rules; a missing `Cargo.toml` is an error finding, not an
+/// `Err` (the tree is lintable, just wrong).
+pub fn lint_repo(root: &Path) -> Result<CheckReport> {
+    let mut r = CheckReport::new();
+    let manifest = read_manifest(root, &mut r);
+    lint_test_registration(root, &manifest, &mut r);
+    lint_bench_names(root, &manifest, &mut r);
+    lint_line_width(root, &mut r)?;
+    lint_code_collisions(
+        root,
+        "rust/src/net/frame.rs",
+        "FrameKind::",
+        "L204",
+        "FrameKind discriminant",
+        &mut r,
+    );
+    lint_code_collisions(
+        root,
+        "rust/src/error.rs",
+        "CamrError::",
+        "L205",
+        "CamrError wire code",
+        &mut r,
+    );
+    lint_sim_determinism(root, &mut r);
+    Ok(r)
+}
+
+/// The registered cargo targets we lint against, parsed from
+/// `Cargo.toml` text (section headers + `name`/`path` keys — the
+/// manifest is plain enough that a TOML parser is not needed).
+#[derive(Debug, Default)]
+struct Manifest {
+    /// `path` values of every `[[test]]` target.
+    test_paths: Vec<String>,
+    /// `(name, path)` of every `[[bench]]` target.
+    benches: Vec<(String, String)>,
+}
+
+fn read_manifest(root: &Path, r: &mut CheckReport) -> Manifest {
+    let mut m = Manifest::default();
+    let path = root.join("Cargo.toml");
+    let Ok(text) = fs::read_to_string(&path) else {
+        r.push(Diagnostic::error("L201", "Cargo.toml", "manifest missing or unreadable"));
+        return m;
+    };
+    let mut section = String::new();
+    let mut cur_name = String::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.starts_with('[') {
+            section = line.to_string();
+            cur_name.clear();
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else { continue };
+        let (key, val) = (key.trim(), val.trim().trim_matches('"'));
+        match (section.as_str(), key) {
+            ("[[test]]", "path") => m.test_paths.push(val.to_string()),
+            ("[[bench]]", "name") => cur_name = val.to_string(),
+            ("[[bench]]", "path") => m.benches.push((cur_name.clone(), val.to_string())),
+            _ => {}
+        }
+    }
+    m
+}
+
+/// L201 — with `autotests = false`, a test file cargo is never told
+/// about silently drops out of `cargo test`. Every direct `*.rs`
+/// child of `rust/tests/` must appear as a `[[test]]` path.
+fn lint_test_registration(root: &Path, manifest: &Manifest, r: &mut CheckReport) {
+    let dir = root.join("rust/tests");
+    let Ok(entries) = fs::read_dir(&dir) else { return };
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_file() && p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    files.sort();
+    for f in files {
+        let rel = format!("rust/tests/{}", f.file_name().unwrap().to_string_lossy());
+        if !manifest.test_paths.iter().any(|p| p == &rel) {
+            r.push(Diagnostic::error(
+                "L201",
+                &rel,
+                "test file not registered as a [[test]] target in Cargo.toml \
+                 (autotests = false: cargo test silently skips it)",
+            ));
+        }
+    }
+}
+
+/// L202 — every `("bench", Json::Str("NAME"))` a bench emits must be
+/// a name `rust/tests/bench_json.rs` asserts, or the executed-bench
+/// CI step fails while `cargo test` alone stays green.
+fn lint_bench_names(root: &Path, manifest: &Manifest, r: &mut CheckReport) {
+    let asserts = fs::read_to_string(root.join("rust/tests/bench_json.rs")).unwrap_or_default();
+    if asserts.is_empty() {
+        return; // no assertion suite in this tree — nothing to match
+    }
+    for (name, rel) in &manifest.benches {
+        let Ok(text) = fs::read_to_string(root.join(rel)) else { continue };
+        for (i, line) in text.lines().enumerate() {
+            let Some(at) = line.find("(\"bench\"") else { continue };
+            let rest = line.get(at + 8..).unwrap_or("");
+            let Some(emitted) = next_string_literal(rest) else { continue };
+            if !asserts.contains(&format!("\"{emitted}\"")) {
+                r.push(Diagnostic::error(
+                    "L202",
+                    format!("{rel}:{}", i + 1),
+                    format!(
+                        "bench target `{name}` emits \"bench\": \"{emitted}\", which \
+                         rust/tests/bench_json.rs never asserts"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// The next `"…"` literal in `rest`, if any (no escape handling — the
+/// emitted names are plain identifiers).
+fn next_string_literal(rest: &str) -> Option<&str> {
+    let start = rest.find('"')? + 1;
+    let len = rest[start..].find('"')?;
+    Some(&rest[start..start + len])
+}
+
+/// L203 — over-width lines (PR 7's fmt-breaking defect class: rustfmt
+/// cannot shrink a long string literal, so `cargo fmt --check` fails
+/// until a human rewraps it).
+fn lint_line_width(root: &Path, r: &mut CheckReport) -> Result<()> {
+    for dir in ["rust/src", "rust/tests", "benches", "examples"] {
+        walk_rs(&root.join(dir), &mut |path| {
+            let Ok(text) = fs::read_to_string(path) else { return };
+            let rel = path.strip_prefix(root).unwrap_or(path).display();
+            for (i, line) in text.lines().enumerate() {
+                let width = line.chars().count();
+                if width > MAX_WIDTH {
+                    r.push(Diagnostic::error(
+                        "L203",
+                        format!("{rel}:{}", i + 1),
+                        format!("line is {width} characters wide (max {MAX_WIDTH})"),
+                    ));
+                }
+            }
+        })?;
+    }
+    Ok(())
+}
+
+/// Recursively visit every `.rs` file under `dir`, skipping
+/// [`SKIP_DIRS`]. Missing directories are fine (fixtures are partial
+/// trees).
+fn walk_rs(dir: &Path, visit: &mut dyn FnMut(&Path)) -> Result<()> {
+    let Ok(entries) = fs::read_dir(dir) else { return Ok(()) };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            let name = p.file_name().unwrap_or_default().to_string_lossy().into_owned();
+            if !SKIP_DIRS.contains(&name.as_str()) {
+                walk_rs(&p, visit)?;
+            }
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            visit(&p);
+        }
+    }
+    Ok(())
+}
+
+/// L204/L205 — re-parse the `match` arms mapping enum variants to
+/// numeric wire codes and flag any code claimed by two variants or
+/// any variant claimed by two codes (per direction a collision is a
+/// silent misroute on the wire).
+fn lint_code_collisions(
+    root: &Path,
+    rel: &str,
+    variant_prefix: &str,
+    code: &'static str,
+    what: &str,
+    r: &mut CheckReport,
+) {
+    let Ok(text) = fs::read_to_string(root.join(rel)) else { return };
+    // (number, variant) pairs from `Variant… => N` and `N => Variant…`.
+    let mut by_num: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut lines_of: BTreeMap<(u64, String), usize> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let Some((lhs, rhs)) = line.split_once("=>") else { continue };
+        let (num_side, var_side) = if lhs.contains(variant_prefix) {
+            (rhs, lhs)
+        } else if rhs.contains(variant_prefix) {
+            (lhs, rhs)
+        } else {
+            continue;
+        };
+        let Some(n) = parse_leading_int(num_side) else { continue };
+        let Some(v) = parse_variant(var_side, variant_prefix) else { continue };
+        by_num.entry(n).or_default().push(v.clone());
+        lines_of.entry((n, v)).or_insert(i + 1);
+    }
+    for (n, variants) in &by_num {
+        let mut distinct = variants.clone();
+        distinct.sort();
+        distinct.dedup();
+        if distinct.len() > 1 {
+            let line = lines_of.get(&(*n, distinct[1].clone())).copied().unwrap_or(0);
+            r.push(Diagnostic::error(
+                code,
+                format!("{rel}:{line}"),
+                format!("{what} {n} claimed by multiple variants: {distinct:?}"),
+            ));
+        }
+    }
+}
+
+/// Leading integer of a match-arm side like ` 12, ` or `12 => …`.
+fn parse_leading_int(side: &str) -> Option<u64> {
+    let t = side.trim().trim_end_matches(',');
+    let digits: String = t.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() || digits.len() != t.len() {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Variant name after `prefix` in a match-arm side, e.g.
+/// `CamrError::QueueFull(m)` → `QueueFull`.
+fn parse_variant(side: &str, prefix: &str) -> Option<String> {
+    let at = side.find(prefix)? + prefix.len();
+    let name: String =
+        side[at..].chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Forbidden tokens inside `sim/`: anything that reads the wall clock
+/// or ambient randomness would break replay determinism.
+const SIM_FORBIDDEN: &[&str] =
+    &["Instant::now", "SystemTime", "thread_rng", "rand::", "from_entropy", "getrandom"];
+
+/// L206 — the simulator must stay deterministic: virtual clock only,
+/// seeded `util::rng` only.
+fn lint_sim_determinism(root: &Path, r: &mut CheckReport) {
+    let _ = walk_rs(&root.join("rust/src/sim"), &mut |path| {
+        let Ok(text) = fs::read_to_string(path) else { return };
+        let rel = path.strip_prefix(root).unwrap_or(path).display();
+        for (i, line) in text.lines().enumerate() {
+            for tok in SIM_FORBIDDEN {
+                if line.contains(tok) {
+                    r.push(Diagnostic::error(
+                        "L206",
+                        format!("{rel}:{}", i + 1),
+                        format!("determinism-critical sim/ path calls `{tok}`"),
+                    ));
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_literal_extraction() {
+        let line = ", Json::Str(\"xor_throughput\".into())";
+        assert_eq!(next_string_literal(line), Some("xor_throughput"));
+        assert_eq!(next_string_literal("no quotes here"), None);
+    }
+
+    #[test]
+    fn match_arm_parsing() {
+        assert_eq!(parse_leading_int(" 12,"), Some(12));
+        assert_eq!(parse_leading_int(" other "), None);
+        assert_eq!(parse_leading_int(" return Err(x) "), None);
+        assert_eq!(
+            parse_variant(" CamrError::QueueFull(m),", "CamrError::"),
+            Some("QueueFull".into())
+        );
+        assert_eq!(parse_variant(" _ ", "CamrError::"), None);
+    }
+}

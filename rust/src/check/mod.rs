@@ -1,0 +1,289 @@
+//! Static verification: a plan-level decodability prover and a
+//! repo-invariant linter sharing one typed [`Diagnostic`] vocabulary.
+//!
+//! CAMR's correctness rests on combinatorial invariants — `q^(k-1)`
+//! jobs, `(k-1)×` map replication, delivery groups whose XOR-coded
+//! packets every recipient can cancel from its local map outputs —
+//! that until now were only checked *by executing* a round and
+//! oracle-verifying the reduced outputs. This module checks them
+//! statically, before any worker starts:
+//!
+//! - [`prover`] proves a full placement + schedule correct from the
+//!   plan alone (`camr check`, engine pre-flight on all four planes,
+//!   and [`crate::service::JobService`] admission).
+//! - [`lint`] walks the source tree and mechanizes the repo audits
+//!   that used to be manual (`camr lint`): test registration,
+//!   bench-name/schema agreement, line width, wire-code uniqueness,
+//!   and simulator determinism purity.
+//!
+//! ## Diagnostic-code catalog
+//!
+//! Prover (`P1xx`, from [`prover::prove`]):
+//!
+//! | code | invariant |
+//! |------|-----------|
+//! | P101 | job count equals the closed form `q^(k-1)` (`analysis::jobs`) |
+//! | P102 | placement shape: `k` owners per job, one per parallel class |
+//! | P103 | map replication exactly `(k-1)×` per (job, batch) |
+//! | P104 | delivery-group shape: distinct members, chunk `p` ↔ member `p` |
+//! | P105 | decodability: every XOR term is the recipient's needed value |
+//! |      | or cancellable from its locally-mapped subfiles |
+//! | P106 | reducer consistency: `func mod K` is the chunk's receiver |
+//! | P107 | coverage: every needed (receiver, job, batch) delivered |
+//! |      | exactly once per round |
+//! | P108 | schedule sequence numbers gap-free and unique per stage |
+//! | P109 | stage barriers partition the schedule (per-stage op counts |
+//! |      | match the §IV closed forms) |
+//!
+//! Linter (`L2xx`, from [`lint::lint_repo`]):
+//!
+//! | code | invariant |
+//! |------|-----------|
+//! | L201 | every `rust/tests/*.rs` registered in `Cargo.toml` |
+//! | L202 | every emitted `"bench":` name asserted by `bench_json.rs` |
+//! | L203 | source lines at most 100 characters wide |
+//! | L204 | `FrameKind` wire discriminants collision-free |
+//! | L205 | `CamrError` wire codes collision-free |
+//! | L206 | no wall-clock / ambient-RNG calls inside `sim/` |
+//!
+//! The prover guarantees *plan* correctness: whatever the workers
+//! compute, every coded packet is decodable and every needed value
+//! arrives exactly once. Only execution can show *data* correctness —
+//! that map functions, aggregation, and the XOR data plane produce
+//! the right bytes — which stays with the oracle verification
+//! (`RunOutcome::verified`). The two agree on every shipped config
+//! (`rust/tests/static_check.rs`).
+//!
+//! ## Adding a new lint
+//!
+//! Add a rule function in [`lint`] taking the repo root and a
+//! `&mut CheckReport`, pick the next free `L2xx` code, document it in
+//! the table above, call it from [`lint::lint_repo`], and seed a
+//! known-bad fixture under `rust/tests/lint_fixtures/` asserting the
+//! code fires (and that the real tree stays clean).
+
+pub mod lint;
+pub mod prover;
+
+use crate::error::{CamrError, Result};
+use crate::util::json::Json;
+use std::fmt;
+
+pub use prover::{preflight, prove, PlanFacts};
+
+/// How bad a finding is. `Error`s fail `camr check` / `camr lint` and
+/// engine pre-flight; `Warning`s are reported but do not fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Invariant violation: the plan or tree is wrong.
+    Error,
+    /// Suspicious but not provably wrong.
+    Warning,
+}
+
+impl Severity {
+    /// Lower-case label used in reports and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One machine-readable finding: a stable code, a severity, the
+/// location it anchors to (a schedule coordinate or `file:line`), and
+/// a human message.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable machine-readable code (`P1xx` prover, `L2xx` linter).
+    pub code: &'static str,
+    /// Error or warning.
+    pub severity: Severity,
+    /// Where: `stage2 group 3 chunk 1`, `rust/tests/foo.rs:12`, …
+    pub location: String,
+    /// What went wrong, in terms of the violated invariant.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// An error-severity diagnostic.
+    pub fn error(
+        code: &'static str,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Diagnostic {
+            code,
+            severity: Severity::Error,
+            location: location.into(),
+            message: message.into(),
+        }
+    }
+
+    /// A warning-severity diagnostic.
+    pub fn warning(
+        code: &'static str,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Diagnostic {
+            code,
+            severity: Severity::Warning,
+            location: location.into(),
+            message: message.into(),
+        }
+    }
+
+    /// JSON object form (`{"code","severity","location","message"}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("severity", Json::Str(self.severity.label().to_string())),
+            ("location", Json::Str(self.location.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} [{}] {}: {}", self.severity.label(), self.code, self.location, self.message)
+    }
+}
+
+/// The result of one analysis pass: every diagnostic it produced.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// All findings, in discovery order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// Cap on findings reported *per code* — a systematically broken plan
+/// yields thousands of identical violations; the first few plus a
+/// count carry the same information.
+pub const MAX_PER_CODE: usize = 8;
+
+impl CheckReport {
+    /// A report with no findings.
+    pub fn new() -> Self {
+        CheckReport::default()
+    }
+
+    /// Add a finding, truncating after [`MAX_PER_CODE`] per code (a
+    /// summary line is appended by the truncation itself).
+    pub fn push(&mut self, d: Diagnostic) {
+        let same = self.diagnostics.iter().filter(|x| x.code == d.code).count();
+        match same.cmp(&MAX_PER_CODE) {
+            std::cmp::Ordering::Less => self.diagnostics.push(d),
+            std::cmp::Ordering::Equal => self.diagnostics.push(Diagnostic {
+                message: format!("… further {} findings suppressed", d.code),
+                location: "(truncated)".into(),
+                ..d
+            }),
+            std::cmp::Ordering::Greater => {}
+        }
+    }
+
+    /// True when no *error*-severity finding is present.
+    pub fn is_clean(&self) -> bool {
+        !self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// The error-severity findings.
+    pub fn errors(&self) -> Vec<&Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).collect()
+    }
+
+    /// Does any finding carry this code?
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// JSON export: `{"clean": bool, "diagnostics": [...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clean", Json::Bool(self.is_clean())),
+            ("diagnostics", Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect())),
+        ])
+    }
+
+    /// Collapse into a typed result: clean ⇒ `Ok(())`, otherwise the
+    /// [`CamrError::Invalid`] rejection engines and the job service
+    /// surface instead of failing mid-round. The message leads with
+    /// the first error; the rest are summarized by code.
+    pub fn into_result(self) -> Result<()> {
+        if self.is_clean() {
+            return Ok(());
+        }
+        let errs = self.errors();
+        let mut msg = format!("{}", errs[0]);
+        if errs.len() > 1 {
+            let codes: Vec<&str> = errs.iter().map(|d| d.code).collect();
+            msg.push_str(&format!(" (+{} more: {})", errs.len() - 1, codes[1..].join(", ")));
+        }
+        Err(CamrError::Invalid(msg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_report_is_ok() {
+        let r = CheckReport::new();
+        assert!(r.is_clean());
+        assert!(r.into_result().is_ok());
+    }
+
+    #[test]
+    fn error_report_becomes_typed_invalid() {
+        let mut r = CheckReport::new();
+        r.push(Diagnostic::error("P105", "stage1 group 0 chunk 1", "term not cancellable"));
+        r.push(Diagnostic::error("P103", "job 2 batch 0", "stored by 1 servers, want 2"));
+        assert!(!r.is_clean());
+        let err = r.into_result().unwrap_err();
+        assert_eq!(err.wire_code(), 13);
+        let text = err.to_string();
+        assert!(text.contains("P105") && text.contains("P103"), "{text}");
+    }
+
+    #[test]
+    fn warnings_do_not_fail() {
+        let mut r = CheckReport::new();
+        r.push(Diagnostic::warning("L203", "x.rs:1", "wide line"));
+        assert!(r.is_clean());
+        assert!(r.into_result().is_ok());
+    }
+
+    #[test]
+    fn per_code_truncation_keeps_reports_bounded() {
+        let mut r = CheckReport::new();
+        for i in 0..100 {
+            r.push(Diagnostic::error("P107", format!("receiver {i}"), "missed delivery"));
+        }
+        let p107 = r.diagnostics.iter().filter(|d| d.code == "P107").count();
+        assert_eq!(p107, MAX_PER_CODE + 1);
+        assert!(r.diagnostics.last().unwrap().message.contains("suppressed"));
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut r = CheckReport::new();
+        r.push(Diagnostic::error("P108", "stage2", "duplicate seq 3"));
+        let j = r.to_json();
+        assert_eq!(j.get("clean"), Some(&Json::Bool(false)));
+        let rendered = j.render();
+        let back = Json::parse(&rendered).unwrap();
+        assert_eq!(back, j);
+        match back.get("diagnostics") {
+            Some(Json::Arr(a)) => {
+                assert_eq!(a[0].get("code"), Some(&Json::Str("P108".into())));
+                assert_eq!(a[0].get("severity"), Some(&Json::Str("error".into())));
+            }
+            other => panic!("diagnostics not an array: {other:?}"),
+        }
+    }
+}

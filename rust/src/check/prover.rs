@@ -1,0 +1,566 @@
+//! Layer 1: the plan prover. Given a config's placement + schedule,
+//! statically verify — before any worker starts — that every coded
+//! packet is decodable by each intended recipient, map replication is
+//! exactly `(k-1)×`, job counts match the paper's closed forms, every
+//! needed intermediate value is delivered exactly once per round, and
+//! the schedule's sequence numbers and stage barriers are well-formed.
+//!
+//! The prover re-derives the invariants from first principles against
+//! an *explicit* fact base ([`PlanFacts`]) rather than trusting the
+//! constructors that built the plan: `Placement::validate` proving
+//! itself correct would be circular, and an explicit fact base is what
+//! lets the mutation tests (`rust/tests/static_check.rs`) seed
+//! specific defects — a dropped group member, skewed replication, a
+//! duplicated sequence number — and assert each is caught by its
+//! diagnostic code.
+//!
+//! Decodability (Lemma 2): in a delivery group of `g` members, member
+//! `t` broadcasts the XOR of one packet from every chunk `p ≠ t`.
+//! Recipient `p` recovers its chunk from member `t`'s broadcast iff it
+//! can cancel every other term — i.e. it locally maps chunk `p'` for
+//! all `p' ≠ p, t`. Both encodability (the sender maps what it
+//! encodes) and cancellability therefore reduce to one condition:
+//! **chunk `p` is mapped by every member except its recipient**, and
+//! not by the recipient (otherwise the delivery is vacuous and the
+//! coding wrong). That single condition is checked per XOR term.
+
+use super::{CheckReport, Diagnostic};
+use crate::analysis::jobs::JobRequirement;
+use crate::config::SystemConfig;
+use crate::coordinator::master::{Master, Schedule};
+use crate::error::Result;
+use crate::shuffle::multicast::GroupPlan;
+use crate::shuffle::plan::UnicastSpec;
+use crate::{BatchId, JobId, ServerId};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A coded delivery group with its schedule sequence number (the
+/// engine numbers member broadcasts per stage, in schedule order).
+#[derive(Debug, Clone)]
+pub struct SeqGroup {
+    /// Position in the stage's schedule (gap-free, unique per stage).
+    pub seq: usize,
+    /// The group plan: members and the chunk each member recovers.
+    pub group: GroupPlan,
+}
+
+/// A stage-3 unicast with its schedule sequence number.
+#[derive(Debug, Clone)]
+pub struct SeqUnicast {
+    /// Position in the stage-3 schedule.
+    pub seq: usize,
+    /// The unicast: sender, receiver, job, function, batches.
+    pub spec: UnicastSpec,
+}
+
+/// The explicit fact base the prover checks: system parameters, the
+/// map placement as a plain set of (server, job, batch) triples, and
+/// the sequence-stamped three-stage schedule. All fields are public
+/// and plain data so tests can seed targeted defects.
+#[derive(Debug, Clone)]
+pub struct PlanFacts {
+    /// Servers per parallel class.
+    pub q: usize,
+    /// Parallel classes (= batches per job = owners per job).
+    pub k: usize,
+    /// Coded rounds in the schedule.
+    pub rounds: usize,
+    /// Cluster size `K = k·q`.
+    pub servers: usize,
+    /// Job count the plan claims (`J`, checked against `q^(k-1)`).
+    pub jobs: usize,
+    /// `owners[j]` — the servers assigned job `j`.
+    pub owners: Vec<Vec<ServerId>>,
+    /// The placement: server `s` maps batch `b` of job `j`.
+    pub stored: BTreeSet<(ServerId, JobId, BatchId)>,
+    /// Stage-1 coded groups (one per job per round).
+    pub stage1: Vec<SeqGroup>,
+    /// Stage-2 coded groups (one per transversal group per round).
+    pub stage2: Vec<SeqGroup>,
+    /// Stage-3 unicasts.
+    pub stage3: Vec<SeqUnicast>,
+}
+
+impl PlanFacts {
+    /// Extract the fact base from a built master + schedule. Sequence
+    /// numbers are stamped exactly as the engines assign them: per
+    /// stage, in schedule order, from zero.
+    pub fn from_master(master: &Master, schedule: &Schedule) -> PlanFacts {
+        let cfg = &master.cfg;
+        let mut stored = BTreeSet::new();
+        let mut owners = Vec::with_capacity(cfg.jobs());
+        for j in 0..cfg.jobs() {
+            owners.push(master.placement.owners(j).to_vec());
+            for s in master.placement.owners(j) {
+                for b in 0..cfg.k {
+                    if master.placement.stores_batch(*s, j, b) {
+                        stored.insert((*s, j, b));
+                    }
+                }
+            }
+        }
+        let stamp = |groups: &[GroupPlan]| {
+            groups
+                .iter()
+                .enumerate()
+                .map(|(seq, g)| SeqGroup { seq, group: g.clone() })
+                .collect()
+        };
+        PlanFacts {
+            q: cfg.q,
+            k: cfg.k,
+            rounds: cfg.rounds,
+            servers: cfg.servers(),
+            jobs: cfg.jobs(),
+            owners,
+            stored,
+            stage1: stamp(&schedule.stage1),
+            stage2: stamp(&schedule.stage2),
+            stage3: schedule
+                .stage3
+                .iter()
+                .enumerate()
+                .map(|(seq, s)| SeqUnicast { seq, spec: s.clone() })
+                .collect(),
+        }
+    }
+
+    /// Build master + schedule for a config and extract the facts.
+    pub fn from_config(cfg: &SystemConfig) -> Result<PlanFacts> {
+        let master = Master::new(cfg.clone())?;
+        let schedule = master.schedule()?;
+        Ok(PlanFacts::from_master(&master, &schedule))
+    }
+
+    fn maps(&self, s: ServerId, j: JobId, b: BatchId) -> bool {
+        self.stored.contains(&(s, j, b))
+    }
+}
+
+/// Prove the plan invariants, returning every violation as a typed
+/// diagnostic (see the catalog in [`crate::check`]). An empty report
+/// is a proof: the placement and schedule satisfy the paper's
+/// decodability, replication, counting, and sequencing invariants.
+pub fn prove(f: &PlanFacts) -> CheckReport {
+    let mut r = CheckReport::new();
+    check_job_count(f, &mut r);
+    check_placement_shape(f, &mut r);
+    check_replication(f, &mut r);
+    for (stage, groups) in [("stage1", &f.stage1), ("stage2", &f.stage2)] {
+        for sg in groups.iter() {
+            check_group(f, stage, sg, &mut r);
+        }
+    }
+    for su in &f.stage3 {
+        check_unicast(f, su, &mut r);
+    }
+    check_coverage(f, &mut r);
+    check_sequences(f, &mut r);
+    check_stage_partition(f, &mut r);
+    r
+}
+
+/// Engine pre-flight: prove a master's schedule before running it.
+/// Clean ⇒ `Ok(())`; any violation ⇒ the typed
+/// [`crate::error::CamrError::Invalid`] rejection.
+pub fn preflight(master: &Master) -> Result<()> {
+    let schedule = master.schedule()?;
+    prove(&PlanFacts::from_master(master, &schedule)).into_result()
+}
+
+/// P101 — `J = q^(k-1)`, agreeing with `analysis::jobs`.
+fn check_job_count(f: &PlanFacts, r: &mut CheckReport) {
+    let closed = (f.q as u128).pow(f.k.saturating_sub(1) as u32);
+    if f.jobs as u128 != closed {
+        r.push(Diagnostic::error(
+            "P101",
+            "plan",
+            format!("plan has {} jobs; closed form q^(k-1) = {closed}", f.jobs),
+        ));
+    }
+    let req = JobRequirement::for_params(f.k, f.q);
+    if req.camr != closed {
+        r.push(Diagnostic::error(
+            "P101",
+            "plan",
+            format!("analysis::jobs says {} CAMR jobs, closed form says {closed}", req.camr),
+        ));
+    }
+    if f.servers != f.k * f.q {
+        r.push(Diagnostic::error(
+            "P101",
+            "plan",
+            format!("plan has {} servers; K = k·q = {}", f.servers, f.k * f.q),
+        ));
+    }
+}
+
+/// P102 — every job has `k` distinct owners, one per parallel class.
+fn check_placement_shape(f: &PlanFacts, r: &mut CheckReport) {
+    if f.owners.len() != f.jobs {
+        r.push(Diagnostic::error(
+            "P102",
+            "placement",
+            format!("owner table covers {} jobs, plan has {}", f.owners.len(), f.jobs),
+        ));
+    }
+    for (j, own) in f.owners.iter().enumerate() {
+        let loc = format!("job {j}");
+        if own.len() != f.k {
+            r.push(Diagnostic::error(
+                "P102",
+                &loc,
+                format!("{} owners, want k = {}", own.len(), f.k),
+            ));
+            continue;
+        }
+        let classes: BTreeSet<usize> = own.iter().map(|s| s / f.q).collect();
+        if classes.len() != f.k || own.iter().any(|&s| s >= f.servers) {
+            r.push(Diagnostic::error(
+                "P102",
+                &loc,
+                format!("owners {own:?} are not one valid server per parallel class"),
+            ));
+        }
+    }
+}
+
+/// P103 — each (job, batch) is mapped by exactly `k-1` servers, all of
+/// them owners of the job.
+fn check_replication(f: &PlanFacts, r: &mut CheckReport) {
+    let mut holders: BTreeMap<(JobId, BatchId), usize> = BTreeMap::new();
+    for &(s, j, b) in &f.stored {
+        *holders.entry((j, b)).or_insert(0) += 1;
+        if j >= f.jobs || b >= f.k {
+            r.push(Diagnostic::error(
+                "P103",
+                format!("server {s}"),
+                format!("stores out-of-range (job {j}, batch {b})"),
+            ));
+        } else if !f.owners[j].contains(&s) {
+            r.push(Diagnostic::error(
+                "P103",
+                format!("server {s}"),
+                format!("stores (job {j}, batch {b}) without owning job {j}"),
+            ));
+        }
+    }
+    for j in 0..f.jobs {
+        for b in 0..f.k {
+            let n = holders.get(&(j, b)).copied().unwrap_or(0);
+            if n != f.k.saturating_sub(1) {
+                r.push(Diagnostic::error(
+                    "P103",
+                    format!("job {j} batch {b}"),
+                    format!("mapped by {n} servers, want k-1 = {}", f.k - 1),
+                ));
+            }
+        }
+    }
+}
+
+/// P104/P105/P106 for one coded delivery group.
+fn check_group(f: &PlanFacts, stage: &str, sg: &SeqGroup, r: &mut CheckReport) {
+    let g = &sg.group;
+    let loc = format!("{stage} group {}", sg.seq);
+    // P104 — shape: ≥2 distinct valid members, one chunk per member,
+    // chunk p addressed to member p.
+    let distinct: BTreeSet<ServerId> = g.members.iter().copied().collect();
+    if g.members.len() < 2
+        || distinct.len() != g.members.len()
+        || g.members.iter().any(|&m| m >= f.servers)
+    {
+        r.push(Diagnostic::error(
+            "P104",
+            &loc,
+            format!("members {:?} are not >= 2 distinct valid servers", g.members),
+        ));
+        return; // the per-position checks below assume a sane shape
+    }
+    if g.chunks.len() != g.members.len() {
+        r.push(Diagnostic::error(
+            "P104",
+            &loc,
+            format!("{} chunks for {} members (want one each)", g.chunks.len(), g.members.len()),
+        ));
+        return;
+    }
+    for (p, c) in g.chunks.iter().enumerate() {
+        if c.receiver != g.members[p] {
+            r.push(Diagnostic::error(
+                "P104",
+                format!("{loc} chunk {p}"),
+                format!("addressed to {} but member {p} is {}", c.receiver, g.members[p]),
+            ));
+        }
+    }
+    // P105 — decodability: chunk p mapped by every member except its
+    // recipient (sender-side encodability + recipient-side
+    // cancellation of every foreign XOR term), and needed by the
+    // recipient (not locally mapped).
+    for (p, c) in g.chunks.iter().enumerate() {
+        let cloc = format!("{loc} chunk {p}");
+        if c.job >= f.jobs || c.batch >= f.k {
+            r.push(Diagnostic::error(
+                "P105",
+                &cloc,
+                format!("refers to out-of-range (job {}, batch {})", c.job, c.batch),
+            ));
+            continue;
+        }
+        if f.maps(c.receiver, c.job, c.batch) {
+            r.push(Diagnostic::error(
+                "P105",
+                &cloc,
+                format!(
+                    "receiver {} already maps (job {}, batch {}) — vacuous delivery",
+                    c.receiver, c.job, c.batch
+                ),
+            ));
+        }
+        for (t, &m) in g.members.iter().enumerate() {
+            if t != p && !f.maps(m, c.job, c.batch) {
+                r.push(Diagnostic::error(
+                    "P105",
+                    &cloc,
+                    format!(
+                        "member {m} does not map (job {}, batch {}): cannot encode it \
+                         or cancel it from member broadcasts",
+                        c.job, c.batch
+                    ),
+                ));
+            }
+        }
+    }
+    check_funcs(f, &loc, g.chunks.iter().map(|c| (c.func, c.receiver)), r);
+}
+
+/// P106 — every delivered function belongs to its receiver's reduce
+/// slice (`func mod K == receiver`) and to a scheduled round, and a
+/// group serves exactly one round.
+fn check_funcs(
+    f: &PlanFacts,
+    loc: &str,
+    funcs: impl Iterator<Item = (usize, ServerId)>,
+    r: &mut CheckReport,
+) {
+    let mut rounds_seen = BTreeSet::new();
+    for (func, receiver) in funcs {
+        if func % f.servers != receiver {
+            r.push(Diagnostic::error(
+                "P106",
+                loc,
+                format!(
+                    "func {func} reduces at server {}, not receiver {receiver}",
+                    func % f.servers
+                ),
+            ));
+        }
+        if func / f.servers >= f.rounds {
+            r.push(Diagnostic::error(
+                "P106",
+                loc,
+                format!("func {func} is round {}, schedule has {}", func / f.servers, f.rounds),
+            ));
+        }
+        rounds_seen.insert(func / f.servers);
+    }
+    if rounds_seen.len() > 1 {
+        r.push(Diagnostic::error(
+            "P106",
+            loc,
+            format!("one delivery group spans rounds {rounds_seen:?}"),
+        ));
+    }
+}
+
+/// P104/P105/P106 for one stage-3 unicast: the sender maps every batch
+/// it fuses, the receiver maps none of them.
+fn check_unicast(f: &PlanFacts, su: &SeqUnicast, r: &mut CheckReport) {
+    let s = &su.spec;
+    let loc = format!("stage3 unicast {}", su.seq);
+    let distinct: BTreeSet<BatchId> = s.batches.iter().copied().collect();
+    if s.batches.is_empty()
+        || distinct.len() != s.batches.len()
+        || s.sender == s.receiver
+        || s.sender >= f.servers
+        || s.receiver >= f.servers
+    {
+        r.push(Diagnostic::error(
+            "P104",
+            &loc,
+            format!(
+                "malformed unicast: sender {} receiver {} batches {:?}",
+                s.sender, s.receiver, s.batches
+            ),
+        ));
+        return;
+    }
+    for &b in &s.batches {
+        if s.job >= f.jobs || b >= f.k {
+            r.push(Diagnostic::error(
+                "P105",
+                &loc,
+                format!("refers to out-of-range (job {}, batch {b})", s.job),
+            ));
+            continue;
+        }
+        if !f.maps(s.sender, s.job, b) {
+            r.push(Diagnostic::error(
+                "P105",
+                &loc,
+                format!("sender {} does not map (job {}, batch {b})", s.sender, s.job),
+            ));
+        }
+        if f.maps(s.receiver, s.job, b) {
+            r.push(Diagnostic::error(
+                "P105",
+                &loc,
+                format!(
+                    "receiver {} already maps (job {}, batch {b}) — vacuous delivery",
+                    s.receiver, s.job
+                ),
+            ));
+        }
+    }
+    check_funcs(f, &loc, std::iter::once((s.func, s.receiver)), r);
+}
+
+/// P107 — exactly-once coverage: per round, each (server, job, batch)
+/// the server does *not* map locally is delivered exactly once across
+/// the three stages; nothing already mapped is ever delivered.
+fn check_coverage(f: &PlanFacts, r: &mut CheckReport) {
+    let mut delivered: BTreeMap<(usize, ServerId, JobId, BatchId), usize> = BTreeMap::new();
+    let mut charge = |round: usize, recv: ServerId, job: JobId, batch: BatchId| {
+        *delivered.entry((round, recv, job, batch)).or_insert(0) += 1;
+    };
+    for sg in f.stage1.iter().chain(&f.stage2) {
+        for c in &sg.group.chunks {
+            charge(c.func / f.servers.max(1), c.receiver, c.job, c.batch);
+        }
+    }
+    for su in &f.stage3 {
+        for &b in &su.spec.batches {
+            charge(su.spec.func / f.servers.max(1), su.spec.receiver, su.spec.job, b);
+        }
+    }
+    for round in 0..f.rounds {
+        for s in 0..f.servers {
+            for j in 0..f.jobs {
+                for b in 0..f.k {
+                    let n = delivered.get(&(round, s, j, b)).copied().unwrap_or(0);
+                    let needed = !f.maps(s, j, b);
+                    if needed && n != 1 {
+                        r.push(Diagnostic::error(
+                            "P107",
+                            format!("round {round} server {s} job {j} batch {b}"),
+                            format!("needed value delivered {n} times, want exactly 1"),
+                        ));
+                    } else if !needed && n != 0 {
+                        r.push(Diagnostic::error(
+                            "P107",
+                            format!("round {round} server {s} job {j} batch {b}"),
+                            format!("locally-mapped value delivered {n} times over the wire"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// P108 — per stage, sequence numbers are exactly `0..len`: unique
+/// and gap-free (the engines key ledger order and barrier progress on
+/// them).
+fn check_sequences(f: &PlanFacts, r: &mut CheckReport) {
+    let stages: [(&str, Vec<usize>); 3] = [
+        ("stage1", f.stage1.iter().map(|g| g.seq).collect()),
+        ("stage2", f.stage2.iter().map(|g| g.seq).collect()),
+        ("stage3", f.stage3.iter().map(|u| u.seq).collect()),
+    ];
+    for (stage, seqs) in stages {
+        let mut seen = BTreeSet::new();
+        for &q in &seqs {
+            if !seen.insert(q) {
+                r.push(Diagnostic::error("P108", stage, format!("duplicate sequence number {q}")));
+            }
+            if q >= seqs.len() {
+                r.push(Diagnostic::error(
+                    "P108",
+                    stage,
+                    format!("sequence {q} out of range 0..{} — gap in the schedule", seqs.len()),
+                ));
+            }
+        }
+    }
+}
+
+/// P109 — the stage barriers partition the schedule into the §IV
+/// closed-form op counts: `rounds·J` stage-1 groups,
+/// `rounds·J·(q-1)` stage-2 groups, `rounds·K·(J - J/q)` unicasts.
+fn check_stage_partition(f: &PlanFacts, r: &mut CheckReport) {
+    let per = [
+        ("stage1", f.stage1.len(), f.rounds * f.jobs),
+        ("stage2", f.stage2.len(), f.rounds * f.jobs * f.q.saturating_sub(1)),
+        ("stage3", f.stage3.len(), f.rounds * f.servers * (f.jobs - f.jobs / f.q.max(1))),
+    ];
+    for (stage, got, want) in per {
+        if got != want {
+            r.push(Diagnostic::error(
+                "P109",
+                stage,
+                format!("{got} scheduled ops, closed form wants {want}"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example1_plan_proves_clean() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let f = PlanFacts::from_config(&cfg).unwrap();
+        let report = prove(&f);
+        assert!(report.is_clean(), "{:?}", report.diagnostics);
+        assert!(report.diagnostics.is_empty());
+    }
+
+    #[test]
+    fn preflight_accepts_valid_master() {
+        let master = Master::new(SystemConfig::new(3, 2, 1).unwrap()).unwrap();
+        preflight(&master).unwrap();
+    }
+
+    #[test]
+    fn dropped_group_member_is_caught() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut f = PlanFacts::from_config(&cfg).unwrap();
+        f.stage1[0].group.members.pop();
+        let report = prove(&f);
+        assert!(report.has_code("P104"), "{:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn skewed_replication_is_caught() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut f = PlanFacts::from_config(&cfg).unwrap();
+        let victim = *f.stored.iter().next().unwrap();
+        f.stored.remove(&victim);
+        let report = prove(&f);
+        assert!(report.has_code("P103"), "{:?}", report.diagnostics);
+        // The placement hole also breaks decodability somewhere.
+        assert!(report.has_code("P105"), "{:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn duplicated_sequence_is_caught() {
+        let cfg = SystemConfig::new(3, 2, 2).unwrap();
+        let mut f = PlanFacts::from_config(&cfg).unwrap();
+        f.stage2[1].seq = f.stage2[0].seq;
+        let report = prove(&f);
+        assert!(report.has_code("P108"), "{:?}", report.diagnostics);
+    }
+}

@@ -91,6 +91,11 @@ impl Engine {
     /// Build an engine for a config and workload.
     pub fn new(cfg: SystemConfig, workload: Box<dyn Workload>) -> Result<Self> {
         let master = Master::new(cfg)?;
+        // Pre-flight: statically prove decodability, replication, and
+        // schedule invariants before any worker starts; a malformed
+        // plan is the typed `CamrError::Invalid`, not a mid-round
+        // failure.
+        crate::check::preflight(&master)?;
         let workers =
             (0..master.cfg.servers()).map(|s| Worker::new(s, &master.cfg)).collect();
         Ok(Engine {

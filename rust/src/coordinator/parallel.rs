@@ -130,6 +130,10 @@ impl ParallelEngine {
     /// Build an engine for a config and workload.
     pub fn new(cfg: SystemConfig, workload: Box<dyn Workload>) -> Result<Self> {
         let master = Master::new(cfg)?;
+        // Pre-flight on every transport this engine fronts (chan,
+        // tcp, unix): prove the plan before spawning threads or
+        // worker processes (see `crate::check::prover`).
+        crate::check::preflight(&master)?;
         let workers =
             (0..master.cfg.servers()).map(|s| Worker::new(s, &master.cfg)).collect();
         Ok(ParallelEngine {

@@ -141,7 +141,8 @@ pub struct WorkerSpec {
 /// parsed back by [`RunConfig::from_text`] in the worker.
 fn spec_text(cfg: &SystemConfig, spec: &WorkerSpec) -> String {
     format!(
-        "workload = \"{}\"\nseed = {}\n\n[system]\nk = {}\nq = {}\ngamma = {}\nrounds = {}\nvalue_bytes = {}\n",
+        "workload = \"{}\"\nseed = {}\n\n[system]\nk = {}\nq = {}\n\
+         gamma = {}\nrounds = {}\nvalue_bytes = {}\n",
         spec.kind.name(),
         spec.seed,
         cfg.k,
@@ -654,6 +655,11 @@ fn worker_over_stream(
     let text = String::from_utf8_lossy(&welcome.payload).into_owned();
     let rc = RunConfig::from_text(&text)?;
     let master = Master::new(rc.system.clone())?;
+    // Workers re-derive the plan from the shipped config; pre-flight
+    // it independently so a worker never executes a schedule the hub
+    // could not have proven (defense in depth across the trust
+    // boundary of the wire).
+    crate::check::preflight(&master)?;
     let wl = workload::build_native(rc.workload, &master.cfg, rc.seed)?;
     let schedule = master.schedule()?;
     let pool = pool.unwrap_or_default();

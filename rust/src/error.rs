@@ -32,6 +32,11 @@ pub enum CamrError {
     /// Job-service admission queue at capacity: the typed backpressure
     /// rejection. Retry later or use the blocking submit.
     QueueFull(String),
+    /// Static verification rejected the plan or spec before execution
+    /// ([`crate::check`]): the message carries the diagnostic code(s),
+    /// e.g. `P105` for an undecodable XOR term. Raised by `camr
+    /// check`, engine pre-flight, and job-service admission.
+    Invalid(String),
 }
 
 impl fmt::Display for CamrError {
@@ -49,6 +54,7 @@ impl fmt::Display for CamrError {
             CamrError::Wire(m) => write!(f, "wire protocol error: {m}"),
             CamrError::Disconnected(m) => write!(f, "worker disconnected: {m}"),
             CamrError::QueueFull(m) => write!(f, "queue full: {m}"),
+            CamrError::Invalid(m) => write!(f, "static check failed: {m}"),
         }
     }
 }
@@ -71,6 +77,7 @@ impl CamrError {
             CamrError::Wire(_) => 10,
             CamrError::Disconnected(_) => 11,
             CamrError::QueueFull(_) => 12,
+            CamrError::Invalid(_) => 13,
         }
     }
 
@@ -90,10 +97,31 @@ impl CamrError {
             10 => CamrError::Wire(msg),
             11 => CamrError::Disconnected(msg),
             12 => CamrError::QueueFull(msg),
+            13 => CamrError::Invalid(msg),
             _ => CamrError::Runtime(msg),
         }
     }
 }
+
+/// The declared wire-code table — one entry per variant, no
+/// collisions. This is the source of truth the `L205` lint and the
+/// uniqueness guard test check the `match` arms above against; add a
+/// variant here when adding it to [`CamrError`].
+pub const WIRE_CODES: &[(u32, &str)] = &[
+    (1, "InvalidConfig"),
+    (2, "DesignInvariant"),
+    (3, "Placement"),
+    (4, "ShuffleDecode"),
+    (5, "MissingValue"),
+    (6, "Aggregation"),
+    (7, "Verification"),
+    (8, "Runtime"),
+    (9, "Io"),
+    (10, "Wire"),
+    (11, "Disconnected"),
+    (12, "QueueFull"),
+    (13, "Invalid"),
+];
 
 impl std::error::Error for CamrError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
@@ -140,6 +168,7 @@ mod tests {
             CamrError::Wire("m".into()),
             CamrError::Disconnected("m".into()),
             CamrError::QueueFull("m".into()),
+            CamrError::Invalid("m".into()),
         ];
         for e in all {
             let code = e.wire_code();
@@ -149,6 +178,31 @@ mod tests {
         }
         // Unknown codes degrade to Runtime instead of panicking.
         assert!(matches!(CamrError::from_wire(999, "m".into()), CamrError::Runtime(_)));
+    }
+
+    #[test]
+    fn wire_code_table_is_collision_free_and_complete() {
+        // The table is the linter's declared truth (L205): every code
+        // unique, every variant unique, `0` absent (reserved), and
+        // each listed code round-trips through `from_wire` to a
+        // variant with that exact code.
+        let mut codes: Vec<u32> = WIRE_CODES.iter().map(|(c, _)| *c).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), WIRE_CODES.len(), "duplicate wire code in WIRE_CODES");
+        assert!(!codes.contains(&0), "0 is reserved for 'no error'");
+        let mut names: Vec<&str> = WIRE_CODES.iter().map(|(_, n)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), WIRE_CODES.len(), "duplicate variant in WIRE_CODES");
+        for (code, name) in WIRE_CODES {
+            let back = CamrError::from_wire(*code, "m".into());
+            assert_eq!(back.wire_code(), *code, "{name}");
+            assert!(
+                format!("{back:?}").starts_with(name),
+                "code {code} reconstructs {back:?}, table says {name}"
+            );
+        }
     }
 
     #[test]

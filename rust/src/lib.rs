@@ -36,6 +36,13 @@
 //!   thread-per-worker [`coordinator::parallel::ParallelEngine`], and
 //!   the multi-job [`coordinator::batch`] runtime that executes a
 //!   scheme's *entire* job set through one persistent engine.
+//! - [`check`] — static verification: the plan-level decodability
+//!   prover (`camr check`, engine pre-flight on every plane, and
+//!   [`service`] admission) and the repo-invariant linter
+//!   (`camr lint`), sharing one typed [`check::Diagnostic`]
+//!   vocabulary with machine-readable codes and JSON export. The
+//!   module docs carry the diagnostic-code catalog and the guide for
+//!   adding a lint.
 //! - [`baseline`] — CCDC and uncoded baselines for comparison.
 //! - [`analysis`] — closed-form load formulas (§IV, §V) and job-count
 //!   minimums (Table III).
@@ -198,6 +205,7 @@
 pub mod agg;
 pub mod analysis;
 pub mod baseline;
+pub mod check;
 pub mod config;
 pub mod coordinator;
 pub mod design;

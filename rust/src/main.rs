@@ -4,6 +4,8 @@
 //! camr run      [--k 3] [--q 2] [--gamma 2] [--workload word_count]
 //!               [--artifact artifacts/map_kernel.hlo.txt] [--seed N]
 //!               [--json] [--parallel] [--config run.toml]
+//! camr check    [CONFIG.toml] [--json]
+//! camr lint     [--root DIR] [--json]
 //! camr sweep    [--max-k 4] [--max-q 4]
 //! camr table3
 //! camr example1
@@ -131,6 +133,9 @@ USAGE:
   camr batch    [CONFIG.toml] [--config FILE] [--k N] [--q N] [--gamma N]
                 [--workload KIND] [--scheme camr|ccdc|uncoded|all]
                 [--jobs all|N] [--ccdc-cap N] [--parallel] [--json]
+  camr check    [CONFIG.toml] [--config FILE] [--k N] [--q N] [--gamma N]
+                [--json]
+  camr lint     [--root DIR] [--json]
   camr sweep    [--max-k N] [--max-q N]
   camr table3
   camr example1
@@ -179,6 +184,22 @@ Chrome trace_event JSON (open in Perfetto or chrome://tracing).
 `camr run --trace OUT.json` exports the same trace without the
 tables. Tracing is otherwise off: a disabled tracer never reads the
 clock and adds no work to the data path.
+
+check statically proves a config's full placement + schedule before
+any worker starts: every coded packet decodable by each recipient,
+map replication exactly (k-1)x, job counts matching the paper's
+closed forms, sequence numbers gap-free per stage, and the stage
+barriers partitioning the schedule. The same prover runs as engine
+pre-flight on all four planes and at job-service admission; a
+malformed plan is the typed Invalid rejection (wire code 13), never
+a mid-round failure. --json emits the diagnostic report as JSON.
+
+lint walks the source tree and enforces the repo invariants that have
+actually shipped broken before: test registration in Cargo.toml,
+bench-name/schema agreement with bench_json, line width, unique
+FrameKind discriminants and CamrError wire codes, and sim/
+determinism purity. Exit status is nonzero on any error finding —
+CI runs it as a blocking step.
 
 serve runs the continuous job service: mixed-workload jobs stream
 into bounded per-tenant queues (deficit round-robin fairness, typed
@@ -1119,7 +1140,8 @@ fn cmd_example1() -> Result<()> {
     println!();
     print!("{report}");
     println!(
-        "\nPaper §III-C: L1 = 1/4, L2 = 1/4, L3 = 1/2, total = 1. CCDC would need C(6,3) = 20 jobs; CAMR used 4."
+        "\nPaper §III-C: L1 = 1/4, L2 = 1/4, L3 = 1/2, total = 1. \
+         CCDC would need C(6,3) = 20 jobs; CAMR used 4."
     );
     Ok(())
 }
@@ -1428,7 +1450,8 @@ fn cmd_ccdc(args: &Args) -> Result<()> {
     let mut e = CcdcEngine::new(servers, k, 2, 64, 7)?;
     let out = e.run()?;
     println!(
-        "CCDC baseline: K={servers} k={k} → {} jobs (C({servers},{k}))\n  Eq.(6) load {:.4}   measured (this impl) {:.4}   encode ops {}   verified {}",
+        "CCDC baseline: K={servers} k={k} → {} jobs (C({servers},{k}))\n  \
+         Eq.(6) load {:.4}   measured (this impl) {:.4}   encode ops {}   verified {}",
         out.jobs,
         out.paper_load(),
         out.measured_load(),
@@ -1463,6 +1486,74 @@ fn cmd_timemodel(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_check(argv: &[String]) -> Result<()> {
+    let (path, rest) = split_positional_config(argv);
+    let args = Args::parse(rest, &["json"])?;
+    let (cfg, label) = match path.or_else(|| args.get_opt("config")) {
+        Some(p) => (RunConfig::from_path(std::path::Path::new(&p))?.system, p),
+        None => (
+            SystemConfig::new(
+                args.get_usize("k", 3)?,
+                args.get_usize("q", 2)?,
+                args.get_usize("gamma", 2)?,
+            )?,
+            "(flags)".to_string(),
+        ),
+    };
+    let facts = camr::check::PlanFacts::from_config(&cfg)?;
+    let report = camr::check::prove(&facts);
+    if args.get_bool("json") {
+        println!("{}", report.to_json().render());
+    } else {
+        let ops = facts.stage1.len() + facts.stage2.len() + facts.stage3.len();
+        println!(
+            "camr check {label}: k={} q={} gamma={} -> K={} J={} rounds={} ({ops} scheduled ops)",
+            cfg.k,
+            cfg.q,
+            cfg.gamma,
+            cfg.servers(),
+            cfg.jobs(),
+            cfg.rounds,
+        );
+        for d in &report.diagnostics {
+            println!("  {d}");
+        }
+        if report.is_clean() {
+            println!(
+                "  plan proven: decodability, (k-1)x replication, closed-form job \
+                 counts, gap-free per-stage sequences, stage-barrier partition"
+            );
+        }
+    }
+    if !report.is_clean() {
+        bail!("camr check: {} error(s) in {label}", report.errors().len());
+    }
+    Ok(())
+}
+
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["json"])?;
+    let root = PathBuf::from(args.get_str("root", "."));
+    let report = camr::check::lint::lint_repo(&root)?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().render());
+    } else {
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        println!(
+            "camr lint ({}): {} finding(s), {} error(s)",
+            root.display(),
+            report.diagnostics.len(),
+            report.errors().len()
+        );
+    }
+    if !report.is_clean() {
+        bail!("camr lint: repo invariants violated");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -1477,6 +1568,8 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "trace" => cmd_trace(rest),
         "batch" => cmd_batch(rest),
+        "check" => cmd_check(rest),
+        "lint" => cmd_lint(rest),
         "sweep" => cmd_sweep(&Args::parse(rest, &bool_flags)?),
         "table3" => cmd_table3(),
         "example1" => cmd_example1(),

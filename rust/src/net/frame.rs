@@ -89,6 +89,24 @@ pub enum FrameKind {
     Spans,
 }
 
+/// The declared discriminant table — one entry per frame kind, no
+/// collisions. This is the source of truth the `L204` lint and the
+/// uniqueness guard test check the `match` arms below against; add a
+/// kind here when extending [`FrameKind`].
+pub const FRAME_KIND_CODES: &[(u8, &str)] = &[
+    (0, "Hello"),
+    (1, "Welcome"),
+    (2, "Delta"),
+    (3, "Fused"),
+    (4, "Barrier"),
+    (5, "BarrierGo"),
+    (6, "Outputs"),
+    (7, "Done"),
+    (8, "Failed"),
+    (9, "Abort"),
+    (10, "Spans"),
+];
+
 impl FrameKind {
     fn code(self) -> u8 {
         match self {
@@ -360,6 +378,30 @@ mod tests {
         f.recipients = vec![0, 1, 4];
         f.payload = vec![0xAB; 37];
         f
+    }
+
+    #[test]
+    fn frame_kind_table_is_collision_free_and_complete() {
+        // The table is the linter's declared truth (L204): every
+        // discriminant unique, every kind unique, and each listed
+        // code round-trips through `from_code` back to itself.
+        let mut codes: Vec<u8> = FRAME_KIND_CODES.iter().map(|(c, _)| *c).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), FRAME_KIND_CODES.len(), "duplicate frame-kind code");
+        let mut names: Vec<&str> = FRAME_KIND_CODES.iter().map(|(_, n)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), FRAME_KIND_CODES.len(), "duplicate frame-kind name");
+        for (code, name) in FRAME_KIND_CODES {
+            let kind = FrameKind::from_code(*code).unwrap();
+            assert_eq!(kind.code(), *code, "{name}");
+            assert_eq!(format!("{kind:?}"), *name, "code {code} decodes to {kind:?}");
+        }
+        // And the table covers the whole codomain: the next code up
+        // must be unknown to the decoder.
+        let max = *codes.last().unwrap();
+        assert!(FrameKind::from_code(max + 1).is_err(), "table is missing a frame kind");
     }
 
     #[test]

@@ -289,6 +289,12 @@ impl JobService {
     /// constructed lazily inside each dispatcher on its first job.
     pub fn start(cfg: SystemConfig, opts: ServiceOptions) -> Result<JobService> {
         cfg.validate()?;
+        // Admission-time pre-flight: prove the plan every admitted job
+        // will execute (decodability, replication, schedule
+        // invariants) once, up front. A malformed spec is rejected
+        // here as the typed `CamrError::Invalid` instead of failing
+        // mid-round inside a dispatcher.
+        crate::check::preflight(&crate::coordinator::master::Master::new(cfg.clone())?)?;
         if opts.engines == 0 {
             return Err(CamrError::InvalidConfig("service needs >= 1 engine".into()));
         }

@@ -198,13 +198,26 @@ pub fn xor_into(dst: &mut [u8], src: &[u8]) -> Result<()> {
         m.xor_bytes.add(dst.len() as u64);
         m.xor_calls_for(kernel.label()).inc();
     }
+    debug_assert_eq!(dst.len(), src.len(), "check_len let a length mismatch through");
     match kernel {
         #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
-        // SAFETY: active_kernel returns Avx2 only after runtime detection.
-        XorKernel::Avx2 => unsafe { avx2::xor_into(dst, src) },
+        // SAFETY: active_kernel returns Avx2 only after runtime detection
+        // (re-asserted here: calling an AVX2 target_feature fn without
+        // hardware support is UB, not a slow path).
+        XorKernel::Avx2 => unsafe {
+            debug_assert!(is_x86_feature_detected!("avx2"), "Avx2 dispatched without support");
+            avx2::xor_into(dst, src)
+        },
         #[cfg(target_arch = "aarch64")]
-        // SAFETY: active_kernel returns Neon only after runtime detection.
-        XorKernel::Neon => unsafe { neon::xor_into(dst, src) },
+        // SAFETY: active_kernel returns Neon only after runtime detection
+        // (re-asserted here for the same reason as Avx2).
+        XorKernel::Neon => unsafe {
+            debug_assert!(
+                std::arch::is_aarch64_feature_detected!("neon"),
+                "Neon dispatched without support"
+            );
+            neon::xor_into(dst, src)
+        },
         XorKernel::Bytewise => xor_bytes(dst, src),
         _ => xor_u64_lanes(dst, src),
     }
@@ -521,9 +534,12 @@ impl PooledBuf {
 
     /// Borrow the bytes.
     pub fn as_slice(&self) -> &[u8] {
-        // SAFETY: `words` owns at least `len.div_ceil(8)` u64s, so bytes
-        // `[0, len)` lie inside the allocation; u8 has no alignment or
-        // validity requirements, and the borrow is tied to `&self`.
+        // SAFETY: `words` owns at least `len.div_ceil(8)` u64s
+        // (asserted below — the one precondition `from_raw_parts`
+        // cannot check), so bytes `[0, len)` lie inside the
+        // allocation; u8 has no alignment or validity requirements,
+        // and the borrow is tied to `&self`.
+        debug_assert!(self.len <= self.words.len() * 8, "PooledBuf len outruns its backing");
         unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
     }
 
@@ -531,6 +547,7 @@ impl PooledBuf {
     pub fn as_mut_slice(&mut self) -> &mut [u8] {
         // SAFETY: as in `as_slice`, plus `&mut self` guarantees
         // exclusive access to the backing store.
+        debug_assert!(self.len <= self.words.len() * 8, "PooledBuf len outruns its backing");
         unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr().cast::<u8>(), self.len) }
     }
 }

@@ -408,9 +408,11 @@ mod tests {
 
     #[test]
     fn parse_accepts_whitespace_and_escapes() {
-        let j =
-            Json::parse(" {\n  \"a\" : [ 1 , -2.5 , true , false , null ] ,\n \"u\": \"\\u0041\\u00e9\" }  ")
-                .unwrap();
+        let text = concat!(
+            " {\n  \"a\" : [ 1 , -2.5 , true , false , null ] ,\n",
+            " \"u\": \"\\u0041\\u00e9\" }  "
+        );
+        let j = Json::parse(text).unwrap();
         assert_eq!(
             j.get("a"),
             Some(&Json::Arr(vec![

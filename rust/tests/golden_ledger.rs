@@ -55,7 +55,8 @@ fn render(bus: &Bus) -> String {
 /// The fixture's data lines (comments stripped), newline-terminated.
 fn fixture_contents() -> String {
     let text = std::fs::read_to_string(fixture_path()).expect(
-        "golden fixture missing — run `CAMR_BLESS=1 cargo test --test golden_ledger` to create it",
+        "golden fixture missing — run `CAMR_BLESS=1 cargo test --test golden_ledger` \
+         to create it",
     );
     let mut out = String::new();
     for line in text.lines() {

@@ -1,0 +1,12 @@
+// Seeded defect: two frame kinds share wire discriminant 3 — the
+// decoder silently misroutes Fused frames as Barrier frames.
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0,
+            FrameKind::Delta => 2,
+            FrameKind::Fused => 3,
+            FrameKind::Barrier => 3,
+        }
+    }
+}

@@ -1,0 +1,11 @@
+// Seeded defect: two error variants share wire code 4 — a Failed
+// frame carrying a Placement error reconstructs as ShuffleDecode.
+impl CamrError {
+    pub fn wire_code(&self) -> u32 {
+        match self {
+            CamrError::InvalidConfig(_) => 1,
+            CamrError::ShuffleDecode(_) => 4,
+            CamrError::Placement(_) => 4,
+        }
+    }
+}

@@ -1,0 +1,3 @@
+// The PR 7 fmt defect class: one line below is 120 characters wide.
+pub fn narrow() {}
+pub fn wide() { let message = "a string literal long enough that rustfmt cannot wrap the line back under the width limit"; let _ = message; }

@@ -1,0 +1,8 @@
+// The PR 7 defect class, reproduced: the bench identifies its report
+// as "shuffle_data_plane", but the assertion suite checks for
+// "xor_throughput" — green `cargo test`, guaranteed failure on any
+// executed bench run.
+fn main() {
+    let report = vec![("bench", Json::Str("shuffle_data_plane".into()))];
+    let _ = report;
+}

@@ -1,0 +1,6 @@
+// Fixture assertion suite: only ever checks for "xor_throughput".
+#[test]
+fn report_names() {
+    let expected = "xor_throughput";
+    let _ = expected;
+}

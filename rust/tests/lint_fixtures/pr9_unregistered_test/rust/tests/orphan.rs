@@ -1,0 +1,6 @@
+// The PR 9 defect class: a test file Cargo.toml never mentions.
+// With autotests = false, `cargo test` silently skips it.
+#[test]
+fn never_runs() {
+    panic!("this suite is not part of cargo test");
+}

@@ -1,0 +1,3 @@
+// This file IS registered in the fixture manifest: no finding.
+#[test]
+fn registered() {}

@@ -1,0 +1,7 @@
+// Seeded defect: the simulator reads the wall clock, so two replays
+// of the same ledger can disagree — determinism contract broken.
+pub fn jitter_seed() -> u64 {
+    let t = std::time::Instant::now();
+    let _ = t;
+    0
+}

@@ -1,0 +1,88 @@
+//! Integration suite for the repo-invariant linter
+//! (`camr::check::lint`): the real tree lints clean, and each fixture
+//! under `rust/tests/lint_fixtures/` — a minimal repo reproducing one
+//! defect class this repo has actually shipped or guards against — is
+//! flagged with exactly its diagnostic code.
+
+use camr::check::lint::lint_repo;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> PathBuf {
+    repo_root().join("rust/tests/lint_fixtures").join(name)
+}
+
+/// Lint a fixture and assert it produces `expected` errors and nothing
+/// else — each fixture isolates exactly one defect class.
+fn assert_only(name: &str, expected: &str) {
+    let report = lint_repo(&fixture(name)).unwrap();
+    assert!(!report.is_clean(), "{name} should fail lint");
+    let codes: BTreeSet<&str> = report.errors().iter().map(|d| d.code).collect();
+    assert_eq!(
+        codes,
+        BTreeSet::from([expected]),
+        "{name}: {:?}",
+        report.diagnostics
+    );
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let report = lint_repo(&repo_root()).unwrap();
+    assert!(
+        report.is_clean(),
+        "the shipped tree must pass its own linter:\n{}",
+        report
+            .diagnostics
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn unregistered_test_fixture_flagged_l201() {
+    // Reproduces the PR 9 defect: a test file on disk that no
+    // `[[test]]` entry registers (autotests = false silently skips it).
+    assert_only("pr9_unregistered_test", "L201");
+}
+
+#[test]
+fn bench_name_mismatch_fixture_flagged_l202() {
+    // Reproduces the PR 7 defect: a bench emitting a "bench" name the
+    // bench_json schema test does not assert.
+    assert_only("pr7_bench_name", "L202");
+}
+
+#[test]
+fn overwide_line_fixture_flagged_l203() {
+    assert_only("overwide_line", "L203");
+}
+
+#[test]
+fn duplicate_frame_kind_fixture_flagged_l204() {
+    assert_only("dup_frame_kind", "L204");
+}
+
+#[test]
+fn duplicate_wire_code_fixture_flagged_l205() {
+    assert_only("dup_wire_code", "L205");
+}
+
+#[test]
+fn sim_wallclock_fixture_flagged_l206() {
+    assert_only("sim_wallclock", "L206");
+}
+
+#[test]
+fn missing_manifest_is_reported_not_panicked() {
+    // Linting a directory with no Cargo.toml is an L201 finding (the
+    // registration audit cannot run), not an I/O crash.
+    let report = lint_repo(&fixture("..")).unwrap();
+    assert!(report.has_code("L201"), "{:?}", report.diagnostics);
+}

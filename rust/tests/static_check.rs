@@ -1,0 +1,196 @@
+//! Integration suite for the static verification layer's plan prover
+//! (`camr::check`): every (q, k) grid point proves clean, every seeded
+//! plan mutation is rejected with its specific diagnostic code, every
+//! shipped config proves clean, and the prover agrees with the
+//! executed oracle verification on `configs/example1.toml`.
+//!
+//! The mutation tests edit [`PlanFacts`] — the prover's explicit fact
+//! base — rather than the constructors, so each defect is exactly the
+//! one seeded: a dropped delivery-group member, skewed replication, a
+//! duplicated schedule sequence number, a dropped group, a corrupted
+//! reducer assignment, a retargeted chunk.
+
+use camr::check::{prove, PlanFacts};
+use camr::config::{RunConfig, SystemConfig};
+use camr::coordinator::engine::Engine;
+use camr::service::{JobService, ServiceOptions};
+use camr::util::json::Json;
+use camr::workload::wordcount::WordCountWorkload;
+use std::path::PathBuf;
+
+/// The (k, q) grid every prover property is exercised over. Covers the
+/// smallest legal system, asymmetric shapes in both directions, and a
+/// k = q case.
+const GRID: [(usize, usize); 5] = [(2, 2), (2, 3), (3, 2), (3, 3), (4, 2)];
+
+fn facts(k: usize, q: usize) -> PlanFacts {
+    let cfg = SystemConfig::new(k, q, 1).unwrap();
+    PlanFacts::from_config(&cfg).unwrap()
+}
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+#[test]
+fn unmutated_grid_proves_clean() {
+    for (k, q) in GRID {
+        let f = facts(k, q);
+        let report = prove(&f);
+        assert!(
+            report.diagnostics.is_empty(),
+            "k={k} q={q}: {:?}",
+            report.diagnostics
+        );
+    }
+}
+
+#[test]
+fn dropped_group_member_rejected_with_p104() {
+    for (k, q) in GRID {
+        let mut f = facts(k, q);
+        f.stage1[0].group.members.pop();
+        let report = prove(&f);
+        assert!(!report.is_clean(), "k={k} q={q}");
+        assert!(report.has_code("P104"), "k={k} q={q}: {:?}", report.diagnostics);
+    }
+}
+
+#[test]
+fn skewed_replication_rejected_with_p103() {
+    for (k, q) in GRID {
+        // Under-replication: delete one stored (server, job, batch).
+        let mut f = facts(k, q);
+        let victim = *f.stored.iter().next().unwrap();
+        f.stored.remove(&victim);
+        let report = prove(&f);
+        assert!(report.has_code("P103"), "k={k} q={q}: {:?}", report.diagnostics);
+        // The same hole breaks decodability of some coded packet.
+        assert!(report.has_code("P105"), "k={k} q={q}: {:?}", report.diagnostics);
+
+        // Over-replication: a server maps a batch labeled for itself.
+        let mut f = facts(k, q);
+        let (j, own) = (0, f.owners[0].clone());
+        let extra = own
+            .iter()
+            .copied()
+            .find_map(|s| (0..f.k).find(|&b| !f.stored.contains(&(s, j, b))).map(|b| (s, j, b)))
+            .expect("every owner skips exactly one batch");
+        f.stored.insert(extra);
+        let report = prove(&f);
+        assert!(report.has_code("P103"), "k={k} q={q}: {:?}", report.diagnostics);
+    }
+}
+
+#[test]
+fn duplicated_sequence_rejected_with_p108() {
+    for (k, q) in GRID {
+        let mut f = facts(k, q);
+        // Stage 3 always has >= 2 unicasts on this grid.
+        f.stage3[1].seq = f.stage3[0].seq;
+        let report = prove(&f);
+        assert!(report.has_code("P108"), "k={k} q={q}: {:?}", report.diagnostics);
+    }
+}
+
+#[test]
+fn dropped_group_breaks_coverage_and_partition() {
+    for (k, q) in GRID {
+        let mut f = facts(k, q);
+        f.stage1.pop();
+        // Re-stamp so the defect is the missing group, not its seq.
+        for (i, g) in f.stage1.iter_mut().enumerate() {
+            g.seq = i;
+        }
+        let report = prove(&f);
+        assert!(report.has_code("P107"), "k={k} q={q}: {:?}", report.diagnostics);
+        assert!(report.has_code("P109"), "k={k} q={q}: {:?}", report.diagnostics);
+    }
+}
+
+#[test]
+fn corrupted_reducer_assignment_rejected_with_p106() {
+    for (k, q) in GRID {
+        let mut f = facts(k, q);
+        // Point the chunk's function at a different server's slice.
+        let c = &mut f.stage1[0].group.chunks[0];
+        c.func += 1;
+        let report = prove(&f);
+        assert!(report.has_code("P106"), "k={k} q={q}: {:?}", report.diagnostics);
+    }
+}
+
+#[test]
+fn retargeted_chunk_rejected_with_p104() {
+    for (k, q) in GRID {
+        let mut f = facts(k, q);
+        // Address member 0's chunk to member 1 instead.
+        let other = f.stage1[0].group.members[1];
+        f.stage1[0].group.chunks[0].receiver = other;
+        let report = prove(&f);
+        assert!(report.has_code("P104"), "k={k} q={q}: {:?}", report.diagnostics);
+    }
+}
+
+#[test]
+fn every_shipped_config_proves_clean() {
+    for name in ["example1", "matvec_pjrt", "serve", "straggler"] {
+        let rc = RunConfig::from_path(&repo_path(&format!("configs/{name}.toml")))
+            .unwrap_or_else(|e| panic!("configs/{name}.toml: {e}"));
+        let f = PlanFacts::from_config(&rc.system).unwrap();
+        let report = prove(&f);
+        assert!(
+            report.diagnostics.is_empty(),
+            "configs/{name}.toml: {:?}",
+            report.diagnostics
+        );
+    }
+}
+
+#[test]
+fn prover_agrees_with_executed_oracle_on_example1() {
+    let rc = RunConfig::from_path(&repo_path("configs/example1.toml")).unwrap();
+    // Static side: the plan proves clean.
+    let f = PlanFacts::from_config(&rc.system).unwrap();
+    assert!(prove(&f).is_clean());
+    // Dynamic side: the same plan executes and oracle-verifies. The
+    // prover guarantees plan correctness, execution shows data
+    // correctness; on a shipped config both must hold.
+    let wl = WordCountWorkload::example1(&rc.system);
+    let mut e = Engine::new(rc.system, Box::new(wl)).unwrap();
+    let out = e.run().unwrap();
+    assert!(out.verified, "oracle verification failed on a proven plan");
+}
+
+#[test]
+fn json_export_round_trips_for_a_real_report() {
+    let mut f = facts(3, 2);
+    f.stage2[0].group.members.pop();
+    let report = prove(&f);
+    let j = report.to_json();
+    assert_eq!(j.get("clean"), Some(&Json::Bool(false)));
+    let back = Json::parse(&j.render()).unwrap();
+    assert_eq!(back, j);
+}
+
+#[test]
+fn engine_preflight_accepts_all_grid_configs() {
+    for (k, q) in GRID {
+        let cfg = SystemConfig::with_options(k, q, 1, 1, 16).unwrap();
+        let wl = camr::workload::synth::SyntheticWorkload::new(&cfg, 7);
+        // Engine::new now runs the prover; a valid config must pass.
+        let mut e = Engine::new(cfg, Box::new(wl)).unwrap();
+        assert!(e.run().unwrap().verified);
+    }
+}
+
+#[test]
+fn service_admission_preflight_accepts_valid_config() {
+    let cfg = SystemConfig::with_options(2, 2, 1, 1, 16).unwrap();
+    let svc = JobService::start(
+        cfg,
+        ServiceOptions { engines: 1, ..ServiceOptions::default() },
+    )
+    .unwrap();
+    svc.drain().unwrap();
+}
